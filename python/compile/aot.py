@@ -1,0 +1,83 @@
+"""AOT lowering: JAX graphs → HLO **text** artifacts for the rust runtime.
+
+HLO text, NOT ``lowered.compile()``/serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Shapes are compiled fixed and must match rust/src/runtime/xla_engine.rs:
+  K_ART = 128, TILE = 64, D_TILE = 512.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` runs).
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Compiled artifact shapes — keep in sync with rust/src/runtime/xla_engine.rs.
+K_ART = 128
+TILE = 64
+D_TILE = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_all():
+    """Lower every artifact; returns {name: hlo_text}."""
+    arts = {}
+    arts["sketch_apply"] = to_hlo_text(
+        jax.jit(model.sketch_apply).lower(spec(K_ART, D_TILE), spec(D_TILE, TILE))
+    )
+    arts["rescaled_gram"] = to_hlo_text(
+        jax.jit(model.rescaled_gram).lower(
+            spec(K_ART, TILE), spec(K_ART, TILE), spec(TILE), spec(TILE)
+        )
+    )
+    arts["model"] = to_hlo_text(
+        jax.jit(model.model).lower(
+            spec(K_ART, D_TILE),
+            spec(D_TILE, TILE),
+            spec(D_TILE, TILE),
+            spec(TILE),
+            spec(TILE),
+        )
+    )
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) write model HLO here too")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, text in lower_all().items():
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    if args.out:
+        pathlib.Path(args.out).write_text(lower_all()["model"])
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

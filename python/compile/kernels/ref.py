@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+reference. Every Pallas kernel in this package must match its `ref_*`
+counterpart to float tolerance on arbitrary shapes (pytest + hypothesis).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_sketch_matmul(pi, x):
+    """`Π @ X` — the sketch tile product. Π: (k, d), X: (d, n) → (k, n)."""
+    return jnp.dot(pi, x, preferred_element_type=jnp.float32)
+
+
+def ref_rescaled_gram(a, b, na, nb):
+    """The rescaled-JL gram tile (paper Eq. 2), fused form.
+
+    a, b: sketched column tiles (k, n1), (k, n2) — possibly zero-padded
+        rows (k up to the compiled K_ART) and zero-padded columns.
+    na, nb: exact column norms collected in the single pass, (n1,), (n2,).
+
+    Returns D_A (ÃᵀB̃) D_B with D_A[i] = na[i]/‖a[:, i]‖ (0 when the
+    sketched column is zero — the padding guard).
+    """
+    g = jnp.dot(a.T, b, preferred_element_type=jnp.float32)
+    sna = jnp.sqrt(jnp.sum(a * a, axis=0))
+    snb = jnp.sqrt(jnp.sum(b * b, axis=0))
+    da = jnp.where(sna > 0, na / jnp.where(sna > 0, sna, 1.0), 0.0)
+    db = jnp.where(snb > 0, nb / jnp.where(snb > 0, snb, 1.0), 0.0)
+    return da[:, None] * g * db[None, :]

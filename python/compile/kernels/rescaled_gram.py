@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: the fused rescaled-JL gram tile (paper Eq. 2).
+
+Computes `D_A · (ÃᵀB̃) · D_B` for one column tile in a single VMEM
+residency: the k-deep matmul hits the MXU, the norm reductions and the
+diagonal rescale run on the VPU over the same tiles — the gram block never
+round-trips to HBM un-rescaled. Zero-padded columns (‖ã‖ = 0) produce
+exact zeros, which is what lets the fixed-shape AOT artifact serve smaller
+runtime tiles.
+
+VMEM at the AOT shapes (k=128, tile=64): (2·128·64 + 64·64) f32 ≈ 80 KiB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, na_ref, nb_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    g = jnp.dot(a.T, b, preferred_element_type=jnp.float32)
+    sna = jnp.sqrt(jnp.sum(a * a, axis=0))
+    snb = jnp.sqrt(jnp.sum(b * b, axis=0))
+    da = jnp.where(sna > 0, na_ref[...] / jnp.where(sna > 0, sna, 1.0), 0.0)
+    db = jnp.where(snb > 0, nb_ref[...] / jnp.where(snb > 0, snb, 1.0), 0.0)
+    o_ref[...] = da[:, None] * g * db[None, :]
+
+
+@jax.jit
+def rescaled_gram(a, b, na, nb):
+    """Fused rescaled gram tile.
+
+    a: (k, n1), b: (k, n2) sketched column tiles; na: (n1,), nb: (n2,)
+    exact column norms. Returns (n1, n2) float32.
+    """
+    k, n1 = a.shape
+    k2, n2 = b.shape
+    assert k == k2, f"sketch depth mismatch: {k} vs {k2}"
+    assert na.shape == (n1,) and nb.shape == (n2,)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n1, n2), jnp.float32),
+        interpret=True,
+    )(a, b, na, nb)

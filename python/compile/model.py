@@ -1,0 +1,46 @@
+"""L2 — the JAX compute graphs AOT-lowered for the rust runtime.
+
+Three exported graphs (shapes fixed at lowering time, see aot.py):
+
+* ``sketch_apply(pi, x)``       — the Π·X sketch tile (L1 kernel).
+* ``rescaled_gram(a, b, na, nb)`` — the fused Eq.-2 gram tile (L1 kernel).
+* ``model(pi, xa, xb, na, nb)``  — the composed single-pass summary → gram
+  graph (sketch both inputs with the same Π, then the rescaled gram): the
+  end-to-end L2 artifact used by the runtime smoke test; proves the two
+  kernels lower into one HLO module.
+
+Build-time only: nothing here is imported at runtime — `make artifacts`
+lowers these once to HLO text under artifacts/.
+"""
+
+import jax
+
+from compile.kernels.rescaled_gram import rescaled_gram
+from compile.kernels.sketch_matmul import sketch_matmul
+
+
+def _d_block_for(d):
+    """Largest supported d-chunk that tiles d exactly (256 at the AOT
+    shapes; falls back to whole-d for small test shapes)."""
+    for cand in (256, 128, 64, 32, 16, 8):
+        if d % cand == 0:
+            return cand
+    return d
+
+
+def sketch_apply(pi, x):
+    """Π·X — L2 alias of the L1 kernel (kept separate so aot.py can lower
+    it under its own artifact name and shape)."""
+    return sketch_matmul(pi, x, d_block=_d_block_for(x.shape[0]))
+
+
+def model(pi, xa, xb, na, nb):
+    """The composed L2 graph: one-pass summaries → rescaled gram tile.
+
+    pi: (k, d) shared sketch matrix; xa: (d, n1), xb: (d, n2) raw column
+    tiles; na, nb exact column norms. Returns the (n1, n2) M̃ tile.
+    """
+    d_block = _d_block_for(xa.shape[0])
+    a = sketch_matmul(pi, xa, d_block=d_block)
+    b = sketch_matmul(pi, xb, d_block=d_block)
+    return rescaled_gram(a, b, na, nb)

@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, swept over shapes
+and value regimes with hypothesis. This is the CORE kernel-correctness
+signal — the rust side trusts the artifacts these kernels lower into.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.rescaled_gram import rescaled_gram
+from compile.kernels.sketch_matmul import sketch_matmul
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ---------------------------------------------------------------- sketch ---
+
+
+class TestSketchMatmul:
+    def test_small_exact(self):
+        pi = rand(4, 8, seed=1)
+        x = rand(8, 3, seed=2)
+        got = sketch_matmul(pi, x, d_block=4)
+        np.testing.assert_allclose(got, ref.ref_sketch_matmul(pi, x), rtol=1e-5)
+
+    def test_single_block(self):
+        pi = rand(16, 32, seed=3)
+        x = rand(32, 8, seed=4)
+        got = sketch_matmul(pi, x, d_block=32)  # grid of 1
+        np.testing.assert_allclose(got, ref.ref_sketch_matmul(pi, x), rtol=1e-5)
+
+    def test_artifact_shapes(self):
+        # The exact shapes aot.py compiles.
+        pi = rand(128, 512, seed=5)
+        x = rand(512, 64, seed=6)
+        got = sketch_matmul(pi, x)
+        np.testing.assert_allclose(
+            got, ref.ref_sketch_matmul(pi, x), rtol=2e-4, atol=2e-4
+        )
+
+    def test_zero_input(self):
+        pi = jnp.zeros((8, 16), jnp.float32)
+        x = rand(16, 4, seed=7)
+        assert np.all(np.asarray(sketch_matmul(pi, x, d_block=8)) == 0.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.integers(1, 24),
+        blocks=st.integers(1, 6),
+        d_block=st.sampled_from([2, 4, 8, 16]),
+        n=st.integers(1, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, k, blocks, d_block, n, seed):
+        d = blocks * d_block
+        pi = rand(k, d, seed=seed)
+        x = rand(d, n, seed=seed + 1)
+        got = sketch_matmul(pi, x, d_block=d_block)
+        np.testing.assert_allclose(
+            got, ref.ref_sketch_matmul(pi, x), rtol=1e-4, atol=1e-5
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        scale=st.sampled_from([1e-4, 1.0, 1e4]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_value_regimes(self, scale, seed):
+        pi = rand(8, 16, scale=scale, seed=seed)
+        x = rand(16, 4, scale=scale, seed=seed + 1)
+        got = sketch_matmul(pi, x, d_block=8)
+        want = ref.ref_sketch_matmul(pi, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6 * scale * scale)
+
+    def test_rejects_bad_blocking(self):
+        pi = rand(4, 10)
+        x = rand(10, 3)
+        with pytest.raises(AssertionError):
+            sketch_matmul(pi, x, d_block=4)  # 10 % 4 != 0
+
+
+# ---------------------------------------------------------- rescaled gram ---
+
+
+class TestRescaledGram:
+    def _check(self, a, b, na, nb, rtol=1e-5, atol=1e-6):
+        got = rescaled_gram(a, b, na, nb)
+        want = ref.ref_rescaled_gram(a, b, na, nb)
+        np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+    def test_small_exact(self):
+        a = rand(6, 4, seed=10)
+        b = rand(6, 5, seed=11)
+        na = jnp.abs(rand(4, seed=12)) + 0.1
+        nb = jnp.abs(rand(5, seed=13)) + 0.1
+        self._check(a, b, na, nb)
+
+    def test_artifact_shapes(self):
+        a = rand(128, 64, seed=14)
+        b = rand(128, 64, seed=15)
+        na = jnp.abs(rand(64, seed=16)) + 0.1
+        nb = jnp.abs(rand(64, seed=17)) + 0.1
+        self._check(a, b, na, nb, rtol=2e-4, atol=2e-4)
+
+    def test_zero_padded_columns_give_zero(self):
+        # The padding guard the AOT artifact relies on: zero sketched
+        # columns must produce exactly zero rows/cols regardless of norms.
+        a = np.asarray(rand(8, 6, seed=18)).copy()
+        a[:, 3:] = 0.0
+        b = np.asarray(rand(8, 5, seed=19)).copy()
+        b[:, 2:] = 0.0
+        na = np.abs(np.asarray(rand(6, seed=20))) + 1.0
+        nb = np.abs(np.asarray(rand(5, seed=21))) + 1.0
+        out = np.asarray(rescaled_gram(jnp.asarray(a), jnp.asarray(b),
+                                       jnp.asarray(na), jnp.asarray(nb)))
+        assert np.all(out[3:, :] == 0.0)
+        assert np.all(out[:, 2:] == 0.0)
+        self._check(jnp.asarray(a), jnp.asarray(b), jnp.asarray(na), jnp.asarray(nb))
+
+    def test_exact_on_collinear(self):
+        # cosθ = 1 ⇒ rescaled estimate = na·nb exactly (the paper's
+        # motivating property).
+        col = np.asarray(rand(16, 1, seed=22))
+        a = jnp.asarray(np.tile(col, (1, 3)))
+        out = rescaled_gram(a, a, jnp.ones(3), jnp.ones(3))
+        np.testing.assert_allclose(out, np.ones((3, 3)), rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.integers(1, 32),
+        n1=st.integers(1, 16),
+        n2=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, k, n1, n2, seed):
+        a = rand(k, n1, seed=seed)
+        b = rand(k, n2, seed=seed + 1)
+        na = jnp.abs(rand(n1, seed=seed + 2)) + 0.05
+        nb = jnp.abs(rand(n2, seed=seed + 3)) + 0.05
+        self._check(a, b, na, nb, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------- L2 ----
+
+
+class TestModelGraph:
+    def test_composed_graph_matches_refs(self):
+        from compile import model
+
+        pi = rand(12, 32, seed=30)
+        xa = rand(32, 6, seed=31)
+        xb = rand(32, 7, seed=32)
+        na = jnp.sqrt(jnp.sum(xa * xa, axis=0))
+        nb = jnp.sqrt(jnp.sum(xb * xb, axis=0))
+        got = model.model(pi, xa, xb, na, nb)
+        a = ref.ref_sketch_matmul(pi, xa)
+        b = ref.ref_sketch_matmul(pi, xb)
+        want = ref.ref_rescaled_gram(a, b, na, nb)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+    def test_rescaled_closer_than_plain_on_collinear(self):
+        # End-to-end statistical sanity of the L2 graph: for collinear
+        # columns the rescaled gram recovers the exact product.
+        from compile import model
+
+        col = np.asarray(rand(64, 1, seed=33))
+        xa = jnp.asarray(np.hstack([col, 2 * col, -col]))
+        pi = rand(8, 64, seed=34) / np.sqrt(8)
+        na = jnp.sqrt(jnp.sum(xa * xa, axis=0))
+        got = np.asarray(model.model(pi, xa, xa, na, na))
+        want = np.asarray(ref.ref_sketch_matmul(xa.T, xa))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

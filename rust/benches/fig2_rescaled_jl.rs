@@ -1,0 +1,61 @@
+//! Fig 2 bench: regenerates the rescaled-JL estimator study (2a scatter +
+//! MSE, 2b cone-angle error-ratio sweep) and times the estimator kernels.
+//!
+//! ```bash
+//! cargo bench --bench fig2_rescaled_jl
+//! ```
+
+use smppca::bench::{black_box, BenchSuite};
+use smppca::estimate::{plain_jl_dot, rescaled_jl_dot};
+use smppca::linalg::Mat;
+use smppca::rng::Pcg64;
+use smppca::sketch::{SketchKind, SketchState};
+
+fn main() {
+    let mut suite = BenchSuite::from_args("fig2_rescaled_jl");
+
+    // ---- regenerate the figure tables (rows printed for EXPERIMENTS.md)
+    let scale = std::env::var("SMPPCA_EXP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+    smppca::experiments::fig2::fig2a(scale).print();
+    smppca::experiments::fig2::fig2b(scale).print();
+
+    // ---- micro: estimator throughput at the paper's (d=1000, k=10) shape
+    let d = 1000;
+    let k = 10;
+    let mut rng = Pcg64::new(1);
+    let a = Mat::gaussian(d, 64, &mut rng);
+    let b = Mat::gaussian(d, 64, &mut rng);
+    let sa = SketchState::sketch_matrix(SketchKind::Gaussian, 7, k, &a);
+    let sb = SketchState::sketch_matrix(SketchKind::Gaussian, 7, k, &b);
+    let cols_a: Vec<Vec<f64>> = (0..64).map(|i| sa.sketch.col(i)).collect();
+    let cols_b: Vec<Vec<f64>> = (0..64).map(|j| sb.sketch.col(j)).collect();
+
+    suite.bench_items("plain_jl_dot/64x64_pairs_k10", 64 * 64, || {
+        let mut acc = 0.0;
+        for ca in &cols_a {
+            for cb in &cols_b {
+                acc += plain_jl_dot(ca, cb);
+            }
+        }
+        black_box(acc);
+    });
+
+    suite.bench_items("rescaled_jl_dot/64x64_pairs_k10", 64 * 64, || {
+        let mut acc = 0.0;
+        for (i, ca) in cols_a.iter().enumerate() {
+            for (j, cb) in cols_b.iter().enumerate() {
+                acc += rescaled_jl_dot(ca, cb, sa.col_norms[i], sb.col_norms[j]);
+            }
+        }
+        black_box(acc);
+    });
+
+    suite.bench("rescaled_gram/64x64_tile_k10", || {
+        black_box(smppca::estimate::rescaled_gram(&sa, &sb));
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,61 @@
+//! Fig 3(a) bench: end-to-end pipeline wall time vs worker count,
+//! one-pass SMP-PCA vs two-pass LELA over a disk-resident stream — the
+//! paper's runtime table (34 vs 56 min at 2 nodes, scaled down).
+//!
+//! ```bash
+//! cargo bench --bench fig3a_runtime
+//! ```
+
+use smppca::algo::SmpPcaConfig;
+use smppca::bench::BenchSuite;
+use smppca::coordinator::{pipeline::lela_pipeline, Pipeline, PipelineConfig};
+use smppca::rng::Pcg64;
+use smppca::sketch::SketchKind;
+use smppca::stream::{EntrySource, FileSource};
+
+fn main() {
+    let mut suite = BenchSuite::from_args("fig3a_runtime").with_samples(1, 5);
+    let scale = std::env::var("SMPPCA_EXP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+
+    // regenerate the experiment table itself
+    smppca::experiments::fig3::fig3a(scale).print();
+
+    // plus per-worker-count bench series with proper sampling
+    let n = ((400.0 * scale) as usize).max(60);
+    let mut rng = Pcg64::new(3);
+    let (a, b) = smppca::datasets::gd_synthetic(n, n, n, &mut rng);
+    let path = std::env::temp_dir().join("smppca_bench_fig3a.csv");
+    FileSource::write(&path, &a, &b).unwrap();
+    let entries = (2 * n * n) as u64;
+
+    for &workers in &[1usize, 2, 4, 8] {
+        let cfg = PipelineConfig {
+            algo: SmpPcaConfig {
+                rank: 5,
+                sketch_size: ((100.0 * scale) as usize).clamp(20, 2000),
+                iters: 5,
+                seed: 1,
+                sketch: SketchKind::Srht,
+                ..Default::default()
+            },
+            workers,
+            channel_capacity: 8192,
+        };
+        let p = std::path::PathBuf::from(&path);
+        suite.bench_items(&format!("smp_pca_pipeline/workers={workers}"), entries, || {
+            Pipeline::new(cfg.clone())
+                .run(Box::new(FileSource::open(&p).unwrap()))
+                .unwrap();
+        });
+        let p2 = std::path::PathBuf::from(&path);
+        let make = move || -> Box<dyn EntrySource> { Box::new(FileSource::open(&p2).unwrap()) };
+        suite.bench_items(&format!("lela_two_pass/workers={workers}"), entries, || {
+            lela_pipeline(&make, &cfg).unwrap();
+        });
+    }
+    std::fs::remove_file(&path).ok();
+    suite.finish();
+}

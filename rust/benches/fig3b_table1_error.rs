@@ -1,0 +1,54 @@
+//! Fig 3(b) + Table 1 bench: regenerates the spectral-error comparisons
+//! (Optimal / LELA / SMP-PCA / SVD(ÃᵀB̃) across sketch sizes and datasets)
+//! and times the full algorithms on the Table-1-like workloads.
+//!
+//! ```bash
+//! cargo bench --bench fig3b_table1_error
+//! ```
+
+use smppca::algo::{lela::LelaConfig, optimal_rank_r, smp_pca, SmpPcaConfig};
+use smppca::bench::{black_box, BenchSuite};
+use smppca::rng::Pcg64;
+
+fn main() {
+    let mut suite = BenchSuite::from_args("fig3b_table1").with_samples(1, 3);
+    let scale = std::env::var("SMPPCA_EXP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+
+    // ---- regenerate the paper tables
+    smppca::experiments::fig3::fig3b(scale).print();
+    smppca::experiments::table1::table1(scale).print();
+
+    // ---- algorithm wall-time on the synthetic Table-1 workload
+    let n = ((400.0 * scale) as usize).max(60);
+    let mut rng = Pcg64::new(9);
+    let (a, b) = smppca::datasets::gd_synthetic(n, n, n, &mut rng);
+    let k = (n / 2).max(30);
+
+    suite.bench("table1/optimal_exact_svd", || {
+        black_box(optimal_rank_r(&a, &b, 5));
+    });
+    suite.bench("table1/lela_two_pass", || {
+        black_box(
+            smppca::algo::lela(&a, &b, &LelaConfig { rank: 5, iters: 10, seed: 1, samples: 0.0 })
+                .unwrap(),
+        );
+    });
+    let cfg = SmpPcaConfig { rank: 5, sketch_size: k, iters: 10, seed: 1, ..Default::default() };
+    suite.bench("table1/smp_pca_one_pass", || {
+        black_box(smp_pca(&a, &b, &cfg).unwrap());
+    });
+    suite.bench("table1/svd_sketch_baseline", || {
+        black_box(smppca::algo::sketch_svd(
+            &a,
+            &b,
+            5,
+            k,
+            smppca::sketch::SketchKind::Gaussian,
+            1,
+        ));
+    });
+    suite.finish();
+}

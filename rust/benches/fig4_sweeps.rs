@@ -1,0 +1,57 @@
+//! Fig 4 bench: regenerates (a) the sample-complexity phase transition,
+//! (b) the cone-angle end-to-end ratio sweep, (c) the ArᵀBr failure table,
+//! and times the sampling + completion stages the sweeps exercise.
+//!
+//! ```bash
+//! cargo bench --bench fig4_sweeps
+//! ```
+
+use smppca::bench::{black_box, BenchSuite};
+use smppca::completion::waltmin::Observation;
+use smppca::completion::{waltmin, WAltMinConfig};
+use smppca::rng::Pcg64;
+use smppca::sampling::{sample_multinomial_fast, NormProfile};
+
+fn main() {
+    let mut suite = BenchSuite::from_args("fig4_sweeps").with_samples(1, 5);
+    let scale = std::env::var("SMPPCA_EXP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+
+    // ---- regenerate the three panels
+    smppca::experiments::fig4::fig4a(scale).print();
+    smppca::experiments::fig4::fig4b(scale).print();
+    smppca::experiments::fig4::fig4c(scale).print();
+
+    // ---- stage micro-benches at Fig-4(a) shapes
+    let n = ((400.0 * scale) as usize).max(60);
+    let mut rng = Pcg64::new(1);
+    let norms: Vec<f64> = (0..n).map(|j| 1.0 / (j + 1) as f64).collect();
+    let profile = NormProfile::new(&norms, &norms);
+    let m = 4.0 * n as f64 * 5.0 * (n as f64).ln();
+
+    suite.bench_items("sampling/multinomial_fast", m as u64, || {
+        let mut r = Pcg64::new(7);
+        black_box(sample_multinomial_fast(&profile, m, &mut r));
+    });
+
+    // completion on a synthetic rank-5 sampled matrix
+    let mut r2 = Pcg64::new(2);
+    let u = smppca::linalg::Mat::gaussian(n, 5, &mut r2);
+    let v = smppca::linalg::Mat::gaussian(n, 5, &mut r2);
+    let truth = u.matmul_t(&v);
+    let omega = sample_multinomial_fast(&profile, m, &mut r2);
+    let obs: Vec<Observation> = omega
+        .entries
+        .iter()
+        .zip(&omega.probs)
+        .map(|(&(i, j), &q)| Observation { i, j, value: truth[(i, j)], q_hat: q })
+        .collect();
+    let wcfg = WAltMinConfig { rank: 5, iters: 10, ..Default::default() };
+    suite.bench_items("completion/waltmin_T10", obs.len() as u64, || {
+        black_box(waltmin(&obs, n, n, &wcfg));
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,178 @@
+//! Hot-path micro-benchmarks — the §Perf instrument panel:
+//! per-entry sketch ingest (all Π families, ordered vs shuffled), column
+//! batch path, gaussian column regeneration & cache, channel transport,
+//! sampling, estimation, ALS solve, end-to-end leader finish.
+//!
+//! ```bash
+//! cargo bench --bench hotpaths
+//! ```
+
+use smppca::bench::{black_box, BenchSuite};
+use smppca::linalg::Mat;
+use smppca::rng::{gaussian_column, Pcg64};
+use smppca::sketch::{SketchKind, SketchState};
+
+fn main() {
+    let mut suite = BenchSuite::from_args("hotpaths").with_samples(2, 7);
+
+    // ---------------------------------------------------- sketch ingest
+    let d = 4096usize;
+    let n = 64usize;
+    let k = 100usize;
+    let mut rng = Pcg64::new(1);
+    let mut entries: Vec<(usize, usize, f64)> = Vec::new();
+    for i in 0..d {
+        for j in 0..n {
+            entries.push((i, j, rng.next_gaussian()));
+        }
+    }
+    let ordered = entries.clone();
+    let mut shuffled = entries.clone();
+    rng.shuffle(&mut shuffled);
+
+    for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+        for (order_name, list) in [("row-ordered", &ordered), ("shuffled", &shuffled)] {
+            suite.bench_items(
+                &format!("sketch_ingest/{kind:?}/{order_name}/k{k}"),
+                list.len() as u64,
+                || {
+                    let mut st = SketchState::new(kind, 7, k, d, n);
+                    for &(i, j, v) in list.iter() {
+                        st.update_entry(i, j, v);
+                    }
+                    black_box(st.entries_seen());
+                },
+            );
+        }
+    }
+
+    // column-batch path (what the XLA sketch_apply tile replaces)
+    let cols: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.next_gaussian()).collect())
+        .collect();
+    for kind in [SketchKind::Gaussian, SketchKind::Srht] {
+        suite.bench_items(
+            &format!("sketch_column_batch/{kind:?}/k{k}"),
+            (d * n) as u64,
+            || {
+                let mut st = SketchState::new(kind, 7, k, d, n);
+                for (j, c) in cols.iter().enumerate() {
+                    st.update_column(j, c);
+                }
+                black_box(st.entries_seen());
+            },
+        );
+    }
+
+    // ------------------------------------------- gaussian column regen
+    suite.bench_items("gaussian_column_regen/k100", 1000, || {
+        for i in 0..1000u64 {
+            black_box(gaussian_column(42, i, 100));
+        }
+    });
+
+    // ------------------------------------------------------- transport
+    {
+        use smppca::stream::{bounded, Entry};
+        let items: Vec<Entry> = (0..100_000)
+            .map(|t| Entry::a((t % 512) as u32, (t % 64) as u32, t as f64))
+            .collect();
+        suite.bench_items("channel/batched_1024/100k_entries", items.len() as u64, || {
+            let (tx, rx) = bounded::<Vec<Entry>>(8);
+            let consumer = std::thread::spawn(move || {
+                let mut count = 0usize;
+                while let Ok(batch) = rx.recv() {
+                    count += batch.len();
+                }
+                count
+            });
+            for chunk in items.chunks(1024) {
+                tx.send(chunk.to_vec()).unwrap();
+            }
+            drop(tx);
+            black_box(consumer.join().unwrap());
+        });
+        suite.bench_items("channel/per_entry/100k_entries", items.len() as u64, || {
+            let (tx, rx) = bounded::<Entry>(8192);
+            let consumer = std::thread::spawn(move || {
+                let mut count = 0usize;
+                while rx.recv().is_ok() {
+                    count += 1;
+                }
+                count
+            });
+            for e in &items {
+                tx.send(*e).unwrap();
+            }
+            drop(tx);
+            black_box(consumer.join().unwrap());
+        });
+    }
+
+    // -------------------------------------------------------- sampling
+    {
+        use smppca::sampling::{sample_multinomial_fast, NormProfile};
+        let nn = 2000usize;
+        let norms: Vec<f64> = (0..nn).map(|j| 1.0 / (1.0 + j as f64).sqrt()).collect();
+        let profile = NormProfile::new(&norms, &norms);
+        let m = 4.0 * nn as f64 * 5.0 * (nn as f64).ln();
+        suite.bench_items("sampling/fast_n2000", m as u64, || {
+            let mut r = Pcg64::new(3);
+            black_box(sample_multinomial_fast(&profile, m, &mut r));
+        });
+    }
+
+    // ------------------------------------------------------ estimation
+    {
+        let mut r = Pcg64::new(5);
+        let a = Mat::gaussian(512, 256, &mut r);
+        let b = Mat::gaussian(512, 256, &mut r);
+        let sa = SketchState::sketch_matrix(SketchKind::Gaussian, 9, 100, &a);
+        let sb = SketchState::sketch_matrix(SketchKind::Gaussian, 9, 100, &b);
+        let profile =
+            smppca::sampling::NormProfile::new(&sa.col_norms, &sb.col_norms);
+        let mut r2 = Pcg64::new(6);
+        let omega = smppca::sampling::sample_multinomial_fast(&profile, 20_000.0, &mut r2);
+        suite.bench_items("estimate/rescaled_sampled_k100", omega.len() as u64, || {
+            black_box(smppca::estimate::estimate_samples(&sa, &sb, &omega));
+        });
+
+        // leader finish (sampling + estimation + WAltMin) end to end
+        let cfg = smppca::algo::SmpPcaConfig {
+            rank: 5,
+            sketch_size: 100,
+            iters: 10,
+            seed: 1,
+            ..Default::default()
+        };
+        suite.bench("leader_finish/n256_k100_T10", || {
+            black_box(smppca::algo::finish_from_summaries(&sa, &sb, &cfg).unwrap());
+        });
+    }
+
+    // ------------------------------------------------------- ALS solve
+    {
+        use smppca::linalg::cholesky::solve_normal_eq_flat;
+        let r_dim = 5usize;
+        let mut g0 = vec![0.0; r_dim * r_dim];
+        for i in 0..r_dim {
+            g0[i * r_dim + i] = 2.0 + i as f64;
+            for j in 0..i {
+                g0[i * r_dim + j] = 0.3;
+                g0[j * r_dim + i] = 0.3;
+            }
+        }
+        suite.bench_items("als/normal_eq_flat_r5_x10000", 10_000, || {
+            let mut acc = 0.0;
+            for t in 0..10_000 {
+                let mut g = g0.clone();
+                let mut b = [1.0, 2.0, 3.0, 4.0, t as f64 % 7.0];
+                solve_normal_eq_flat(&mut g, &mut b, r_dim);
+                acc += b[0];
+            }
+            black_box(acc);
+        });
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,174 @@
+//! Minimal criterion-style benchmark harness (the image ships no criterion).
+//!
+//! `harness = false` bench targets build a [`BenchSuite`], registering
+//! closures; the runner does warmup + timed samples and prints
+//! mean / median / p95 plus throughput. Supports the substring filter arg
+//! cargo passes through (`cargo bench -- <filter>`; the `--bench` flag
+//! cargo injects is ignored).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    pub items_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    pub fn p95(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        let idx = ((s.len() * 95) / 100).min(s.len() - 1);
+        s[idx]
+    }
+}
+
+pub struct BenchSuite {
+    name: String,
+    filter: Option<String>,
+    warmup_iters: usize,
+    sample_count: usize,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    /// Parse argv: any non-flag argument is a substring filter.
+    pub fn from_args(name: &str) -> Self {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'))
+            .filter(|a| !a.is_empty());
+        let quick = std::env::var("SMPPCA_BENCH_QUICK").is_ok();
+        Self {
+            name: name.to_string(),
+            filter,
+            warmup_iters: if quick { 1 } else { 2 },
+            sample_count: if quick { 3 } else { 7 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, warmup: usize, samples: usize) -> Self {
+        self.warmup_iters = warmup;
+        self.sample_count = samples.max(1);
+        self
+    }
+
+    fn enabled(&self, bench_name: &str) -> bool {
+        self.filter.as_deref().map(|f| bench_name.contains(f)).unwrap_or(true)
+    }
+
+    /// Run one benchmark: `f` is a full iteration (setup outside, please).
+    pub fn bench(&mut self, bench_name: &str, mut f: impl FnMut()) {
+        self.bench_with_items(bench_name, None, &mut f);
+    }
+
+    /// Benchmark with a throughput denominator (items processed per iter).
+    pub fn bench_items(&mut self, bench_name: &str, items: u64, mut f: impl FnMut()) {
+        self.bench_with_items(bench_name, Some(items), &mut f);
+    }
+
+    fn bench_with_items(&mut self, bench_name: &str, items: Option<u64>, f: &mut dyn FnMut()) {
+        if !self.enabled(bench_name) {
+            return;
+        }
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_count);
+        for _ in 0..self.sample_count {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        let r = BenchResult { name: bench_name.to_string(), samples, items_per_iter: items };
+        print_result(&r);
+        self.results.push(r);
+    }
+
+    /// Record an externally-measured sample series (e.g. sub-stage timings
+    /// pulled out of pipeline metrics).
+    pub fn record(&mut self, bench_name: &str, samples: Vec<Duration>, items: Option<u64>) {
+        if !self.enabled(bench_name) || samples.is_empty() {
+            return;
+        }
+        let r = BenchResult { name: bench_name.to_string(), samples, items_per_iter: items };
+        print_result(&r);
+        self.results.push(r);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn finish(self) {
+        println!("\n[{}] {} benchmarks done", self.name, self.results.len());
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let mean = r.mean();
+    let med = r.median();
+    let p95 = r.p95();
+    let thpt = r
+        .items_per_iter
+        .map(|n| format!("  {:>12.1} items/s", n as f64 / mean.as_secs_f64()))
+        .unwrap_or_default();
+    println!(
+        "{:<48} mean {:>10.3} ms  median {:>10.3} ms  p95 {:>10.3} ms{}",
+        r.name,
+        mean.as_secs_f64() * 1e3,
+        med.as_secs_f64() * 1e3,
+        p95.as_secs_f64() * 1e3,
+        thpt
+    );
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut suite = BenchSuite::from_args("test").with_samples(1, 3);
+        let mut count = 0u32;
+        suite.bench("noop", || {
+            count += 1;
+        });
+        assert_eq!(suite.results().len(), 1);
+        assert!(count >= 4); // 1 warmup + 3 samples
+        assert_eq!(suite.results()[0].samples.len(), 3);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![
+                Duration::from_millis(1),
+                Duration::from_millis(2),
+                Duration::from_millis(30),
+            ],
+            items_per_iter: None,
+        };
+        assert!(r.median() <= r.p95());
+        assert_eq!(r.median(), Duration::from_millis(2));
+    }
+}

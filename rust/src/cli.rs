@@ -1,0 +1,156 @@
+//! Hand-rolled CLI argument parsing (no clap in the image).
+//!
+//! Grammar: `smppca <subcommand> [--key value]... [--flag]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("missing subcommand; try `smppca help`")]
+    MissingSubcommand,
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: '{value}' ({hint})")]
+    BadValue { key: String, value: String, hint: String },
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self, ArgError> {
+        let mut iter = argv.into_iter().peekable();
+        let subcommand = iter.next().ok_or(ArgError::MissingSubcommand)?;
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    options.insert(key.to_string(), v);
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Self { subcommand, positional, options, flags })
+    }
+
+    pub fn from_env() -> Result<Self, ArgError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ArgError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgError::BadValue {
+                key: key.to_string(),
+                value: v.clone(),
+                hint: std::any::type_name::<T>().to_string(),
+            }),
+        }
+    }
+}
+
+pub const HELP: &str = "\
+smppca — Single Pass PCA of Matrix Products (NIPS 2016 reproduction)
+
+USAGE:
+  smppca <command> [options]
+
+COMMANDS:
+  run        run the streaming SMP-PCA pipeline on a dataset
+  exp        regenerate a paper experiment: fig2a|fig2b|fig3a|fig3b|fig4a|
+             fig4b|fig4c|table1|all
+  gen        generate a synthetic dataset CSV (for `run --input`)
+  help       show this message
+
+RUN OPTIONS:
+  --input PATH       CSV triplet file (header d,n1,n2; lines M,row,col,value)
+  --dataset NAME     synthetic dataset instead of --input:
+                     gd|cone|sift|bow|url (default gd)
+  --d N --n1 N --n2 N   synthetic shape (defaults 512,256,256)
+  --rank R           target rank r (default 5)
+  --k K              sketch size (default 100)
+  --samples M        expected |Ω| (default 4·n·r·ln n)
+  --iters T          WAltMin iterations (default 10)
+  --workers W        sketch-pass worker threads (default 2)
+  --sketch KIND      gaussian|srht|countsketch (default gaussian)
+  --engine E         native|xla (default native; xla needs `make artifacts`)
+  --seed S           RNG seed (default 1)
+  --baselines        also run LELA / SVD(ÃᵀB̃) / optimal and print errors
+
+EXP OPTIONS:
+  --scale F          shrink experiment sizes by F (default 1.0 = paper-scaled
+                     defaults chosen for a laptop)
+  --out PATH         write TSV rows to PATH as well as stdout
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic_subcommand_and_options() {
+        let a = parse("run --rank 7 --k=64 --baselines");
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.get("rank"), Some("7"));
+        assert_eq!(a.get("k"), Some("64"));
+        assert!(a.flag("baselines"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn get_parse_defaults_and_values() {
+        let a = parse("run --rank 7");
+        assert_eq!(a.get_parse("rank", 5usize).unwrap(), 7);
+        assert_eq!(a.get_parse("k", 100usize).unwrap(), 100);
+    }
+
+    #[test]
+    fn bad_value_error() {
+        let a = parse("run --rank seven");
+        assert!(a.get_parse("rank", 5usize).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("exp fig2a --scale 0.5");
+        assert_eq!(a.positional, vec!["fig2a"]);
+        assert_eq!(a.get("scale"), Some("0.5"));
+    }
+
+    #[test]
+    fn missing_subcommand() {
+        assert!(Args::parse(std::iter::empty()).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --baselines");
+        assert!(a.flag("baselines"));
+    }
+}

@@ -1,0 +1,99 @@
+//! Weighted alternating minimization — paper Algorithm 2 (WAltMin, from
+//! Bhojanapalli et al. [3]), the completion step that turns the sampled,
+//! estimated entries `P_Ω(M̃)` into a rank-`r` factorization `Û V̂ᵀ`.
+
+pub mod waltmin;
+
+pub use waltmin::{waltmin, WAltMinConfig, WAltMinOutput};
+
+use crate::linalg::Mat;
+
+/// A rank-r factorization `U Vᵀ` (U: n1×r, V: n2×r). `U` carries the scale
+/// (it is `Û Σ̂`-like), `V` need not be orthonormal.
+#[derive(Debug, Clone)]
+pub struct LowRank {
+    pub u: Mat,
+    pub v: Mat,
+}
+
+impl LowRank {
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    pub fn n1(&self) -> usize {
+        self.u.rows()
+    }
+
+    pub fn n2(&self) -> usize {
+        self.v.rows()
+    }
+
+    /// Materialize `U Vᵀ` (small cases / tests only).
+    pub fn to_dense(&self) -> Mat {
+        self.u.matmul_t(&self.v)
+    }
+
+    /// `y = (U Vᵀ) x` without materializing.
+    pub fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let r = self.rank();
+        let mut t = vec![0.0; r];
+        self.v.gemv_t_into(x, &mut t);
+        self.u.gemv_into(&t, y);
+    }
+
+    /// `y = (U Vᵀ)ᵀ x`.
+    pub fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        let r = self.rank();
+        let mut t = vec![0.0; r];
+        self.u.gemv_t_into(x, &mut t);
+        self.v.gemv_into(&t, y);
+    }
+
+    /// Entry `(i, j)` of `U Vᵀ`.
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        let mut acc = 0.0;
+        for c in 0..self.rank() {
+            acc += self.u[(i, c)] * self.v[(j, c)];
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut rng = Pcg64::new(1);
+        let lr = LowRank { u: Mat::gaussian(6, 3, &mut rng), v: Mat::gaussian(5, 3, &mut rng) };
+        let dense = lr.to_dense();
+        let x: Vec<f64> = (0..5).map(|_| rng.next_gaussian()).collect();
+        let mut y1 = vec![0.0; 6];
+        let mut y2 = vec![0.0; 6];
+        lr.apply(&x, &mut y1);
+        dense.gemv_into(&x, &mut y2);
+        assert_close(&y1, &y2, 1e-12);
+        let xt: Vec<f64> = (0..6).map(|_| rng.next_gaussian()).collect();
+        let mut z1 = vec![0.0; 5];
+        let mut z2 = vec![0.0; 5];
+        lr.apply_t(&xt, &mut z1);
+        dense.gemv_t_into(&xt, &mut z2);
+        assert_close(&z1, &z2, 1e-12);
+    }
+
+    #[test]
+    fn entry_matches_dense() {
+        let mut rng = Pcg64::new(2);
+        let lr = LowRank { u: Mat::gaussian(4, 2, &mut rng), v: Mat::gaussian(3, 2, &mut rng) };
+        let dense = lr.to_dense();
+        for i in 0..4 {
+            for j in 0..3 {
+                assert!((lr.entry(i, j) - dense[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Pipeline metrics: stage wall times and counters, printed by the CLI and
+//! consumed by the Fig 3(a) runtime experiment.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    stages: BTreeMap<String, Duration>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_stage(&mut self, name: &str, elapsed: Duration) {
+        *self.stages.entry(name.to_string()).or_default() += elapsed;
+    }
+
+    pub fn add(&mut self, counter: &str, delta: u64) {
+        *self.counters.entry(counter.to_string()).or_default() += delta;
+    }
+
+    pub fn stage(&self, name: &str) -> Option<Duration> {
+        self.stages.get(name).copied()
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> Duration {
+        self.stages.values().sum()
+    }
+
+    /// Merge metrics from a worker.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.stages {
+            *self.stages.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_default() += v;
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.stages {
+            s.push_str(&format!("  {k:<28} {:>10.3} ms\n", v.as_secs_f64() * 1e3));
+        }
+        for (k, v) in &self.counters {
+            s.push_str(&format!("  {k:<28} {v:>10}\n"));
+        }
+        s
+    }
+}
+
+/// RAII-ish stage timer: `let t = StageTimer::start(); …; m.record_stage("x", t.stop());`
+pub struct StageTimer(Instant);
+
+impl StageTimer {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn stop(self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_merge() {
+        let mut m1 = Metrics::new();
+        m1.record_stage("pass", Duration::from_millis(5));
+        m1.add("entries", 100);
+        let mut m2 = Metrics::new();
+        m2.record_stage("pass", Duration::from_millis(7));
+        m2.add("entries", 50);
+        m1.merge(&m2);
+        assert_eq!(m1.stage("pass"), Some(Duration::from_millis(12)));
+        assert_eq!(m1.counter("entries"), 150);
+        assert_eq!(m1.counter("missing"), 0);
+    }
+
+    #[test]
+    fn report_contains_entries() {
+        let mut m = Metrics::new();
+        m.record_stage("sample", Duration::from_millis(1));
+        m.add("omega", 42);
+        let r = m.report();
+        assert!(r.contains("sample"));
+        assert!(r.contains("42"));
+    }
+
+    #[test]
+    fn timer_measures_something() {
+        let t = StageTimer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.stop() >= Duration::from_millis(1));
+    }
+}

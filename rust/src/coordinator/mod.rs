@@ -1,0 +1,24 @@
+//! L3 coordinator: the distributed single-pass pipeline.
+//!
+//! Topology (the paper's Spark job, re-expressed as threads + channels):
+//!
+//! ```text
+//!  EntrySource ──► router ──► bounded channel per worker (backpressure)
+//!                               │
+//!                      worker w: SketchState_A(w) + SketchState_B(w)
+//!                               │  (columns owned by w only)
+//!                               ▼
+//!                  tree-reduce merge (treeAggregate)   [end of the pass]
+//!                               ▼
+//!   leader: biased sampling (Eq.1) → rescaled-JL estimates (Eq.2, via the
+//!   native or XLA tile engine) → WAltMin → rank-r factors
+//! ```
+//!
+//! Only the part above the merge touches the data; everything below runs on
+//! the O(k·n + n) summary — that is the single-pass guarantee.
+
+pub mod metrics;
+pub mod pipeline;
+
+pub use metrics::{Metrics, StageTimer};
+pub use pipeline::{Pipeline, PipelineConfig, PipelineOutput};

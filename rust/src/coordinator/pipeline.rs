@@ -1,0 +1,371 @@
+//! The streaming pipeline: sharded single-pass sketching workers + leader
+//! finish. Also hosts the two-pass LELA pipeline used for the Fig 3(a)
+//! runtime comparison (it re-reads the source — that's the point).
+
+use crate::algo::{finish_from_summaries_engine, SmpPcaConfig, SmpPcaOutput};
+use crate::coordinator::metrics::{Metrics, StageTimer};
+use crate::runtime::TileEngine;
+use crate::sketch::{SketchState, Summary};
+use crate::stream::{bounded, shard_of, Entry, EntrySource, MatrixId};
+use std::thread;
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub algo: SmpPcaConfig,
+    /// Worker threads for the sketch pass ("cluster size" in Fig 3a).
+    pub workers: usize,
+    /// Bounded channel capacity per worker (entries) — the backpressure
+    /// window.
+    pub channel_capacity: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { algo: SmpPcaConfig::default(), workers: 2, channel_capacity: 8192 }
+    }
+}
+
+pub struct PipelineOutput {
+    pub result: SmpPcaOutput,
+    pub metrics: Metrics,
+}
+
+/// The SMP-PCA streaming pipeline.
+pub struct Pipeline {
+    cfg: PipelineConfig,
+    engine: Box<dyn TileEngine>,
+}
+
+impl Pipeline {
+    pub fn new(cfg: PipelineConfig) -> Self {
+        Self { cfg, engine: crate::runtime::native_engine() }
+    }
+
+    /// Use a specific tile engine (e.g. the PJRT/XLA one) for the leader's
+    /// estimation stage.
+    pub fn with_engine(cfg: PipelineConfig, engine: Box<dyn TileEngine>) -> Self {
+        Self { cfg, engine }
+    }
+
+    /// Run the full single-pass pipeline on a source.
+    pub fn run(&self, source: Box<dyn EntrySource>) -> anyhow::Result<PipelineOutput> {
+        let mut metrics = Metrics::new();
+        let (sa, sb) = self.sketch_pass(source, &mut metrics)?;
+        let t = StageTimer::start();
+        let result = finish_from_summaries_engine(&sa, &sb, &self.cfg.algo, self.engine.as_ref())?;
+        metrics.record_stage("leader/finish", t.stop());
+        metrics.add("omega_samples", result.samples_drawn as u64);
+        Ok(PipelineOutput { result, metrics })
+    }
+
+    /// The single pass: shard entries to workers, each folding its columns
+    /// into per-worker sketch states; tree-merge at the end.
+    pub fn sketch_pass(
+        &self,
+        source: Box<dyn EntrySource>,
+        metrics: &mut Metrics,
+    ) -> anyhow::Result<(Summary, Summary)> {
+        let meta = source.meta();
+        let w = self.cfg.workers.max(1);
+        let k = self.cfg.algo.sketch_size;
+        let kind = self.cfg.algo.sketch;
+        let seed = self.cfg.algo.seed;
+        let t_pass = StageTimer::start();
+
+        // Entries travel in batches: per-entry channel sends would put a
+        // mutex round-trip on every record (measured ~8× slowdown, see
+        // EXPERIMENTS.md §Perf); batching amortizes it to noise.
+        const BATCH: usize = 1024;
+        let mut senders = Vec::with_capacity(w);
+        let mut handles = Vec::with_capacity(w);
+        for _ in 0..w {
+            let (tx, rx) = bounded::<Vec<Entry>>(self.cfg.channel_capacity.div_ceil(BATCH).max(2));
+            senders.push(tx);
+            let handle = thread::spawn(move || {
+                let mut st_a = SketchState::new(kind, seed, k, meta.d, meta.n1);
+                let mut st_b = SketchState::new(kind, seed, k, meta.d, meta.n2);
+                let mut local = Metrics::new();
+                let t = StageTimer::start();
+                while let Ok(batch) = rx.recv() {
+                    for e in batch {
+                        match e.matrix {
+                            MatrixId::A => {
+                                st_a.update_entry(e.row as usize, e.col as usize, e.value)
+                            }
+                            MatrixId::B => {
+                                st_b.update_entry(e.row as usize, e.col as usize, e.value)
+                            }
+                        }
+                    }
+                }
+                local.record_stage("worker/sketch", t.stop());
+                local.add("worker/entries", st_a.entries_seen() + st_b.entries_seen());
+                (st_a, st_b, local)
+            });
+            handles.push(handle);
+        }
+
+        // Reader thread = the driver iterating the DISK_ONLY RDD.
+        {
+            let mut routed = 0u64;
+            let mut buffers: Vec<Vec<Entry>> = (0..w).map(|_| Vec::with_capacity(BATCH)).collect();
+            let mut route = |e: Entry| {
+                let shard = shard_of(e.matrix, e.col, w);
+                let buf = &mut buffers[shard];
+                buf.push(e);
+                if buf.len() >= BATCH {
+                    // A send error means a worker died; surface via panic
+                    // here (join below reports the real panic).
+                    if senders[shard].send(std::mem::replace(buf, Vec::with_capacity(BATCH))).is_err()
+                    {
+                        panic!("worker {shard} hung up mid-pass");
+                    }
+                }
+                routed += 1;
+            };
+            source.for_each(&mut route);
+            for (shard, buf) in buffers.into_iter().enumerate() {
+                if !buf.is_empty() && senders[shard].send(buf).is_err() {
+                    panic!("worker {shard} hung up at flush");
+                }
+            }
+            metrics.add("entries_routed", routed);
+        }
+        drop(senders); // close channels; workers drain and finish
+
+        // Collect + tree-merge (binary reduction, as treeAggregate does).
+        let mut states: Vec<(SketchState, SketchState)> = Vec::with_capacity(w);
+        for h in handles {
+            let (sa, sb, local) = h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+            metrics.merge(&local);
+            states.push((sa, sb));
+        }
+        metrics.record_stage("pass/total", t_pass.stop());
+
+        let t_merge = StageTimer::start();
+        let (sa, sb) = tree_merge(states);
+        metrics.record_stage("merge", t_merge.stop());
+        Ok((sa.finalize(), sb.finalize()))
+    }
+}
+
+/// Binary tree reduction of per-worker states (associative + commutative —
+/// property-tested in sketch::tests::merge_equals_single_stream).
+fn tree_merge(mut states: Vec<(SketchState, SketchState)>) -> (SketchState, SketchState) {
+    assert!(!states.is_empty());
+    while states.len() > 1 {
+        let mut next = Vec::with_capacity(states.len().div_ceil(2));
+        let mut iter = states.into_iter();
+        while let Some((mut a1, mut b1)) = iter.next() {
+            if let Some((a2, b2)) = iter.next() {
+                a1.merge(&a2);
+                b1.merge(&b2);
+            }
+            next.push((a1, b1));
+        }
+        states = next;
+    }
+    states.pop().unwrap()
+}
+
+/// Two-pass LELA pipeline over replayable sources — the runtime baseline of
+/// Fig 3(a). `make_source` must produce a fresh pass over the same data
+/// each call (exactly the re-read Spark does for the second pass).
+pub fn lela_pipeline(
+    make_source: &dyn Fn() -> Box<dyn EntrySource>,
+    cfg: &PipelineConfig,
+) -> anyhow::Result<(crate::algo::LowRank, Metrics)> {
+    use crate::completion::waltmin::Observation;
+    use crate::completion::{waltmin, WAltMinConfig};
+    use crate::rng::Pcg64;
+    use crate::sampling::{default_m, sample_multinomial_fast, NormProfile};
+
+    let mut metrics = Metrics::new();
+    // ---- Pass 1: column norms only.
+    let t1 = StageTimer::start();
+    let src1 = make_source();
+    let meta = src1.meta();
+    let mut a_sq = vec![0.0f64; meta.n1];
+    let mut b_sq = vec![0.0f64; meta.n2];
+    src1.for_each(&mut |e| {
+        let v2 = e.value * e.value;
+        match e.matrix {
+            MatrixId::A => a_sq[e.col as usize] += v2,
+            MatrixId::B => b_sq[e.col as usize] += v2,
+        }
+    });
+    metrics.record_stage("lela/pass1_norms", t1.stop());
+
+    let a_norms: Vec<f64> = a_sq.iter().map(|v| v.sqrt()).collect();
+    let b_norms: Vec<f64> = b_sq.iter().map(|v| v.sqrt()).collect();
+    let profile = NormProfile::new(&a_norms, &b_norms);
+    let m = if cfg.algo.samples > 0.0 {
+        cfg.algo.samples
+    } else {
+        default_m(meta.n1, meta.n2, cfg.algo.rank)
+    };
+    let mut rng = Pcg64::new(cfg.algo.seed ^ 0x00e6a);
+    let omega = sample_multinomial_fast(&profile, m, &mut rng);
+    anyhow::ensure!(!omega.is_empty(), "empty Ω");
+
+    // ---- Pass 2: exact dot products for sampled pairs, accumulated
+    // row-aligned. Requires buffering each ambient row of A and B — LELA's
+    // extra cost relative to the single-pass sketch.
+    let t2 = StageTimer::start();
+    let src2 = make_source();
+    // index samples by (i) and by (j) for row-accumulation
+    let mut values = vec![0.0f64; omega.len()];
+    // For entry-streamed data we accumulate via per-row buffers: collect
+    // rows of A and B, then on row completion add contributions. Since the
+    // stream is arbitrary-order in general, LELA *requires* row-aligned
+    // order; sources that cannot guarantee it must buffer whole rows. We
+    // buffer the full rows here (d × (n1 + n2) worst case — the memory cost
+    // the paper's LELA pays per partition).
+    let mut a_rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); meta.d];
+    let mut b_rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); meta.d];
+    src2.for_each(&mut |e| match e.matrix {
+        MatrixId::A => a_rows[e.row as usize].push((e.col, e.value)),
+        MatrixId::B => b_rows[e.row as usize].push((e.col, e.value)),
+    });
+    // Row-by-row accumulation over sampled pairs — the treeAggregate inner
+    // loop: each ambient row contributes A[row,i]·B[row,j] to sample t.
+    // Flat (i, j) arrays keep the O(m)-per-row sweep cache-friendly.
+    let pairs: Vec<(u32, u32)> =
+        omega.entries.iter().map(|&(i, j)| (i as u32, j as u32)).collect();
+    let mut a_dense = vec![0.0f64; meta.n1];
+    let mut b_dense = vec![0.0f64; meta.n2];
+    for row in 0..meta.d {
+        if a_rows[row].is_empty() || b_rows[row].is_empty() {
+            continue;
+        }
+        for &(c, v) in &a_rows[row] {
+            a_dense[c as usize] = v;
+        }
+        for &(c, v) in &b_rows[row] {
+            b_dense[c as usize] = v;
+        }
+        for (t, &(i, j)) in pairs.iter().enumerate() {
+            values[t] += a_dense[i as usize] * b_dense[j as usize];
+        }
+        for &(c, _) in &a_rows[row] {
+            a_dense[c as usize] = 0.0;
+        }
+        for &(c, _) in &b_rows[row] {
+            b_dense[c as usize] = 0.0;
+        }
+    }
+    metrics.record_stage("lela/pass2_samples", t2.stop());
+
+    let t3 = StageTimer::start();
+    let obs: Vec<Observation> = omega
+        .entries
+        .iter()
+        .zip(&omega.probs)
+        .zip(&values)
+        .map(|((&(i, j), &q_hat), &value)| Observation { i, j, value, q_hat })
+        .collect();
+    let fro = profile.a_fro_sq.sqrt();
+    let wcfg = WAltMinConfig {
+        rank: cfg.algo.rank,
+        iters: cfg.algo.iters,
+        trim_factor: 8.0,
+        seed: cfg.algo.seed ^ 0xa17,
+        split_samples: false,
+        row_profile: Some(a_norms.iter().map(|&n| (n / fro).max(1e-12)).collect()),
+    };
+    let out = waltmin(&obs, meta.n1, meta.n2, &wcfg);
+    metrics.record_stage("lela/waltmin", t3.stop());
+    Ok((out.factors, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{smp_pca, spectral_error};
+    use crate::datasets;
+    use crate::rng::Pcg64;
+    use crate::stream::ShuffledMatrixSource;
+
+    fn dataset() -> (crate::linalg::Mat, crate::linalg::Mat) {
+        let mut rng = Pcg64::new(42);
+        datasets::gd_synthetic(60, 20, 22, &mut rng)
+    }
+
+    #[test]
+    fn pipeline_matches_in_memory_reference() {
+        // Same seed ⇒ streaming pipeline ≡ in-memory smp_pca, exactly.
+        let (a, b) = dataset();
+        let algo = SmpPcaConfig { rank: 3, sketch_size: 24, seed: 5, iters: 6, ..Default::default() };
+        let reference = smp_pca(&a, &b, &algo).unwrap();
+        for workers in [1usize, 2, 4] {
+            let cfg = PipelineConfig { algo: algo.clone(), workers, channel_capacity: 64 };
+            let p = Pipeline::new(cfg);
+            let src = Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 1000 + workers as u64 });
+            let out = p.run(src).unwrap();
+            crate::testing::assert_close(
+                out.result.factors.u.data(),
+                reference.factors.u.data(),
+                1e-9,
+            );
+            crate::testing::assert_close(
+                out.result.factors.v.data(),
+                reference.factors.v.data(),
+                1e-9,
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_metrics_populated() {
+        let (a, b) = dataset();
+        let cfg = PipelineConfig {
+            algo: SmpPcaConfig { rank: 2, sketch_size: 16, seed: 7, ..Default::default() },
+            workers: 2,
+            channel_capacity: 32,
+        };
+        let p = Pipeline::new(cfg);
+        let out = p
+            .run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 3 }))
+            .unwrap();
+        assert_eq!(out.metrics.counter("entries_routed"), (60 * 20 + 60 * 22) as u64);
+        assert!(out.metrics.stage("pass/total").is_some());
+        assert!(out.metrics.stage("leader/finish").is_some());
+        assert!(out.metrics.counter("omega_samples") > 0);
+    }
+
+    #[test]
+    fn lela_pipeline_runs_and_is_accurate() {
+        let (a, b) = dataset();
+        let cfg = PipelineConfig {
+            algo: SmpPcaConfig { rank: 3, sketch_size: 24, seed: 11, iters: 8, ..Default::default() },
+            workers: 2,
+            channel_capacity: 64,
+        };
+        let (a2, b2) = (a.clone(), b.clone());
+        let make = move || -> Box<dyn crate::stream::EntrySource> {
+            Box::new(ShuffledMatrixSource { a: a2.clone(), b: b2.clone(), seed: 99 })
+        };
+        let (lr, metrics) = lela_pipeline(&make, &cfg).unwrap();
+        let err = spectral_error(&lr, &a, &b);
+        assert!(err < 0.6, "err={err}");
+        assert!(metrics.stage("lela/pass1_norms").is_some());
+        assert!(metrics.stage("lela/pass2_samples").is_some());
+    }
+
+    #[test]
+    fn worker_count_does_not_change_result() {
+        let (a, b) = dataset();
+        let algo = SmpPcaConfig { rank: 2, sketch_size: 16, seed: 13, ..Default::default() };
+        let run_with = |workers: usize| {
+            let cfg = PipelineConfig { algo: algo.clone(), workers, channel_capacity: 16 };
+            Pipeline::new(cfg)
+                .run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 5 }))
+                .unwrap()
+                .result
+                .factors
+        };
+        let f1 = run_with(1);
+        let f3 = run_with(3);
+        crate::testing::assert_close(f1.u.data(), f3.u.data(), 1e-10);
+    }
+}

@@ -1,0 +1,139 @@
+//! Figure 2: the rescaled-JL estimator study.
+//!
+//! (a) dot-product estimates for unit-vector pairs across angles, JL vs
+//!     rescaled JL — paper reports MSE 0.129 vs 0.053 at d=1000, k=10;
+//! (b) cone-angle sweep of the spectral-error ratio
+//!     `‖AᵀB − ÃᵀB̃‖ / ‖AᵀB − M̃‖` (≥ 1 everywhere, → large as θ → 0).
+
+use super::{f, Table};
+use crate::datasets;
+use crate::estimate::{plain_jl_dot, rescaled_gram, rescaled_jl_dot};
+use crate::linalg::{spectral_norm, Mat};
+use crate::rng::Pcg64;
+use crate::sketch::{SketchKind, SketchState};
+
+/// Fig 2(a): per-angle estimates + overall MSE. Matches the paper's setup:
+/// d = 1000, sketch 10×1000, unit-norm vector pairs swept over angles.
+pub fn fig2a(scale: f64) -> Table {
+    let d = ((1000.0 * scale) as usize).max(50);
+    let k = 10usize;
+    let pairs = ((200.0 * scale) as usize).max(40);
+    let mut rng = Pcg64::new(0xF26A);
+    let mut t = Table::new(
+        "Fig 2(a): JL vs rescaled-JL dot-product estimates (d=1000, k=10; paper MSE 0.129 vs 0.053)",
+        &["true_dot", "jl_estimate", "rescaled_estimate"],
+    );
+    let mut mse_jl = 0.0;
+    let mut mse_rs = 0.0;
+    for p in 0..pairs {
+        // pair with controlled angle: cosθ swept uniformly in [-1, 1]
+        let target_cos = -1.0 + 2.0 * (p as f64 + 0.5) / pairs as f64;
+        let (x, y) = unit_pair_with_cos(d, target_cos, &mut rng);
+        let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let mut st = SketchState::new(SketchKind::Gaussian, rng.next_u64(), k, d, 2);
+        st.update_column(0, &x);
+        st.update_column(1, &y);
+        let s = st.finalize();
+        let sx = s.sketch.col(0);
+        let sy = s.sketch.col(1);
+        let jl = plain_jl_dot(&sx, &sy);
+        let rs = rescaled_jl_dot(&sx, &sy, 1.0, 1.0);
+        mse_jl += (jl - truth) * (jl - truth);
+        mse_rs += (rs - truth) * (rs - truth);
+        if p % (pairs / 20).max(1) == 0 {
+            t.push(vec![f(truth), f(jl), f(rs)]);
+        }
+    }
+    mse_jl /= pairs as f64;
+    mse_rs /= pairs as f64;
+    t.push(vec!["MSE(JL)".into(), f(mse_jl), String::new()]);
+    t.push(vec!["MSE(rescaled)".into(), String::new(), f(mse_rs)]);
+    t
+}
+
+/// Unit-norm pair with a prescribed cosine: y = cosθ·x + sinθ·x⊥.
+fn unit_pair_with_cos(d: usize, cos_theta: f64, rng: &mut Pcg64) -> (Vec<f64>, Vec<f64>) {
+    let mut x: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    crate::linalg::ops::normalize(&mut x);
+    let mut z: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    // orthogonalize z against x
+    let proj: f64 = x.iter().zip(&z).map(|(a, b)| a * b).sum();
+    for (zi, xi) in z.iter_mut().zip(&x) {
+        *zi -= proj * xi;
+    }
+    crate::linalg::ops::normalize(&mut z);
+    let sin_theta = (1.0 - cos_theta * cos_theta).max(0.0).sqrt();
+    let y: Vec<f64> = x
+        .iter()
+        .zip(&z)
+        .map(|(&xi, &zi)| cos_theta * xi + sin_theta * zi)
+        .collect();
+    (x, y)
+}
+
+/// Fig 2(b): ratio `‖AᵀB − ÃᵀB̃‖ / ‖AᵀB − M̃‖` over cone angle θ.
+pub fn fig2b(scale: f64) -> Table {
+    let d = ((1000.0 * scale) as usize).max(80);
+    let n = ((300.0 * scale) as usize).max(40);
+    let k = 20usize;
+    let mut t = Table::new(
+        "Fig 2(b): error ratio ‖AᵀB−ÃᵀB̃‖/‖AᵀB−M̃‖ vs cone angle (ratio ≥ 1, grows as θ→0)",
+        &["theta_rad", "ratio"],
+    );
+    for &theta in &[0.01, 0.05, 0.1, 0.2, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0] {
+        let mut rng = Pcg64::new(0xF26B ^ (theta * 1000.0) as u64);
+        let (a, b) = datasets::cone_pair(d, n, theta, &mut rng);
+        let truth = a.t_matmul(&b);
+        let sa = SketchState::sketch_matrix(SketchKind::Gaussian, 42, k, &a);
+        let sb = SketchState::sketch_matrix(SketchKind::Gaussian, 42, k, &b);
+        let plain = sa.sketch.t_matmul(&sb.sketch);
+        let rescaled = rescaled_gram(&sa, &sb);
+        let e_plain = err(&truth, &plain);
+        let e_rescaled = err(&truth, &rescaled);
+        t.push(vec![f(theta), f(e_plain / e_rescaled.max(1e-300))]);
+    }
+    t
+}
+
+fn err(truth: &Mat, approx: &Mat) -> f64 {
+    spectral_norm(&truth.sub(approx), 120, 7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_pair_has_requested_cosine() {
+        let mut rng = Pcg64::new(1);
+        for &c in &[-0.9, 0.0, 0.5, 0.99] {
+            let (x, y) = unit_pair_with_cos(200, c, &mut rng);
+            let got: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((got - c).abs() < 1e-10, "want {c} got {got}");
+            let ny: f64 = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((ny - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fig2a_rescaled_wins() {
+        let t = fig2a(0.2);
+        // last two rows carry the MSEs
+        let rows = &t.rows;
+        let mse_jl: f64 = rows[rows.len() - 2][1].parse().unwrap();
+        let mse_rs: f64 = rows[rows.len() - 1][2].parse().unwrap();
+        assert!(mse_rs < mse_jl, "rescaled {mse_rs} vs jl {mse_jl}");
+    }
+
+    #[test]
+    fn fig2b_ratio_above_one_small_angles() {
+        let t = fig2b(0.15);
+        let first_ratio: f64 = t.rows[0][1].parse().unwrap();
+        assert!(first_ratio > 1.5, "θ=0.01 ratio should be ≫1, got {first_ratio}");
+        // all ratios ≥ ~1
+        for row in &t.rows {
+            let r: f64 = row[1].parse().unwrap();
+            assert!(r > 0.8, "ratio {r} at θ={}", row[0]);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Figure 3: (a) pipeline runtime vs cluster size, SMP-PCA vs two-pass
+//! LELA; (b) spectral error vs sketch size on SIFT10K-like and NIPS-BW-like
+//! data for SMP-PCA / LELA / SVD(ÃᵀB̃) (+ the Optimal yardstick).
+
+use super::{f, Table};
+use crate::algo::{lela::LelaConfig, optimal_rank_r, sketch_svd, spectral_error, SmpPcaConfig};
+use crate::coordinator::{pipeline::lela_pipeline, Pipeline, PipelineConfig};
+use crate::datasets;
+use crate::rng::Pcg64;
+use crate::sketch::SketchKind;
+use crate::stream::EntrySource;
+
+/// Fig 3(a): wall time of the full streaming pipeline at worker counts
+/// 1/2/4/8, one-pass SMP-PCA vs two-pass LELA, on a GD synthetic dataset
+/// streamed **from disk** — the paper's setting is explicitly IO-bound
+/// ("the disk IO overhead for loading the matrices to memory multiple
+/// times will be the major performance bottleneck", §1; 150 GB DISK_ONLY
+/// RDDs on EC2). LELA re-reads the file for its second pass; that re-read
+/// is what SMP-PCA's single pass eliminates, and it is the source of the
+/// paper's ≈2× speedup (34 vs 56 min at 2 nodes). The shape to preserve:
+/// SMP-PCA faster at every cluster size, most pronounced at small ones.
+pub fn fig3a(scale: f64) -> Table {
+    let n = ((400.0 * scale) as usize).max(60);
+    let d = n;
+    let mut rng = Pcg64::new(0xF3A);
+    let (a, b) = datasets::gd_synthetic(d, n, n, &mut rng);
+    // Materialize the stream on disk; both pipelines read the same file.
+    let path = std::env::temp_dir().join(format!("smppca_fig3a_{}.csv", std::process::id()));
+    crate::stream::FileSource::write(&path, &a, &b).expect("write stream file");
+    let mut t = Table::new(
+        "Fig 3(a): pipeline runtime vs workers, disk-streamed (paper: SMP-PCA ≈2× faster, e.g. 34 vs 56 min at 2 nodes)",
+        &["workers", "smp_pca_ms", "lela_ms", "speedup"],
+    );
+    for &workers in &[1usize, 2, 4, 8] {
+        let algo = SmpPcaConfig {
+            rank: 5,
+            sketch_size: ((100.0 * scale) as usize).clamp(20, 2000),
+            iters: 5,
+            seed: 11,
+            // SRHT, as in the paper's Spark implementation (§4): per-entry
+            // updates are popcount-only — the right choice for the timing
+            // experiment.
+            sketch: crate::sketch::SketchKind::Srht,
+            ..Default::default()
+        };
+        let cfg = PipelineConfig { algo, workers, channel_capacity: 8192 };
+        // SMP-PCA: ONE pass over the file.
+        let t0 = std::time::Instant::now();
+        let p = Pipeline::new(cfg.clone());
+        p.run(Box::new(crate::stream::FileSource::open(&path).expect("open")))
+            .expect("pipeline failed");
+        let smp_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // LELA: TWO passes over the same file.
+        let path2 = path.clone();
+        let make = move || -> Box<dyn EntrySource> {
+            Box::new(crate::stream::FileSource::open(&path2).expect("open"))
+        };
+        let t1 = std::time::Instant::now();
+        lela_pipeline(&make, &cfg).expect("lela pipeline failed");
+        let lela_ms = t1.elapsed().as_secs_f64() * 1e3;
+        t.push(vec![
+            workers.to_string(),
+            f(smp_ms),
+            f(lela_ms),
+            f(lela_ms / smp_ms.max(1e-9)),
+        ]);
+    }
+    std::fs::remove_file(&path).ok();
+    t
+}
+
+/// Fig 3(b): spectral error (‖AᵀB − X‖/‖AᵀB‖) vs sketch size k on the two
+/// real-data stand-ins. Paper: SMP-PCA beats SVD(ÃᵀB̃) by ×1.8 (SIFT10K)
+/// and ×1.1 (NIPS-BW); error decreases with k toward LELA's.
+pub fn fig3b(scale: f64) -> Table {
+    let mut t = Table::new(
+        "Fig 3(b): spectral error vs sketch size (paper: SMP-PCA < SVD(ÃᵀB̃); ×1.8 SIFT, ×1.1 NIPS-BW)",
+        &["dataset", "k", "optimal", "lela", "smp_pca", "svd_sketch", "svd/smp"],
+    );
+    let r = 5usize;
+    // SIFT-like: A = B (PCA), n images × d features.
+    let mut rng = Pcg64::new(0xF3B);
+    let n_sift = ((600.0 * scale) as usize).max(80);
+    let sift = datasets::sift_like(n_sift, 128.min(n_sift), &mut rng);
+    // NIPS-BW-like: word-by-paper split halves.
+    let n_bow = ((200.0 * scale) as usize).max(40);
+    let d_words = ((1500.0 * scale) as usize).max(150);
+    let (bow_a, bow_b) = datasets::bow_like(d_words, n_bow, n_bow, &mut rng);
+
+    for (name, a, b) in [
+        ("sift10k-like", &sift, &sift),
+        ("nips-bw-like", &bow_a, &bow_b),
+    ] {
+        let opt = spectral_error(&optimal_rank_r(a, b, r), a, b);
+        let lela_err = spectral_error(
+            &crate::algo::lela(a, b, &LelaConfig { rank: r, iters: 8, seed: 3, samples: 0.0 })
+                .expect("lela failed"),
+            a,
+            b,
+        );
+        for &k in &[10usize, 20, 40, 80, 160] {
+            let k = ((k as f64 * scale.max(0.2)) as usize).max(6);
+            let cfg = SmpPcaConfig {
+                rank: r,
+                sketch_size: k,
+                iters: 8,
+                seed: 3,
+                ..Default::default()
+            };
+            let smp = crate::algo::smp_pca(a, b, &cfg)
+                .expect("smp failed")
+                .spectral_error(a, b);
+            let svd_err = spectral_error(
+                &sketch_svd(a, b, r, k, SketchKind::Gaussian, 3),
+                a,
+                b,
+            );
+            t.push(vec![
+                name.to_string(),
+                k.to_string(),
+                f(opt),
+                f(lela_err),
+                f(smp),
+                f(svd_err),
+                f(svd_err / smp.max(1e-300)),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3a_rows_and_speedup() {
+        let t = fig3a(0.5);
+        assert_eq!(t.rows.len(), 4);
+        let speedups: Vec<f64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        // Structural checks only: `cargo test` runs suites concurrently on
+        // a shared core, so wall-clock ratios here are noise. The real
+        // speedup measurement (serial, release) lives in
+        // `cargo bench --bench fig3a_runtime`; see EXPERIMENTS.md Fig 3(a).
+        assert!(speedups.iter().all(|s| s.is_finite() && *s > 0.2), "{speedups:?}");
+    }
+
+    #[test]
+    fn fig3b_error_ordering() {
+        let t = fig3b(0.25);
+        for row in &t.rows {
+            let opt: f64 = row[2].parse().unwrap();
+            let lela: f64 = row[3].parse().unwrap();
+            let smp: f64 = row[4].parse().unwrap();
+            assert!(opt <= lela * 1.05 + 0.02, "optimal should be best: {row:?}");
+            // SMP error finite and sane
+            assert!(smp.is_finite() && smp < 2.0, "{row:?}");
+        }
+        // at the largest k, SMP-PCA should beat SVD(ÃᵀB̃) on sift-like
+        let last_sift = t.rows.iter().filter(|r| r[0].contains("sift")).last().unwrap();
+        let ratio: f64 = last_sift[6].parse().unwrap();
+        assert!(ratio > 0.9, "svd/smp ratio at largest k: {ratio}");
+    }
+}

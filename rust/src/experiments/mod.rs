@@ -1,0 +1,156 @@
+//! Paper-experiment harness: one function per table/figure in the paper's
+//! evaluation (§2 Fig 2, §4 Figs 3–4, Table 1), each regenerating the same
+//! rows/series the paper reports. Shared by `smppca exp …` and the bench
+//! targets; results are recorded in EXPERIMENTS.md.
+
+pub mod ablations;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+
+/// A generic experiment result table: header + rows, printable as TSV.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn push_display(&mut self, row: &[&dyn std::fmt::Display]) {
+        self.push(row.iter().map(|d| format!("{d}")).collect());
+    }
+
+    pub fn to_tsv(&self) -> String {
+        let mut s = format!("# {}\n{}\n", self.title, self.columns.join("\t"));
+        for row in &self.rows {
+            s.push_str(&row.join("\t"));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(c, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[c].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.columns));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Format a float for table output.
+pub fn f(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 || x.abs() < 5e-4 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Run every experiment at a scale, returning all tables.
+pub fn run_all(scale: f64) -> Vec<Table> {
+    vec![
+        fig2::fig2a(scale),
+        fig2::fig2b(scale),
+        fig3::fig3a(scale),
+        fig3::fig3b(scale),
+        fig4::fig4a(scale),
+        fig4::fig4b(scale),
+        fig4::fig4c(scale),
+        table1::table1(scale),
+        ablations::ablation_sketch_kind(scale),
+        ablations::ablation_estimator(scale),
+        ablations::ablation_split(scale),
+    ]
+}
+
+/// Dispatch by experiment id.
+pub fn run_one(id: &str, scale: f64) -> anyhow::Result<Vec<Table>> {
+    Ok(match id {
+        "fig2a" => vec![fig2::fig2a(scale)],
+        "fig2b" => vec![fig2::fig2b(scale)],
+        "fig3a" => vec![fig3::fig3a(scale)],
+        "fig3b" => vec![fig3::fig3b(scale)],
+        "fig4a" => vec![fig4::fig4a(scale)],
+        "fig4b" => vec![fig4::fig4b(scale)],
+        "fig4c" => vec![fig4::fig4c(scale)],
+        "table1" => vec![table1::table1(scale)],
+        "ablations" => vec![
+            ablations::ablation_sketch_kind(scale),
+            ablations::ablation_estimator(scale),
+            ablations::ablation_split(scale),
+        ],
+        "all" => run_all(scale),
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push(vec!["1".into(), "2".into()]);
+        assert!(t.to_tsv().contains("1\t2"));
+        t.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_float() {
+        assert_eq!(f(0.0), "0");
+        assert_eq!(f(0.0271), "0.0271");
+        assert!(f(1e-6).contains('e'));
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(run_one("nope", 1.0).is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! Table 1: spectral-norm error of Optimal / LELA / SMP-PCA on three
+//! datasets (Synthetic, URL-malicious, URL-benign), k = 2000 at paper
+//! scale. Scaled here per DESIGN.md: same d ≫ n shape for the URL pair,
+//! same GD spectrum for Synthetic, k scaled with n.
+
+use super::{f, Table};
+use crate::algo::{lela::LelaConfig, optimal_rank_r, spectral_error, SmpPcaConfig};
+use crate::datasets;
+use crate::rng::Pcg64;
+
+pub fn table1(scale: f64) -> Table {
+    let r = 5usize;
+    let mut t = Table::new(
+        "Table 1: spectral error (paper: synth 0.0271/0.0274/0.0280; url-mal 0.0163/0.0182/0.0188; url-ben 0.0103/0.0105/0.0117)",
+        &["dataset", "d", "n", "k", "optimal", "lela", "smp_pca"],
+    );
+    let mut rng = Pcg64::new(0x7AB1);
+
+    // Synthetic: paper n=d=100,000, k=2000 (k/n = 0.02 — but error is
+    // governed by k against the stable rank, so we keep k/n moderately
+    // larger at small scale to stay in the paper's error regime).
+    let n_syn = ((400.0 * scale) as usize).max(60);
+    let (a_syn, b_syn) = datasets::gd_synthetic(n_syn, n_syn, n_syn, &mut rng);
+    // URL pair: d ≫ n. Paper: d=792k/1.6M, n=10k, k=2000.
+    let d_mal = ((2000.0 * scale) as usize).max(200);
+    let d_ben = ((4000.0 * scale) as usize).max(400);
+    // url_like returns feature×URL matrices (d_i × n shared URL axis); the
+    // CCA product of interest is between *feature subsets over URLs*, i.e.
+    // A, B ∈ R^{URLs × features} with shared URL rows — transpose.
+    let (mal_feats, ben_feats) = {
+        let urls = ((800.0 * scale) as usize).max(120);
+        let (m1, m2) = datasets::url_like(d_mal.min(urls * 4), d_ben.min(urls * 4), urls, &mut rng);
+        (m1.transpose(), m2.transpose()) // URL × feature
+    };
+
+    let k_syn = ((n_syn as f64 * 0.5) as usize).max(30);
+    let k_url = ((mal_feats.cols().min(ben_feats.cols()) as f64 * 0.5) as usize).max(30);
+
+    for (name, a, b, k) in [
+        ("synthetic(GD)", &a_syn, &b_syn, k_syn),
+        ("url-malicious-like", &mal_feats, &mal_feats, k_url),
+        ("url-benign-like", &mal_feats, &ben_feats, k_url),
+    ] {
+        let e_opt = spectral_error(&optimal_rank_r(a, b, r), a, b);
+        let e_lela = spectral_error(
+            &crate::algo::lela(a, b, &LelaConfig { rank: r, iters: 10, seed: 3, samples: 0.0 })
+                .expect("lela"),
+            a,
+            b,
+        );
+        let cfg = SmpPcaConfig { rank: r, sketch_size: k, iters: 10, seed: 3, ..Default::default() };
+        let e_smp = crate::algo::smp_pca(a, b, &cfg).expect("smp").spectral_error(a, b);
+        t.push(vec![
+            name.to_string(),
+            a.rows().to_string(),
+            format!("{}x{}", a.cols(), b.cols()),
+            k.to_string(),
+            f(e_opt),
+            f(e_lela),
+            f(e_smp),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_error_ordering_holds() {
+        // The paper's qualitative result: optimal ≤ lela ≤ smp (small gaps).
+        let t = table1(0.25);
+        assert_eq!(t.rows.len(), 3);
+        for row in &t.rows {
+            let opt: f64 = row[4].parse().unwrap();
+            let lela: f64 = row[5].parse().unwrap();
+            let smp: f64 = row[6].parse().unwrap();
+            assert!(opt <= lela * 1.1 + 0.02, "{row:?}");
+            assert!(lela <= smp * 1.5 + 0.05, "{row:?}");
+            assert!(smp < 1.0, "{row:?}");
+        }
+    }
+}

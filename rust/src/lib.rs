@@ -1,0 +1,51 @@
+//! # smppca — Single Pass PCA of Matrix Products
+//!
+//! Production-quality reproduction of *"Single Pass PCA of Matrix Products"*
+//! (Wu, Bhojanapalli, Sanghavi, Dimakis — NIPS 2016): a streaming system
+//! that computes a rank-`r` approximation of `AᵀB` from **one pass** over
+//! the (arbitrarily ordered) entries of two tall matrices, via
+//!
+//! 1. mergeable streaming sketches `Ã = ΠA`, `B̃ = ΠB` + exact column norms,
+//! 2. biased entrywise sampling (paper Eq. 1, Appendix C.5 fast sampler),
+//! 3. the **rescaled JL** entry estimator (paper Eq. 2),
+//! 4. weighted alternating minimization (WAltMin, paper Algorithm 2).
+//!
+//! Architecture (three layers, python never on the request path):
+//! * L3 — this crate: streaming coordinator, sharded workers, tree merge,
+//!   sampling, completion, baselines, CLI, metrics.
+//! * L2 — `python/compile/model.py`: JAX compute graphs, AOT-lowered to
+//!   HLO text artifacts.
+//! * L1 — `python/compile/kernels/`: Pallas kernels called by L2.
+//! * `runtime`: loads the artifacts through the PJRT C API (`xla` crate)
+//!   and serves them to the L3 hot path; a native engine mirrors the tile
+//!   contract for artifact-free operation.
+
+pub mod algo;
+pub mod bench;
+pub mod cli;
+pub mod completion;
+pub mod coordinator;
+pub mod datasets;
+pub mod estimate;
+pub mod experiments;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod sketch;
+pub mod stream;
+pub mod testing;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::algo::{lela, optimal_rank_r, sketch_svd, smp_pca, LowRank, SmpPcaConfig};
+    pub use crate::coordinator::{Pipeline, PipelineConfig};
+    pub use crate::linalg::Mat;
+    pub use crate::sketch::SketchKind;
+    pub use crate::stream::{Entry, MatrixId};
+}
+
+/// Returns true — used by target stubs during bring-up and smoke tests.
+pub fn crate_ok() -> bool {
+    true
+}

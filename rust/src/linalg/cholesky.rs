@@ -1,0 +1,281 @@
+//! SPD Cholesky factorization and solver — the workhorse of the WAltMin
+//! alternating least-squares steps, where every row update solves an r×r
+//! weighted normal-equation system.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+pub struct Cholesky {
+    l: Mat,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CholeskyError {
+    #[error("matrix is not positive definite (pivot {pivot} at index {index})")]
+    NotPositiveDefinite { index: usize, pivot: f64 },
+    #[error("matrix is not square: {rows}x{cols}")]
+    NotSquare { rows: usize, cols: usize },
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix.
+    pub fn new(a: &Mat) -> Result<Self, CholeskyError> {
+        Self::new_with_tol(a, 0.0)
+    }
+
+    /// Factor, rejecting pivots ≤ `pivot_tol` (use a relative tolerance to
+    /// catch numerically rank-deficient Grams before they produce huge
+    /// factors).
+    pub fn new_with_tol(a: &Mat, pivot_tol: f64) -> Result<Self, CholeskyError> {
+        if a.rows() != a.cols() {
+            return Err(CholeskyError::NotSquare { rows: a.rows(), cols: a.cols() });
+        }
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= pivot_tol {
+                        return Err(CholeskyError::NotPositiveDefinite { index: i, pivot: sum });
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Self { l })
+    }
+
+    /// Solve `A x = b` via forward + backward substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[(i, k)] * y[k];
+            }
+            y[i] = sum / self.l[(i, i)];
+        }
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        x
+    }
+
+    pub fn factor(&self) -> &Mat {
+        &self.l
+    }
+}
+
+/// Solve the (possibly ill-conditioned) normal equations `G x = b` with a
+/// tiny relative ridge added on failure — the ALS inner solve. `G` is r×r,
+/// r ≤ ~50, so the O(r³) cost is irrelevant; robustness is what matters.
+pub fn solve_normal_eq(g: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = g.rows();
+    let diag_max = (0..n).map(|i| g[(i, i)]).fold(0.0f64, f64::max);
+    if diag_max <= 0.0 {
+        // All-zero (or negative-diagonal garbage) Gram: min-norm answer.
+        return vec![0.0; n];
+    }
+    if let Ok(ch) = Cholesky::new_with_tol(g, 1e-10 * diag_max) {
+        return ch.solve(b);
+    }
+    // Rank-deficient: ridge G + λI. λ is relative but bounded away from
+    // rounding noise so the solution approximates the min-norm LS answer
+    // instead of exploding along null directions.
+    let mut lambda = diag_max * 1e-8;
+    for _ in 0..20 {
+        let mut gr = g.clone();
+        for i in 0..n {
+            gr[(i, i)] += lambda;
+        }
+        if let Ok(ch) = Cholesky::new_with_tol(&gr, 0.0) {
+            return ch.solve(b);
+        }
+        lambda *= 100.0;
+    }
+    vec![0.0; n]
+}
+
+/// In-place r×r normal-equation solve over flat scratch buffers — the
+/// allocation-free hot-path variant used inside WAltMin. `g` is row-major
+/// r×r (destroyed), `b` length r (result written in place). Falls back to
+/// the ridge path on non-SPD input. Returns false only if degenerate.
+pub fn solve_normal_eq_flat(g: &mut [f64], b: &mut [f64], r: usize) -> bool {
+    debug_assert_eq!(g.len(), r * r);
+    debug_assert_eq!(b.len(), r);
+    let mut diag_max = 0.0f64;
+    for i in 0..r {
+        diag_max = diag_max.max(g[i * r + i]);
+    }
+    if diag_max <= 0.0 {
+        b.iter_mut().for_each(|x| *x = 0.0);
+        return false;
+    }
+    let pivot_tol = 1e-10 * diag_max;
+    // Snapshot the diagonal: the in-place factorization overwrites the
+    // lower triangle + diagonal, but G is symmetric, so on failure we can
+    // rebuild it from the (untouched) strict upper triangle + this copy.
+    debug_assert!(r <= 256, "flat solver sized for small ALS ranks");
+    let mut diag_copy = [0.0f64; 256];
+    for i in 0..r {
+        diag_copy[i] = g[i * r + i];
+    }
+    // Unrolled in-place Cholesky on the flat buffer.
+    for i in 0..r {
+        for j in 0..=i {
+            let mut sum = g[i * r + j];
+            for k in 0..j {
+                sum -= g[i * r + k] * g[j * r + k];
+            }
+            if i == j {
+                if sum <= pivot_tol {
+                    // Fall back to the allocating ridge path on the
+                    // reconstructed symmetric Gram.
+                    let gm = Mat::from_fn(r, r, |p, q| {
+                        if p == q {
+                            diag_copy[p]
+                        } else {
+                            let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+                            g[lo * r + hi] // upper triangle untouched
+                        }
+                    });
+                    let x = solve_normal_eq(&gm, b);
+                    b.copy_from_slice(&x);
+                    return x.iter().any(|v| *v != 0.0);
+                }
+                g[i * r + j] = sum.sqrt();
+            } else {
+                g[i * r + j] = sum / g[j * r + j];
+            }
+        }
+    }
+    // Forward substitution (y overwrites b).
+    for i in 0..r {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= g[i * r + k] * b[k];
+        }
+        b[i] = sum / g[i * r + i];
+    }
+    // Backward substitution.
+    for i in (0..r).rev() {
+        let mut sum = b[i];
+        for k in (i + 1)..r {
+            sum -= g[k * r + i] * b[k];
+        }
+        b[i] = sum / g[i * r + i];
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_close, prop};
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let g = Mat::gaussian(n + 3, n, &mut rng);
+        let mut spd = g.t_matmul(&g);
+        for i in 0..n {
+            spd[(i, i)] += 0.1;
+        }
+        spd
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(6, 1);
+        let ch = Cholesky::new(&a).unwrap();
+        let llt = ch.factor().matmul_t(ch.factor());
+        assert_close(llt.data(), a.data(), 1e-10);
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = random_spd(8, 2);
+        let mut rng = Pcg64::new(3);
+        let x_true: Vec<f64> = (0..8).map(|_| rng.next_gaussian()).collect();
+        let mut b = vec![0.0; 8];
+        a.gemv_into(&x_true, &mut b);
+        let x = Cholesky::new(&a).unwrap().solve(&b);
+        assert_close(&x, &x_true, 1e-8);
+    }
+
+    #[test]
+    fn solve_property_random_sizes() {
+        prop(11, 20, |rng| {
+            let n = 1 + rng.next_below(12) as usize;
+            let a = random_spd(n, rng.next_u64());
+            let x_true: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let mut b = vec![0.0; n];
+            a.gemv_into(&x_true, &mut b);
+            let x = Cholesky::new(&a).unwrap().solve(&b);
+            assert_close(&x, &x_true, 1e-6);
+        });
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(matches!(Cholesky::new(&a), Err(CholeskyError::NotPositiveDefinite { .. })));
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let a = Mat::zeros(2, 3);
+        assert!(matches!(Cholesky::new(&a), Err(CholeskyError::NotSquare { .. })));
+    }
+
+    #[test]
+    fn ridge_fallback_on_singular() {
+        // Singular PSD matrix: rank-1.
+        let a = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let x = solve_normal_eq(&a, &[2.0, 2.0]);
+        // Any solution with x0+x1 ≈ 2 is acceptable.
+        assert!((x[0] + x[1] - 2.0).abs() < 1e-3, "x={x:?}");
+    }
+
+    #[test]
+    fn zero_matrix_gives_zero() {
+        let a = Mat::zeros(3, 3);
+        let x = solve_normal_eq(&a, &[1.0, 2.0, 3.0]);
+        assert_eq!(x, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn flat_solve_matches_mat_solve() {
+        prop(13, 20, |rng| {
+            let r = 1 + rng.next_below(8) as usize;
+            let a = random_spd(r, rng.next_u64());
+            let b: Vec<f64> = (0..r).map(|_| rng.next_gaussian()).collect();
+            let expect = Cholesky::new(&a).unwrap().solve(&b);
+            let mut g = a.data().to_vec();
+            let mut x = b.clone();
+            assert!(solve_normal_eq_flat(&mut g, &mut x, r));
+            assert_close(&x, &expect, 1e-8);
+        });
+    }
+
+    #[test]
+    fn flat_solve_singular_fallback() {
+        let mut g = vec![1.0, 1.0, 1.0, 1.0];
+        let mut b = vec![2.0, 2.0];
+        solve_normal_eq_flat(&mut g, &mut b, 2);
+        assert!((b[0] + b[1] - 2.0).abs() < 1e-3);
+    }
+}

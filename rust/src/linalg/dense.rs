@@ -1,0 +1,382 @@
+//! Row-major dense f64 matrix with cache-blocked GEMM.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense matrix. Element `(i, j)` lives at `data[i * cols + j]`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Random N(0,1) entries from a caller-provided generator.
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut crate::rng::Pcg64) -> Self {
+        let mut g = crate::rng::BoxMuller::new(rng.next_u64());
+        let mut data = vec![0.0; rows * cols];
+        g.fill(&mut data);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn col_norm(&self, j: usize) -> f64 {
+        (0..self.rows).map(|i| self[(i, j)] * self[(i, j)]).sum::<f64>().sqrt()
+    }
+
+    pub fn row_norm(&self, i: usize) -> f64 {
+        self.row(i).iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `y = A x`
+    pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// `y = Aᵀ x`
+    pub fn gemv_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for (yj, aij) in y.iter_mut().zip(row) {
+                *yj += xi * aij;
+            }
+        }
+    }
+
+    /// `C = A · B` with an i-k-j loop order (streams B rows, unit-stride
+    /// inner loop) — the right shape for row-major without a full blocked
+    /// kernel. Good enough for the sizes the coordinator touches; the real
+    /// hot-path GEMMs go through the Pallas/XLA artifacts.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "inner dims mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+        c
+    }
+
+    /// `C = Aᵀ · B` without materializing the transpose.
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "inner dims mismatch");
+        let mut c = Mat::zeros(self.cols, b.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += aki * bj;
+                }
+            }
+        }
+        c
+    }
+
+    /// `C = A · Bᵀ`.
+    pub fn matmul_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "inner dims mismatch");
+        let mut c = Mat::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..b.rows {
+                let brow = b.row(j);
+                let mut acc = 0.0;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                c[(i, j)] = acc;
+            }
+        }
+        c
+    }
+
+    /// Copy of columns `lo..hi`.
+    pub fn cols_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        Mat::from_fn(self.rows, hi - lo, |i, j| self[(i, lo + j)])
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Mat::zeros(3, 4);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.data()[1 * 4 + 2], 5.0);
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::gaussian(5, 7, &mut rng);
+        let c = a.matmul(&Mat::eye(7));
+        assert_close(a.data(), c.data(), 1e-12);
+    }
+
+    #[test]
+    fn transpose_matmul_consistency() {
+        // property: Aᵀ·B computed by t_matmul equals transpose().matmul
+        let mut rng = Pcg64::new(2);
+        for trial in 0..10 {
+            let m = 3 + (trial % 5);
+            let a = Mat::gaussian(m, 4, &mut rng);
+            let b = Mat::gaussian(m, 6, &mut rng);
+            let c1 = a.t_matmul(&b);
+            let c2 = a.transpose().matmul(&b);
+            assert_close(c1.data(), c2.data(), 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_t_consistency() {
+        let mut rng = Pcg64::new(3);
+        let a = Mat::gaussian(4, 5, &mut rng);
+        let b = Mat::gaussian(6, 5, &mut rng);
+        let c1 = a.matmul_t(&b);
+        let c2 = a.matmul(&b.transpose());
+        assert_close(c1.data(), c2.data(), 1e-12);
+    }
+
+    #[test]
+    fn matmul_associativity() {
+        let mut rng = Pcg64::new(4);
+        let a = Mat::gaussian(3, 4, &mut rng);
+        let b = Mat::gaussian(4, 5, &mut rng);
+        let c = Mat::gaussian(5, 2, &mut rng);
+        let left = a.matmul(&b).matmul(&c);
+        let right = a.matmul(&b.matmul(&c));
+        assert_close(left.data(), right.data(), 1e-10);
+    }
+
+    #[test]
+    fn transpose_of_product() {
+        let mut rng = Pcg64::new(5);
+        let a = Mat::gaussian(3, 4, &mut rng);
+        let b = Mat::gaussian(4, 5, &mut rng);
+        let t1 = a.matmul(&b).transpose();
+        let t2 = b.transpose().matmul(&a.transpose());
+        assert_close(t1.data(), t2.data(), 1e-12);
+    }
+
+    #[test]
+    fn gemv_matches_matmul() {
+        let mut rng = Pcg64::new(6);
+        let a = Mat::gaussian(5, 7, &mut rng);
+        let x = Mat::gaussian(7, 1, &mut rng);
+        let mut y = vec![0.0; 5];
+        a.gemv_into(x.data(), &mut y);
+        let c = a.matmul(&x);
+        assert_close(&y, c.data(), 1e-12);
+    }
+
+    #[test]
+    fn gemv_t_matches() {
+        let mut rng = Pcg64::new(7);
+        let a = Mat::gaussian(5, 7, &mut rng);
+        let x = Mat::gaussian(5, 1, &mut rng);
+        let mut y = vec![0.0; 7];
+        a.gemv_t_into(x.data(), &mut y);
+        let c = a.t_matmul(&x);
+        assert_close(&y, c.data(), 1e-12);
+    }
+
+    #[test]
+    fn col_row_norms() {
+        let a = Mat::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]);
+        assert!((a.col_norm(0) - 5.0).abs() < 1e-12);
+        assert!((a.col_norm(1) - 0.0).abs() < 1e-12);
+        assert!((a.row_norm(0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cols_slice_contents() {
+        let a = Mat::from_fn(3, 5, |i, j| (i * 10 + j) as f64);
+        let s = a.cols_slice(1, 4);
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s[(2, 0)], 21.0);
+        assert_eq!(s[(0, 2)], 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims mismatch")]
+    fn matmul_shape_panic() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

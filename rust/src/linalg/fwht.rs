@@ -1,0 +1,123 @@
+//! Fast Walsh–Hadamard transform — the batch path of the SRHT sketch.
+//!
+//! `fwht_inplace` applies the (unnormalized) Hadamard matrix `H_d` in
+//! O(d log d); `hadamard_entry_sign` evaluates a single entry
+//! `H[s, i] ∈ {+1, −1}` in O(1) via popcount parity, which is what lets the
+//! SRHT sketch ingest *single streamed entries* without ever running a
+//! transform (see `sketch::srht`).
+
+/// In-place unnormalized Walsh–Hadamard transform. `x.len()` must be a
+/// power of two. `H² = d·I`, so applying twice scales by `d`.
+pub fn fwht_inplace(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Sign of the Hadamard entry `H[s, i]` for the Sylvester ordering:
+/// `H[s, i] = (−1)^{popcount(s & i)}`. Branchless — the parity is
+/// data-dependent and unpredictable on shuffled streams, so an if/else
+/// here costs a mispredict per (t, i) pair in the SRHT ingest hot loop
+/// (§Perf #4).
+#[inline]
+pub fn hadamard_entry_sign(s: usize, i: usize) -> f64 {
+    1.0 - 2.0 * ((s & i).count_ones() & 1) as f64
+}
+
+/// Next power of two ≥ n (for SRHT padding).
+#[inline]
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_close, prop};
+
+    #[test]
+    fn involution_property() {
+        prop(1, 20, |rng| {
+            let logn = 1 + rng.next_below(8) as u32;
+            let n = 1usize << logn;
+            let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let mut y = x.clone();
+            fwht_inplace(&mut y);
+            fwht_inplace(&mut y);
+            let scaled: Vec<f64> = x.iter().map(|v| v * n as f64).collect();
+            assert_close(&y, &scaled, 1e-9);
+        });
+    }
+
+    #[test]
+    fn matches_entrywise_definition() {
+        let n = 16;
+        let mut rng = Pcg64::new(2);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut y = x.clone();
+        fwht_inplace(&mut y);
+        for s in 0..n {
+            let direct: f64 = (0..n).map(|i| hadamard_entry_sign(s, i) * x[i]).sum();
+            assert!((y[s] - direct).abs() < 1e-10, "row {s}: {} vs {}", y[s], direct);
+        }
+    }
+
+    #[test]
+    fn parseval_energy() {
+        // ‖Hx‖² = d·‖x‖² (orthogonality up to scale).
+        let n = 64;
+        let mut rng = Pcg64::new(3);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let e0: f64 = x.iter().map(|v| v * v).sum();
+        let mut y = x;
+        fwht_inplace(&mut y);
+        let e1: f64 = y.iter().map(|v| v * v).sum();
+        assert!((e1 - n as f64 * e0).abs() < 1e-8 * e1);
+    }
+
+    #[test]
+    fn known_h2() {
+        let mut x = vec![1.0, 0.0];
+        fwht_inplace(&mut x);
+        assert_eq!(x, vec![1.0, 1.0]);
+        let mut x = vec![0.0, 1.0];
+        fwht_inplace(&mut x);
+        assert_eq!(x, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn trivial_length_one() {
+        let mut x = vec![3.0];
+        fwht_inplace(&mut x);
+        assert_eq!(x, vec![3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        let mut x = vec![0.0; 6];
+        fwht_inplace(&mut x);
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1000), 1024);
+    }
+}

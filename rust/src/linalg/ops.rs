@@ -1,0 +1,192 @@
+//! Matrix-free operator utilities: spectral norms of implicit operators.
+//!
+//! The paper's error metric is `‖AᵀB − X‖ / ‖AᵀB‖` in spectral norm; at the
+//! scales of Table 1 the residual must never be materialized, so everything
+//! here works through `apply` / `applyᵀ` callbacks.
+
+use crate::rng::Pcg64;
+
+/// Spectral norm of an implicit operator via power iteration on `OᵀO`.
+pub fn spectral_norm_op(
+    apply: &dyn Fn(&[f64], &mut [f64]),
+    apply_t: &dyn Fn(&[f64], &mut [f64]),
+    rows: usize,
+    cols: usize,
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    if rows == 0 || cols == 0 {
+        return 0.0;
+    }
+    let mut rng = Pcg64::new(seed);
+    let mut x: Vec<f64> = (0..cols).map(|_| rng.next_gaussian()).collect();
+    normalize(&mut x);
+    let mut y = vec![0.0; rows];
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        apply(&x, &mut y);
+        apply_t(&y, &mut x);
+        let nx = norm(&x);
+        if nx == 0.0 {
+            return 0.0;
+        }
+        for v in &mut x {
+            *v /= nx;
+        }
+        sigma = nx.sqrt();
+    }
+    // One more accurate Rayleigh pass: σ = ‖O x‖ for the converged x.
+    apply(&x, &mut y);
+    let s = norm(&y);
+    if s > 0.0 {
+        sigma = s;
+    }
+    sigma
+}
+
+/// Spectral norm of the *difference* of two implicit operators `O₁ − O₂`.
+pub fn spectral_norm_diff_op(
+    apply1: &dyn Fn(&[f64], &mut [f64]),
+    apply1_t: &dyn Fn(&[f64], &mut [f64]),
+    apply2: &dyn Fn(&[f64], &mut [f64]),
+    apply2_t: &dyn Fn(&[f64], &mut [f64]),
+    rows: usize,
+    cols: usize,
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    let mut buf1 = vec![0.0; rows];
+    let mut buf2 = vec![0.0; rows];
+    let mut buf1c = vec![0.0; cols];
+    let mut buf2c = vec![0.0; cols];
+    // The closures need interior mutability over scratch buffers.
+    use std::cell::RefCell;
+    let b1 = RefCell::new((buf1.clone(), buf2.clone()));
+    let b2 = RefCell::new((buf1c.clone(), buf2c.clone()));
+    let apply = move |x: &[f64], y: &mut [f64]| {
+        let (ref mut t1, ref mut t2) = *b1.borrow_mut();
+        apply1(x, t1);
+        apply2(x, t2);
+        for ((yo, a), b) in y.iter_mut().zip(t1.iter()).zip(t2.iter()) {
+            *yo = a - b;
+        }
+    };
+    let apply_t = move |x: &[f64], y: &mut [f64]| {
+        let (ref mut t1, ref mut t2) = *b2.borrow_mut();
+        apply1_t(x, t1);
+        apply2_t(x, t2);
+        for ((yo, a), b) in y.iter_mut().zip(t1.iter()).zip(t2.iter()) {
+            *yo = a - b;
+        }
+    };
+    buf1.clear();
+    buf2.clear();
+    buf1c.clear();
+    buf2c.clear();
+    spectral_norm_op(&apply, &apply_t, rows, cols, iters, seed)
+}
+
+#[inline]
+pub fn norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+#[inline]
+pub fn normalize(x: &mut [f64]) {
+    let n = norm(x);
+    if n > 0.0 {
+        for v in x {
+            *v /= n;
+        }
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Principal-angle distance between the column spaces of two orthonormal
+/// matrices: `dist(X, Y) = ‖X⊥ᵀ Y‖ = ‖(I − XXᵀ)Y‖`.
+pub fn subspace_dist(x: &super::Mat, y: &super::Mat) -> f64 {
+    assert_eq!(x.rows(), y.rows());
+    // P = Y − X (Xᵀ Y)
+    let xty = x.t_matmul(y);
+    let xxty = x.matmul(&xty);
+    let p = y.sub(&xxty);
+    super::spectral_norm(&p, 100, 0xd157)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{qr_thin, Mat};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn spectral_norm_diag() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let s = crate::linalg::spectral_norm(&a, 200, 1);
+        assert!((s - 4.0).abs() < 1e-8, "s={s}");
+    }
+
+    #[test]
+    fn spectral_norm_diff_is_zero_for_same_op() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::gaussian(6, 5, &mut rng);
+        let s = spectral_norm_diff_op(
+            &|x, y| a.gemv_into(x, y),
+            &|x, y| a.gemv_t_into(x, y),
+            &|x, y| a.gemv_into(x, y),
+            &|x, y| a.gemv_t_into(x, y),
+            6,
+            5,
+            100,
+            3,
+        );
+        assert!(s < 1e-12, "s={s}");
+    }
+
+    #[test]
+    fn spectral_norm_diff_matches_dense() {
+        let mut rng = Pcg64::new(4);
+        let a = Mat::gaussian(7, 6, &mut rng);
+        let b = Mat::gaussian(7, 6, &mut rng);
+        let s1 = spectral_norm_diff_op(
+            &|x, y| a.gemv_into(x, y),
+            &|x, y| a.gemv_t_into(x, y),
+            &|x, y| b.gemv_into(x, y),
+            &|x, y| b.gemv_t_into(x, y),
+            7,
+            6,
+            300,
+            5,
+        );
+        let s2 = crate::linalg::spectral_norm(&a.sub(&b), 300, 5);
+        assert!((s1 - s2).abs() < 1e-6 * s2, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn subspace_dist_identical_and_orthogonal() {
+        let mut rng = Pcg64::new(6);
+        let q = qr_thin(&Mat::gaussian(10, 3, &mut rng)).q;
+        assert!(subspace_dist(&q, &q) < 1e-10);
+        // Orthogonal complement directions: distance 1.
+        let full = qr_thin(&Mat::gaussian(10, 6, &mut rng)).q;
+        let x = full.cols_slice(0, 3);
+        let y = full.cols_slice(3, 6);
+        let d = subspace_dist(&x, &y);
+        assert!((d - 1.0).abs() < 1e-8, "d={d}");
+    }
+
+    #[test]
+    fn zero_operator() {
+        let a = Mat::zeros(3, 3);
+        assert_eq!(crate::linalg::spectral_norm(&a, 50, 7), 0.0);
+    }
+}

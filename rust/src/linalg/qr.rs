@@ -1,0 +1,181 @@
+//! Householder QR with thin-Q extraction.
+
+use super::Mat;
+
+/// Thin QR factorization `A = Q R`, with `Q` m×n orthonormal-column and `R`
+/// n×n upper triangular (requires m ≥ n).
+pub struct QrThin {
+    pub q: Mat,
+    pub r: Mat,
+}
+
+/// Householder QR. Numerically stable (unlike Gram–Schmidt) — this is the
+/// orthonormalization primitive behind the randomized SVD range finder and
+/// the WAltMin iterate normalization.
+pub fn qr_thin(a: &Mat) -> QrThin {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "qr_thin requires rows >= cols ({m} < {n})");
+    let mut r = a.clone();
+    // Householder vectors stored column-wise.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut norm2 = 0.0;
+        for i in k..m {
+            norm2 += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm == 0.0 {
+            // Zero column: identity reflector.
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+        for i in k..m {
+            v[i - k] = r[(i, k)];
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < f64::MIN_POSITIVE {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply H = I - 2 v vᵀ / ‖v‖² to R[k.., k..].
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * r[(i, j)];
+            }
+            let s = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[(i, j)] -= s * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+    // Accumulate thin Q by applying reflectors to the first n columns of I.
+    let mut q = Mat::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < f64::MIN_POSITIVE {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let s = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= s * v[i - k];
+            }
+        }
+    }
+    // Zero numerical noise below R's diagonal; keep only top n×n block.
+    let mut r_out = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+    QrThin { q, r: r_out }
+}
+
+/// Orthonormalize the columns of `a` in place (via thin QR), returning Q.
+/// Columns that are numerically dependent come out as whatever the
+/// reflectors produce — callers that care should check `R`'s diagonal.
+pub fn orthonormalize(a: &Mat) -> Mat {
+    qr_thin(a).q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_close, prop};
+
+    fn check_qr(a: &Mat, tol: f64) {
+        let QrThin { q, r } = qr_thin(a);
+        // QR = A
+        let qr = q.matmul(&r);
+        assert_close(qr.data(), a.data(), tol);
+        // QᵀQ = I
+        let qtq = q.t_matmul(&q);
+        let eye = Mat::eye(a.cols());
+        assert_close(qtq.data(), eye.data(), tol);
+        // R upper triangular
+        for i in 0..r.rows() {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < tol, "R not upper-tri at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn qr_square() {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::gaussian(6, 6, &mut rng);
+        check_qr(&a, 1e-10);
+    }
+
+    #[test]
+    fn qr_tall() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::gaussian(20, 5, &mut rng);
+        check_qr(&a, 1e-10);
+    }
+
+    #[test]
+    fn qr_property_random_shapes() {
+        prop(42, 25, |rng| {
+            let n = 1 + (rng.next_below(8) as usize);
+            let m = n + rng.next_below(12) as usize;
+            let a = Mat::gaussian(m, n, rng);
+            check_qr(&a, 1e-9);
+        });
+    }
+
+    #[test]
+    fn qr_rank_deficient() {
+        // Two identical columns: QR must still hold, QᵀQ = I.
+        let mut rng = Pcg64::new(3);
+        let a0 = Mat::gaussian(10, 1, &mut rng);
+        let a = Mat::from_fn(10, 3, |i, j| {
+            if j < 2 {
+                a0[(i, 0)]
+            } else {
+                (i as f64) / 10.0
+            }
+        });
+        let QrThin { q, r } = qr_thin(&a);
+        let qr = q.matmul(&r);
+        assert_close(qr.data(), a.data(), 1e-9);
+        let qtq = q.t_matmul(&q);
+        assert_close(qtq.data(), Mat::eye(3).data(), 1e-9);
+    }
+
+    #[test]
+    fn qr_zero_matrix() {
+        let a = Mat::zeros(5, 3);
+        let QrThin { q, r } = qr_thin(&a);
+        assert!(r.max_abs() < 1e-14);
+        // Q columns orthonormal even here.
+        let qtq = q.t_matmul(&q);
+        assert_close(qtq.data(), Mat::eye(3).data(), 1e-12);
+    }
+
+    #[test]
+    fn orthonormalize_idempotent_span() {
+        let mut rng = Pcg64::new(4);
+        let a = Mat::gaussian(12, 4, &mut rng);
+        let q1 = orthonormalize(&a);
+        let q2 = orthonormalize(&q1);
+        // span(q1) == span(q2): q1 q1ᵀ == q2 q2ᵀ as projectors
+        let p1 = q1.matmul_t(&q1);
+        let p2 = q2.matmul_t(&q2);
+        assert_close(p1.data(), p2.data(), 1e-9);
+    }
+}

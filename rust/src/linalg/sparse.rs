@@ -1,0 +1,273 @@
+//! Sparse matrices: COO for accumulation (the sampled matrix `P_Ω(M̃)` is
+//! built as triplets), CSR for the matrix-free products the randomized SVD
+//! and spectral-norm measurements need.
+
+use super::Mat;
+
+/// Coordinate-format triplets.
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.entries.push((i, j, v));
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Convert to CSR, summing duplicates.
+    pub fn to_csr(&self) -> Csr {
+        let mut order: Vec<usize> = (0..self.entries.len()).collect();
+        order.sort_by_key(|&e| {
+            let (i, j, _) = self.entries[e];
+            (i, j)
+        });
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(self.entries.len());
+        let mut values: Vec<f64> = Vec::with_capacity(self.entries.len());
+        let mut last: Option<(usize, usize)> = None;
+        for &e in &order {
+            let (i, j, v) = self.entries[e];
+            if last == Some((i, j)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[i + 1] += 1;
+                indices.push(j);
+                values.push(v);
+                last = Some((i, j));
+            }
+        }
+        for i in 0..self.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for &(i, j, v) in &self.entries {
+            m[(i, j)] += v;
+        }
+        m
+    }
+}
+
+/// Compressed sparse row.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// `y = A x`
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let mut acc = 0.0;
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                acc += self.values[idx] * x[self.indices[idx]];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// `y = Aᵀ x`
+    pub fn spmv_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                y[self.indices[idx]] += self.values[idx] * xi;
+            }
+        }
+    }
+
+    /// `C = A · B` with dense B.
+    pub fn spmm(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows());
+        let mut c = Mat::zeros(self.rows, b.cols());
+        for i in 0..self.rows {
+            let crow = c.row_mut(i);
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let v = self.values[idx];
+                let brow = b.row(self.indices[idx]);
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += v * bj;
+                }
+            }
+        }
+        c
+    }
+
+    /// `C = Aᵀ · B` with dense B.
+    pub fn spmm_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows());
+        let mut c = Mat::zeros(self.cols, b.cols());
+        for i in 0..self.rows {
+            let brow = b.row(i);
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let v = self.values[idx];
+                let crow = c.row_mut(self.indices[idx]);
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += v * bj;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                m[(i, self.indices[idx])] = self.values[idx];
+            }
+        }
+        m
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_close, prop};
+
+    fn random_coo(rows: usize, cols: usize, nnz: usize, rng: &mut Pcg64) -> Coo {
+        let mut c = Coo::new(rows, cols);
+        for _ in 0..nnz {
+            c.push(
+                rng.next_below(rows as u64) as usize,
+                rng.next_below(cols as u64) as usize,
+                rng.next_gaussian(),
+            );
+        }
+        c
+    }
+
+    #[test]
+    fn coo_csr_dense_roundtrip() {
+        prop(1, 20, |rng| {
+            let rows = 1 + rng.next_below(10) as usize;
+            let cols = 1 + rng.next_below(10) as usize;
+            let coo = random_coo(rows, cols, 20, rng);
+            let d1 = coo.to_dense();
+            let d2 = coo.to_csr().to_dense();
+            assert_close(d1.data(), d2.data(), 1e-12);
+        });
+    }
+
+    #[test]
+    fn duplicates_sum() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.5);
+        coo.push(0, 1, 2.5);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 1);
+        assert_eq!(csr.to_dense()[(0, 1)], 4.0);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        prop(2, 15, |rng| {
+            let rows = 1 + rng.next_below(12) as usize;
+            let cols = 1 + rng.next_below(12) as usize;
+            let coo = random_coo(rows, cols, 30, rng);
+            let csr = coo.to_csr();
+            let dense = coo.to_dense();
+            let x: Vec<f64> = (0..cols).map(|_| rng.next_gaussian()).collect();
+            let mut y1 = vec![0.0; rows];
+            let mut y2 = vec![0.0; rows];
+            csr.spmv_into(&x, &mut y1);
+            dense.gemv_into(&x, &mut y2);
+            assert_close(&y1, &y2, 1e-12);
+        });
+    }
+
+    #[test]
+    fn spmv_t_matches_dense() {
+        prop(3, 15, |rng| {
+            let rows = 1 + rng.next_below(12) as usize;
+            let cols = 1 + rng.next_below(12) as usize;
+            let coo = random_coo(rows, cols, 30, rng);
+            let csr = coo.to_csr();
+            let dense = coo.to_dense();
+            let x: Vec<f64> = (0..rows).map(|_| rng.next_gaussian()).collect();
+            let mut y1 = vec![0.0; cols];
+            let mut y2 = vec![0.0; cols];
+            csr.spmv_t_into(&x, &mut y1);
+            dense.gemv_t_into(&x, &mut y2);
+            assert_close(&y1, &y2, 1e-12);
+        });
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Pcg64::new(4);
+        let coo = random_coo(6, 5, 12, &mut rng);
+        let csr = coo.to_csr();
+        let b = Mat::gaussian(5, 3, &mut rng);
+        let c1 = csr.spmm(&b);
+        let c2 = coo.to_dense().matmul(&b);
+        assert_close(c1.data(), c2.data(), 1e-12);
+    }
+
+    #[test]
+    fn spmm_t_matches_dense() {
+        let mut rng = Pcg64::new(5);
+        let coo = random_coo(6, 5, 12, &mut rng);
+        let csr = coo.to_csr();
+        let b = Mat::gaussian(6, 3, &mut rng);
+        let c1 = csr.spmm_t(&b);
+        let c2 = coo.to_dense().t_matmul(&b);
+        assert_close(c1.data(), c2.data(), 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let coo = Coo::new(3, 3);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 0);
+        let mut y = vec![1.0; 3];
+        csr.spmv_into(&[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn fro_norm_matches() {
+        let mut rng = Pcg64::new(6);
+        let coo = random_coo(8, 8, 5, &mut rng); // few nnz => no collisions likely
+        let csr = coo.to_csr();
+        let dense_fro = crate::linalg::fro_norm(&csr.to_dense());
+        assert!((csr.fro_norm() - dense_fro).abs() < 1e-12);
+    }
+}

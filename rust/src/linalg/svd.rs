@@ -1,0 +1,374 @@
+//! Singular value decomposition: one-sided Jacobi (exact, for small/medium
+//! dense matrices) and randomized subspace iteration (truncated, for large
+//! or implicitly-represented operators).
+//!
+//! Jacobi is chosen over Golub–Kahan because it is simple, unconditionally
+//! convergent, and accurate for the modest `n` (≲ a few thousand) the
+//! coordinator ever decomposes exactly; the WAltMin init and the spectral
+//! error measurements use the randomized path.
+
+use super::{qr_thin, Mat};
+use crate::rng::Pcg64;
+
+/// Thin SVD `A = U Σ Vᵀ`, singular values sorted descending.
+pub struct Svd {
+    pub u: Mat,
+    /// Singular values, length = min(rows, cols) (or `rank` for truncated).
+    pub s: Vec<f64>,
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct `U Σ Vᵀ`.
+    pub fn reconstruct(&self) -> Mat {
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            for (j, &sj) in self.s.iter().enumerate() {
+                us[(i, j)] *= sj;
+            }
+        }
+        us.matmul_t(&self.v)
+    }
+
+    /// Keep only the leading `r` components.
+    pub fn truncate(mut self, r: usize) -> Svd {
+        let r = r.min(self.s.len());
+        self.s.truncate(r);
+        self.u = self.u.cols_slice(0, r);
+        self.v = self.v.cols_slice(0, r);
+        self
+    }
+}
+
+/// One-sided Jacobi SVD of a dense matrix (any shape; internally operates on
+/// the "wide or square" orientation that keeps the rotation side small).
+///
+/// Works by orthogonalizing pairs of columns of `A` with Givens rotations
+/// accumulated into `V`; at convergence the columns of `AV` are `σᵢ uᵢ`.
+pub fn svd_jacobi(a: &Mat) -> Svd {
+    if a.rows() < a.cols() {
+        // SVD(Aᵀ) = V Σ Uᵀ — swap factors.
+        let t = svd_jacobi(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    let m = a.rows();
+    let n = a.cols();
+    let mut w = a.clone(); // m×n working copy, columns evolve to σᵢuᵢ
+    let mut v = Mat::eye(n);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2×2 Gram block of columns p, q.
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                let denom = (app * aqq).sqrt();
+                if denom > 0.0 {
+                    off = off.max(apq.abs() / denom);
+                }
+                if apq.abs() <= eps * denom {
+                    continue;
+                }
+                // Jacobi rotation zeroing the off-diagonal of the 2×2 Gram.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q)] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-13 {
+            break;
+        }
+    }
+    // Extract σ and U, sort descending.
+    let mut svals: Vec<(f64, usize)> = (0..n).map(|j| (w.col_norm(j), j)).collect();
+    svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut u = Mat::zeros(m, n);
+    let mut vout = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (out_j, &(sigma, j)) in svals.iter().enumerate() {
+        s.push(sigma);
+        if sigma > 0.0 {
+            for i in 0..m {
+                u[(i, out_j)] = w[(i, j)] / sigma;
+            }
+        } else {
+            // Null direction: leave a zero column (callers treat rank-aware).
+            u[(out_j.min(m - 1), out_j)] = 0.0;
+        }
+        for i in 0..n {
+            vout[(i, out_j)] = v[(i, j)];
+        }
+    }
+    Svd { u, s, v: vout }
+}
+
+/// Randomized truncated SVD of a dense matrix via subspace iteration
+/// (Halko–Martinsson–Tropp): range finding with oversampling `p`, `q` power
+/// iterations with QR re-orthonormalization, then exact Jacobi SVD of the
+/// small projected matrix.
+pub fn truncated_svd(a: &Mat, r: usize, oversample: usize, power_iters: usize, seed: u64) -> Svd {
+    truncated_svd_op(
+        &|x, y| a.gemv_into(x, y),
+        &|x, y| a.gemv_t_into(x, y),
+        a.rows(),
+        a.cols(),
+        r,
+        oversample,
+        power_iters,
+        seed,
+    )
+}
+
+/// Matrix-free randomized truncated SVD. `apply(x, y)` computes `y = Ax`,
+/// `apply_t(x, y)` computes `y = Aᵀx`.
+#[allow(clippy::too_many_arguments)]
+pub fn truncated_svd_op(
+    apply: &dyn Fn(&[f64], &mut [f64]),
+    apply_t: &dyn Fn(&[f64], &mut [f64]),
+    rows: usize,
+    cols: usize,
+    r: usize,
+    oversample: usize,
+    power_iters: usize,
+    seed: u64,
+) -> Svd {
+    let l = (r + oversample).min(cols).min(rows);
+    let mut rng = Pcg64::new(seed);
+    // Y = A * G, G cols×l gaussian
+    let g = Mat::gaussian(cols, l, &mut rng);
+    let mut y = Mat::zeros(rows, l);
+    let mut tmp_col = vec![0.0; rows];
+    let mut tmp_in = vec![0.0; cols];
+    for j in 0..l {
+        for i in 0..cols {
+            tmp_in[i] = g[(i, j)];
+        }
+        apply(&tmp_in, &mut tmp_col);
+        y.set_col(j, &tmp_col);
+    }
+    let mut q = qr_thin(&y).q;
+    // Power iterations: Q ← orth(A (Aᵀ Q))
+    let mut z = Mat::zeros(cols, l);
+    let mut tmp_r = vec![0.0; rows];
+    let mut tmp_c = vec![0.0; cols];
+    for _ in 0..power_iters {
+        for j in 0..l {
+            for i in 0..rows {
+                tmp_r[i] = q[(i, j)];
+            }
+            apply_t(&tmp_r, &mut tmp_c);
+            z.set_col(j, &tmp_c);
+        }
+        let qz = qr_thin(&z).q;
+        for j in 0..l {
+            for i in 0..cols {
+                tmp_c[i] = qz[(i, j)];
+            }
+            apply(&tmp_c, &mut tmp_r);
+            y.set_col(j, &tmp_r);
+        }
+        q = qr_thin(&y).q;
+    }
+    // B = Qᵀ A  (l×cols), via Bᵀ = Aᵀ Q
+    let mut bt = Mat::zeros(cols, l);
+    for j in 0..l {
+        for i in 0..rows {
+            tmp_r[i] = q[(i, j)];
+        }
+        apply_t(&tmp_r, &mut tmp_c);
+        bt.set_col(j, &tmp_c);
+    }
+    let b = bt.transpose();
+    let small = svd_jacobi(&b); // l×cols, l small
+    let u = q.matmul(&small.u); // rows×l
+    Svd { u, s: small.s, v: small.v }.truncate(r)
+}
+
+/// Best rank-r approximation `A_r` of a dense matrix (exact via Jacobi when
+/// small, randomized otherwise).
+pub fn best_rank_r(a: &Mat, r: usize) -> Mat {
+    let n = a.rows().min(a.cols());
+    if n <= 400 {
+        svd_jacobi(a).truncate(r).reconstruct()
+    } else {
+        truncated_svd(a, r, 10, 4, 0x5eed).reconstruct()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::fro_norm;
+    use crate::testing::{assert_close, prop};
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let u = Mat::gaussian(m, r, &mut rng);
+        let v = Mat::gaussian(n, r, &mut rng);
+        u.matmul_t(&v)
+    }
+
+    fn check_svd(a: &Mat, svd: &Svd, tol: f64) {
+        let rec = svd.reconstruct();
+        let diff = a.sub(&rec);
+        assert!(
+            fro_norm(&diff) <= tol * fro_norm(a).max(1e-300),
+            "reconstruction error {} > {}",
+            fro_norm(&diff),
+            tol
+        );
+        // sorted descending, nonneg
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(svd.s.iter().all(|&x| x >= 0.0));
+        // U, V orthonormal columns (up to rank)
+        let utu = svd.u.t_matmul(&svd.u);
+        let vtv = svd.v.t_matmul(&svd.v);
+        for i in 0..utu.rows() {
+            for j in 0..utu.cols() {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                if svd.s[i.min(svd.s.len() - 1)] > 1e-10 && svd.s[j.min(svd.s.len() - 1)] > 1e-10 {
+                    assert!((utu[(i, j)] - expect).abs() < 1e-8, "UᵀU[{i},{j}]={}", utu[(i, j)]);
+                    assert!((vtv[(i, j)] - expect).abs() < 1e-8, "VᵀV[{i},{j}]={}", vtv[(i, j)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_identity() {
+        let a = Mat::eye(4);
+        let svd = svd_jacobi(&a);
+        for &s in &svd.s {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        check_svd(&a, &svd, 1e-10);
+    }
+
+    #[test]
+    fn jacobi_diag_known_values() {
+        let a = Mat::from_fn(3, 3, |i, j| if i == j { (3 - i) as f64 } else { 0.0 });
+        let svd = svd_jacobi(&a);
+        assert_close(&svd.s, &[3.0, 2.0, 1.0], 1e-12);
+    }
+
+    #[test]
+    fn jacobi_square_random() {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::gaussian(8, 8, &mut rng);
+        check_svd(&a, &svd_jacobi(&a), 1e-9);
+    }
+
+    #[test]
+    fn jacobi_tall_and_wide() {
+        let mut rng = Pcg64::new(2);
+        let tall = Mat::gaussian(12, 5, &mut rng);
+        check_svd(&tall, &svd_jacobi(&tall), 1e-9);
+        let wide = Mat::gaussian(5, 12, &mut rng);
+        check_svd(&wide, &svd_jacobi(&wide), 1e-9);
+    }
+
+    #[test]
+    fn jacobi_property_random_shapes() {
+        prop(7, 15, |rng| {
+            let m = 2 + rng.next_below(10) as usize;
+            let n = 2 + rng.next_below(10) as usize;
+            let a = Mat::gaussian(m, n, rng);
+            check_svd(&a, &svd_jacobi(&a), 1e-8);
+        });
+    }
+
+    #[test]
+    fn jacobi_exact_low_rank() {
+        let a = low_rank(20, 15, 3, 5);
+        let svd = svd_jacobi(&a);
+        // rank 3: σ₄.. ≈ 0
+        assert!(svd.s[3] < 1e-9 * svd.s[0]);
+        let a3 = svd.truncate(3).reconstruct();
+        let diff = a.sub(&a3);
+        assert!(fro_norm(&diff) < 1e-9 * fro_norm(&a));
+    }
+
+    #[test]
+    fn jacobi_spectral_norm_matches_power_iter() {
+        let mut rng = Pcg64::new(9);
+        let a = Mat::gaussian(15, 10, &mut rng);
+        let svd = svd_jacobi(&a);
+        let pn = crate::linalg::spectral_norm(&a, 200, 3);
+        assert!((svd.s[0] - pn).abs() < 1e-6 * svd.s[0], "{} vs {}", svd.s[0], pn);
+    }
+
+    #[test]
+    fn truncated_recovers_exact_low_rank() {
+        let a = low_rank(60, 40, 4, 11);
+        let svd = truncated_svd(&a, 4, 8, 3, 1);
+        let rec = svd.reconstruct();
+        let diff = a.sub(&rec);
+        assert!(fro_norm(&diff) < 1e-8 * fro_norm(&a));
+    }
+
+    #[test]
+    fn truncated_close_to_jacobi_on_decaying_spectrum() {
+        // A = G·D with decaying D: truncated SVD top-r ≈ exact top-r.
+        let mut rng = Pcg64::new(13);
+        let g = Mat::gaussian(50, 30, &mut rng);
+        let mut a = g.clone();
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                a[(i, j)] = g[(i, j)] / ((j + 1) as f64);
+            }
+        }
+        let exact = svd_jacobi(&a);
+        let approx = truncated_svd(&a, 5, 10, 4, 2);
+        for i in 0..5 {
+            assert!(
+                (approx.s[i] - exact.s[i]).abs() < 1e-6 * exact.s[0],
+                "σ{i}: {} vs {}",
+                approx.s[i],
+                exact.s[i]
+            );
+        }
+    }
+
+    #[test]
+    fn truncate_shapes() {
+        let a = low_rank(10, 8, 5, 17);
+        let svd = svd_jacobi(&a).truncate(2);
+        assert_eq!(svd.s.len(), 2);
+        assert_eq!(svd.u.cols(), 2);
+        assert_eq!(svd.v.cols(), 2);
+        assert_eq!(svd.u.rows(), 10);
+        assert_eq!(svd.v.rows(), 8);
+    }
+
+    #[test]
+    fn jacobi_zero_matrix() {
+        let a = Mat::zeros(5, 4);
+        let svd = svd_jacobi(&a);
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+    }
+}

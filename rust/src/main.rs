@@ -1,0 +1,171 @@
+//! `smppca` CLI: run the streaming pipeline, regenerate paper experiments,
+//! and generate datasets. See `smppca help`.
+
+use smppca::algo::{lela::LelaConfig, optimal_rank_r, sketch_svd, spectral_error, SmpPcaConfig};
+use smppca::cli::{Args, HELP};
+use smppca::coordinator::{Pipeline, PipelineConfig};
+use smppca::datasets;
+use smppca::linalg::Mat;
+use smppca::rng::Pcg64;
+use smppca::runtime::{artifact_dir, artifacts_available, native_engine, TileEngine, XlaEngine};
+use smppca::sketch::SketchKind;
+use smppca::stream::{EntrySource, FileSource, ShuffledMatrixSource};
+
+fn main() {
+    let code = match real_main() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(_) => {
+            println!("{HELP}");
+            return Ok(());
+        }
+    };
+    match args.subcommand.as_str() {
+        "run" => cmd_run(&args),
+        "exp" => cmd_exp(&args),
+        "gen" => cmd_gen(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'; try `smppca help`"),
+    }
+}
+
+fn load_dataset(args: &Args) -> anyhow::Result<(Mat, Mat)> {
+    let d = args.get_parse("d", 512usize)?;
+    let n1 = args.get_parse("n1", 256usize)?;
+    let n2 = args.get_parse("n2", 256usize)?;
+    let seed = args.get_parse("seed", 1u64)?;
+    let mut rng = Pcg64::new(seed);
+    Ok(match args.get("dataset").unwrap_or("gd") {
+        "gd" => datasets::gd_synthetic(d, n1, n2, &mut rng),
+        "cone" => {
+            let theta = args.get_parse("theta", 0.2f64)?;
+            datasets::cone_pair(d, n1.max(n2), theta, &mut rng)
+        }
+        "sift" => {
+            let m = datasets::sift_like(n1, d.min(128), &mut rng);
+            (m.clone(), m)
+        }
+        "bow" => datasets::bow_like(d, n1, n2, &mut rng),
+        "url" => {
+            let (a, b) = datasets::url_like(d / 2, d / 2, n1, &mut rng);
+            (a.transpose(), b.transpose())
+        }
+        other => anyhow::bail!("unknown dataset '{other}'"),
+    })
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let rank = args.get_parse("rank", 5usize)?;
+    let k = args.get_parse("k", 100usize)?;
+    let samples = args.get_parse("samples", 0.0f64)?;
+    let iters = args.get_parse("iters", 10usize)?;
+    let workers = args.get_parse("workers", 2usize)?;
+    let seed = args.get_parse("seed", 1u64)?;
+    let sketch: SketchKind = args
+        .get("sketch")
+        .unwrap_or("gaussian")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let algo =
+        SmpPcaConfig { rank, sketch_size: k, samples, iters, sketch, seed, plain_estimator: false };
+    let cfg = PipelineConfig { algo, workers, channel_capacity: 8192 };
+
+    let engine: Box<dyn TileEngine> = match args.get("engine").unwrap_or("native") {
+        "native" => native_engine(),
+        "xla" => {
+            let dir = artifact_dir();
+            anyhow::ensure!(
+                artifacts_available(&dir),
+                "artifacts missing in {} — run `make artifacts`",
+                dir.display()
+            );
+            let e = XlaEngine::load(&dir)?;
+            println!("xla engine loaded (platform: {})", e.platform());
+            Box::new(e)
+        }
+        other => anyhow::bail!("unknown engine '{other}'"),
+    };
+    let engine_name = engine.name();
+
+    // Build source (+ keep dense copies when synthetic, for error reporting)
+    let (source, dense): (Box<dyn EntrySource>, Option<(Mat, Mat)>) = match args.get("input") {
+        Some(path) => (Box::new(FileSource::open(path)?), None),
+        None => {
+            let (a, b) = load_dataset(args)?;
+            (
+                Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: seed ^ 0x517 }),
+                Some((a, b)),
+            )
+        }
+    };
+    let meta = source.meta();
+    println!(
+        "running SMP-PCA: d={} n1={} n2={} r={rank} k={k} workers={workers} engine={engine_name}",
+        meta.d, meta.n1, meta.n2
+    );
+    let pipe = Pipeline::with_engine(cfg, engine);
+    let t0 = std::time::Instant::now();
+    let out = pipe.run(source)?;
+    println!(
+        "done in {:.1} ms; |Ω| = {}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        out.result.samples_drawn
+    );
+    println!("stage metrics:\n{}", out.metrics.report());
+
+    if let Some((a, b)) = dense {
+        let err = spectral_error(&out.result.factors, &a, &b);
+        println!("relative spectral error ‖AᵀB − ÛV̂ᵀ‖/‖AᵀB‖ = {err:.5}");
+        if args.flag("baselines") {
+            let e_opt = spectral_error(&optimal_rank_r(&a, &b, rank), &a, &b);
+            let e_lela = spectral_error(
+                &smppca::algo::lela(&a, &b, &LelaConfig { rank, iters, seed, samples })?,
+                &a,
+                &b,
+            );
+            let e_svd = spectral_error(&sketch_svd(&a, &b, rank, k, sketch, seed), &a, &b);
+            println!("baselines: optimal={e_opt:.5}  lela={e_lela:.5}  svd(sketch)={e_svd:.5}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let scale = args.get_parse("scale", 1.0f64)?;
+    let tables = smppca::experiments::run_one(id, scale)?;
+    let mut tsv = String::new();
+    for t in &tables {
+        t.print();
+        tsv.push_str(&t.to_tsv());
+        tsv.push('\n');
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &tsv)?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("gen requires --out PATH"))?;
+    let (a, b) = load_dataset(args)?;
+    FileSource::write(out, &a, &b)?;
+    println!("wrote {} ({}x{} + {}x{})", out, a.rows(), a.cols(), b.rows(), b.cols());
+    Ok(())
+}

@@ -1,0 +1,272 @@
+//! Deterministic, seedable random number generation.
+//!
+//! The image ships no `rand` crate, and — more importantly — the SMP-PCA
+//! pipeline needs *counter-based* Gaussian generation: the sketch matrix
+//! `Π ∈ R^{k×d}` is never materialized; column `Π[:, i]` is regenerated on
+//! demand from `(seed, i)` so that a streamed entry `(i, j, v)` can be folded
+//! into the sketch with O(k) work and zero shared state. Mergeability of
+//! per-worker sketches relies on every worker deriving the *same* `Π[:, i]`
+//! from the shared seed.
+//!
+//! Generators:
+//! * [`SplitMix64`] — seed expansion / hashing (Steele et al., JDK).
+//! * [`Pcg64`] — main sequential stream (PCG XSL-RR 128/64, O'Neill 2014).
+//! * [`gaussian_column`] — counter-based N(0, 1/k) column of Π.
+
+pub mod gaussian;
+
+pub use gaussian::{BoxMuller, gaussian_column, gaussian_column_into};
+
+/// SplitMix64: fast, well-distributed 64-bit mixer. Used both as a tiny
+/// stand-alone generator and as the seed-expansion function for [`Pcg64`]
+/// and the counter-based column generator.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        mix64(self.state)
+    }
+}
+
+/// The SplitMix64 finalizer as a pure function — the core of the
+/// counter-based generator: `mix64(seed ⊕ f(counter))` is a high-quality
+/// 64-bit hash of the pair.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash a (seed, counter) pair to a u64. Distinct pairs give independent-ish
+/// streams; this is the standard counter-based construction (Salmon et al.,
+/// "Parallel random numbers: as easy as 1, 2, 3", scaled down).
+#[inline]
+pub fn hash2(seed: u64, counter: u64) -> u64 {
+    mix64(seed ^ counter.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0x2545_F491_4F6C_DD1D))
+}
+
+/// PCG XSL-RR 128/64: the main sequential generator. 128-bit LCG state,
+/// 64-bit output with xorshift-low + random rotation.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed via SplitMix64 expansion so nearby seeds give unrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64();
+        let s1 = sm.next_u64();
+        let i0 = sm.next_u64();
+        let i1 = sm.next_u64();
+        let mut pcg = Self {
+            state: ((s0 as u128) << 64) | s1 as u128,
+            inc: (((i0 as u128) << 64) | i1 as u128) | 1,
+        };
+        pcg.next_u64(); // decorrelate from the raw seed
+        pcg
+    }
+
+    /// Derive an independent child stream (e.g. one per worker thread).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ hash2(tag, 0x5eed))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (both variates used).
+    #[inline]
+    pub fn next_gaussian(&mut self) -> f64 {
+        // Single-variate path; BoxMuller caches pairs when bulk is needed.
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.next_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_seed_sensitivity() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        let hits = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(hits, 0);
+    }
+
+    #[test]
+    fn pcg_deterministic_and_distinct() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        let mut c = Pcg64::new(8);
+        let mut same_c = 0;
+        for _ in 0..1000 {
+            let x = a.next_u64();
+            assert_eq!(x, b.next_u64());
+            if x == c.next_u64() {
+                same_c += 1;
+            }
+        }
+        assert_eq!(same_c, 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Pcg64::new(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Pcg64::new(11);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.next_below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::new(13);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(17);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg64::new(19);
+        let s = r.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut u = s.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut root = Pcg64::new(23);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..256).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn hash2_counter_distinctness() {
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..10_000u64 {
+            assert!(seen.insert(hash2(99, c)));
+        }
+    }
+}

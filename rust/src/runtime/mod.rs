@@ -1,0 +1,30 @@
+//! Runtime: tile engines serving the leader's estimation stage.
+//!
+//! The L2/L1 python stack AOT-lowers two compute graphs to HLO text
+//! artifacts (`make artifacts`):
+//! * `rescaled_gram.hlo.txt` — the fused Pallas kernel computing a
+//!   `TILE×TILE` block of `D_A·ÃᵀB̃·D_B` (paper Eq. 2) from sketch tiles
+//!   padded to `K_ART` rows;
+//! * `sketch_apply.hlo.txt` — the `Π·X` tile product (the sketch hot spot
+//!   in batch/column mode);
+//! * `model.hlo.txt` — the combined L2 graph (sketch → rescaled gram),
+//!   used by the smoke test.
+//!
+//! [`XlaEngine`] loads them through the PJRT C API (`xla` crate) — rust
+//! stays the only thing on the request path. [`NativeEngine`] implements
+//! the identical tile contract in pure rust so the system runs without
+//! artifacts; an artifact-gated integration test cross-checks the two
+//! engines entry-for-entry.
+
+pub mod engine;
+pub mod xla_engine;
+
+pub use engine::{native_engine, NativeEngine, TileEngine};
+pub use xla_engine::{artifacts_available, XlaEngine, K_ART, TILE};
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("SMPPCA_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,380 @@
+//! Biased entrywise sampling of `AᵀB` — paper Eq. (1) and Appendix C.5.
+//!
+//! Entry `(i, j)` is kept with probability `q̂_ij = min{1, q_ij}` where
+//!
+//! ```text
+//! q_ij = m · ( ‖A_i‖² / (2 n₂ ‖A‖_F²)  +  ‖B_j‖² / (2 n₁ ‖B‖_F²) )
+//! ```
+//!
+//! so heavy rows/columns of the product are preferentially observed and
+//! `E[|Ω|] ≈ m`. Two samplers:
+//! * [`sample_binomial`] — the literal model: one coin per entry, O(n₁·n₂).
+//!   Ground truth for tests and fine at small n.
+//! * [`sample_multinomial_fast`] — Appendix C.5: per-row multinomial with an
+//!   *implicit* CDF (an affine function of the prefix sums of `‖B_j‖²`),
+//!   binary-searched per draw ⇒ O(n₁ + n₂ + m log n₂) total, nothing n²
+//!   ever materialized. This is the production path.
+
+use crate::rng::Pcg64;
+
+/// Precomputed norm summary needed by the sampling distribution.
+#[derive(Debug, Clone)]
+pub struct NormProfile {
+    /// `‖A_i‖²` for i in [n1].
+    pub a_sq: Vec<f64>,
+    /// `‖B_j‖²` for j in [n2].
+    pub b_sq: Vec<f64>,
+    /// `‖A‖_F²`, `‖B‖_F²`.
+    pub a_fro_sq: f64,
+    pub b_fro_sq: f64,
+}
+
+impl NormProfile {
+    pub fn new(a_norms: &[f64], b_norms: &[f64]) -> Self {
+        let a_sq: Vec<f64> = a_norms.iter().map(|v| v * v).collect();
+        let b_sq: Vec<f64> = b_norms.iter().map(|v| v * v).collect();
+        let a_fro_sq = a_sq.iter().sum();
+        let b_fro_sq = b_sq.iter().sum();
+        assert!(a_fro_sq > 0.0 && b_fro_sq > 0.0, "all-zero matrix cannot be sampled");
+        Self { a_sq, b_sq, a_fro_sq, b_fro_sq }
+    }
+
+    pub fn n1(&self) -> usize {
+        self.a_sq.len()
+    }
+
+    pub fn n2(&self) -> usize {
+        self.b_sq.len()
+    }
+
+    /// Raw `q_ij` of Eq. (1) (may exceed 1).
+    #[inline]
+    pub fn q(&self, m: f64, i: usize, j: usize) -> f64 {
+        m * (self.a_sq[i] / (2.0 * self.n2() as f64 * self.a_fro_sq)
+            + self.b_sq[j] / (2.0 * self.n1() as f64 * self.b_fro_sq))
+    }
+
+    /// Clipped probability `q̂_ij = min{1, q_ij}`.
+    #[inline]
+    pub fn q_hat(&self, m: f64, i: usize, j: usize) -> f64 {
+        self.q(m, i, j).min(1.0)
+    }
+
+    /// Expected number of samples in row i: `Σ_j q_ij` (unclipped; the
+    /// paper's `m_i`).
+    #[inline]
+    pub fn row_mass(&self, m: f64, i: usize) -> f64 {
+        m * (self.a_sq[i] / (2.0 * self.a_fro_sq) + 1.0 / (2.0 * self.n1() as f64))
+    }
+}
+
+/// A sampled set Ω with per-entry inverse-probability weights.
+#[derive(Debug, Clone, Default)]
+pub struct SampleSet {
+    /// (i, j) pairs, deduplicated.
+    pub entries: Vec<(usize, usize)>,
+    /// `q̂_ij` aligned with `entries` (weights are `1/q̂`).
+    pub probs: Vec<f64>,
+}
+
+impl SampleSet {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Literal binomial model: one independent coin per entry. O(n1·n2).
+pub fn sample_binomial(profile: &NormProfile, m: f64, rng: &mut Pcg64) -> SampleSet {
+    let mut out = SampleSet::default();
+    for i in 0..profile.n1() {
+        for j in 0..profile.n2() {
+            let p = profile.q_hat(m, i, j);
+            if rng.next_f64() < p {
+                out.entries.push((i, j));
+                out.probs.push(p);
+            }
+        }
+    }
+    out
+}
+
+/// Appendix C.5 fast sampler: per-row multinomial via implicit-CDF binary
+/// search. For row `i` the within-row distribution is
+/// `q̃_ij ∝ α_i + β·‖B_j‖²` with `α_i = ‖A_i‖²/(2 n₂ ‖A‖_F²)` and
+/// `β = 1/(2 n₁ ‖B‖_F²)`; with columns sorted by `‖B_j‖²` the CDF is an
+/// affine function of the sorted prefix sums — evaluable in O(1), so a
+/// uniform draw inverts in O(log n₂).
+///
+/// Entries with `q_ij ≥ 1` (the heavy rows/columns that dominate under
+/// non-uniform norms) are included **deterministically** — exactly the
+/// binomial model's behaviour at `q̂ = 1`; multinomial draws with
+/// rejection would otherwise waste their budget on duplicates of those
+/// entries. Because the within-row density is monotone in `‖B_j‖²`, the
+/// deterministic set is a prefix of the sorted column order, found by
+/// binary search. The residual (q < 1) mass is sampled with
+/// `⌊m_i⌋ + Bernoulli(frac)` draws, so `E[|Ω|] = Σ min(1, q_ij)` exactly
+/// (up to residual-draw dedup, as in the paper's Spark code).
+pub fn sample_multinomial_fast(profile: &NormProfile, m: f64, rng: &mut Pcg64) -> SampleSet {
+    let n1 = profile.n1();
+    let n2 = profile.n2();
+    // Columns sorted by descending ‖B_j‖², with prefix sums over the sorted
+    // order: S[c] = Σ_{t<c} b_sq[order[t]].
+    let mut order: Vec<usize> = (0..n2).collect();
+    order.sort_unstable_by(|&x, &y| profile.b_sq[y].partial_cmp(&profile.b_sq[x]).unwrap());
+    let mut prefix = vec![0.0; n2 + 1];
+    for c in 0..n2 {
+        prefix[c + 1] = prefix[c] + profile.b_sq[order[c]];
+    }
+    let beta = 1.0 / (2.0 * n1 as f64 * profile.b_fro_sq);
+    // Dedup via a flat bitset when n1·n2 is affordable (≤ 64M entries ⇒
+    // ≤ 8 MB), falling back to a hash set of packed u64 keys. The bitset
+    // removes all hashing from the draw loop (§Perf).
+    let use_bitset = n1.checked_mul(n2).map(|t| t <= 1 << 26).unwrap_or(false);
+    let mut bitset = if use_bitset { vec![0u64; (n1 * n2 + 63) / 64] } else { Vec::new() };
+    let mut seen = std::collections::HashSet::new();
+    let insert = move |i: usize, j: usize, bitset: &mut Vec<u64>, seen: &mut std::collections::HashSet<u64>| -> bool {
+        if use_bitset {
+            let bit = i * n2 + j;
+            let (w, b) = (bit / 64, bit % 64);
+            let fresh = bitset[w] & (1 << b) == 0;
+            bitset[w] |= 1 << b;
+            fresh
+        } else {
+            seen.insert(((i as u64) << 32) | j as u64)
+        }
+    };
+    let mut out = SampleSet::default();
+    for i in 0..n1 {
+        let alpha = profile.a_sq[i] / (2.0 * n2 as f64 * profile.a_fro_sq);
+        // q_ij = m (α + β b²_j) ≥ 1  ⇔  b²_j ≥ (1/m − α)/β.
+        let cut = (1.0 / m - alpha) / beta;
+        // Deterministic prefix length: #sorted columns with b_sq ≥ cut.
+        let det = if cut <= 0.0 {
+            n2
+        } else {
+            order.partition_point(|&j| profile.b_sq[j] >= cut)
+        };
+        for &j in &order[..det] {
+            if insert(i, j, &mut bitset, &mut seen) {
+                out.entries.push((i, j));
+                out.probs.push(1.0);
+            }
+        }
+        if det == n2 {
+            continue;
+        }
+        // Residual mass over the sorted tail: Σ_{c≥det} (α + β b²) (per m).
+        let tail = (n2 - det) as f64;
+        let z = alpha * tail + beta * (prefix[n2] - prefix[det]);
+        if z <= 0.0 {
+            continue;
+        }
+        let mi = m * z;
+        let mut draws = mi.floor() as usize;
+        if rng.next_f64() < mi - mi.floor() {
+            draws += 1;
+        }
+        for _ in 0..draws {
+            let u = rng.next_f64() * z;
+            // Smallest c in [det, n2) with
+            //   cdf(c) = α·(c+1−det) + β·(S[c+1]−S[det]) ≥ u.
+            let mut lo = det;
+            let mut hi = n2 - 1;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                let cdf = alpha * (mid + 1 - det) as f64 + beta * (prefix[mid + 1] - prefix[det]);
+                if cdf >= u {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            let j = order[lo];
+            if insert(i, j, &mut bitset, &mut seen) {
+                out.entries.push((i, j));
+                out.probs.push(profile.q_hat(m, i, j));
+            }
+        }
+    }
+    out
+}
+
+/// Recommended default sample budget: the paper's experimental setting
+/// `m = 4 n r log n` (§4, "Sample complexity").
+pub fn default_m(n1: usize, n2: usize, r: usize) -> f64 {
+    let n = n1.max(n2) as f64;
+    4.0 * n * r as f64 * n.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn profile_from(a: &[f64], b: &[f64]) -> NormProfile {
+        NormProfile::new(a, b)
+    }
+
+    fn uniform_profile(n1: usize, n2: usize) -> NormProfile {
+        profile_from(&vec![1.0; n1], &vec![1.0; n2])
+    }
+
+    #[test]
+    fn q_sums_to_m() {
+        // Σ_ij q_ij = m (before clipping) — Eq. (1)'s defining property.
+        prop(1, 10, |rng| {
+            let n1 = 2 + rng.next_below(20) as usize;
+            let n2 = 2 + rng.next_below(20) as usize;
+            let a: Vec<f64> = (0..n1).map(|_| rng.next_f64() + 0.1).collect();
+            let b: Vec<f64> = (0..n2).map(|_| rng.next_f64() + 0.1).collect();
+            let p = profile_from(&a, &b);
+            let m = 37.5;
+            let total: f64 = (0..n1)
+                .flat_map(|i| (0..n2).map(move |j| (i, j)))
+                .map(|(i, j)| p.q(m, i, j))
+                .sum();
+            assert!((total - m).abs() < 1e-9 * m, "Σq={total} m={m}");
+        });
+    }
+
+    #[test]
+    fn row_mass_matches_row_sum() {
+        prop(2, 10, |rng| {
+            let n1 = 2 + rng.next_below(10) as usize;
+            let n2 = 2 + rng.next_below(10) as usize;
+            let a: Vec<f64> = (0..n1).map(|_| rng.next_f64() + 0.1).collect();
+            let b: Vec<f64> = (0..n2).map(|_| rng.next_f64() + 0.1).collect();
+            let p = profile_from(&a, &b);
+            let m = 11.0;
+            for i in 0..n1 {
+                let direct: f64 = (0..n2).map(|j| p.q(m, i, j)).sum();
+                assert!((p.row_mass(m, i) - direct).abs() < 1e-9 * direct.max(1.0));
+            }
+        });
+    }
+
+    #[test]
+    fn binomial_expected_count() {
+        let p = uniform_profile(40, 40);
+        let m = 300.0;
+        let mut total = 0usize;
+        let trials = 50;
+        for t in 0..trials {
+            let mut rng = Pcg64::new(t);
+            total += sample_binomial(&p, m, &mut rng).len();
+        }
+        let mean = total as f64 / trials as f64;
+        assert!((mean - m).abs() < 0.1 * m, "mean |Ω| = {mean}, want ≈ {m}");
+    }
+
+    #[test]
+    fn fast_expected_count() {
+        let p = uniform_profile(40, 40);
+        let m = 300.0;
+        let mut total = 0usize;
+        let trials = 50;
+        for t in 0..trials {
+            let mut rng = Pcg64::new(1000 + t);
+            total += sample_multinomial_fast(&p, m, &mut rng).len();
+        }
+        let mean = total as f64 / trials as f64;
+        // Dedup makes this slightly below m; allow 15%.
+        assert!((mean - m).abs() < 0.15 * m, "mean |Ω| = {mean}, want ≈ {m}");
+    }
+
+    #[test]
+    fn fast_marginals_match_binomial() {
+        // Column marginal frequencies of the fast sampler track q under a
+        // skewed profile (heavy last column).
+        let n1 = 30;
+        let n2 = 10;
+        let mut b = vec![1.0f64; n2];
+        b[n2 - 1] = 5.0; // ‖B_j‖ heavy
+        let p = profile_from(&vec![1.0; n1], &b);
+        let m = 150.0;
+        let trials = 200;
+        let mut col_counts_fast = vec![0usize; n2];
+        let mut col_counts_binom = vec![0usize; n2];
+        for t in 0..trials {
+            let mut r1 = Pcg64::new(t);
+            let mut r2 = Pcg64::new(90_000 + t);
+            for &(_, j) in &sample_multinomial_fast(&p, m, &mut r1).entries {
+                col_counts_fast[j] += 1;
+            }
+            for &(_, j) in &sample_binomial(&p, m, &mut r2).entries {
+                col_counts_binom[j] += 1;
+            }
+        }
+        for j in 0..n2 {
+            let f = col_counts_fast[j] as f64;
+            let b = col_counts_binom[j] as f64;
+            assert!(
+                (f - b).abs() < 0.15 * b.max(100.0),
+                "col {j}: fast={f} binom={b}"
+            );
+        }
+        // Heavy column must be sampled much more often.
+        assert!(col_counts_fast[n2 - 1] as f64 > 2.0 * col_counts_fast[0] as f64);
+    }
+
+    #[test]
+    fn entries_in_range_and_distinct() {
+        prop(3, 10, |rng| {
+            let n1 = 3 + rng.next_below(20) as usize;
+            let n2 = 3 + rng.next_below(20) as usize;
+            let a: Vec<f64> = (0..n1).map(|_| rng.next_f64() + 0.05).collect();
+            let b: Vec<f64> = (0..n2).map(|_| rng.next_f64() + 0.05).collect();
+            let p = profile_from(&a, &b);
+            let s = sample_multinomial_fast(&p, 60.0, rng);
+            let mut set = std::collections::HashSet::new();
+            for (idx, &(i, j)) in s.entries.iter().enumerate() {
+                assert!(i < n1 && j < n2);
+                assert!(set.insert((i, j)), "duplicate ({i},{j})");
+                let q = s.probs[idx];
+                assert!(q > 0.0 && q <= 1.0);
+                assert!((q - p.q_hat(60.0, i, j)).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn huge_m_saturates_binomial() {
+        let p = uniform_profile(10, 10);
+        let mut rng = Pcg64::new(5);
+        let s = sample_binomial(&p, 1e9, &mut rng);
+        assert_eq!(s.len(), 100); // q̂ = 1 everywhere
+        assert!(s.probs.iter().all(|&q| q == 1.0));
+    }
+
+    #[test]
+    fn zero_norm_rows_never_sampled_more_than_base_rate() {
+        // Row with ‖A_i‖ = 0 still gets the ‖B_j‖ half of the mass — the
+        // paper's q has two additive halves. Check it's sampled but lightly.
+        let mut a = vec![1.0f64; 20];
+        a[0] = 0.0;
+        let p = profile_from(&a, &vec![1.0; 20]);
+        let m = 100.0;
+        let mass0 = p.row_mass(m, 0);
+        let mass1 = p.row_mass(m, 1);
+        assert!(mass0 > 0.0);
+        assert!(mass0 < mass1);
+    }
+
+    #[test]
+    #[should_panic(expected = "all-zero")]
+    fn rejects_all_zero() {
+        NormProfile::new(&[0.0, 0.0], &[1.0]);
+    }
+
+    #[test]
+    fn default_m_matches_paper_formula() {
+        let n = 500usize;
+        let r = 5usize;
+        let m = default_m(n, n, r);
+        assert!((m - 4.0 * 500.0 * 5.0 * (500f64).ln()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,49 @@
+//! CountSketch (sparse JL): one nonzero per Π column — O(1) per streamed
+//! entry. Weaker per-dot-product accuracy at equal k than Gaussian/SRHT but
+//! the cheapest ingest; included as the ablation axis for the paper's
+//! "any oblivious subspace embedding can be considered here" remark.
+
+use crate::rng::hash2;
+
+/// Bucket `h(i) ∈ [k]` and sign `s(i) ∈ {±1}` for ambient coordinate `i`.
+#[inline]
+pub fn bucket_sign(seed: u64, i: u64, k: usize) -> (usize, f64) {
+    let h = hash2(seed ^ 0xC0C0, i);
+    let bucket = (h % k as u64) as usize;
+    let sign = if (h >> 63) == 0 { 1.0 } else { -1.0 };
+    (bucket, sign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(bucket_sign(1, 42, 16), bucket_sign(1, 42, 16));
+    }
+
+    #[test]
+    fn buckets_in_range_and_spread() {
+        let k = 8;
+        let mut counts = vec![0usize; k];
+        for i in 0..8000 {
+            let (b, s) = bucket_sign(7, i, k);
+            assert!(b < k);
+            assert!(s == 1.0 || s == -1.0);
+            counts[b] += 1;
+        }
+        // roughly uniform: each bucket within 20% of 1000
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 200.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn signs_balanced() {
+        let pos = (0..10_000)
+            .filter(|&i| bucket_sign(9, i, 4).1 > 0.0)
+            .count();
+        assert!((pos as f64 - 5000.0).abs() < 300.0, "pos={pos}");
+    }
+}

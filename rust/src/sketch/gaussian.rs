@@ -1,0 +1,121 @@
+//! Gaussian sketch support: a direct-mapped cache of regenerated Π columns.
+//!
+//! Counter-based regeneration keeps Π implicit (no k×d storage, perfect
+//! mergeability), but costs k Box–Muller evaluations per *miss*. Real entry
+//! streams are either bursty per row (bag-of-words: one row's entries
+//! arrive together — the single previous-slot cache would do) or fully
+//! shuffled (streaming logs — every access is a new row). A direct-mapped
+//! cache handles both: slot `i % slots`, hit = pure memcpy-free reuse.
+//! Memory: `slots · k · 8` bytes per worker (default 8192 slots ⇒ ~6.5 MB
+//! at k = 100), a knob via `SMPPCA_GAUSS_CACHE_SLOTS`. Misses regenerate —
+//! results are identical either way (verified by the order-invariance
+//! property tests). See EXPERIMENTS.md §Perf for measured impact.
+
+use crate::rng::gaussian_column_into;
+
+#[derive(Debug, Clone)]
+pub struct ColumnCache {
+    k: usize,
+    slots: usize,
+    /// tag[s] = row index cached in slot s (u64::MAX = empty).
+    tags: Vec<u64>,
+    /// cols[s*k .. (s+1)*k] = Π[:, tags[s]].
+    cols: Vec<f64>,
+    seed: u64,
+    seed_set: bool,
+}
+
+fn default_slots() -> usize {
+    std::env::var("SMPPCA_GAUSS_CACHE_SLOTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8192)
+}
+
+impl ColumnCache {
+    pub fn new(k: usize) -> Self {
+        Self::with_slots(k, default_slots())
+    }
+
+    pub fn with_slots(k: usize, slots: usize) -> Self {
+        let slots = slots.max(1);
+        Self {
+            k,
+            slots,
+            tags: vec![u64::MAX; slots],
+            cols: vec![0.0; slots * k],
+            seed: 0,
+            seed_set: false,
+        }
+    }
+
+    /// Column `Π[:, i]` for the given seed, regenerating only on miss.
+    #[inline]
+    pub fn get(&mut self, seed: u64, i: u64) -> &[f64] {
+        if !self.seed_set || self.seed != seed {
+            // Seed change invalidates everything (rare: one seed per pass).
+            self.tags.iter_mut().for_each(|t| *t = u64::MAX);
+            self.seed = seed;
+            self.seed_set = true;
+        }
+        let slot = (i % self.slots as u64) as usize;
+        let base = slot * self.k;
+        if self.tags[slot] != i {
+            gaussian_column_into(seed, i, self.k, &mut self.cols[base..base + self.k]);
+            self.tags[slot] = i;
+        }
+        &self.cols[base..base + self.k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::gaussian_column;
+
+    #[test]
+    fn cache_returns_correct_columns() {
+        let mut c = ColumnCache::with_slots(8, 4);
+        let a = c.get(1, 5).to_vec();
+        assert_eq!(a, gaussian_column(1, 5, 8));
+        let b = c.get(1, 6).to_vec();
+        assert_eq!(b, gaussian_column(1, 6, 8));
+        // revisit (hit path)
+        let a2 = c.get(1, 5).to_vec();
+        assert_eq!(a2, a);
+    }
+
+    #[test]
+    fn conflict_eviction_still_correct() {
+        let mut c = ColumnCache::with_slots(8, 4);
+        // rows 1 and 5 collide in a 4-slot cache
+        let r1 = c.get(9, 1).to_vec();
+        let r5 = c.get(9, 5).to_vec();
+        let r1b = c.get(9, 1).to_vec();
+        assert_eq!(r1, gaussian_column(9, 1, 8));
+        assert_eq!(r5, gaussian_column(9, 5, 8));
+        assert_eq!(r1b, r1);
+    }
+
+    #[test]
+    fn cache_distinguishes_seeds() {
+        let mut c = ColumnCache::with_slots(8, 16);
+        let a = c.get(1, 5).to_vec();
+        let b = c.get(2, 5).to_vec();
+        assert_ne!(a, b);
+        assert_eq!(b, gaussian_column(2, 5, 8));
+        // back to seed 1: must regenerate correctly, not serve stale
+        let a2 = c.get(1, 5).to_vec();
+        assert_eq!(a2, a);
+    }
+
+    #[test]
+    fn random_access_pattern_correct() {
+        let mut c = ColumnCache::with_slots(6, 8);
+        let mut rng = crate::rng::Pcg64::new(3);
+        for _ in 0..500 {
+            let i = rng.next_below(100);
+            assert_eq!(c.get(7, i), gaussian_column(7, i, 6).as_slice());
+        }
+    }
+}

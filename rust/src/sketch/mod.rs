@@ -1,0 +1,448 @@
+//! Streaming, mergeable matrix sketches — paper §2.1 Step 1.
+//!
+//! One pass over the entries of `X ∈ R^{d×n}` (in *any* order) produces
+//! `X̃ = ΠX ∈ R^{k×n}` plus the exact squared column norms `‖X_j‖²`. The
+//! sketch state is *mergeable*: workers that share `(seed, kind, k, d)`
+//! derive identical implicit `Π`, so partial states combine by addition —
+//! the property the coordinator's tree-reduce (Spark `treeAggregate` in the
+//! paper) relies on.
+//!
+//! Three `Π` families, all O(k)-or-better per streamed entry and never
+//! materialized:
+//! * [`SketchKind::Gaussian`] — i.i.d. `N(0, 1/k)`; column `Π[:, i]`
+//!   regenerated counter-based from `(seed, i)`.
+//! * [`SketchKind::Srht`] — subsampled randomized Hadamard transform (the
+//!   paper's Spark choice [32]): entry `Π[t, i] = D_ii · H[s_t, i] / √k`
+//!   evaluated in O(1) by popcount parity; column-batch path uses the
+//!   O(d log d) FWHT.
+//! * [`SketchKind::CountSketch`] — sparse JL (1 nonzero/column): O(1) per
+//!   entry; included as the ablation point the paper alludes to
+//!   ("any oblivious subspace embedding").
+
+pub mod checkpoint;
+pub mod countsketch;
+pub mod gaussian;
+pub mod srht;
+
+use crate::linalg::Mat;
+
+/// Which oblivious subspace embedding backs the sketch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchKind {
+    Gaussian,
+    Srht,
+    CountSketch,
+}
+
+impl std::str::FromStr for SketchKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "gaussian" => Ok(Self::Gaussian),
+            "srht" => Ok(Self::Srht),
+            "countsketch" | "count" => Ok(Self::CountSketch),
+            other => Err(format!("unknown sketch kind '{other}' (gaussian|srht|countsketch)")),
+        }
+    }
+}
+
+/// Finalized one-pass summary of a matrix: the sketch and exact column norms.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    /// `ΠX`, k×n.
+    pub sketch: Mat,
+    /// Exact column L2 norms `‖X_j‖`, length n.
+    pub col_norms: Vec<f64>,
+    /// `‖X‖_F²` (= Σ ‖X_j‖²).
+    pub fro_sq: f64,
+}
+
+impl Summary {
+    /// Column `j` of the sketch.
+    pub fn sketch_col(&self, j: usize) -> Vec<f64> {
+        self.sketch.col(j)
+    }
+
+    pub fn n(&self) -> usize {
+        self.sketch.cols()
+    }
+
+    pub fn k(&self) -> usize {
+        self.sketch.rows()
+    }
+}
+
+/// Mergeable streaming sketch accumulator for one matrix.
+#[derive(Debug, Clone)]
+pub struct SketchState {
+    kind: SketchKind,
+    seed: u64,
+    k: usize,
+    d: usize,
+    /// Accumulator stored **transposed** (n×k row-major): sketch column j
+    /// occupies the contiguous row `acc[j, :]`, so the per-entry k-walk is
+    /// unit-stride on both the regenerated Π column and the accumulator
+    /// (§Perf #5; the k×n layout strided by n was the ingest bottleneck).
+    /// `finalize` transposes once into the k×n `Summary::sketch`.
+    acc: Mat,
+    /// Σ v² per column.
+    norms_sq: Vec<f64>,
+    /// Number of entries folded in (for metrics).
+    entries_seen: u64,
+    gaussian_col_cache: gaussian::ColumnCache,
+    srht: Option<srht::SrhtPlan>,
+}
+
+impl SketchState {
+    /// `d` = ambient (row) dimension of the streamed matrix, `n` = columns,
+    /// `k` = sketch size. All workers must pass identical parameters.
+    pub fn new(kind: SketchKind, seed: u64, k: usize, d: usize, n: usize) -> Self {
+        assert!(k > 0 && d > 0 && n > 0, "degenerate sketch shape k={k} d={d} n={n}");
+        let srht = match kind {
+            SketchKind::Srht => Some(srht::SrhtPlan::new(seed, k, d)),
+            _ => None,
+        };
+        Self {
+            kind,
+            seed,
+            k,
+            d,
+            acc: Mat::zeros(n, k),
+            norms_sq: vec![0.0; n],
+            entries_seen: 0,
+            gaussian_col_cache: gaussian::ColumnCache::new(k),
+            srht,
+        }
+    }
+
+    pub fn kind(&self) -> SketchKind {
+        self.kind
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn n(&self) -> usize {
+        self.acc.rows()
+    }
+
+    pub fn entries_seen(&self) -> u64 {
+        self.entries_seen
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    // --- raw-state accessors for the checkpoint codec (sketch::checkpoint)
+    pub(crate) fn acc_data(&self) -> &[f64] {
+        self.acc.data()
+    }
+
+    pub(crate) fn acc_data_mut(&mut self) -> &mut [f64] {
+        self.acc.data_mut()
+    }
+
+    pub(crate) fn norms_sq(&self) -> &[f64] {
+        &self.norms_sq
+    }
+
+    pub(crate) fn norms_sq_mut(&mut self) -> &mut [f64] {
+        &mut self.norms_sq
+    }
+
+    pub(crate) fn set_entries_seen(&mut self, v: u64) {
+        self.entries_seen = v;
+    }
+
+    /// Fold one streamed entry `X[i, j] = v` into the sketch. This is THE
+    /// single-pass hot path: O(k) for Gaussian/SRHT, O(1) for CountSketch.
+    #[inline]
+    pub fn update_entry(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.d, "row {i} out of range d={}", self.d);
+        debug_assert!(j < self.acc.rows(), "col {j} out of range n={}", self.acc.rows());
+        if v == 0.0 {
+            return;
+        }
+        self.entries_seen += 1;
+        self.norms_sq[j] += v * v;
+        let k = self.k;
+        match self.kind {
+            SketchKind::Gaussian => {
+                let col = self.gaussian_col_cache.get(self.seed, i as u64);
+                // acc[j, :] += v * Π[:, i] — unit stride on both sides.
+                let row = self.acc.row_mut(j);
+                for (a, c) in row.iter_mut().zip(col) {
+                    *a += v * c;
+                }
+            }
+            SketchKind::Srht => {
+                let plan = self.srht.as_ref().unwrap();
+                let sign_scale = v * plan.d_sign(i) * plan.scale();
+                let rows = plan.rows();
+                let acc_row = self.acc.row_mut(j);
+                for (a, &s) in acc_row.iter_mut().zip(rows) {
+                    *a += sign_scale * crate::linalg::fwht::hadamard_entry_sign(s, i);
+                }
+            }
+            SketchKind::CountSketch => {
+                let (bucket, sign) = countsketch::bucket_sign(self.seed, i as u64, k);
+                self.acc[(j, bucket)] += v * sign;
+            }
+        }
+    }
+
+    /// Fold a full column `X[:, j]` (batch path — used by in-memory drivers
+    /// and the XLA tile engine). Must agree exactly with per-entry updates.
+    pub fn update_column(&mut self, j: usize, col: &[f64]) {
+        assert_eq!(col.len(), self.d);
+        match self.kind {
+            SketchKind::Srht => {
+                // Batch SRHT: D, FWHT, subsample — O(d log d) instead of
+                // O(k·nnz). Numerically identical to the per-entry path.
+                self.entries_seen += col.iter().filter(|v| **v != 0.0).count() as u64;
+                self.norms_sq[j] += col.iter().map(|v| v * v).sum::<f64>();
+                let plan = self.srht.as_ref().unwrap();
+                let out = plan.apply(col);
+                let row = self.acc.row_mut(j);
+                for (a, o) in row.iter_mut().zip(&out) {
+                    *a += o;
+                }
+            }
+            _ => {
+                for (i, &v) in col.iter().enumerate() {
+                    self.update_entry(i, j, v);
+                }
+            }
+        }
+    }
+
+    /// Merge a partner state (same parameters required). Addition is exact:
+    /// both sides derived the same implicit Π.
+    pub fn merge(&mut self, other: &SketchState) {
+        assert_eq!(self.kind, other.kind, "sketch kind mismatch");
+        assert_eq!(self.seed, other.seed, "sketch seed mismatch");
+        assert_eq!(self.k, other.k, "sketch k mismatch");
+        assert_eq!(self.d, other.d, "sketch d mismatch");
+        assert_eq!(self.acc.rows(), other.acc.rows(), "sketch n mismatch");
+        self.acc.add_assign(&other.acc);
+        for (a, b) in self.norms_sq.iter_mut().zip(&other.norms_sq) {
+            *a += b;
+        }
+        self.entries_seen += other.entries_seen;
+    }
+
+    /// Finalize into an immutable [`Summary`] (transposes the internal
+    /// n×k accumulator into the public k×n sketch once).
+    pub fn finalize(self) -> Summary {
+        let fro_sq = self.norms_sq.iter().sum();
+        Summary {
+            sketch: self.acc.transpose(),
+            col_norms: self.norms_sq.iter().map(|v| v.sqrt()).collect(),
+            fro_sq,
+        }
+    }
+
+    /// Sketch a whole in-memory matrix (test/bench convenience).
+    pub fn sketch_matrix(kind: SketchKind, seed: u64, k: usize, x: &Mat) -> Summary {
+        let mut st = SketchState::new(kind, seed, k, x.rows(), x.cols());
+        let mut col = vec![0.0; x.rows()];
+        for j in 0..x.cols() {
+            for i in 0..x.rows() {
+                col[i] = x[(i, j)];
+            }
+            st.update_column(j, &col);
+        }
+        st.finalize()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_close, prop};
+
+    fn dense_for(kind: SketchKind) -> (Mat, Summary) {
+        let mut rng = Pcg64::new(7);
+        let x = Mat::gaussian(37, 9, &mut rng);
+        let s = SketchState::sketch_matrix(kind, 99, 16, &x);
+        (x, s)
+    }
+
+    #[test]
+    fn column_norms_exact_all_kinds() {
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            let (x, s) = dense_for(kind);
+            for j in 0..x.cols() {
+                assert!(
+                    (s.col_norms[j] - x.col_norm(j)).abs() < 1e-10,
+                    "{kind:?} col {j}"
+                );
+            }
+            let fro: f64 = (0..x.cols()).map(|j| x.col_norm(j).powi(2)).sum();
+            assert!((s.fro_sq - fro).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn entry_order_invariance() {
+        // The defining single-pass property: any entry order, same sketch.
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            let mut rng = Pcg64::new(11);
+            let x = Mat::gaussian(20, 6, &mut rng);
+            let mut entries: Vec<(usize, usize, f64)> = Vec::new();
+            for i in 0..20 {
+                for j in 0..6 {
+                    entries.push((i, j, x[(i, j)]));
+                }
+            }
+            let mut st1 = SketchState::new(kind, 5, 8, 20, 6);
+            for &(i, j, v) in &entries {
+                st1.update_entry(i, j, v);
+            }
+            rng.shuffle(&mut entries);
+            let mut st2 = SketchState::new(kind, 5, 8, 20, 6);
+            for &(i, j, v) in &entries {
+                st2.update_entry(i, j, v);
+            }
+            let s1 = st1.finalize();
+            let s2 = st2.finalize();
+            assert_close(s1.sketch.data(), s2.sketch.data(), 1e-10);
+        }
+    }
+
+    #[test]
+    fn merge_equals_single_stream() {
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            prop(13, 6, |rng| {
+                let d = 8 + rng.next_below(20) as usize;
+                let n = 2 + rng.next_below(8) as usize;
+                let x = Mat::gaussian(d, n, rng);
+                // single stream
+                let mut whole = SketchState::new(kind, 3, 8, d, n);
+                // split stream across 3 workers by entry hash
+                let mut parts: Vec<SketchState> =
+                    (0..3).map(|_| SketchState::new(kind, 3, 8, d, n)).collect();
+                for i in 0..d {
+                    for j in 0..n {
+                        let v = x[(i, j)];
+                        whole.update_entry(i, j, v);
+                        parts[(i * 31 + j) % 3].update_entry(i, j, v);
+                    }
+                }
+                let mut merged = parts.remove(0);
+                for p in &parts {
+                    merged.merge(p);
+                }
+                assert_close(
+                    merged.finalize().sketch.data(),
+                    whole.finalize().sketch.data(),
+                    1e-9,
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn gaussian_linearity() {
+        // sketch(x + y) = sketch(x) + sketch(y) per column.
+        let mut rng = Pcg64::new(17);
+        let d = 30;
+        let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let sum: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let mut s1 = SketchState::new(SketchKind::Gaussian, 2, 12, d, 3);
+        s1.update_column(0, &x);
+        s1.update_column(1, &y);
+        s1.update_column(2, &sum);
+        let s = s1.finalize();
+        let c0 = s.sketch.col(0);
+        let c1 = s.sketch.col(1);
+        let c2 = s.sketch.col(2);
+        let added: Vec<f64> = c0.iter().zip(&c1).map(|(a, b)| a + b).collect();
+        assert_close(&c2, &added, 1e-10);
+    }
+
+    #[test]
+    fn norm_preserved_in_expectation_all_kinds() {
+        // E‖Πx‖² = ‖x‖² — run many independent seeds and average.
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            let d = 24;
+            let k = 16;
+            let x: Vec<f64> = (0..d).map(|i| ((i % 5) as f64) - 2.0).collect();
+            let xn: f64 = x.iter().map(|v| v * v).sum();
+            let trials = 400;
+            let mut acc = 0.0;
+            for t in 0..trials {
+                let mut st = SketchState::new(kind, 1000 + t, k, d, 1);
+                st.update_column(0, &x);
+                let s = st.finalize();
+                acc += s.sketch.col(0).iter().map(|v| v * v).sum::<f64>();
+            }
+            let mean = acc / trials as f64;
+            assert!(
+                (mean - xn).abs() / xn < 0.12,
+                "{kind:?}: E‖Πx‖²={mean} vs ‖x‖²={xn}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_products_approximately_preserved() {
+        // ⟨Πx, Πy⟩ ≈ ⟨x, y⟩ with error ~ ‖x‖‖y‖/√k — averaged over seeds.
+        let d = 64;
+        let k = 32;
+        let mut rng = Pcg64::new(23);
+        let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let true_dot: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let trials = 300;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let mut st = SketchState::new(SketchKind::Gaussian, 5000 + t, k, d, 2);
+            st.update_column(0, &x);
+            st.update_column(1, &y);
+            let s = st.finalize();
+            let sx = s.sketch.col(0);
+            let sy = s.sketch.col(1);
+            acc += sx.iter().zip(&sy).map(|(a, b)| a * b).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        let scale: f64 =
+            (x.iter().map(|v| v * v).sum::<f64>() * y.iter().map(|v| v * v).sum::<f64>()).sqrt();
+        assert!(
+            (mean - true_dot).abs() < 0.1 * scale,
+            "E⟨Πx,Πy⟩={mean} vs ⟨x,y⟩={true_dot}"
+        );
+    }
+
+    #[test]
+    fn zero_entries_skipped() {
+        let mut st = SketchState::new(SketchKind::Gaussian, 1, 4, 10, 2);
+        st.update_entry(0, 0, 0.0);
+        assert_eq!(st.entries_seen(), 0);
+        assert!(st.finalize().sketch.max_abs() == 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "seed mismatch")]
+    fn merge_rejects_mismatched_seed() {
+        let a = SketchState::new(SketchKind::Gaussian, 1, 4, 10, 2);
+        let mut b = SketchState::new(SketchKind::Gaussian, 2, 4, 10, 2);
+        b.merge(&a);
+    }
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!("gaussian".parse::<SketchKind>().unwrap(), SketchKind::Gaussian);
+        assert_eq!("SRHT".parse::<SketchKind>().unwrap(), SketchKind::Srht);
+        assert_eq!("count".parse::<SketchKind>().unwrap(), SketchKind::CountSketch);
+        assert!("bogus".parse::<SketchKind>().is_err());
+    }
+}

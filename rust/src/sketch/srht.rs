@@ -1,0 +1,148 @@
+//! Subsampled randomized Hadamard transform (SRHT) — the sketch the paper's
+//! Spark implementation uses [Tropp '11].
+//!
+//! `Π = √(d̂/k) · S · (H/√d̂) · D` over the power-of-two padding `d̂ ≥ d`:
+//! `D` = random ±1 diagonal, `H` = Sylvester Hadamard, `S` = k sampled rows.
+//! Two evaluation paths that agree exactly:
+//! * **per-entry** (streaming): `Π[t, i] = D_ii · (−1)^popcount(s_t & i) / √k`
+//!   — O(1) per (t, i) via popcount, O(k) per streamed entry;
+//! * **per-column** (batch): sign-flip, FWHT in O(d̂ log d̂), subsample.
+
+use crate::linalg::fwht::{fwht_inplace, hadamard_entry_sign, next_pow2};
+use crate::rng::{hash2, Pcg64};
+
+#[derive(Debug, Clone)]
+pub struct SrhtPlan {
+    seed: u64,
+    k: usize,
+    d_pad: usize,
+    /// The k sampled Hadamard rows (sorted, distinct).
+    rows: Vec<usize>,
+    /// 1/√k — combined normalization (√(d̂/k) · 1/√d̂ cancels to 1/√k̂... see
+    /// module docs; the d̂ factors cancel exactly).
+    scale: f64,
+}
+
+impl SrhtPlan {
+    pub fn new(seed: u64, k: usize, d: usize) -> Self {
+        let d_pad = next_pow2(d.max(k));
+        assert!(k <= d_pad, "SRHT needs k <= padded d ({k} > {d_pad})");
+        let mut rng = Pcg64::new(hash2(seed, 0x5247_4854)); // "SRHT"
+        let mut rows = rng.sample_indices(d_pad, k);
+        rows.sort_unstable();
+        Self { seed, k, d_pad, rows, scale: 1.0 / (k as f64).sqrt() }
+    }
+
+    /// Random sign `D_ii ∈ {+1, −1}`, derived from the shared seed
+    /// (branchless, see §Perf #4).
+    #[inline]
+    pub fn d_sign(&self, i: usize) -> f64 {
+        1.0 - 2.0 * (hash2(self.seed ^ 0xD1A6, i as u64) & 1) as f64
+    }
+
+    /// Sampled Hadamard row indices (for ingest loops that want to walk
+    /// them without bounds checks through `h_sign`).
+    #[inline]
+    pub fn rows(&self) -> &[usize] {
+        &self.rows
+    }
+
+    /// Hadamard sign `H[s_t, i]` for sampled row `t`.
+    #[inline]
+    pub fn h_sign(&self, t: usize, i: usize) -> f64 {
+        hadamard_entry_sign(self.rows[t], i)
+    }
+
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn d_pad(&self) -> usize {
+        self.d_pad
+    }
+
+    /// Batch path: apply Π to a full column (length d ≤ d_pad).
+    pub fn apply(&self, col: &[f64]) -> Vec<f64> {
+        let mut buf = vec![0.0; self.d_pad];
+        for (i, &v) in col.iter().enumerate() {
+            buf[i] = v * self.d_sign(i);
+        }
+        fwht_inplace(&mut buf);
+        self.rows.iter().map(|&s| buf[s] * self.scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, prop};
+
+    #[test]
+    fn batch_matches_per_entry() {
+        prop(1, 10, |rng| {
+            let d = 3 + rng.next_below(60) as usize;
+            let k = 1 + rng.next_below(d.min(16) as u64) as usize;
+            let plan = SrhtPlan::new(rng.next_u64(), k, d);
+            let col: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+            let batch = plan.apply(&col);
+            // per-entry accumulation
+            let mut acc = vec![0.0; k];
+            for (i, &v) in col.iter().enumerate() {
+                let s = v * plan.d_sign(i) * plan.scale();
+                for (t, a) in acc.iter_mut().enumerate() {
+                    *a += s * plan.h_sign(t, i);
+                }
+            }
+            assert_close(&batch, &acc, 1e-10);
+        });
+    }
+
+    #[test]
+    fn rows_distinct_sorted() {
+        let plan = SrhtPlan::new(3, 12, 100);
+        for w in plan.rows.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(plan.rows.len(), 12);
+        assert!(plan.rows.iter().all(|&r| r < plan.d_pad()));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p1 = SrhtPlan::new(5, 8, 50);
+        let p2 = SrhtPlan::new(5, 8, 50);
+        let col: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        assert_eq!(p1.apply(&col), p2.apply(&col));
+        let p3 = SrhtPlan::new(6, 8, 50);
+        assert_ne!(p1.apply(&col), p3.apply(&col));
+    }
+
+    #[test]
+    fn norm_preservation_in_expectation() {
+        let d = 48;
+        let k = 24;
+        let col: Vec<f64> = (0..d).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let xn: f64 = col.iter().map(|v| v * v).sum();
+        let trials = 500;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let plan = SrhtPlan::new(t, k, d);
+            let y = plan.apply(&col);
+            acc += y.iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - xn).abs() / xn < 0.1, "E={mean} vs {xn}");
+    }
+
+    #[test]
+    fn pads_to_pow2_including_k_bound() {
+        let plan = SrhtPlan::new(1, 30, 20); // k > d: pad must cover k
+        assert!(plan.d_pad() >= 30);
+        assert!(plan.d_pad().is_power_of_two());
+    }
+}

@@ -1,0 +1,202 @@
+//! Bounded MPMC channel with blocking backpressure — the transport between
+//! the stream reader and the sketch workers. (No tokio in the image; this
+//! is a condvar ring buffer, which for a CPU-bound single-pass pipeline is
+//! exactly what we want: producers block when workers fall behind, bounding
+//! memory — Spark's `DISK_ONLY` RDD iterator plays the same role in the
+//! paper's implementation.)
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Shared<T> {
+    queue: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a bounded channel with the given capacity (in items).
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity > 0);
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(State { buf: VecDeque::with_capacity(capacity), senders: 1, receivers: 1 }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        capacity,
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+/// Error returned when the other side is gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Disconnected;
+
+impl<T> Sender<T> {
+    /// Blocking send; applies backpressure when the buffer is full.
+    /// Errors if all receivers dropped.
+    pub fn send(&self, item: T) -> Result<(), Disconnected> {
+        let mut st = self.shared.queue.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(Disconnected);
+            }
+            if st.buf.len() < self.shared.capacity {
+                st.buf.push_back(item);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.queue.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; returns Err(Disconnected) after all senders drop
+    /// and the buffer drains.
+    pub fn recv(&self) -> Result<T, Disconnected> {
+        let mut st = self.shared.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.shared.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.senders == 0 {
+                return Err(Disconnected);
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Drain into an iterator (consumes until disconnect).
+    pub fn iter(&self) -> impl Iterator<Item = T> + '_ {
+        std::iter::from_fn(move || self.recv().ok())
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.shared.queue.lock().unwrap().receivers += 1;
+        Receiver { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            self.shared.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_single_thread() {
+        let (tx, rx) = bounded(10);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<i32> = rx.iter().collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn producer_consumer_threads() {
+        let (tx, rx) = bounded(4);
+        let producer = thread::spawn(move || {
+            for i in 0..1000u64 {
+                tx.send(i).unwrap();
+            }
+        });
+        let got: Vec<u64> = rx.iter().collect();
+        producer.join().unwrap();
+        assert_eq!(got.len(), 1000);
+        assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn backpressure_bounds_buffer() {
+        // With capacity 2 and a slow consumer, the producer must block:
+        // verify total passes through and order holds.
+        let (tx, rx) = bounded(2);
+        let producer = thread::spawn(move || {
+            for i in 0..100u64 {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut got = Vec::new();
+        for v in rx.iter() {
+            got.push(v);
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multi_consumer_partitions_items() {
+        let (tx, rx) = bounded(8);
+        let rx2 = rx.clone();
+        let c1 = thread::spawn(move || rx.iter().count());
+        let c2 = thread::spawn(move || rx2.iter().count());
+        for i in 0..500u64 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let total = c1.join().unwrap() + c2.join().unwrap();
+        assert_eq!(total, 500);
+    }
+
+    #[test]
+    fn send_to_dropped_receiver_errors() {
+        let (tx, rx) = bounded::<u32>(1);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(Disconnected));
+    }
+
+    #[test]
+    fn recv_after_senders_drop_drains_then_errors() {
+        let (tx, rx) = bounded(4);
+        tx.send(7u32).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(7));
+        assert_eq!(rx.recv(), Err(Disconnected));
+    }
+}

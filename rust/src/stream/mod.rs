@@ -1,0 +1,63 @@
+//! The entry-stream abstraction: `(matrix, row, col, value)` records in
+//! arbitrary order — the paper's streaming-logs setting ("the entries of
+//! the two matrices arrive in some arbitrary order").
+
+pub mod binfile;
+pub mod channel;
+pub mod router;
+pub mod source;
+
+pub use binfile::{BinFileSource, BinFileWriter};
+pub use channel::{bounded, Receiver, Sender};
+pub use router::shard_of;
+pub use source::{EntrySource, FileSource, InterleavedSource, ShuffledMatrixSource};
+
+/// Which of the two input matrices an entry belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MatrixId {
+    A,
+    B,
+}
+
+/// One streamed record: `X[row, col] = value` with `X ∈ {A, B}`.
+/// `row ∈ [d]` (the shared ambient dimension), `col ∈ [n₁]` or `[n₂]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Entry {
+    pub matrix: MatrixId,
+    pub row: u32,
+    pub col: u32,
+    pub value: f64,
+}
+
+impl Entry {
+    pub fn a(row: u32, col: u32, value: f64) -> Self {
+        Self { matrix: MatrixId::A, row, col, value }
+    }
+
+    pub fn b(row: u32, col: u32, value: f64) -> Self {
+        Self { matrix: MatrixId::B, row, col, value }
+    }
+}
+
+/// Stream metadata every participant must agree on before the pass starts
+/// (the paper's "given two matrices stored in disk" header knowledge: shapes
+/// only — never the data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamMeta {
+    pub d: usize,
+    pub n1: usize,
+    pub n2: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_constructors() {
+        let e = Entry::a(3, 4, 1.5);
+        assert_eq!(e.matrix, MatrixId::A);
+        assert_eq!((e.row, e.col, e.value), (3, 4, 1.5));
+        assert_eq!(Entry::b(0, 0, 0.0).matrix, MatrixId::B);
+    }
+}

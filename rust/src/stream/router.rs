@@ -1,0 +1,61 @@
+//! Shard routing: which worker owns a streamed entry.
+//!
+//! Entries are partitioned by `(matrix, column)` — a worker owns whole
+//! sketch *columns*, so per-worker `SketchState`s touch disjoint columns
+//! and the tree merge is a pure (overlap-free) addition. Any assignment
+//! works correctness-wise (states are mergeable regardless); column
+//! affinity just minimizes merge traffic and cache churn.
+
+use super::MatrixId;
+use crate::rng::hash2;
+
+/// Stable shard assignment for an entry.
+#[inline]
+pub fn shard_of(matrix: MatrixId, col: u32, workers: usize) -> usize {
+    debug_assert!(workers > 0);
+    let tag = match matrix {
+        MatrixId::A => 0u64,
+        MatrixId::B => 1u64,
+    };
+    (hash2(tag ^ 0x5aa5, col as u64) % workers as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(shard_of(MatrixId::A, 42, 8), shard_of(MatrixId::A, 42, 8));
+    }
+
+    #[test]
+    fn in_range_and_spread() {
+        let w = 7;
+        let mut counts = vec![0usize; w];
+        for col in 0..7000u32 {
+            let s = shard_of(MatrixId::A, col, w);
+            assert!(s < w);
+            counts[s] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 150.0, "skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn matrices_route_independently() {
+        // Same column id on A and B need not map to the same worker.
+        let diff = (0..1000u32)
+            .filter(|&c| shard_of(MatrixId::A, c, 5) != shard_of(MatrixId::B, c, 5))
+            .count();
+        assert!(diff > 500, "A/B routing suspiciously aligned: {diff}");
+    }
+
+    #[test]
+    fn single_worker_gets_everything() {
+        for c in 0..100 {
+            assert_eq!(shard_of(MatrixId::B, c, 1), 0);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Entry sources: where streams come from.
+//!
+//! * [`ShuffledMatrixSource`] — in-memory matrices emitted in a seeded
+//!   arbitrary order (the adversarial "streaming logs" setting);
+//! * [`InterleavedSource`] — A and B records interleaved, as merged logs
+//!   would arrive;
+//! * [`FileSource`] — CSV triplet files (`matrix,row,col,value`), the disk
+//!   format our examples write, so real workloads replay from disk like
+//!   the paper's `DISK_ONLY` RDDs.
+
+use super::{Entry, MatrixId, StreamMeta};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Anything that can replay a stream of entries plus declare its shape.
+pub trait EntrySource {
+    fn meta(&self) -> StreamMeta;
+    /// Visit every entry exactly once. Must be callable once (single pass);
+    /// the trait object is consumed by the pipeline.
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry));
+}
+
+/// Emit all nonzero entries of (A, B) in a seeded random global order.
+pub struct ShuffledMatrixSource {
+    pub a: Mat,
+    pub b: Mat,
+    pub seed: u64,
+}
+
+impl EntrySource for ShuffledMatrixSource {
+    fn meta(&self) -> StreamMeta {
+        StreamMeta { d: self.a.rows(), n1: self.a.cols(), n2: self.b.cols() }
+    }
+
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+        let mut entries: Vec<Entry> = Vec::new();
+        collect_nonzeros(&self.a, MatrixId::A, &mut entries);
+        collect_nonzeros(&self.b, MatrixId::B, &mut entries);
+        let mut rng = Pcg64::new(self.seed);
+        rng.shuffle(&mut entries);
+        for e in entries {
+            f(e);
+        }
+    }
+}
+
+/// Emit A and B column-major, interleaved A,B,A,B (row-aligned logs).
+pub struct InterleavedSource {
+    pub a: Mat,
+    pub b: Mat,
+}
+
+impl EntrySource for InterleavedSource {
+    fn meta(&self) -> StreamMeta {
+        StreamMeta { d: self.a.rows(), n1: self.a.cols(), n2: self.b.cols() }
+    }
+
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+        let mut ea = Vec::new();
+        let mut eb = Vec::new();
+        collect_nonzeros(&self.a, MatrixId::A, &mut ea);
+        collect_nonzeros(&self.b, MatrixId::B, &mut eb);
+        let mut ia = ea.into_iter();
+        let mut ib = eb.into_iter();
+        loop {
+            match (ia.next(), ib.next()) {
+                (None, None) => break,
+                (x, y) => {
+                    if let Some(e) = x {
+                        f(e);
+                    }
+                    if let Some(e) = y {
+                        f(e);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn collect_nonzeros(m: &Mat, id: MatrixId, out: &mut Vec<Entry>) {
+    for i in 0..m.rows() {
+        for j in 0..m.cols() {
+            let v = m[(i, j)];
+            if v != 0.0 {
+                out.push(Entry { matrix: id, row: i as u32, col: j as u32, value: v });
+            }
+        }
+    }
+}
+
+/// CSV triplet file: header `d,n1,n2` then lines `A|B,row,col,value`.
+pub struct FileSource {
+    path: std::path::PathBuf,
+    meta: StreamMeta,
+}
+
+impl FileSource {
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file = std::fs::File::open(&path)?;
+        let mut reader = BufReader::new(file);
+        let mut header = String::new();
+        reader.read_line(&mut header)?;
+        let parts: Vec<&str> = header.trim().split(',').collect();
+        anyhow::ensure!(parts.len() == 3, "bad header '{header}': want d,n1,n2");
+        let meta = StreamMeta {
+            d: parts[0].parse()?,
+            n1: parts[1].parse()?,
+            n2: parts[2].parse()?,
+        };
+        Ok(Self { path, meta })
+    }
+
+    /// Write matrices to the CSV triplet format (example/test helper).
+    pub fn write(path: impl AsRef<Path>, a: &Mat, b: &Mat) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{},{},{}", a.rows(), a.cols(), b.cols())?;
+        for (m, tag) in [(a, 'A'), (b, 'B')] {
+            for i in 0..m.rows() {
+                for j in 0..m.cols() {
+                    let v = m[(i, j)];
+                    if v != 0.0 {
+                        writeln!(f, "{tag},{i},{j},{v}")?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl EntrySource for FileSource {
+    fn meta(&self) -> StreamMeta {
+        self.meta
+    }
+
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+        let file = std::fs::File::open(&self.path).expect("source file vanished");
+        let reader = BufReader::new(file);
+        for (lineno, line) in reader.lines().enumerate().skip(1) {
+            let line = line.expect("io error mid-stream");
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.trim().split(',');
+            let tag = parts.next().expect("missing matrix tag");
+            let row: u32 = parts.next().and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+                panic!("bad row at line {lineno}")
+            });
+            let col: u32 = parts.next().and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+                panic!("bad col at line {lineno}")
+            });
+            let value: f64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+                panic!("bad value at line {lineno}")
+            });
+            let matrix = match tag {
+                "A" | "a" => MatrixId::A,
+                "B" | "b" => MatrixId::B,
+                other => panic!("bad matrix tag '{other}' at line {lineno}"),
+            };
+            f(Entry { matrix, row, col, value });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn small_pair() -> (Mat, Mat) {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::gaussian(6, 4, &mut rng);
+        let b = Mat::gaussian(6, 3, &mut rng);
+        (a, b)
+    }
+
+    #[test]
+    fn shuffled_source_emits_all_entries() {
+        let (a, b) = small_pair();
+        let src = Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 7 });
+        let mut seen_a = Mat::zeros(6, 4);
+        let mut seen_b = Mat::zeros(6, 3);
+        src.for_each(&mut |e| match e.matrix {
+            MatrixId::A => seen_a[(e.row as usize, e.col as usize)] = e.value,
+            MatrixId::B => seen_b[(e.row as usize, e.col as usize)] = e.value,
+        });
+        assert_eq!(seen_a.data(), a.data());
+        assert_eq!(seen_b.data(), b.data());
+    }
+
+    #[test]
+    fn shuffled_order_differs_by_seed() {
+        let (a, b) = small_pair();
+        let collect = |seed| {
+            let src = Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed });
+            let mut v = Vec::new();
+            src.for_each(&mut |e| v.push((e.matrix, e.row, e.col)));
+            v
+        };
+        assert_ne!(collect(1), collect(2));
+    }
+
+    #[test]
+    fn interleaved_emits_all() {
+        let (a, b) = small_pair();
+        let src = Box::new(InterleavedSource { a: a.clone(), b: b.clone() });
+        let mut count = 0;
+        src.for_each(&mut |_| count += 1);
+        assert_eq!(count, 6 * 4 + 6 * 3);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (a, b) = small_pair();
+        let path = std::env::temp_dir().join(format!("smppca_test_{}.csv", std::process::id()));
+        FileSource::write(&path, &a, &b).unwrap();
+        let src = Box::new(FileSource::open(&path).unwrap());
+        assert_eq!(src.meta(), StreamMeta { d: 6, n1: 4, n2: 3 });
+        let mut seen_a = Mat::zeros(6, 4);
+        let mut seen_b = Mat::zeros(6, 3);
+        src.for_each(&mut |e| match e.matrix {
+            MatrixId::A => seen_a[(e.row as usize, e.col as usize)] = e.value,
+            MatrixId::B => seen_b[(e.row as usize, e.col as usize)] = e.value,
+        });
+        std::fs::remove_file(&path).ok();
+        crate::testing::assert_close(seen_a.data(), a.data(), 1e-12);
+        crate::testing::assert_close(seen_b.data(), b.data(), 1e-12);
+    }
+
+    #[test]
+    fn file_source_rejects_bad_header() {
+        let path = std::env::temp_dir().join(format!("smppca_bad_{}.csv", std::process::id()));
+        std::fs::write(&path, "not a header\n").unwrap();
+        assert!(FileSource::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

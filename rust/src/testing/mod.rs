@@ -1,0 +1,33 @@
+//! Test support: a tiny seeded property-testing harness and numeric
+//! assertion helpers. (The image ships no `proptest`; this gives us the
+//! workflow that matters — randomized invariant checks with replayable
+//! failing seeds.)
+
+pub mod prop;
+
+pub use prop::{prop, prop_cases};
+
+/// Assert two slices are elementwise within `tol` (absolute, plus a relative
+/// slack scaled by the larger magnitude).
+#[track_caller]
+pub fn assert_close(got: &[f64], want: &[f64], tol: f64) {
+    assert_eq!(got.len(), want.len(), "length mismatch: {} vs {}", got.len(), want.len());
+    for (idx, (g, w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0f64.max(g.abs()).max(w.abs());
+        assert!(
+            (g - w).abs() <= tol * scale,
+            "index {idx}: got {g}, want {w} (tol {tol}, scale {scale})"
+        );
+    }
+}
+
+/// Assert a scalar is within relative tolerance of a (nonzero) expectation.
+#[track_caller]
+pub fn assert_rel(got: f64, want: f64, rel: f64) {
+    let denom = want.abs().max(1e-300);
+    assert!(
+        (got - want).abs() / denom <= rel,
+        "got {got}, want {want} (rel tol {rel}, actual rel {})",
+        (got - want).abs() / denom
+    );
+}

@@ -1,0 +1,115 @@
+//! Minimal property-testing harness: run `cases` randomized checks from a
+//! named seed; on panic, report the per-case seed so the failure replays
+//! deterministically with `prop_replay`.
+
+use crate::rng::Pcg64;
+
+/// Run `cases` property checks. Each case gets its own deterministic RNG
+/// derived from `(seed, case_index)`; a failing case panics with the exact
+/// replay seed in the message.
+pub fn prop(seed: u64, cases: usize, mut check: impl FnMut(&mut Pcg64)) {
+    for case in 0..cases {
+        let case_seed = crate::rng::hash2(seed, case as u64);
+        let mut rng = Pcg64::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} \
+                 (replay: prop_replay({case_seed:#x}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn prop_replay(case_seed: u64, mut check: impl FnMut(&mut Pcg64)) {
+    let mut rng = Pcg64::new(case_seed);
+    check(&mut rng);
+}
+
+/// Like [`prop`] but hands the case index to the check (useful for sizing
+/// sweeps: small cases first, growing with the index).
+pub fn prop_cases(seed: u64, cases: usize, mut check: impl FnMut(usize, &mut Pcg64)) {
+    for case in 0..cases {
+        let case_seed = crate::rng::hash2(seed, case as u64);
+        let mut rng = Pcg64::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(case, &mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} \
+                 (replay: prop_replay({case_seed:#x}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop(1, 10, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(2, 10, |rng| {
+                // fail on some case
+                assert!(rng.next_f64() < 0.5, "too big");
+            });
+        }));
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("replay: prop_replay(0x"), "msg={msg}");
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        // find the failing seed, replay it, expect the same failure
+        let mut failing_seed = None;
+        for case in 0..50u64 {
+            let s = crate::rng::hash2(3, case);
+            let mut r = Pcg64::new(s);
+            if r.next_f64() >= 0.9 {
+                failing_seed = Some(s);
+                break;
+            }
+        }
+        let s = failing_seed.expect("no case exceeded 0.9 in 50 draws?");
+        let res = std::panic::catch_unwind(|| {
+            prop_replay(s, |rng| {
+                assert!(rng.next_f64() < 0.9);
+            });
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn cases_variant_passes_index() {
+        let mut seen = Vec::new();
+        prop_cases(4, 5, |i, _| seen.push(i));
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+}

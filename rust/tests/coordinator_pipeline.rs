@@ -1,0 +1,133 @@
+//! Coordinator integration: streaming pipeline vs in-memory reference,
+//! failure injection, backpressure under slow workers, file-sourced runs.
+
+use smppca::algo::{smp_pca, SmpPcaConfig};
+use smppca::coordinator::{pipeline::lela_pipeline, Pipeline, PipelineConfig};
+use smppca::datasets;
+use smppca::rng::Pcg64;
+use smppca::stream::{Entry, EntrySource, FileSource, ShuffledMatrixSource, StreamMeta};
+
+fn dataset(seed: u64) -> (smppca::linalg::Mat, smppca::linalg::Mat) {
+    let mut rng = Pcg64::new(seed);
+    datasets::gd_synthetic(64, 24, 20, &mut rng)
+}
+
+#[test]
+fn pipeline_equals_reference_all_sketch_kinds() {
+    use smppca::sketch::SketchKind;
+    let (a, b) = dataset(1);
+    for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+        let algo = SmpPcaConfig {
+            rank: 3,
+            sketch_size: 24,
+            iters: 5,
+            seed: 42,
+            sketch: kind,
+            ..Default::default()
+        };
+        let reference = smp_pca(&a, &b, &algo).unwrap();
+        let cfg = PipelineConfig { algo, workers: 3, channel_capacity: 64 };
+        let out = Pipeline::new(cfg)
+            .run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 9 }))
+            .unwrap();
+        smppca::testing::assert_close(
+            out.result.factors.u.data(),
+            reference.factors.u.data(),
+            1e-9,
+        );
+    }
+}
+
+#[test]
+fn file_sourced_pipeline_matches_in_memory() {
+    let (a, b) = dataset(2);
+    let path = std::env::temp_dir().join(format!("smppca_it_{}.csv", std::process::id()));
+    FileSource::write(&path, &a, &b).unwrap();
+    let algo = SmpPcaConfig { rank: 3, sketch_size: 20, iters: 5, seed: 7, ..Default::default() };
+    let reference = smp_pca(&a, &b, &algo).unwrap();
+    let cfg = PipelineConfig { algo, workers: 2, channel_capacity: 32 };
+    let out = Pipeline::new(cfg)
+        .run(Box::new(FileSource::open(&path).unwrap()))
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+    smppca::testing::assert_close(out.result.factors.u.data(), reference.factors.u.data(), 1e-9);
+}
+
+#[test]
+fn tiny_channel_capacity_still_completes() {
+    // Backpressure stress: capacity 1 batch forces constant blocking.
+    let (a, b) = dataset(3);
+    let algo = SmpPcaConfig { rank: 2, sketch_size: 12, iters: 4, seed: 5, ..Default::default() };
+    let cfg = PipelineConfig { algo, workers: 4, channel_capacity: 1 };
+    let out = Pipeline::new(cfg)
+        .run(Box::new(ShuffledMatrixSource { a, b, seed: 11 }))
+        .unwrap();
+    assert!(out.result.samples_drawn > 0);
+}
+
+#[test]
+fn out_of_range_entry_panics_worker_and_is_reported() {
+    struct Corrupt;
+    impl EntrySource for Corrupt {
+        fn meta(&self) -> StreamMeta {
+            StreamMeta { d: 4, n1: 3, n2: 3 }
+        }
+        fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+            f(Entry::a(0, 0, 1.0));
+            f(Entry::a(0, 99, 1.0)); // col out of range
+            f(Entry::b(0, 0, 1.0));
+        }
+    }
+    let algo = SmpPcaConfig { rank: 1, sketch_size: 4, iters: 2, seed: 1, ..Default::default() };
+    let cfg = PipelineConfig { algo, workers: 2, channel_capacity: 8 };
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        Pipeline::new(cfg).run(Box::new(Corrupt))
+    }));
+    // Either the router/worker panics (propagated) or run returns an Err —
+    // corruption must never be silently folded in.
+    match result {
+        Ok(Ok(_)) => panic!("corrupt entry silently accepted"),
+        Ok(Err(_)) | Err(_) => {}
+    }
+}
+
+#[test]
+fn lela_pipeline_matches_in_memory_lela_error() {
+    let (a, b) = dataset(4);
+    let cfg = PipelineConfig {
+        algo: SmpPcaConfig { rank: 3, sketch_size: 16, iters: 6, seed: 13, ..Default::default() },
+        workers: 2,
+        channel_capacity: 32,
+    };
+    let (a2, b2) = (a.clone(), b.clone());
+    let make = move || -> Box<dyn EntrySource> {
+        Box::new(ShuffledMatrixSource { a: a2.clone(), b: b2.clone(), seed: 1 })
+    };
+    let (lr_stream, _) = lela_pipeline(&make, &cfg).unwrap();
+    let lr_mem = smppca::algo::lela(
+        &a,
+        &b,
+        &smppca::algo::lela::LelaConfig { rank: 3, iters: 6, seed: 13, samples: 0.0 },
+    )
+    .unwrap();
+    // Identical seeds ⇒ identical sampling ⇒ identical exact entries ⇒
+    // identical WAltMin input.
+    smppca::testing::assert_close(lr_stream.u.data(), lr_mem.u.data(), 1e-9);
+}
+
+#[test]
+fn metrics_account_for_all_entries() {
+    let (a, b) = dataset(5);
+    let nnz = (a.data().iter().filter(|v| **v != 0.0).count()
+        + b.data().iter().filter(|v| **v != 0.0).count()) as u64;
+    let cfg = PipelineConfig {
+        algo: SmpPcaConfig { rank: 2, sketch_size: 8, iters: 3, seed: 3, ..Default::default() },
+        workers: 3,
+        channel_capacity: 16,
+    };
+    let out = Pipeline::new(cfg)
+        .run(Box::new(ShuffledMatrixSource { a, b, seed: 2 }))
+        .unwrap();
+    assert_eq!(out.metrics.counter("worker/entries"), nnz);
+    assert_eq!(out.metrics.counter("entries_routed"), nnz);
+}

@@ -1,0 +1,99 @@
+//! Full-system integration: generate realistic workloads → stream from
+//! disk through the sharded coordinator → compare every algorithm —
+//! the `cargo test` face of the examples/end_to_end driver.
+
+use smppca::algo::{
+    lela::LelaConfig, optimal_rank_r, sketch_svd, smp_pca, spectral_error, SmpPcaConfig,
+};
+use smppca::coordinator::{Pipeline, PipelineConfig};
+use smppca::datasets;
+use smppca::rng::Pcg64;
+use smppca::sketch::SketchKind;
+use smppca::stream::{FileSource, ShuffledMatrixSource};
+
+#[test]
+fn cooccurrence_workload_end_to_end() {
+    // Bag-of-words co-occurrence (the paper's intro example #3): two
+    // word-by-paper matrices, AᵀB = co-occurrence counts.
+    let mut rng = Pcg64::new(1);
+    let (a, b) = datasets::bow_like(400, 60, 50, &mut rng);
+    let cfg = SmpPcaConfig { rank: 5, sketch_size: 80, iters: 8, seed: 3, ..Default::default() };
+    let out = smp_pca(&a, &b, &cfg).unwrap();
+    let err = out.spectral_error(&a, &b);
+    let opt = spectral_error(&optimal_rank_r(&a, &b, 5), &a, &b);
+    assert!(err < opt + 0.35, "bow: err={err} opt={opt}");
+    assert_eq!(out.factors.n1(), 60);
+    assert_eq!(out.factors.n2(), 50);
+}
+
+#[test]
+fn cca_crosscov_workload_end_to_end() {
+    // URL-like cross-covariance (intro example #4 / Table 1).
+    let mut rng = Pcg64::new(2);
+    let (fa, fb) = datasets::url_like(50, 40, 120, &mut rng);
+    let (a, b) = (fa.transpose(), fb.transpose()); // URL × feature
+    let cfg = SmpPcaConfig { rank: 4, sketch_size: 60, iters: 8, seed: 5, ..Default::default() };
+    let out = smp_pca(&a, &b, &cfg).unwrap();
+    let err = out.spectral_error(&a, &b);
+    assert!(err < 0.8, "url: err={err}");
+}
+
+#[test]
+fn full_stack_stream_all_baselines_ordering() {
+    let mut rng = Pcg64::new(3);
+    let (a, b) = datasets::gd_synthetic(128, 48, 48, &mut rng);
+    // stream through the pipeline from a disk file
+    let path = std::env::temp_dir().join(format!("smppca_e2e_{}.csv", std::process::id()));
+    FileSource::write(&path, &a, &b).unwrap();
+    let algo = SmpPcaConfig { rank: 5, sketch_size: 64, iters: 8, seed: 7, ..Default::default() };
+    let cfg = PipelineConfig { algo: algo.clone(), workers: 2, channel_capacity: 1024 };
+    let out = Pipeline::new(cfg)
+        .run(Box::new(FileSource::open(&path).unwrap()))
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+    let e_stream = spectral_error(&out.result.factors, &a, &b);
+    let e_opt = spectral_error(&optimal_rank_r(&a, &b, 5), &a, &b);
+    let e_lela = spectral_error(
+        &smppca::algo::lela(&a, &b, &LelaConfig { rank: 5, iters: 8, seed: 7, samples: 0.0 })
+            .unwrap(),
+        &a,
+        &b,
+    );
+    let e_sk = spectral_error(&sketch_svd(&a, &b, 5, 64, SketchKind::Gaussian, 7), &a, &b);
+    // paper ordering: optimal best; streaming SMP-PCA sane and competitive.
+    assert!(e_opt <= e_stream + 0.02);
+    assert!(e_opt <= e_lela + 0.02);
+    assert!(e_stream < 0.5, "stream err {e_stream}");
+    assert!(e_sk.is_finite());
+}
+
+#[test]
+fn pca_mode_streaming_matches_reference() {
+    // A = B (PCA). The stream carries both A and B entries; summaries must
+    // coincide and the result must match the in-memory run.
+    let mut rng = Pcg64::new(4);
+    let a = datasets::sift_like(50, 32, &mut rng);
+    let algo = SmpPcaConfig { rank: 4, sketch_size: 40, iters: 6, seed: 9, ..Default::default() };
+    let reference = smp_pca(&a, &a, &algo).unwrap();
+    let cfg = PipelineConfig { algo, workers: 2, channel_capacity: 256 };
+    let out = Pipeline::new(cfg)
+        .run(Box::new(ShuffledMatrixSource { a: a.clone(), b: a.clone(), seed: 13 }))
+        .unwrap();
+    smppca::testing::assert_close(
+        out.result.factors.u.data(),
+        reference.factors.u.data(),
+        1e-9,
+    );
+}
+
+#[test]
+fn residual_log_shows_convergence_on_realistic_data() {
+    let mut rng = Pcg64::new(5);
+    let (a, b) = datasets::gd_synthetic(100, 40, 40, &mut rng);
+    let cfg = SmpPcaConfig { rank: 5, sketch_size: 60, iters: 10, seed: 11, ..Default::default() };
+    let out = smp_pca(&a, &b, &cfg).unwrap();
+    let log = &out.residual_log;
+    assert_eq!(log.len(), 10);
+    assert!(log.last().unwrap() <= &(log[0] + 1e-12), "no progress: {log:?}");
+    assert!(log.iter().all(|v| v.is_finite()));
+}

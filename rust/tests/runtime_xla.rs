@@ -1,0 +1,134 @@
+//! PJRT/XLA engine integration tests — gated on `make artifacts` having
+//! produced `artifacts/*.hlo.txt`. When artifacts are missing the tests
+//! no-op with a notice (CI runs `make artifacts` first; `cargo test` alone
+//! must not fail on a fresh checkout).
+
+use smppca::linalg::Mat;
+use smppca::rng::Pcg64;
+use smppca::runtime::{artifacts_available, NativeEngine, TileEngine, XlaEngine, K_ART, TILE};
+use smppca::sketch::{SketchKind, SketchState};
+
+fn artifact_dir() -> std::path::PathBuf {
+    // Tests run from the crate root.
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine_or_skip() -> Option<XlaEngine> {
+    let dir = artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("[skip] artifacts missing in {} — run `make artifacts`", dir.display());
+        return None;
+    }
+    Some(XlaEngine::load(&dir).expect("artifacts exist but failed to load/compile"))
+}
+
+#[test]
+fn xla_engine_loads_and_reports_platform() {
+    let Some(engine) = engine_or_skip() else { return };
+    let platform = engine.platform().to_lowercase();
+    assert!(platform.contains("cpu") || platform.contains("host"), "platform={platform}");
+}
+
+#[test]
+fn xla_gram_tile_matches_native_engine() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::new(1);
+    let a = Mat::gaussian(60, 30, &mut rng);
+    let b = Mat::gaussian(60, 25, &mut rng);
+    let k = 24; // < K_ART: exercises zero-padding of sketch rows
+    let sa = SketchState::sketch_matrix(SketchKind::Gaussian, 7, k, &a);
+    let sb = SketchState::sketch_matrix(SketchKind::Gaussian, 7, k, &b);
+    let is: Vec<usize> = (0..30).step_by(2).collect();
+    let js: Vec<usize> = (0..25).step_by(3).collect();
+    let native = NativeEngine.rescaled_gram_tile(&sa, &sb, &is, &js);
+    let xla = engine.rescaled_gram_tile(&sa, &sb, &is, &js);
+    // f32 artifact vs f64 native: relative tolerance scaled by magnitudes.
+    let scale = native.max_abs().max(1e-6);
+    for i in 0..native.rows() {
+        for j in 0..native.cols() {
+            let d = (native[(i, j)] - xla[(i, j)]).abs();
+            assert!(d < 2e-4 * scale, "({i},{j}): native={} xla={}", native[(i, j)], xla[(i, j)]);
+        }
+    }
+}
+
+#[test]
+fn xla_full_tile_boundary() {
+    // Exactly TILE columns on both sides — no column padding.
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::new(2);
+    let a = Mat::gaussian(80, TILE, &mut rng);
+    let b = Mat::gaussian(80, TILE, &mut rng);
+    let sa = SketchState::sketch_matrix(SketchKind::Srht, 9, K_ART, &a);
+    let sb = SketchState::sketch_matrix(SketchKind::Srht, 9, K_ART, &b);
+    let idx: Vec<usize> = (0..TILE).collect();
+    let native = NativeEngine.rescaled_gram_tile(&sa, &sb, &idx, &idx);
+    let xla = engine.rescaled_gram_tile(&sa, &sb, &idx, &idx);
+    let scale = native.max_abs().max(1e-6);
+    for i in 0..TILE {
+        for j in 0..TILE {
+            assert!((native[(i, j)] - xla[(i, j)]).abs() < 3e-4 * scale);
+        }
+    }
+}
+
+#[test]
+fn xla_estimate_drives_full_smppca() {
+    // End-to-end: SMP-PCA through the XLA estimation engine ≈ native.
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::new(3);
+    let (a, b) = smppca::datasets::gd_synthetic(100, 40, 40, &mut rng);
+    let cfg = smppca::algo::SmpPcaConfig {
+        rank: 4,
+        sketch_size: 48,
+        iters: 6,
+        seed: 5,
+        ..Default::default()
+    };
+    let sa = SketchState::sketch_matrix(cfg.sketch, cfg.seed, cfg.sketch_size, &a);
+    let sb = SketchState::sketch_matrix(cfg.sketch, cfg.seed, cfg.sketch_size, &b);
+    let native = smppca::algo::finish_from_summaries(&sa, &sb, &cfg).unwrap();
+    let xla = smppca::algo::finish_from_summaries_engine(&sa, &sb, &cfg, &engine).unwrap();
+    let e_native = smppca::algo::spectral_error(&native.factors, &a, &b);
+    let e_xla = smppca::algo::spectral_error(&xla.factors, &a, &b);
+    assert!(
+        (e_native - e_xla).abs() < 0.05 + 0.3 * e_native,
+        "native err {e_native} vs xla err {e_xla}"
+    );
+}
+
+#[test]
+fn xla_sketch_apply_matches_native_gemm() {
+    let Some(engine) = engine_or_skip() else { return };
+    use smppca::runtime::xla_engine::D_TILE;
+    let mut rng = Pcg64::new(4);
+    let pi = Mat::gaussian(K_ART, D_TILE, &mut rng);
+    let x = Mat::gaussian(D_TILE, TILE, &mut rng);
+    let pi32: Vec<f32> = pi.data().iter().map(|&v| v as f32).collect();
+    let x32: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
+    let got = engine.sketch_apply_tile(&pi32, &x32).expect("sketch_apply artifact");
+    let want = pi.matmul(&x);
+    let scale = want.max_abs();
+    for i in 0..K_ART {
+        for j in 0..TILE {
+            let g = got[i * TILE + j] as f64;
+            assert!(
+                (g - want[(i, j)]).abs() < 5e-4 * scale,
+                "({i},{j}): {g} vs {}",
+                want[(i, j)]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_rejects_oversized_k() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::new(5);
+    let a = Mat::gaussian(300, 4, &mut rng);
+    let sa = SketchState::sketch_matrix(SketchKind::Gaussian, 1, K_ART + 8, &a);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine.rescaled_gram_tile(&sa, &sa, &[0], &[0]);
+    }));
+    assert!(result.is_err(), "k > K_ART must be rejected");
+}

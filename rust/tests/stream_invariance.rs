@@ -1,0 +1,135 @@
+//! The paper's defining single-pass property: results are invariant to the
+//! order in which entries arrive ("the non-zero entries of A and B [may]
+//! be presented in any arbitrary order") and to how they are sharded.
+
+use smppca::algo::SmpPcaConfig;
+use smppca::coordinator::{Pipeline, PipelineConfig};
+use smppca::datasets;
+use smppca::rng::Pcg64;
+use smppca::stream::{Entry, EntrySource, InterleavedSource, ShuffledMatrixSource, StreamMeta};
+
+fn dataset() -> (smppca::linalg::Mat, smppca::linalg::Mat) {
+    let mut rng = Pcg64::new(101);
+    datasets::gd_synthetic(48, 18, 16, &mut rng)
+}
+
+fn cfg(workers: usize) -> PipelineConfig {
+    PipelineConfig {
+        algo: SmpPcaConfig { rank: 3, sketch_size: 20, iters: 6, seed: 77, ..Default::default() },
+        workers,
+        channel_capacity: 128,
+    }
+}
+
+fn run(src: Box<dyn EntrySource>, workers: usize) -> smppca::algo::LowRank {
+    Pipeline::new(cfg(workers)).run(src).unwrap().result.factors
+}
+
+#[test]
+fn shuffled_orders_agree() {
+    let (a, b) = dataset();
+    let f1 = run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 1 }), 2);
+    let f2 = run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 999 }), 2);
+    smppca::testing::assert_close(f1.u.data(), f2.u.data(), 1e-9);
+    smppca::testing::assert_close(f1.v.data(), f2.v.data(), 1e-9);
+}
+
+#[test]
+fn interleaved_equals_shuffled() {
+    let (a, b) = dataset();
+    let f1 = run(Box::new(InterleavedSource { a: a.clone(), b: b.clone() }), 3);
+    let f2 = run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 5 }), 3);
+    smppca::testing::assert_close(f1.u.data(), f2.u.data(), 1e-9);
+}
+
+#[test]
+fn worker_counts_agree() {
+    let (a, b) = dataset();
+    let f1 = run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 3 }), 1);
+    let f4 = run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 3 }), 4);
+    let f8 = run(Box::new(ShuffledMatrixSource { a, b, seed: 3 }), 8);
+    smppca::testing::assert_close(f1.u.data(), f4.u.data(), 1e-9);
+    smppca::testing::assert_close(f1.u.data(), f8.u.data(), 1e-9);
+}
+
+#[test]
+fn duplicate_aware_split_entries_accumulate() {
+    // A value split across two partial records (v = v1 + v2) must sketch
+    // identically to one record — linearity of the sketch, which is what
+    // makes log-structured (incremental count) streams work.
+    struct SplitSource {
+        inner: Vec<Entry>,
+        meta: StreamMeta,
+    }
+    impl EntrySource for SplitSource {
+        fn meta(&self) -> StreamMeta {
+            self.meta
+        }
+        fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+            for e in self.inner {
+                f(e);
+            }
+        }
+    }
+    let (a, b) = dataset();
+    let meta = StreamMeta { d: a.rows(), n1: a.cols(), n2: b.cols() };
+    let mut whole = Vec::new();
+    let mut split = Vec::new();
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            let v = a[(i, j)];
+            whole.push(Entry::a(i as u32, j as u32, v));
+            split.push(Entry::a(i as u32, j as u32, 0.3 * v));
+            split.push(Entry::a(i as u32, j as u32, 0.7 * v));
+        }
+        for j in 0..b.cols() {
+            let v = b[(i, j)];
+            whole.push(Entry::b(i as u32, j as u32, v));
+            split.push(Entry::b(i as u32, j as u32, 0.5 * v));
+            split.push(Entry::b(i as u32, j as u32, 0.5 * v));
+        }
+    }
+    let mut m = smppca::coordinator::Metrics::new();
+    let p = Pipeline::new(cfg(2));
+    let (sa1, sb1) = p
+        .sketch_pass(Box::new(SplitSource { inner: whole, meta }), &mut m)
+        .unwrap();
+    let (sa2, sb2) = p
+        .sketch_pass(Box::new(SplitSource { inner: split, meta }), &mut m)
+        .unwrap();
+    // Sketches are linear ⇒ identical; norms are NOT (Σv² ≠ (Σv)² per
+    // split) — that is a real, documented limitation for split-value
+    // streams: norms require one record per final value.
+    smppca::testing::assert_close(sa1.sketch.data(), sa2.sketch.data(), 1e-9);
+    smppca::testing::assert_close(sb1.sketch.data(), sb2.sketch.data(), 1e-9);
+}
+
+#[test]
+fn zero_entries_are_noops() {
+    let (a, b) = dataset();
+    // Append a blanket of explicit zeros; results must not change.
+    struct WithZeros {
+        a: smppca::linalg::Mat,
+        b: smppca::linalg::Mat,
+    }
+    impl EntrySource for WithZeros {
+        fn meta(&self) -> StreamMeta {
+            StreamMeta { d: self.a.rows(), n1: self.a.cols(), n2: self.b.cols() }
+        }
+        fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+            for i in 0..self.a.rows() {
+                for j in 0..self.a.cols() {
+                    f(Entry::a(i as u32, j as u32, self.a[(i, j)]));
+                    f(Entry::a(i as u32, j as u32, 0.0));
+                }
+                for j in 0..self.b.cols() {
+                    f(Entry::b(i as u32, j as u32, self.b[(i, j)]));
+                    f(Entry::b(i as u32, j as u32, 0.0));
+                }
+            }
+        }
+    }
+    let f1 = run(Box::new(WithZeros { a: a.clone(), b: b.clone() }), 2);
+    let f2 = run(Box::new(InterleavedSource { a, b }), 2);
+    smppca::testing::assert_close(f1.u.data(), f2.u.data(), 1e-9);
+}
