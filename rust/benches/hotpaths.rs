@@ -1,10 +1,12 @@
 //! Hot-path micro-benchmarks — the §Perf instrument panel:
 //! per-entry sketch ingest (all Π families, ordered vs shuffled), column
 //! batch path, gaussian column regeneration & cache, channel transport,
-//! sampling, estimation, ALS solve, end-to-end leader finish.
+//! sampling, estimation, packed/parallel GEMM vs the naive kernel,
+//! gram-tile worker-pool scaling, ALS solve, end-to-end leader finish.
 //!
 //! ```bash
-//! cargo bench --bench hotpaths
+//! cargo bench --bench hotpaths            # human-readable table
+//! cargo bench --bench hotpaths -- --json  # + BENCH_hotpaths.json
 //! ```
 
 use smppca::bench::{black_box, BenchSuite};
@@ -148,6 +150,79 @@ fn main() {
         suite.bench("leader_finish/n256_k100_T10", || {
             black_box(smppca::algo::finish_from_summaries(&sa, &sb, &cfg).unwrap());
         });
+    }
+
+    // ----------------------------------------------------- gemm kernels
+    // Packed cache-blocked GEMM vs the retained naive i-k-j kernel, plus
+    // the worker-sharded path (see EXPERIMENTS.md §Perf for the recorded
+    // speedups and blocking parameters).
+    {
+        use smppca::linalg::gemm;
+        let mut r = Pcg64::new(11);
+        for &(m, kdim, n2) in &[(128usize, 128usize, 128usize), (512, 512, 512)] {
+            let a = Mat::gaussian(m, kdim, &mut r);
+            let b = Mat::gaussian(kdim, n2, &mut r);
+            let flops = (2 * m * kdim * n2) as u64;
+            suite.bench_items(&format!("gemm/naive/{m}x{kdim}x{n2}"), flops, || {
+                black_box(gemm::matmul_naive(&a, &b));
+            });
+            suite.bench_items(&format!("gemm/packed/{m}x{kdim}x{n2}"), flops, || {
+                black_box(a.par_matmul(&b, 1));
+            });
+            for t in [2usize, 4] {
+                suite.bench_items(&format!("gemm/packed_t{t}/{m}x{kdim}x{n2}"), flops, || {
+                    black_box(a.par_matmul(&b, t));
+                });
+            }
+        }
+        // Transposed-operand forms (the sketch-gram shapes): packing
+        // absorbs the strides, so these should track `gemm/packed`.
+        let a = Mat::gaussian(512, 256, &mut r);
+        let b = Mat::gaussian(512, 256, &mut r);
+        let flops = (2usize * 256 * 512 * 256) as u64;
+        suite.bench_items("gemm/t_matmul/256x512x256", flops, || {
+            black_box(a.t_matmul(&b));
+        });
+        let p = Mat::gaussian(256, 512, &mut r);
+        let q = Mat::gaussian(256, 512, &mut r);
+        suite.bench_items("gemm/matmul_t/256x512x256", flops, || {
+            black_box(p.matmul_t(&q));
+        });
+    }
+
+    // --------------------------------------------- gram tile worker pool
+    // TileEngine::estimate over a 10⁵-sample Ω on n₁ = n₂ = 2000, k = 100:
+    // the tile-cover pool (how XLA-shaped backends batch) and the direct
+    // per-sample path, both vs thread count.
+    {
+        use smppca::runtime::{
+            estimate_tiles_parallel, native_gram_tile, ParNativeEngine, TileEngine,
+        };
+        let mut r = Pcg64::new(12);
+        let n = 2000usize;
+        let a = Mat::gaussian(128, n, &mut r);
+        let b = Mat::gaussian(128, n, &mut r);
+        let sa = SketchState::sketch_matrix(SketchKind::Gaussian, 13, 100, &a);
+        let sb = SketchState::sketch_matrix(SketchKind::Gaussian, 13, 100, &b);
+        let profile = smppca::sampling::NormProfile::new(&sa.col_norms, &sb.col_norms);
+        let mut r2 = Pcg64::new(14);
+        let omega = smppca::sampling::sample_multinomial_fast(&profile, 100_000.0, &mut r2);
+        let m_items = omega.len() as u64;
+        for t in [1usize, 2, 4] {
+            suite.bench_items(&format!("gram_tile_parallel/tiled_threads{t}/m100k"), m_items, || {
+                black_box(estimate_tiles_parallel(&sa, &sb, &omega, 64, t, native_gram_tile));
+            });
+        }
+        for t in [1usize, 2, 4] {
+            let engine = ParNativeEngine { threads: t };
+            suite.bench_items(
+                &format!("gram_tile_parallel/direct_threads{t}/m100k"),
+                m_items,
+                || {
+                    black_box(engine.estimate(&sa, &sb, &omega));
+                },
+            );
+        }
     }
 
     // ------------------------------------------------------- ALS solve

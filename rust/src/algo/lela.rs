@@ -65,6 +65,7 @@ pub fn lela(a: &Mat, b: &Mat, cfg: &LelaConfig) -> anyhow::Result<LowRank> {
         seed: cfg.seed ^ 0xa17,
         split_samples: false,
         row_profile: Some(a_norms.iter().map(|&n| (n / fro).max(1e-12)).collect()),
+        threads: 0,
     };
     Ok(waltmin(&obs, a.cols(), b.cols(), &wcfg).factors)
 }

@@ -28,6 +28,11 @@ pub struct SmpPcaConfig {
     /// Use the plain-JL estimator instead of rescaled (ablation switch; the
     /// paper's SMP-PCA always rescales).
     pub plain_estimator: bool,
+    /// Worker threads for the leader finish (estimation + ALS solves);
+    /// `0` = auto via [`crate::linalg::max_threads`]. The finish stages are
+    /// sharded over independent work items, so the result is identical for
+    /// any thread count.
+    pub threads: usize,
 }
 
 impl Default for SmpPcaConfig {
@@ -40,6 +45,7 @@ impl Default for SmpPcaConfig {
             sketch: SketchKind::Gaussian,
             seed: 0x5337,
             plain_estimator: false,
+            threads: 0,
         }
     }
 }
@@ -69,13 +75,16 @@ pub fn smp_pca(a: &Mat, b: &Mat, cfg: &SmpPcaConfig) -> anyhow::Result<SmpPcaOut
 }
 
 /// Steps 2–3 of Algorithm 1 given the single-pass summaries. Shared by the
-/// in-memory entry point and the streaming coordinator.
+/// in-memory entry point and the streaming coordinator. Uses the parallel
+/// native engine (bitwise-identical to the sequential reference at any
+/// `cfg.threads`).
 pub fn finish_from_summaries(
     sa: &Summary,
     sb: &Summary,
     cfg: &SmpPcaConfig,
 ) -> anyhow::Result<SmpPcaOutput> {
-    finish_from_summaries_engine(sa, sb, cfg, &crate::runtime::NativeEngine)
+    let engine = crate::runtime::ParNativeEngine { threads: cfg.threads };
+    finish_from_summaries_engine(sa, sb, cfg, &engine)
 }
 
 /// [`finish_from_summaries`] with an explicit tile engine for the
@@ -122,6 +131,7 @@ pub fn finish_from_summaries_engine(
         seed: cfg.seed ^ 0xa17,
         split_samples: false,
         row_profile: Some(row_profile),
+        threads: cfg.threads,
     };
     let out = waltmin(&obs, n1, n2, &wcfg);
     Ok(SmpPcaOutput {
@@ -167,6 +177,21 @@ mod tests {
     }
 
     #[test]
+    fn leader_threads_do_not_change_result() {
+        let mut rng = Pcg64::new(8);
+        let (a, b) = datasets::gd_synthetic(60, 20, 22, &mut rng);
+        let base =
+            SmpPcaConfig { rank: 3, sketch_size: 40, seed: 11, threads: 1, ..Default::default() };
+        let o1 = smp_pca(&a, &b, &base).unwrap();
+        for t in [2, 4] {
+            let cfg = SmpPcaConfig { threads: t, ..base.clone() };
+            let o2 = smp_pca(&a, &b, &cfg).unwrap();
+            assert_eq!(o1.factors.u.data(), o2.factors.u.data(), "threads={t}");
+            assert_eq!(o1.factors.v.data(), o2.factors.v.data(), "threads={t}");
+        }
+    }
+
+    #[test]
     fn beats_sketch_svd_on_cone() {
         // The headline qualitative claim (Figs. 2b, 4b): on cone data the
         // rescaled estimator beats SVD(ÃᵀB̃) decisively.
@@ -197,7 +222,8 @@ mod tests {
         // A = B: single-pass PCA of AᵀA (Remark 3).
         let mut rng = Pcg64::new(4);
         let a = datasets::sift_like(40, 24, &mut rng);
-        let cfg = SmpPcaConfig { rank: 4, sketch_size: 64, iters: 8, seed: 7, ..Default::default() };
+        let cfg =
+            SmpPcaConfig { rank: 4, sketch_size: 64, iters: 8, seed: 7, ..Default::default() };
         let out = smp_pca(&a, &a, &cfg).unwrap();
         let err = out.spectral_error(&a, &a);
         // sift_like at this tiny size has a slowly decaying spectrum —

@@ -4,7 +4,9 @@
 //! closures; the runner does warmup + timed samples and prints
 //! mean / median / p95 plus throughput. Supports the substring filter arg
 //! cargo passes through (`cargo bench -- <filter>`; the `--bench` flag
-//! cargo injects is ignored).
+//! cargo injects is ignored), plus `--json[=PATH]` which additionally
+//! writes the results as `BENCH_<suite>.json` (or `PATH`) for the perf
+//! trajectory tracked in EXPERIMENTS.md §Perf.
 
 use std::time::{Duration, Instant};
 
@@ -37,22 +39,32 @@ impl BenchResult {
 pub struct BenchSuite {
     name: String,
     filter: Option<String>,
+    json_path: Option<std::path::PathBuf>,
     warmup_iters: usize,
     sample_count: usize,
     results: Vec<BenchResult>,
 }
 
 impl BenchSuite {
-    /// Parse argv: any non-flag argument is a substring filter.
+    /// Parse argv: any non-flag argument is a substring filter; `--json`
+    /// (or `--json=PATH`) enables the machine-readable output file.
     pub fn from_args(name: &str) -> Self {
-        let filter = std::env::args()
-            .skip(1)
-            .find(|a| !a.starts_with('-'))
-            .filter(|a| !a.is_empty());
+        let mut filter = None;
+        let mut json_path = None;
+        for a in std::env::args().skip(1) {
+            if a == "--json" {
+                json_path = Some(std::path::PathBuf::from(format!("BENCH_{name}.json")));
+            } else if let Some(p) = a.strip_prefix("--json=") {
+                json_path = Some(std::path::PathBuf::from(p));
+            } else if !a.starts_with('-') && !a.is_empty() && filter.is_none() {
+                filter = Some(a);
+            }
+        }
         let quick = std::env::var("SMPPCA_BENCH_QUICK").is_ok();
         Self {
             name: name.to_string(),
             filter,
+            json_path,
             warmup_iters: if quick { 1 } else { 2 },
             sample_count: if quick { 3 } else { 7 },
             results: Vec::new(),
@@ -112,9 +124,56 @@ impl BenchSuite {
         &self.results
     }
 
+    /// Serialize the recorded results (hand-rolled JSON — no serde in the
+    /// image).
+    fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!(
+            "  \"suite\": \"{}\",\n  \"results\": [\n",
+            json_escape(&self.name)
+        ));
+        for (idx, r) in self.results.iter().enumerate() {
+            let mean_s = r.mean().as_secs_f64();
+            let items = r
+                .items_per_iter
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| "null".to_string());
+            let thpt = match r.items_per_iter {
+                Some(n) if mean_s > 0.0 => format!("{:.3}", n as f64 / mean_s),
+                _ => "null".to_string(),
+            };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"samples\": {}, \"mean_ms\": {:.6}, \
+                 \"median_ms\": {:.6}, \"p95_ms\": {:.6}, \"items_per_iter\": {}, \
+                 \"items_per_sec\": {}}}{}\n",
+                json_escape(&r.name),
+                r.samples.len(),
+                mean_s * 1e3,
+                r.median().as_secs_f64() * 1e3,
+                r.p95().as_secs_f64() * 1e3,
+                items,
+                thpt,
+                if idx + 1 == self.results.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
     pub fn finish(self) {
+        if let Some(path) = &self.json_path {
+            match std::fs::write(path, self.to_json()) {
+                Ok(()) => println!("\nwrote {}", path.display()),
+                Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+            }
+        }
         println!("\n[{}] {} benchmarks done", self.name, self.results.len());
     }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 fn print_result(r: &BenchResult) {
@@ -155,6 +214,36 @@ mod tests {
         assert_eq!(suite.results().len(), 1);
         assert!(count >= 4); // 1 warmup + 3 samples
         assert_eq!(suite.results()[0].samples.len(), 3);
+    }
+
+    #[test]
+    fn json_output_written_and_well_formed() {
+        // Built directly (not via from_args): the libtest filter argv must
+        // not leak in as a bench-name filter.
+        let path = std::env::temp_dir()
+            .join(format!("smppca_bench_json_{}.json", std::process::id()));
+        let mut suite = BenchSuite {
+            name: "jsontest".to_string(),
+            filter: None,
+            json_path: Some(path.clone()),
+            warmup_iters: 1,
+            sample_count: 2,
+            results: Vec::new(),
+        };
+        suite.bench_items("group/alpha", 100, || {
+            black_box(1 + 1);
+        });
+        suite.bench("group/beta", || {
+            black_box(2 + 2);
+        });
+        suite.finish();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.contains("\"suite\": \"jsontest\""), "{body}");
+        assert!(body.contains("\"name\": \"group/alpha\""), "{body}");
+        assert!(body.contains("\"items_per_iter\": 100"), "{body}");
+        assert!(body.contains("\"items_per_iter\": null"), "{body}");
+        assert_eq!(body.matches('{').count(), body.matches('}').count(), "{body}");
     }
 
     #[test]

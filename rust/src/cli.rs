@@ -12,15 +12,26 @@ pub struct Args {
     flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("missing subcommand; try `smppca help`")]
     MissingSubcommand,
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: '{value}' ({hint})")]
     BadValue { key: String, value: String, hint: String },
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::MissingSubcommand => write!(f, "missing subcommand; try `smppca help`"),
+            ArgError::MissingValue(key) => write!(f, "option --{key} expects a value"),
+            ArgError::BadValue { key, value, hint } => {
+                write!(f, "invalid value for --{key}: '{value}' ({hint})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Args {
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self, ArgError> {
@@ -94,8 +105,12 @@ RUN OPTIONS:
   --samples M        expected |Ω| (default 4·n·r·ln n)
   --iters T          WAltMin iterations (default 10)
   --workers W        sketch-pass worker threads (default 2)
+  --threads T        leader-finish worker threads: GEMM, estimation, ALS
+                     (default 0 = all cores; also SMPPCA_THREADS env)
   --sketch KIND      gaussian|srht|countsketch (default gaussian)
-  --engine E         native|xla (default native; xla needs `make artifacts`)
+  --engine E         native|native-tiled|xla (default native; native-tiled
+                     batches gram tiles through the GEMM worker pool; xla
+                     needs `make artifacts` + the `xla` build feature)
   --seed S           RNG seed (default 1)
   --baselines        also run LELA / SVD(ÃᵀB̃) / optimal and print errors
 

@@ -44,6 +44,11 @@ pub struct WAltMinConfig {
     /// what practical implementations (including the authors' released
     /// Spark code) do; far more sample-efficient at small m.
     pub split_samples: bool,
+    /// Worker threads for the per-row/column least-squares solves
+    /// (`0` = auto via [`crate::linalg::max_threads`]). The solves are
+    /// independent per row/column, so the result is identical for any
+    /// thread count.
+    pub threads: usize,
 }
 
 impl Default for WAltMinConfig {
@@ -55,6 +60,7 @@ impl Default for WAltMinConfig {
             seed: 0x3a17,
             row_profile: None,
             split_samples: false,
+            threads: 0,
         }
     }
 }
@@ -161,6 +167,7 @@ pub fn waltmin(
     // list over observations) — avoids 2·T allocations of O(n + m).
     let mut heads_scratch: Vec<i64> = Vec::new();
     let mut next_scratch: Vec<i64> = vec![-1; obs.len()];
+    let threads = crate::linalg::resolve_threads(cfg.threads);
 
     for t in 0..t_iters {
         let part_v = (2 * t + 1).min(parts - 1);
@@ -179,6 +186,7 @@ pub fn waltmin(
             &mut b_scratch,
             &mut heads_scratch,
             &mut next_scratch,
+            threads,
         );
 
         // U update on the next part.
@@ -194,6 +202,7 @@ pub fn waltmin(
             &mut b_scratch,
             &mut heads_scratch,
             &mut next_scratch,
+            threads,
         );
 
         // Convergence diagnostic: weighted RMS residual over all obs.
@@ -217,7 +226,9 @@ pub fn waltmin(
 /// Solve one alternating side. With `by_row = false`: for each column j,
 /// solve the r×r weighted system over observations in `part`, writing into
 /// `out` (n2×r) given fixed `fixed` = U (n1×r). With `by_row = true` the
-/// roles flip.
+/// roles flip. Groups are mutually independent, so for large Ω they are
+/// sharded across `threads` scoped workers (disjoint row chunks of `out`);
+/// the result does not depend on the thread count.
 #[allow(clippy::too_many_arguments)]
 fn solve_side(
     obs: &[Observation],
@@ -231,7 +242,10 @@ fn solve_side(
     b: &mut [f64],
     heads: &mut Vec<i64>,
     next: &mut [i64],
+    threads: usize,
 ) {
+    // Parallelize only when the accumulation work dwarfs thread startup.
+    const SOLVE_PAR_GRAIN: usize = 1 << 19;
     let groups = out.rows();
     // Bucket observation indices by output group (column j or row i).
     heads.clear();
@@ -244,37 +258,84 @@ fn solve_side(
         next[idx] = heads[gidx];
         heads[gidx] = idx as i64;
     }
-    for gi in 0..groups {
-        g.iter_mut().for_each(|x| *x = 0.0);
-        b.iter_mut().for_each(|x| *x = 0.0);
-        let mut cursor = heads[gi];
-        let mut count = 0usize;
-        while cursor >= 0 {
-            let ob = &obs[cursor as usize];
-            let w = if ob.q_hat > 0.0 { 1.0 / ob.q_hat } else { 0.0 };
-            let frow = fixed.row(if by_row { ob.j } else { ob.i });
-            // G += w f fᵀ (upper triangle mirrored), b += w m̃ f
-            for p in 0..r {
-                let wf = w * frow[p];
-                b[p] += wf * ob.value;
-                let gp = &mut g[p * r..p * r + r];
-                for q in 0..r {
-                    gp[q] += wf * frow[q];
-                }
-            }
-            count += 1;
-            cursor = next[cursor as usize];
+    let heads_ro: &[i64] = &heads[..];
+    let next_ro: &[i64] = &next[..];
+    let t = threads.min(groups.max(1));
+    if t <= 1 || obs.len().saturating_mul(r * r) < SOLVE_PAR_GRAIN {
+        for gi in 0..groups {
+            solve_group(obs, heads_ro, next_ro, gi, by_row, fixed, r, g, b, out.row_mut(gi));
         }
-        let orow = out.row_mut(gi);
-        if count == 0 {
-            // No observations for this row/column in this part: keep zero
-            // (the paper's sampling guarantees coverage w.h.p.).
-            orow.iter_mut().for_each(|x| *x = 0.0);
-            continue;
-        }
-        solve_normal_eq_flat(g, b, r);
-        orow.copy_from_slice(&b[..r]);
+        return;
     }
+    let rows_per = groups.div_ceil(t);
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.data_mut().chunks_mut(rows_per * r).enumerate() {
+            let g0 = ci * rows_per;
+            s.spawn(move || {
+                let mut gbuf = vec![0.0; r * r];
+                let mut bbuf = vec![0.0; r];
+                for (local, orow) in chunk.chunks_mut(r).enumerate() {
+                    solve_group(
+                        obs,
+                        heads_ro,
+                        next_ro,
+                        g0 + local,
+                        by_row,
+                        fixed,
+                        r,
+                        &mut gbuf,
+                        &mut bbuf,
+                        orow,
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// Accumulate and solve the r×r weighted normal-equation system of one
+/// output row/column (`gi`), writing the solution into `orow`.
+#[allow(clippy::too_many_arguments)]
+fn solve_group(
+    obs: &[Observation],
+    heads: &[i64],
+    next: &[i64],
+    gi: usize,
+    by_row: bool,
+    fixed: &Mat,
+    r: usize,
+    g: &mut [f64],
+    b: &mut [f64],
+    orow: &mut [f64],
+) {
+    g.iter_mut().for_each(|x| *x = 0.0);
+    b.iter_mut().for_each(|x| *x = 0.0);
+    let mut cursor = heads[gi];
+    let mut count = 0usize;
+    while cursor >= 0 {
+        let ob = &obs[cursor as usize];
+        let w = if ob.q_hat > 0.0 { 1.0 / ob.q_hat } else { 0.0 };
+        let frow = fixed.row(if by_row { ob.j } else { ob.i });
+        // G += w f fᵀ (upper triangle mirrored), b += w m̃ f
+        for p in 0..r {
+            let wf = w * frow[p];
+            b[p] += wf * ob.value;
+            let gp = &mut g[p * r..p * r + r];
+            for q in 0..r {
+                gp[q] += wf * frow[q];
+            }
+        }
+        count += 1;
+        cursor = next[cursor as usize];
+    }
+    if count == 0 {
+        // No observations for this row/column in this part: keep zero
+        // (the paper's sampling guarantees coverage w.h.p.).
+        orow.iter_mut().for_each(|x| *x = 0.0);
+        return;
+    }
+    solve_normal_eq_flat(g, b, r);
+    orow.copy_from_slice(&b[..r]);
 }
 
 #[cfg(test)]
@@ -382,7 +443,8 @@ mod tests {
             let n2 = 15 + rng.next_below(15) as usize;
             let r = 1 + rng.next_below(3) as usize;
             let m = low_rank_matrix(n1, n2, r, rng.next_u64());
-            let cfg = WAltMinConfig { rank: r, iters: 8, seed: rng.next_u64(), ..Default::default() };
+            let cfg =
+                WAltMinConfig { rank: r, iters: 8, seed: rng.next_u64(), ..Default::default() };
             let out = waltmin(&full_observations(&m), n1, n2, &cfg);
             let err = fro_norm(&m.sub(&out.factors.to_dense())) / fro_norm(&m);
             assert!(err < 1e-6, "err={err} n1={n1} n2={n2} r={r}");
@@ -418,6 +480,23 @@ mod tests {
         // the matrix; weights only reorder conditioning. Sanity: both small.
         assert!(e_correct < 1e-3, "correct={e_correct}");
         assert!(e_wrong < 1e-3, "wrong={e_wrong}");
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        // Large enough that the parallel solve path actually engages
+        // (obs · r² crosses the grain threshold), small enough for debug CI.
+        let n = 130;
+        let m_mat = low_rank_matrix(n, n, 3, 21);
+        let obs = full_observations(&m_mat);
+        let base = WAltMinConfig { rank: 6, iters: 2, threads: 1, ..Default::default() };
+        let reference = waltmin(&obs, n, n, &base);
+        for t in [2, 4] {
+            let cfg = WAltMinConfig { threads: t, ..base.clone() };
+            let out = waltmin(&obs, n, n, &cfg);
+            assert_eq!(out.factors.u.data(), reference.factors.u.data(), "threads={t}");
+            assert_eq!(out.factors.v.data(), reference.factors.v.data(), "threads={t}");
+        }
     }
 
     #[test]

@@ -38,7 +38,12 @@ pub struct Pipeline {
 
 impl Pipeline {
     pub fn new(cfg: PipelineConfig) -> Self {
-        Self { cfg, engine: crate::runtime::native_engine() }
+        // Parallel native engine for the leader finish; `algo.threads = 0`
+        // sizes the pool automatically. Output is identical to the
+        // sequential reference engine at any thread count.
+        let engine: Box<dyn TileEngine> =
+            Box::new(crate::runtime::ParNativeEngine { threads: cfg.algo.threads });
+        Self { cfg, engine }
     }
 
     /// Use a specific tile engine (e.g. the PJRT/XLA one) for the leader's
@@ -73,7 +78,8 @@ impl Pipeline {
         let t_pass = StageTimer::start();
 
         // Entries travel in batches: per-entry channel sends would put a
-        // mutex round-trip on every record (measured ~8× slowdown, see
+        // mutex round-trip on every record (the `channel/*` group in
+        // `benches/hotpaths.rs` measures the gap; numbers recorded in
         // EXPERIMENTS.md §Perf); batching amortizes it to noise.
         const BATCH: usize = 1024;
         let mut senders = Vec::with_capacity(w);
@@ -272,6 +278,7 @@ pub fn lela_pipeline(
         seed: cfg.algo.seed ^ 0xa17,
         split_samples: false,
         row_profile: Some(a_norms.iter().map(|&n| (n / fro).max(1e-12)).collect()),
+        threads: cfg.algo.threads,
     };
     let out = waltmin(&obs, meta.n1, meta.n2, &wcfg);
     metrics.record_stage("lela/waltmin", t3.stop());

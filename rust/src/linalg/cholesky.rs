@@ -9,13 +9,26 @@ pub struct Cholesky {
     l: Mat,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CholeskyError {
-    #[error("matrix is not positive definite (pivot {pivot} at index {index})")]
     NotPositiveDefinite { index: usize, pivot: f64 },
-    #[error("matrix is not square: {rows}x{cols}")]
     NotSquare { rows: usize, cols: usize },
 }
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholeskyError::NotPositiveDefinite { index, pivot } => {
+                write!(f, "matrix is not positive definite (pivot {pivot} at index {index})")
+            }
+            CholeskyError::NotSquare { rows, cols } => {
+                write!(f, "matrix is not square: {rows}x{cols}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 impl Cholesky {
     /// Factor an SPD matrix.

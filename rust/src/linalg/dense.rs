@@ -1,5 +1,9 @@
-//! Row-major dense f64 matrix with cache-blocked GEMM.
+//! Row-major dense f64 matrix. All products route through the packed,
+//! cache-blocked, register-tiled GEMM in [`crate::linalg::gemm`]; the
+//! multithreaded path is available explicitly via [`Mat::par_matmul`] and
+//! automatically for large products.
 
+use super::gemm;
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
@@ -111,11 +115,7 @@ impl Mat {
 
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                t[(j, i)] = self[(i, j)];
-            }
-        }
+        gemm::transpose_into(self, &mut t);
         t
     }
 
@@ -138,18 +138,10 @@ impl Mat {
         Mat { rows: self.rows, cols: self.cols, data }
     }
 
-    /// `y = A x`
+    /// `y = A x` (row-sharded across workers for large operators — the
+    /// power-iteration hot path; bitwise independent of the thread count).
     pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
-        assert_eq!(x.len(), self.cols);
-        assert_eq!(y.len(), self.rows);
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let mut acc = 0.0;
-            for (a, b) in row.iter().zip(x) {
-                acc += a * b;
-            }
-            y[i] = acc;
-        }
+        gemm::gemv(&self.data, self.rows, self.cols, x, y, 0);
     }
 
     /// `y = Aᵀ x`
@@ -169,46 +161,31 @@ impl Mat {
         }
     }
 
-    /// `C = A · B` with an i-k-j loop order (streams B rows, unit-stride
-    /// inner loop) — the right shape for row-major without a full blocked
-    /// kernel. Good enough for the sizes the coordinator touches; the real
-    /// hot-path GEMMs go through the Pallas/XLA artifacts.
+    /// `C = A · B` through the packed cache-blocked GEMM (auto worker
+    /// count for large products; see [`Mat::par_matmul`] for explicit
+    /// control).
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "inner dims mismatch");
         let mut c = Mat::zeros(self.rows, b.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
-            for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = b.row(k);
-                for (cj, bj) in crow.iter_mut().zip(brow) {
-                    *cj += aik * bj;
-                }
-            }
-        }
+        gemm::matmul_into(self, b, &mut c, 0);
         c
     }
 
-    /// `C = Aᵀ · B` without materializing the transpose.
+    /// `C = A · B` with an explicit worker count (`0` = auto). Thread count
+    /// never changes the result bits — workers own disjoint row panels.
+    pub fn par_matmul(&self, b: &Mat, threads: usize) -> Mat {
+        assert_eq!(self.cols, b.rows, "inner dims mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        gemm::matmul_into(self, b, &mut c, threads);
+        c
+    }
+
+    /// `C = Aᵀ · B` without materializing the transpose (the GEMM packing
+    /// absorbs the stride swap).
     pub fn t_matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.rows, b.rows, "inner dims mismatch");
         let mut c = Mat::zeros(self.cols, b.cols);
-        for k in 0..self.rows {
-            let arow = self.row(k);
-            let brow = b.row(k);
-            for (i, &aki) in arow.iter().enumerate() {
-                if aki == 0.0 {
-                    continue;
-                }
-                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
-                for (cj, bj) in crow.iter_mut().zip(brow) {
-                    *cj += aki * bj;
-                }
-            }
-        }
+        gemm::t_matmul_into(self, b, &mut c, 0);
         c
     }
 
@@ -216,17 +193,7 @@ impl Mat {
     pub fn matmul_t(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.cols, "inner dims mismatch");
         let mut c = Mat::zeros(self.rows, b.rows);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            for j in 0..b.rows {
-                let brow = b.row(j);
-                let mut acc = 0.0;
-                for (x, y) in arow.iter().zip(brow) {
-                    acc += x * y;
-                }
-                c[(i, j)] = acc;
-            }
-        }
+        gemm::matmul_t_into(self, b, &mut c, 0);
         c
     }
 
@@ -370,6 +337,19 @@ mod tests {
         assert_eq!(s.cols(), 3);
         assert_eq!(s[(2, 0)], 21.0);
         assert_eq!(s[(0, 2)], 3.0);
+    }
+
+    #[test]
+    fn par_matmul_bitwise_stable_across_threads() {
+        let mut rng = Pcg64::new(8);
+        let a = Mat::gaussian(33, 21, &mut rng);
+        let b = Mat::gaussian(21, 19, &mut rng);
+        let c1 = a.par_matmul(&b, 1);
+        for threads in [2, 3, 4] {
+            assert_eq!(a.par_matmul(&b, threads).data(), c1.data());
+        }
+        let naive = super::super::gemm::matmul_naive(&a, &b);
+        crate::testing::assert_close(c1.data(), naive.data(), 1e-12);
     }
 
     #[test]

@@ -1,0 +1,507 @@
+//! Packed, cache-blocked, register-tiled f64 GEMM — the dense kernel under
+//! every `Mat` product in the crate.
+//!
+//! Structure (the classic BLIS/GotoBLAS decomposition, scalar-Rust flavor):
+//! * the operand is walked in `KC × NC` B-panels and `MC × KC` A-blocks;
+//!   both are **packed** into contiguous micro-panel buffers so the inner
+//!   kernel only ever touches unit-stride memory, regardless of whether the
+//!   logical operand is `A`, `Aᵀ` or `Bᵀ` (transposition is absorbed by the
+//!   `(row-stride, col-stride)` packing view — nothing is materialized);
+//! * an `MR × NR` register-tiled microkernel accumulates into a fixed-size
+//!   local array with unrolled unit-stride loops that autovectorize;
+//! * `threads > 1` shards row-panels of C across scoped `std::thread`
+//!   workers (disjoint `chunks_mut`, shared read-only operands — the same
+//!   worker pattern as the sketch pass in `coordinator/pipeline.rs`).
+//!
+//! Sharding by rows keeps the reduction order per C entry identical to the
+//! single-threaded kernel, so results are **bitwise independent of the
+//! thread count**. Blocking parameters are documented in EXPERIMENTS.md
+//! §Perf together with the measured speedups over [`matmul_naive`].
+
+use super::dense::Mat;
+use std::sync::OnceLock;
+
+/// Microkernel rows (register tile height).
+pub const MR: usize = 4;
+/// Microkernel columns (register tile width — the vectorized direction).
+pub const NR: usize = 4;
+/// K blocking: one packed A micro-panel strip is `MR × KC`.
+pub const KC: usize = 256;
+/// M blocking: the packed A block (`MC × KC` ≈ 128 KiB) targets L2.
+pub const MC: usize = 64;
+/// N blocking: the packed B panel (`KC × NC` ≈ 1 MiB) targets L3.
+pub const NC: usize = 512;
+
+/// Parallelism kicks in above this many multiply-adds (per extra worker).
+const PAR_FLOP_GRAIN: usize = 1 << 22;
+/// Parallel gemv threshold (elements touched per extra worker).
+const GEMV_PAR_GRAIN: usize = 1 << 20;
+
+/// Worker-thread cap for all dense-kernel parallelism: `SMPPCA_THREADS` if
+/// set (≥ 1), else the machine's available parallelism.
+pub fn max_threads() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("SMPPCA_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// `0` means "auto" (the [`max_threads`] cap); anything else is literal.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        max_threads()
+    } else {
+        requested
+    }
+}
+
+/// `C = A_eff · B_eff` over strided views of row-major storage.
+///
+/// `A_eff[i, l] = a[i·a_rs + l·a_cs]` (shape `m × k`),
+/// `B_eff[l, j] = b[l·b_rs + j·b_cs]` (shape `k × n`),
+/// `c` is contiguous row-major `m × n` and is **overwritten**.
+/// `threads = 0` picks a worker count from the problem size; an explicit
+/// count is honored as given. Thread count never changes the result bits.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    a_rs: usize,
+    a_cs: usize,
+    b: &[f64],
+    b_rs: usize,
+    b_cs: usize,
+    c: &mut [f64],
+    threads: usize,
+) {
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    for v in c.iter_mut() {
+        *v = 0.0;
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let flops = m.saturating_mul(n).saturating_mul(k);
+    let want = resolve_threads(threads);
+    let auto = if threads == 0 { want.min(flops / PAR_FLOP_GRAIN + 1) } else { want };
+    let t = auto.min(m);
+    if t <= 1 {
+        gemm_st(m, n, k, a, a_rs, a_cs, b, b_rs, b_cs, c, n);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (w, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let mw = c_chunk.len() / n;
+            let a_w = &a[w * rows_per * a_rs..];
+            s.spawn(move || {
+                gemm_st(mw, n, k, a_w, a_rs, a_cs, b, b_rs, b_cs, c_chunk, n);
+            });
+        }
+    });
+}
+
+/// Single-threaded blocked driver. `c` rows are `c_stride` apart.
+#[allow(clippy::too_many_arguments)]
+fn gemm_st(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    a_rs: usize,
+    a_cs: usize,
+    b: &[f64],
+    b_rs: usize,
+    b_cs: usize,
+    c: &mut [f64],
+    c_stride: usize,
+) {
+    let mut apack = vec![0.0f64; MC * KC];
+    let mut bpack = vec![0.0f64; KC * NC];
+    for j0 in (0..n).step_by(NC) {
+        let nb = NC.min(n - j0);
+        let npanels = nb.div_ceil(NR);
+        for k0 in (0..k).step_by(KC) {
+            let kb = KC.min(k - k0);
+            pack_b(&mut bpack, b, b_rs, b_cs, k0, kb, j0, nb);
+            for i0 in (0..m).step_by(MC) {
+                let mb = MC.min(m - i0);
+                let mpanels = mb.div_ceil(MR);
+                pack_a(&mut apack, a, a_rs, a_cs, i0, mb, k0, kb);
+                for jp in 0..npanels {
+                    let bp = &bpack[jp * kb * NR..(jp + 1) * kb * NR];
+                    let n_act = NR.min(nb - jp * NR);
+                    for ip in 0..mpanels {
+                        let ap = &apack[ip * kb * MR..(ip + 1) * kb * MR];
+                        let m_act = MR.min(mb - ip * MR);
+                        let c_off = (i0 + ip * MR) * c_stride + j0 + jp * NR;
+                        microkernel(ap, bp, kb, &mut c[c_off..], c_stride, m_act, n_act);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack `A_eff[i0..i0+mb, k0..k0+kb]` into MR-row micro-panels, k-major
+/// inside each panel, zero-padded to a full MR so the microkernel never
+/// branches on ragged edges.
+fn pack_a(
+    dst: &mut [f64],
+    a: &[f64],
+    a_rs: usize,
+    a_cs: usize,
+    i0: usize,
+    mb: usize,
+    k0: usize,
+    kb: usize,
+) {
+    for ip in 0..mb.div_ceil(MR) {
+        let base = ip * kb * MR;
+        let rows = MR.min(mb - ip * MR);
+        for kk in 0..kb {
+            let col = (k0 + kk) * a_cs;
+            let out = &mut dst[base + kk * MR..base + kk * MR + MR];
+            for (r, o) in out.iter_mut().enumerate() {
+                *o = if r < rows { a[(i0 + ip * MR + r) * a_rs + col] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack `B_eff[k0..k0+kb, j0..j0+nb]` into NR-column micro-panels, k-major,
+/// zero-padded to a full NR.
+fn pack_b(
+    dst: &mut [f64],
+    b: &[f64],
+    b_rs: usize,
+    b_cs: usize,
+    k0: usize,
+    kb: usize,
+    j0: usize,
+    nb: usize,
+) {
+    for jp in 0..nb.div_ceil(NR) {
+        let base = jp * kb * NR;
+        let cols = NR.min(nb - jp * NR);
+        for kk in 0..kb {
+            let row = (k0 + kk) * b_rs;
+            let out = &mut dst[base + kk * NR..base + kk * NR + NR];
+            for (q, o) in out.iter_mut().enumerate() {
+                *o = if q < cols { b[row + (j0 + jp * NR + q) * b_cs] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// `MR × NR` register tile: accumulate `ap · bp` over `kb` and add the
+/// live `m_act × n_act` corner into C. The fixed-size `acc` array and the
+/// exact-length panel slices give LLVM straight-line unrolled code.
+#[inline(always)]
+fn microkernel(
+    ap: &[f64],
+    bp: &[f64],
+    kb: usize,
+    c: &mut [f64],
+    c_stride: usize,
+    m_act: usize,
+    n_act: usize,
+) {
+    debug_assert_eq!(ap.len(), kb * MR);
+    debug_assert_eq!(bp.len(), kb * NR);
+    let mut acc = [[0.0f64; NR]; MR];
+    for kk in 0..kb {
+        let av: &[f64; MR] = ap[kk * MR..kk * MR + MR].try_into().unwrap();
+        let bv: &[f64; NR] = bp[kk * NR..kk * NR + NR].try_into().unwrap();
+        for r in 0..MR {
+            let ar = av[r];
+            let accr = &mut acc[r];
+            for q in 0..NR {
+                accr[q] += ar * bv[q];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(m_act) {
+        let row = &mut c[r * c_stride..r * c_stride + n_act];
+        for (dst, s) in row.iter_mut().zip(&accr[..n_act]) {
+            *dst += *s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- Mat API
+
+/// `C = A · B` into a preallocated `C` (shape-checked).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
+    assert_eq!(a.cols(), b.rows(), "inner dims mismatch");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "C shape mismatch");
+    let (m, n, k) = (a.rows(), b.cols(), a.cols());
+    gemm(m, n, k, a.data(), k, 1, b.data(), n, 1, c.data_mut(), threads);
+}
+
+/// `C = Aᵀ · B` without materializing the transpose (packing absorbs it).
+pub fn t_matmul_into(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
+    assert_eq!(a.rows(), b.rows(), "inner dims mismatch");
+    assert_eq!((c.rows(), c.cols()), (a.cols(), b.cols()), "C shape mismatch");
+    let (m, n, k) = (a.cols(), b.cols(), a.rows());
+    gemm(m, n, k, a.data(), 1, a.cols(), b.data(), n, 1, c.data_mut(), threads);
+}
+
+/// `C = A · Bᵀ` without materializing the transpose.
+pub fn matmul_t_into(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
+    assert_eq!(a.cols(), b.cols(), "inner dims mismatch");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.rows()), "C shape mismatch");
+    let (m, n, k) = (a.rows(), b.rows(), a.cols());
+    gemm(m, n, k, a.data(), k, 1, b.data(), 1, b.cols(), c.data_mut(), threads);
+}
+
+/// The pre-gemm reference kernel: i-k-j loop order streaming rows of B with
+/// a unit-stride inner loop. Kept as the correctness oracle for the
+/// property tests and as the baseline of the `gemm/*` benchmarks.
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "inner dims mismatch");
+    let n = b.cols();
+    let mut c = Mat::zeros(a.rows(), n);
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        let crow = &mut c.data_mut()[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            for (cj, bj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bj;
+            }
+        }
+    }
+    c
+}
+
+/// Cache-blocked out-of-place transpose (32×32 tiles).
+pub fn transpose_into(a: &Mat, t: &mut Mat) {
+    assert_eq!((t.rows(), t.cols()), (a.cols(), a.rows()), "transpose shape mismatch");
+    const TB: usize = 32;
+    let (m, n) = (a.rows(), a.cols());
+    let ad = a.data();
+    let td = t.data_mut();
+    for ib in (0..m).step_by(TB) {
+        for jb in (0..n).step_by(TB) {
+            for i in ib..(ib + TB).min(m) {
+                let arow = &ad[i * n..(i + 1) * n];
+                for j in jb..(jb + TB).min(n) {
+                    td[j * m + i] = arow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Four-accumulator unrolled dot product (ILP-friendly; the reduction order
+/// differs from a naive left fold by O(ε)).
+pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut acc = [0.0f64; 4];
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y = A x` for contiguous row-major `a`, row-sharded across workers when
+/// the problem is large enough (`threads = 0` ⇒ auto). Per-row dot products
+/// make the result independent of the thread count.
+pub fn gemv(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64], threads: usize) {
+    assert_eq!(x.len(), cols, "x length mismatch");
+    assert_eq!(y.len(), rows, "y length mismatch");
+    let want = resolve_threads(threads);
+    let auto = if threads == 0 {
+        want.min(rows.saturating_mul(cols) / GEMV_PAR_GRAIN + 1)
+    } else {
+        want
+    };
+    let t = auto.min(rows.max(1));
+    if t <= 1 {
+        for (i, yo) in y.iter_mut().enumerate() {
+            *yo = dot_unrolled(&a[i * cols..(i + 1) * cols], x);
+        }
+        return;
+    }
+    let rows_per = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        for (w, yc) in y.chunks_mut(rows_per).enumerate() {
+            let a_w = &a[w * rows_per * cols..];
+            s.spawn(move || {
+                for (i, yo) in yc.iter_mut().enumerate() {
+                    *yo = dot_unrolled(&a_w[i * cols..(i + 1) * cols], x);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_close, prop};
+
+    /// Direct-definition oracle (independent of every kernel above).
+    fn ref_matmul(a: &Mat, b: &Mat) -> Mat {
+        Mat::from_fn(a.rows(), b.cols(), |i, j| {
+            (0..a.cols()).map(|kk| a[(i, kk)] * b[(kk, j)]).sum()
+        })
+    }
+
+    fn rand_mat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.next_gaussian())
+    }
+
+    #[test]
+    fn packed_matches_reference_on_edge_shapes() {
+        // 1×1, k = 0, tall-skinny, wide, and non-multiple-of-block sizes —
+        // every ragged edge of the MR/NR/KC/MC/NC blocking.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (1, 7, 1),
+            (4, 0, 5),
+            (257, 5, 3),
+            (3, 7, 260),
+            (67, 129, 35),
+            (65, 64, 63),
+            (5, 300, 7),
+            (70, 40, 9),
+            (3, 300, 520),
+        ];
+        let mut rng = Pcg64::new(101);
+        for &(m, k, n) in &shapes {
+            let a = rand_mat(m, k, &mut rng);
+            let b = rand_mat(k, n, &mut rng);
+            let want = ref_matmul(&a, &b);
+            let mut c = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut c, 1);
+            assert_close(c.data(), want.data(), 1e-12);
+            for threads in [2, 3, 4] {
+                let mut cp = Mat::zeros(m, n);
+                matmul_into(&a, &b, &mut cp, threads);
+                assert_eq!(cp.data(), c.data(), "thread count changed bits ({m}x{k}x{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_and_cols() {
+        let a = Mat::zeros(0, 3);
+        let b = Mat::zeros(3, 4);
+        let mut c = Mat::zeros(0, 4);
+        matmul_into(&a, &b, &mut c, 0);
+        assert_eq!(c.data().len(), 0);
+        let a = Mat::zeros(4, 3);
+        let b = Mat::zeros(3, 0);
+        let mut c = Mat::zeros(4, 0);
+        matmul_into(&a, &b, &mut c, 0);
+        assert_eq!(c.data().len(), 0);
+    }
+
+    #[test]
+    fn property_packed_and_parallel_match_naive() {
+        prop(31, 12, |rng| {
+            let m = 1 + rng.next_below(48) as usize;
+            let k = rng.next_below(48) as usize; // includes k = 0
+            let n = 1 + rng.next_below(48) as usize;
+            let threads = 1 + rng.next_below(4) as usize;
+            let a = rand_mat(m, k, rng);
+            let b = rand_mat(k, n, rng);
+            let want = matmul_naive(&a, &b);
+            let mut c = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut c, threads);
+            assert_close(c.data(), want.data(), 1e-12);
+        });
+    }
+
+    #[test]
+    fn property_strided_forms_match_materialized() {
+        prop(32, 10, |rng| {
+            let d = 1 + rng.next_below(40) as usize;
+            let n1 = 1 + rng.next_below(30) as usize;
+            let n2 = 1 + rng.next_below(30) as usize;
+            let threads = 1 + rng.next_below(3) as usize;
+            let a = rand_mat(d, n1, rng);
+            let b = rand_mat(d, n2, rng);
+            // Aᵀ·B via strided packing vs materialized transpose.
+            let mut c1 = Mat::zeros(n1, n2);
+            t_matmul_into(&a, &b, &mut c1, threads);
+            let want1 = ref_matmul(&a.transpose(), &b);
+            assert_close(c1.data(), want1.data(), 1e-12);
+            // A·Bᵀ (shared inner dim is the column count).
+            let p = rand_mat(n1, d, rng);
+            let q = rand_mat(n2, d, rng);
+            let mut c2 = Mat::zeros(n1, n2);
+            matmul_t_into(&p, &q, &mut c2, threads);
+            let want2 = ref_matmul(&p, &q.transpose());
+            assert_close(c2.data(), want2.data(), 1e-12);
+        });
+    }
+
+    #[test]
+    fn transpose_blocked_matches_definition() {
+        prop(33, 10, |rng| {
+            let m = 1 + rng.next_below(70) as usize;
+            let n = 1 + rng.next_below(70) as usize;
+            let a = rand_mat(m, n, rng);
+            let mut t = Mat::zeros(n, m);
+            transpose_into(&a, &mut t);
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(t[(j, i)], a[(i, j)]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gemv_threaded_matches_sequential() {
+        prop(34, 8, |rng| {
+            let rows = 1 + rng.next_below(90) as usize;
+            let cols = 1 + rng.next_below(90) as usize;
+            let a = rand_mat(rows, cols, rng);
+            let x: Vec<f64> = (0..cols).map(|_| rng.next_gaussian()).collect();
+            let mut y1 = vec![0.0; rows];
+            gemv(a.data(), rows, cols, &x, &mut y1, 1);
+            for threads in [2, 4] {
+                let mut y2 = vec![0.0; rows];
+                gemv(a.data(), rows, cols, &x, &mut y2, threads);
+                assert_eq!(y1, y2, "gemv thread count changed bits");
+            }
+        });
+    }
+
+    #[test]
+    fn dot_unrolled_matches_fold() {
+        let mut rng = Pcg64::new(35);
+        for len in [0usize, 1, 3, 4, 5, 63, 64, 100] {
+            let a: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot_unrolled(&a, &b);
+            assert!((got - want).abs() <= 1e-12 * (1.0 + want.abs()), "{got} vs {want}");
+        }
+    }
+}

@@ -1,15 +1,17 @@
 //! From-scratch f64 linear algebra substrate.
 //!
 //! The image ships no BLAS/LAPACK and no linear-algebra crates, so everything
-//! SMP-PCA needs is implemented here: a row-major dense matrix with a
-//! cache-blocked GEMM, Householder QR, one-sided Jacobi SVD (plus a
-//! randomized subspace-iteration truncated SVD for large operators),
+//! SMP-PCA needs is implemented here: a row-major dense matrix whose products
+//! route through the packed, cache-blocked, register-tiled (and optionally
+//! multithreaded) GEMM in [`gemm`], Householder QR, one-sided Jacobi SVD
+//! (plus a randomized subspace-iteration truncated SVD for large operators),
 //! SPD Cholesky for the r×r ALS normal equations, a CSR sparse matrix, and
 //! the fast Walsh–Hadamard transform backing the SRHT sketch.
 
 pub mod cholesky;
 pub mod dense;
 pub mod fwht;
+pub mod gemm;
 pub mod ops;
 pub mod qr;
 pub mod sparse;
@@ -17,13 +19,21 @@ pub mod svd;
 
 pub use cholesky::Cholesky;
 pub use dense::Mat;
+pub use gemm::{matmul_naive, max_threads, resolve_threads};
 pub use qr::{qr_thin, QrThin};
 pub use sparse::{Coo, Csr};
 pub use svd::{svd_jacobi, truncated_svd, Svd};
 
 /// Spectral norm ‖A‖₂ via power iteration on AᵀA (never forms AᵀA).
 pub fn spectral_norm(a: &Mat, iters: usize, seed: u64) -> f64 {
-    ops::spectral_norm_op(&|x, y| a.gemv_into(x, y), &|x, y| a.gemv_t_into(x, y), a.rows(), a.cols(), iters, seed)
+    ops::spectral_norm_op(
+        &|x, y| a.gemv_into(x, y),
+        &|x, y| a.gemv_t_into(x, y),
+        a.rows(),
+        a.cols(),
+        iters,
+        seed,
+    )
 }
 
 /// Frobenius norm.

@@ -101,14 +101,13 @@ pub fn normalize(x: &mut [f64]) {
     }
 }
 
+/// Unrolled dot product (shared with the GEMM microkernel family). The
+/// dense-operator power iterations above inherit parallelism through
+/// [`super::Mat::gemv_into`], which row-shards large operators.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        acc += x * y;
-    }
-    acc
+    super::gemm::dot_unrolled(a, b)
 }
 
 /// Principal-angle distance between the column spaces of two orthonormal

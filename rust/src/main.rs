@@ -73,18 +73,30 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let samples = args.get_parse("samples", 0.0f64)?;
     let iters = args.get_parse("iters", 10usize)?;
     let workers = args.get_parse("workers", 2usize)?;
+    let threads = args.get_parse("threads", 0usize)?;
     let seed = args.get_parse("seed", 1u64)?;
     let sketch: SketchKind = args
         .get("sketch")
         .unwrap_or("gaussian")
         .parse()
         .map_err(|e: String| anyhow::anyhow!(e))?;
-    let algo =
-        SmpPcaConfig { rank, sketch_size: k, samples, iters, sketch, seed, plain_estimator: false };
+    let algo = SmpPcaConfig {
+        rank,
+        sketch_size: k,
+        samples,
+        iters,
+        sketch,
+        seed,
+        plain_estimator: false,
+        threads,
+    };
     let cfg = PipelineConfig { algo, workers, channel_capacity: 8192 };
 
     let engine: Box<dyn TileEngine> = match args.get("engine").unwrap_or("native") {
         "native" => native_engine(),
+        "native-tiled" => {
+            Box::new(smppca::runtime::TiledNativeEngine { threads, tile: 64 })
+        }
         "xla" => {
             let dir = artifact_dir();
             anyhow::ensure!(

@@ -1,8 +1,12 @@
-//! The tile-engine contract shared by the native and PJRT/XLA backends.
+//! The tile-engine contract shared by the native and PJRT/XLA backends,
+//! plus the tile-level worker pool that parallelizes the leader finish.
 
-use crate::linalg::Mat;
+use crate::linalg::{gemm, Mat};
 use crate::sampling::SampleSet;
 use crate::sketch::Summary;
+
+/// Minimum samples per worker before the parallel estimate path engages.
+const EST_PAR_GRAIN: usize = 8192;
 
 /// A backend that can evaluate rescaled-JL gram tiles (paper Eq. 2).
 ///
@@ -10,7 +14,11 @@ use crate::sketch::Summary;
 /// `|is| × |js|` block `M̃[is, js]`. Implementations must treat columns
 /// whose *sketched* norm is zero as producing zeros.
 /// (Engines are leader-thread-only — the sketch workers never touch them —
-/// so no `Send` bound: the PJRT client wraps non-`Send` `Rc` internals.)
+/// so no `Send` bound: the PJRT client wraps non-`Send` `Rc` internals,
+/// which is why the default `estimate` walks the tile cover sequentially.
+/// Engines whose tile function IS thread-safe get parallelism through
+/// [`estimate_tiles_parallel`] — see [`TiledNativeEngine`] — or the
+/// sample-sharded [`ParNativeEngine`].)
 pub trait TileEngine {
     fn name(&self) -> &'static str;
 
@@ -21,41 +29,11 @@ pub trait TileEngine {
     /// index set with gram tiles and gather — how the fixed-shape XLA
     /// artifact is driven. Backends with a cheaper direct path override.
     fn estimate(&self, sa: &Summary, sb: &Summary, omega: &SampleSet) -> Vec<f64> {
-        let tile = self.preferred_tile();
-        // Unique sampled rows/cols, tiled in sorted order.
-        let mut is: Vec<usize> = omega.entries.iter().map(|e| e.0).collect();
-        let mut js: Vec<usize> = omega.entries.iter().map(|e| e.1).collect();
-        is.sort_unstable();
-        is.dedup();
-        js.sort_unstable();
-        js.dedup();
-        let mut i_pos = vec![usize::MAX; sa.n()];
-        for (p, &i) in is.iter().enumerate() {
-            i_pos[i] = p;
-        }
-        let mut j_pos = vec![usize::MAX; sb.n()];
-        for (p, &j) in js.iter().enumerate() {
-            j_pos[j] = p;
-        }
-        // Bucket samples into tile blocks so each tile is computed once and
-        // only if it contains samples.
-        let jt_count = js.len().div_ceil(tile);
-        let mut buckets: std::collections::HashMap<(usize, usize), Vec<usize>> =
-            std::collections::HashMap::new();
-        for (t, &(i, j)) in omega.entries.iter().enumerate() {
-            let key = (i_pos[i] / tile, j_pos[j] / tile);
-            debug_assert!(key.1 < jt_count);
-            buckets.entry(key).or_default().push(t);
-        }
+        let cover = TileCover::plan(sa.n(), sb.n(), omega, self.preferred_tile());
         let mut out = vec![0.0; omega.entries.len()];
-        for (&(ti, tj), sample_ids) in &buckets {
-            let i_block = &is[ti * tile..((ti + 1) * tile).min(is.len())];
-            let j_block = &js[tj * tile..((tj + 1) * tile).min(js.len())];
-            let g = self.rescaled_gram_tile(sa, sb, i_block, j_block);
-            for &t in sample_ids {
-                let (i, j) = omega.entries[t];
-                out[t] = g[(i_pos[i] - ti * tile, j_pos[j] - tj * tile)];
-            }
+        for ((ti, tj), sample_ids) in &cover.buckets {
+            let g = self.rescaled_gram_tile(sa, sb, cover.i_block(*ti), cover.j_block(*tj));
+            cover.scatter(*ti, *tj, &g, sample_ids, omega, &mut out);
         }
         out
     }
@@ -66,7 +44,180 @@ pub trait TileEngine {
     }
 }
 
+/// Precomputed tile cover of a sample set: unique sampled rows/columns in
+/// sorted order, and for each `tile × tile` block that contains samples,
+/// the list of sample indices it resolves. Tiles are mutually independent —
+/// exactly the unit of work the parallel pool shards.
+pub struct TileCover {
+    /// Unique sampled row ids, sorted.
+    pub is: Vec<usize>,
+    /// Unique sampled column ids, sorted.
+    pub js: Vec<usize>,
+    i_pos: Vec<usize>,
+    j_pos: Vec<usize>,
+    pub tile: usize,
+    /// `((tile_i, tile_j), sample ids)` in deterministic (sorted) order.
+    pub buckets: Vec<((usize, usize), Vec<usize>)>,
+}
+
+impl TileCover {
+    pub fn plan(n1: usize, n2: usize, omega: &SampleSet, tile: usize) -> Self {
+        assert!(tile >= 1, "tile edge must be positive");
+        let mut is: Vec<usize> = omega.entries.iter().map(|e| e.0).collect();
+        let mut js: Vec<usize> = omega.entries.iter().map(|e| e.1).collect();
+        is.sort_unstable();
+        is.dedup();
+        js.sort_unstable();
+        js.dedup();
+        let mut i_pos = vec![usize::MAX; n1];
+        for (p, &i) in is.iter().enumerate() {
+            i_pos[i] = p;
+        }
+        let mut j_pos = vec![usize::MAX; n2];
+        for (p, &j) in js.iter().enumerate() {
+            j_pos[j] = p;
+        }
+        let mut map: std::collections::HashMap<(usize, usize), Vec<usize>> =
+            std::collections::HashMap::new();
+        for (t, &(i, j)) in omega.entries.iter().enumerate() {
+            map.entry((i_pos[i] / tile, j_pos[j] / tile)).or_default().push(t);
+        }
+        let mut buckets: Vec<((usize, usize), Vec<usize>)> = map.into_iter().collect();
+        buckets.sort_unstable_by_key(|(key, _)| *key);
+        Self { is, js, i_pos, j_pos, tile, buckets }
+    }
+
+    /// Row ids of tile row-band `ti`.
+    pub fn i_block(&self, ti: usize) -> &[usize] {
+        &self.is[ti * self.tile..((ti + 1) * self.tile).min(self.is.len())]
+    }
+
+    /// Column ids of tile column-band `tj`.
+    pub fn j_block(&self, tj: usize) -> &[usize] {
+        &self.js[tj * self.tile..((tj + 1) * self.tile).min(self.js.len())]
+    }
+
+    /// Position of global `(i, j)` inside tile `(ti, tj)`.
+    #[inline]
+    pub fn local(&self, ti: usize, tj: usize, i: usize, j: usize) -> (usize, usize) {
+        (self.i_pos[i] - ti * self.tile, self.j_pos[j] - tj * self.tile)
+    }
+
+    /// Copy the sampled entries of a computed tile into the output vector.
+    pub fn scatter(
+        &self,
+        ti: usize,
+        tj: usize,
+        g: &Mat,
+        sample_ids: &[usize],
+        omega: &SampleSet,
+        out: &mut [f64],
+    ) {
+        for &t in sample_ids {
+            let (i, j) = omega.entries[t];
+            let (p, q) = self.local(ti, tj, i, j);
+            out[t] = g[(p, q)];
+        }
+    }
+}
+
+/// Evaluate every covered gram tile of `omega` with a pool of `threads`
+/// scoped workers (`0` = auto), striding buckets across workers for load
+/// balance. `tile_fn` must be a pure function of its inputs; each tile is
+/// computed by exactly one worker, so the result is identical to the
+/// sequential cover regardless of thread count.
+pub fn estimate_tiles_parallel<F>(
+    sa: &Summary,
+    sb: &Summary,
+    omega: &SampleSet,
+    tile: usize,
+    threads: usize,
+    tile_fn: F,
+) -> Vec<f64>
+where
+    F: Fn(&Summary, &Summary, &[usize], &[usize]) -> Mat + Sync,
+{
+    let cover = TileCover::plan(sa.n(), sb.n(), omega, tile);
+    let mut out = vec![0.0; omega.entries.len()];
+    let nthreads = gemm::resolve_threads(threads).min(cover.buckets.len().max(1));
+    if nthreads <= 1 {
+        for ((ti, tj), sample_ids) in &cover.buckets {
+            let g = tile_fn(sa, sb, cover.i_block(*ti), cover.j_block(*tj));
+            cover.scatter(*ti, *tj, &g, sample_ids, omega, &mut out);
+        }
+        return out;
+    }
+    std::thread::scope(|s| {
+        let cover = &cover;
+        let tile_fn = &tile_fn;
+        let mut handles = Vec::with_capacity(nthreads);
+        for w in 0..nthreads {
+            handles.push(s.spawn(move || {
+                let mut local: Vec<(usize, f64)> = Vec::new();
+                let mut bi = w;
+                while bi < cover.buckets.len() {
+                    let ((ti, tj), sample_ids) = &cover.buckets[bi];
+                    let g = tile_fn(sa, sb, cover.i_block(*ti), cover.j_block(*tj));
+                    for &t in sample_ids {
+                        let (i, j) = omega.entries[t];
+                        let (p, q) = cover.local(*ti, *tj, i, j);
+                        local.push((t, g[(p, q)]));
+                    }
+                    bi += nthreads;
+                }
+                local
+            }));
+        }
+        for h in handles {
+            for (t, v) in h.join().expect("gram-tile worker panicked") {
+                out[t] = v;
+            }
+        }
+    });
+    out
+}
+
+/// The native rescaled gram tile: gather the selected sketch columns and
+/// push the `|is| × k × |js|` product through the packed GEMM, then apply
+/// the `D_A · G · D_B` rescale of Eq. (2). Pure function — shared by both
+/// native engines and safe to call from tile-pool workers.
+pub fn native_gram_tile(sa: &Summary, sb: &Summary, is: &[usize], js: &[usize]) -> Mat {
+    let k = sa.k();
+    let asub = Mat::from_fn(k, is.len(), |row, p| sa.sketch[(row, is[p])]);
+    let bsub = Mat::from_fn(k, js.len(), |row, q| sb.sketch[(row, js[q])]);
+    let mut g = asub.t_matmul(&bsub);
+    let da: Vec<f64> = is
+        .iter()
+        .map(|&i| {
+            let sn = sa.sketch.col_norm(i);
+            if sn > 0.0 {
+                sa.col_norms[i] / sn
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let db: Vec<f64> = js
+        .iter()
+        .map(|&j| {
+            let sn = sb.sketch.col_norm(j);
+            if sn > 0.0 {
+                sb.col_norms[j] / sn
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    for p in 0..is.len() {
+        for q in 0..js.len() {
+            g[(p, q)] *= da[p] * db[q];
+        }
+    }
+    g
+}
+
 /// Pure-rust engine: direct per-sample estimation, no tiling needed.
+/// Single-threaded reference — see [`ParNativeEngine`] for the pool.
 pub struct NativeEngine;
 
 impl TileEngine for NativeEngine {
@@ -75,41 +226,7 @@ impl TileEngine for NativeEngine {
     }
 
     fn rescaled_gram_tile(&self, sa: &Summary, sb: &Summary, is: &[usize], js: &[usize]) -> Mat {
-        let k = sa.k();
-        let mut out = Mat::zeros(is.len(), js.len());
-        // Precompute per-column rescale factors.
-        let da: Vec<f64> = is
-            .iter()
-            .map(|&i| {
-                let sn = sa.sketch.col_norm(i);
-                if sn > 0.0 {
-                    sa.col_norms[i] / sn
-                } else {
-                    0.0
-                }
-            })
-            .collect();
-        let db: Vec<f64> = js
-            .iter()
-            .map(|&j| {
-                let sn = sb.sketch.col_norm(j);
-                if sn > 0.0 {
-                    sb.col_norms[j] / sn
-                } else {
-                    0.0
-                }
-            })
-            .collect();
-        for (p, &i) in is.iter().enumerate() {
-            for (q, &j) in js.iter().enumerate() {
-                let mut acc = 0.0;
-                for row in 0..k {
-                    acc += sa.sketch[(row, i)] * sb.sketch[(row, j)];
-                }
-                out[(p, q)] = da[p] * acc * db[q];
-            }
-        }
-        out
+        native_gram_tile(sa, sb, is, js)
     }
 
     fn estimate(&self, sa: &Summary, sb: &Summary, omega: &SampleSet) -> Vec<f64> {
@@ -117,9 +234,90 @@ impl TileEngine for NativeEngine {
     }
 }
 
-/// Boxed native engine (the default for pipelines).
+/// Native engine with a sample-sharded worker pool for `estimate` (each
+/// worker runs the direct per-sample path on a disjoint slice of Ω, so the
+/// output is bitwise identical to [`NativeEngine`] at any thread count).
+/// `threads = 0` means auto ([`crate::linalg::max_threads`]) with a
+/// size-based grain; an explicit count is honored as given.
+pub struct ParNativeEngine {
+    pub threads: usize,
+}
+
+impl TileEngine for ParNativeEngine {
+    fn name(&self) -> &'static str {
+        "native-par"
+    }
+
+    fn rescaled_gram_tile(&self, sa: &Summary, sb: &Summary, is: &[usize], js: &[usize]) -> Mat {
+        native_gram_tile(sa, sb, is, js)
+    }
+
+    fn estimate(&self, sa: &Summary, sb: &Summary, omega: &SampleSet) -> Vec<f64> {
+        let m = omega.entries.len();
+        let auto = if self.threads == 0 {
+            gemm::max_threads().min(m / EST_PAR_GRAIN + 1)
+        } else {
+            self.threads
+        };
+        let t = auto.min(m.max(1));
+        if t <= 1 {
+            return crate::estimate::estimate_samples(sa, sb, omega);
+        }
+        let chunk = m.div_ceil(t);
+        let mut out = vec![0.0; m];
+        std::thread::scope(|s| {
+            for (w, piece) in out.chunks_mut(chunk).enumerate() {
+                let lo = w * chunk;
+                let hi = lo + piece.len();
+                s.spawn(move || {
+                    // `estimate_samples` only reads `entries`; the probs are
+                    // not needed to evaluate Eq. (2).
+                    let sub = SampleSet {
+                        entries: omega.entries[lo..hi].to_vec(),
+                        probs: Vec::new(),
+                    };
+                    piece.copy_from_slice(&crate::estimate::estimate_samples(sa, sb, &sub));
+                });
+            }
+        });
+        out
+    }
+}
+
+/// Native engine that estimates exclusively through the tile-cover worker
+/// pool ([`estimate_tiles_parallel`] + [`native_gram_tile`]) — every gram
+/// tile goes through the packed GEMM, independent tiles run concurrently.
+/// Faster than the direct path when Ω densely covers its tiles (each tile
+/// amortizes the strided sketch-column gather over all its samples);
+/// selectable as `--engine native-tiled`. Values agree with the direct
+/// path to fp-rounding (not bitwise — different reduction order).
+pub struct TiledNativeEngine {
+    pub threads: usize,
+    pub tile: usize,
+}
+
+impl TileEngine for TiledNativeEngine {
+    fn name(&self) -> &'static str {
+        "native-tiled"
+    }
+
+    fn preferred_tile(&self) -> usize {
+        self.tile
+    }
+
+    fn rescaled_gram_tile(&self, sa: &Summary, sb: &Summary, is: &[usize], js: &[usize]) -> Mat {
+        native_gram_tile(sa, sb, is, js)
+    }
+
+    fn estimate(&self, sa: &Summary, sb: &Summary, omega: &SampleSet) -> Vec<f64> {
+        estimate_tiles_parallel(sa, sb, omega, self.tile.max(1), self.threads, native_gram_tile)
+    }
+}
+
+/// Boxed engine for pipelines: the parallel native engine with auto worker
+/// count (identical output to the sequential reference).
 pub fn native_engine() -> Box<dyn TileEngine> {
-    Box::new(NativeEngine)
+    Box::new(ParNativeEngine { threads: 0 })
 }
 
 #[cfg(test)]
@@ -137,6 +335,20 @@ mod tests {
             SketchState::sketch_matrix(SketchKind::Gaussian, 1, 12, &a),
             SketchState::sketch_matrix(SketchKind::Gaussian, 1, 12, &b),
         )
+    }
+
+    fn random_omega(n1: usize, n2: usize, keep: f64, seed: u64) -> SampleSet {
+        let mut omega = SampleSet::default();
+        let mut rng = Pcg64::new(seed);
+        for i in 0..n1 {
+            for j in 0..n2 {
+                if rng.next_f64() < keep {
+                    omega.entries.push((i, j));
+                    omega.probs.push(keep);
+                }
+            }
+        }
+        omega
     }
 
     #[test]
@@ -176,18 +388,65 @@ mod tests {
             }
         }
         let (sa, sb) = fixtures(23, 17);
-        let mut omega = crate::sampling::SampleSet::default();
-        let mut rng = Pcg64::new(9);
-        for i in 0..23 {
-            for j in 0..17 {
-                if rng.next_f64() < 0.3 {
-                    omega.entries.push((i, j));
-                    omega.probs.push(0.3);
-                }
-            }
-        }
+        let omega = random_omega(23, 17, 0.3, 9);
         let direct = NativeEngine.estimate(&sa, &sb, &omega);
         let tiled = TilingOnly.estimate(&sa, &sb, &omega);
         crate::testing::assert_close(&tiled, &direct, 1e-10);
+    }
+
+    #[test]
+    fn parallel_tile_pool_matches_sequential_cover() {
+        let (sa, sb) = fixtures(23, 17);
+        let omega = random_omega(23, 17, 0.4, 11);
+        let seq = estimate_tiles_parallel(&sa, &sb, &omega, 4, 1, native_gram_tile);
+        let direct = NativeEngine.estimate(&sa, &sb, &omega);
+        crate::testing::assert_close(&seq, &direct, 1e-10);
+        for threads in [2, 3, 4] {
+            let par = estimate_tiles_parallel(&sa, &sb, &omega, 4, threads, native_gram_tile);
+            assert_eq!(par, seq, "tile pool thread count changed results");
+        }
+    }
+
+    #[test]
+    fn par_native_engine_bitwise_matches_reference() {
+        let (sa, sb) = fixtures(40, 31);
+        let omega = random_omega(40, 31, 0.5, 13);
+        let reference = NativeEngine.estimate(&sa, &sb, &omega);
+        for threads in [1, 2, 5] {
+            let par = ParNativeEngine { threads }.estimate(&sa, &sb, &omega);
+            assert_eq!(par, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tiled_native_engine_matches_direct_to_rounding() {
+        let (sa, sb) = fixtures(23, 17);
+        let omega = random_omega(23, 17, 0.4, 19);
+        let direct = NativeEngine.estimate(&sa, &sb, &omega);
+        let seq = TiledNativeEngine { threads: 1, tile: 4 }.estimate(&sa, &sb, &omega);
+        crate::testing::assert_close(&seq, &direct, 1e-10);
+        for threads in [2, 3] {
+            let par = TiledNativeEngine { threads, tile: 4 }.estimate(&sa, &sb, &omega);
+            assert_eq!(par, seq, "tiled engine thread count changed results");
+        }
+    }
+
+    #[test]
+    fn tile_cover_is_deterministic_and_complete() {
+        let omega = random_omega(50, 60, 0.2, 17);
+        let cover = TileCover::plan(50, 60, &omega, 8);
+        // Every sample appears exactly once across buckets.
+        let mut seen = vec![0usize; omega.entries.len()];
+        for (_, ids) in &cover.buckets {
+            for &t in ids {
+                seen[t] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+        // Buckets sorted.
+        let keys: Vec<_> = cover.buckets.iter().map(|(k, _)| *k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
     }
 }

@@ -19,7 +19,10 @@
 pub mod engine;
 pub mod xla_engine;
 
-pub use engine::{native_engine, NativeEngine, TileEngine};
+pub use engine::{
+    estimate_tiles_parallel, native_engine, native_gram_tile, NativeEngine, ParNativeEngine,
+    TileCover, TileEngine, TiledNativeEngine,
+};
 pub use xla_engine::{artifacts_available, XlaEngine, K_ART, TILE};
 
 /// Default artifact directory (relative to the repo root / CWD).

@@ -11,12 +11,15 @@
 //! Shorter/narrower runtime tiles are zero-padded: zero sketch rows don't
 //! change dot products, and zero-norm pad columns produce exact zeros by
 //! the kernels' `where(sn > 0, …, 0)` guard.
+//!
+//! The engine is gated behind the `xla` cargo feature because the PJRT
+//! bindings crate is not present in the offline build image. Without the
+//! feature a stub with the identical API is compiled: `load` fails with a
+//! clear message, [`artifacts_available`] reports `false`, and the
+//! artifact-gated integration tests skip — `cargo test` on a fresh
+//! checkout must not fail.
 
-use super::engine::TileEngine;
-use crate::linalg::Mat;
-use crate::sketch::Summary;
 use std::path::Path;
-use std::sync::Mutex;
 
 /// Sketch-row capacity the artifacts are compiled for (pad k up to this).
 pub const K_ART: usize = 128;
@@ -25,117 +28,200 @@ pub const TILE: usize = 64;
 /// Ambient-chunk size of the `sketch_apply` artifact.
 pub const D_TILE: usize = 512;
 
-pub struct XlaEngine {
-    client: xla::PjRtClient,
-    rescaled_gram: Mutex<xla::PjRtLoadedExecutable>,
-    sketch_apply: Option<Mutex<xla::PjRtLoadedExecutable>>,
-}
-
-/// True if the artifact directory holds the HLO files the engine needs.
+/// True if the engine is compiled in AND the artifact directory holds the
+/// HLO files it needs.
 pub fn artifacts_available(dir: &Path) -> bool {
-    dir.join("rescaled_gram.hlo.txt").exists()
+    cfg!(feature = "xla") && dir.join("rescaled_gram.hlo.txt").exists()
 }
 
-impl XlaEngine {
-    /// Load + compile the artifacts from `dir`.
-    pub fn load(dir: &Path) -> anyhow::Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        let compile = |name: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        let rescaled_gram = Mutex::new(compile("rescaled_gram.hlo.txt")?);
-        let sketch_apply = match compile("sketch_apply.hlo.txt") {
-            Ok(e) => Some(Mutex::new(e)),
-            Err(_) => None,
-        };
-        Ok(Self { client, rescaled_gram, sketch_apply })
+#[cfg(feature = "xla")]
+mod real {
+    use super::{D_TILE, K_ART, TILE};
+    use crate::linalg::Mat;
+    use crate::runtime::engine::TileEngine;
+    use crate::sketch::Summary;
+    use std::path::Path;
+    use std::sync::Mutex;
+
+    pub struct XlaEngine {
+        client: xla::PjRtClient,
+        rescaled_gram: Mutex<xla::PjRtLoadedExecutable>,
+        sketch_apply: Option<Mutex<xla::PjRtLoadedExecutable>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl XlaEngine {
+        /// Load + compile the artifacts from `dir`.
+        pub fn load(dir: &Path) -> anyhow::Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            let compile = |name: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(name);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                Ok(client.compile(&comp)?)
+            };
+            let rescaled_gram = Mutex::new(compile("rescaled_gram.hlo.txt")?);
+            let sketch_apply = match compile("sketch_apply.hlo.txt") {
+                Ok(e) => Some(Mutex::new(e)),
+                Err(_) => None,
+            };
+            Ok(Self { client, rescaled_gram, sketch_apply })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Execute the `sketch_apply` artifact: `Π_pad · X_pad` over one
+        /// (D_TILE × TILE) chunk. Inputs are padded/truncated by the caller
+        /// to the compiled shapes.
+        pub fn sketch_apply_tile(&self, pi: &[f32], x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            let exe = self
+                .sketch_apply
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("sketch_apply artifact not loaded"))?;
+            anyhow::ensure!(pi.len() == K_ART * D_TILE, "Π tile must be {K_ART}x{D_TILE}");
+            anyhow::ensure!(x.len() == D_TILE * TILE, "X tile must be {D_TILE}x{TILE}");
+            let lp = xla::Literal::vec1(pi).reshape(&[K_ART as i64, D_TILE as i64])?;
+            let lx = xla::Literal::vec1(x).reshape(&[D_TILE as i64, TILE as i64])?;
+            let exe = exe.lock().unwrap();
+            let result = exe.execute::<xla::Literal>(&[lp, lx])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        fn run_gram(
+            &self,
+            a: &[f32],
+            b: &[f32],
+            na: &[f32],
+            nb: &[f32],
+        ) -> anyhow::Result<Vec<f32>> {
+            let la = xla::Literal::vec1(a).reshape(&[K_ART as i64, TILE as i64])?;
+            let lb = xla::Literal::vec1(b).reshape(&[K_ART as i64, TILE as i64])?;
+            let lna = xla::Literal::vec1(na);
+            let lnb = xla::Literal::vec1(nb);
+            let exe = self.rescaled_gram.lock().unwrap();
+            let result = exe.execute::<xla::Literal>(&[la, lb, lna, lnb])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
     }
 
-    /// Execute the `sketch_apply` artifact: `Π_pad · X_pad` over one
-    /// (D_TILE × TILE) chunk. Inputs are padded/truncated by the caller to
-    /// the compiled shapes.
-    pub fn sketch_apply_tile(&self, pi: &[f32], x: &[f32]) -> anyhow::Result<Vec<f32>> {
-        let exe = self
-            .sketch_apply
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("sketch_apply artifact not loaded"))?;
-        anyhow::ensure!(pi.len() == K_ART * D_TILE, "Π tile must be {K_ART}x{D_TILE}");
-        anyhow::ensure!(x.len() == D_TILE * TILE, "X tile must be {D_TILE}x{TILE}");
-        let lp = xla::Literal::vec1(pi).reshape(&[K_ART as i64, D_TILE as i64])?;
-        let lx = xla::Literal::vec1(x).reshape(&[D_TILE as i64, TILE as i64])?;
-        let exe = exe.lock().unwrap();
-        let result = exe.execute::<xla::Literal>(&[lp, lx])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
+    impl TileEngine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla-pjrt"
+        }
 
-    fn run_gram(&self, a: &[f32], b: &[f32], na: &[f32], nb: &[f32]) -> anyhow::Result<Vec<f32>> {
-        let la = xla::Literal::vec1(a).reshape(&[K_ART as i64, TILE as i64])?;
-        let lb = xla::Literal::vec1(b).reshape(&[K_ART as i64, TILE as i64])?;
-        let lna = xla::Literal::vec1(na);
-        let lnb = xla::Literal::vec1(nb);
-        let exe = self.rescaled_gram.lock().unwrap();
-        let result = exe.execute::<xla::Literal>(&[la, lb, lna, lnb])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        fn preferred_tile(&self) -> usize {
+            TILE
+        }
+
+        fn rescaled_gram_tile(
+            &self,
+            sa: &Summary,
+            sb: &Summary,
+            is: &[usize],
+            js: &[usize],
+        ) -> Mat {
+            let k = sa.k();
+            assert!(
+                k <= K_ART,
+                "sketch size k={k} exceeds artifact capacity K_ART={K_ART}; \
+                 recompile artifacts or use the native engine"
+            );
+            assert!(is.len() <= TILE && js.len() <= TILE, "tile too large for artifact");
+            // Pack column-major-by-tile: a[K_ART][TILE] row-major, zero-padded.
+            let mut a = vec![0f32; K_ART * TILE];
+            let mut b = vec![0f32; K_ART * TILE];
+            let mut na = vec![0f32; TILE];
+            let mut nb = vec![0f32; TILE];
+            for (p, &i) in is.iter().enumerate() {
+                for row in 0..k {
+                    a[row * TILE + p] = sa.sketch[(row, i)] as f32;
+                }
+                na[p] = sa.col_norms[i] as f32;
+            }
+            for (q, &j) in js.iter().enumerate() {
+                for row in 0..k {
+                    b[row * TILE + q] = sb.sketch[(row, j)] as f32;
+                }
+                nb[q] = sb.col_norms[j] as f32;
+            }
+            let flat = self
+                .run_gram(&a, &b, &na, &nb)
+                .expect("PJRT execution failed on rescaled_gram artifact");
+            let mut out = Mat::zeros(is.len(), js.len());
+            for p in 0..is.len() {
+                for q in 0..js.len() {
+                    out[(p, q)] = flat[p * TILE + q] as f64;
+                }
+            }
+            out
+        }
     }
 }
 
-impl TileEngine for XlaEngine {
-    fn name(&self) -> &'static str {
-        "xla-pjrt"
+#[cfg(feature = "xla")]
+pub use real::XlaEngine;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::TILE;
+    use crate::linalg::Mat;
+    use crate::runtime::engine::TileEngine;
+    use crate::sketch::Summary;
+    use std::path::Path;
+
+    /// API-compatible stand-in compiled when the `xla` feature is off.
+    /// Cannot be constructed: [`XlaEngine::load`] always errors, so the
+    /// `TileEngine` methods are unreachable by construction.
+    pub struct XlaEngine {
+        _uninhabited: std::convert::Infallible,
     }
 
-    fn preferred_tile(&self) -> usize {
-        TILE
+    impl XlaEngine {
+        pub fn load(_dir: &Path) -> anyhow::Result<Self> {
+            anyhow::bail!(
+                "smppca was built without the `xla` feature; rebuild with \
+                 `--features xla` (requires the PJRT bindings crate) to use \
+                 the XLA tile engine"
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            match self._uninhabited {}
+        }
+
+        pub fn sketch_apply_tile(&self, _pi: &[f32], _x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            match self._uninhabited {}
+        }
     }
 
-    fn rescaled_gram_tile(&self, sa: &Summary, sb: &Summary, is: &[usize], js: &[usize]) -> Mat {
-        let k = sa.k();
-        assert!(
-            k <= K_ART,
-            "sketch size k={k} exceeds artifact capacity K_ART={K_ART}; \
-             recompile artifacts or use the native engine"
-        );
-        assert!(is.len() <= TILE && js.len() <= TILE, "tile too large for artifact");
-        // Pack column-major-by-tile: a[K_ART][TILE] row-major, zero-padded.
-        let mut a = vec![0f32; K_ART * TILE];
-        let mut b = vec![0f32; K_ART * TILE];
-        let mut na = vec![0f32; TILE];
-        let mut nb = vec![0f32; TILE];
-        for (p, &i) in is.iter().enumerate() {
-            for row in 0..k {
-                a[row * TILE + p] = sa.sketch[(row, i)] as f32;
-            }
-            na[p] = sa.col_norms[i] as f32;
+    impl TileEngine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla-unavailable"
         }
-        for (q, &j) in js.iter().enumerate() {
-            for row in 0..k {
-                b[row * TILE + q] = sb.sketch[(row, j)] as f32;
-            }
-            nb[q] = sb.col_norms[j] as f32;
+
+        fn preferred_tile(&self) -> usize {
+            TILE
         }
-        let flat = self
-            .run_gram(&a, &b, &na, &nb)
-            .expect("PJRT execution failed on rescaled_gram artifact");
-        let mut out = Mat::zeros(is.len(), js.len());
-        for p in 0..is.len() {
-            for q in 0..js.len() {
-                out[(p, q)] = flat[p * TILE + q] as f64;
-            }
+
+        fn rescaled_gram_tile(
+            &self,
+            _sa: &Summary,
+            _sb: &Summary,
+            _is: &[usize],
+            _js: &[usize],
+        ) -> Mat {
+            match self._uninhabited {}
         }
-        out
     }
 }
+
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaEngine;
 
 #[cfg(test)]
 mod tests {
@@ -153,5 +239,12 @@ mod tests {
     #[test]
     fn availability_check_on_missing_dir() {
         assert!(!artifacts_available(Path::new("/nonexistent/dir")));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_load_fails_with_clear_message() {
+        let err = XlaEngine::load(Path::new(".")).err().expect("stub must not load");
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 }

@@ -1,0 +1,126 @@
+//! Vendored minimal stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this path dependency
+//! provides exactly the surface `smppca` uses: [`Error`], [`Result`], the
+//! [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and a blanket
+//! `From<E: std::error::Error>` so `?` works on io/parse errors. Errors are
+//! flattened to their display string at conversion time — good enough for a
+//! CLI + test suite; swap in the real crate by deleting this directory and
+//! adding `anyhow = "1"` if the registry is ever available.
+
+use std::fmt;
+
+/// String-backed error value. Like `anyhow::Error`, it deliberately does
+/// NOT implement `std::error::Error` — that is what keeps the blanket
+/// `From<E: std::error::Error>` impl coherent with `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("literal {with} captures")`, `anyhow!(displayable_value)`, or
+/// `anyhow!("format {}", args)`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!(...)` — early-return `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, ...)` — `bail!` unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/anywhere")?;
+        Ok(())
+    }
+
+    fn ensure_fail(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_io_error() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {} thing", 7);
+        assert_eq!(e.to_string(), "bad 7 thing");
+        let v = 3;
+        let e = anyhow!("captured {v}");
+        assert_eq!(e.to_string(), "captured 3");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn ensure_returns_err() {
+        assert!(ensure_fail(-1).is_err());
+        assert_eq!(ensure_fail(2).unwrap(), 2);
+    }
+}
