@@ -1,8 +1,11 @@
 //! Hot-path micro-benchmarks — the §Perf instrument panel:
 //! per-entry sketch ingest (all Π families, ordered vs shuffled), column
-//! batch path, gaussian column regeneration & cache, channel transport,
-//! sampling, estimation, packed/parallel GEMM vs the naive kernel,
-//! gram-tile worker-pool scaling, ALS solve, end-to-end leader finish.
+//! batch path, the sharded parallel-ingest pipeline vs worker count and the
+//! batched column-block kernels (`sketch_ingest/parallel/*`,
+//! `sketch_ingest/column_block/*`), gaussian column regeneration & cache,
+//! channel transport, sampling, estimation, packed/parallel GEMM vs the
+//! naive kernel, gram-tile worker-pool scaling, ALS solve, end-to-end
+//! leader finish.
 //!
 //! ```bash
 //! cargo bench --bench hotpaths            # human-readable table
@@ -64,6 +67,73 @@ fn main() {
                 black_box(st.entries_seen());
             },
         );
+    }
+
+    // ------------------------------------- parallel ingest subsystem
+    // The sharded single pass end to end (router → bounded channels →
+    // grouped batch kernels → tree merge) vs worker count, per sketch
+    // kind, and the batched column-block kernels vs the per-entry column
+    // oracle above. Stream materialization (shuffle) is included — it is
+    // part of the pass being modeled.
+    {
+        use smppca::sketch::ingest::{ingest_entries, ingest_matrices, IngestConfig};
+        use smppca::stream::ShuffledMatrixSource;
+        let mut r = Pcg64::new(21);
+        let di = 1024usize;
+        let ni = 96usize;
+        let ai = Mat::gaussian(di, ni, &mut r);
+        let bi = Mat::gaussian(di, ni, &mut r);
+        let total = (2 * di * ni) as u64;
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            for w in [1usize, 2, 4] {
+                let cfg = IngestConfig { workers: w, ..Default::default() };
+                suite.bench_items(
+                    &format!("sketch_ingest/parallel/{kind:?}/w{w}"),
+                    total,
+                    || {
+                        let src = Box::new(ShuffledMatrixSource {
+                            a: ai.clone(),
+                            b: bi.clone(),
+                            seed: 9,
+                        });
+                        let run = ingest_entries(src, kind, 7, k, &cfg).unwrap();
+                        black_box(run.stats.entries_sketched);
+                    },
+                );
+            }
+        }
+        // Kernel-only group: drive ingest_dense directly (no clones, no
+        // channels) so the EXPERIMENTS.md comparison against
+        // `sketch_column_batch/*` isolates the batched GEMM/FWHT/scatter
+        // kernels themselves.
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            suite.bench_items(
+                &format!("sketch_ingest/column_block/{kind:?}/k{k}"),
+                total,
+                || {
+                    let mut st_a = SketchState::new(kind, 7, k, di, ni);
+                    st_a.ingest_dense(&ai);
+                    let mut st_b = SketchState::new(kind, 7, k, di, ni);
+                    st_b.ingest_dense(&bi);
+                    black_box(st_a.entries_seen() + st_b.entries_seen());
+                },
+            );
+        }
+        // Full column-sharded pipeline (router + channels + update_cols).
+        for w in [1usize, 4] {
+            suite.bench_items(&format!("sketch_ingest/column_pipeline/w{w}"), total, || {
+                let run = ingest_matrices(
+                    &ai,
+                    &bi,
+                    SketchKind::Gaussian,
+                    7,
+                    k,
+                    &IngestConfig { workers: w, ..Default::default() },
+                )
+                .unwrap();
+                black_box(run.stats.entries_sketched);
+            });
+        }
     }
 
     // ------------------------------------------- gaussian column regen

@@ -104,7 +104,11 @@ RUN OPTIONS:
   --k K              sketch size (default 100)
   --samples M        expected |Ω| (default 4·n·r·ln n)
   --iters T          WAltMin iterations (default 10)
-  --workers W        sketch-pass worker threads (default 2)
+  --ingest-threads W sketch-pass (single pass) worker threads; 0 = auto
+                     (all cores, capped by the SMPPCA_THREADS env). When the
+                     flag is absent the --workers value applies (default 2).
+                     The sharded pass is bitwise identical to
+                     --ingest-threads 1 for every sketch kind.
   --threads T        leader-finish worker threads: GEMM, estimation, ALS
                      (default 0 = all cores; also SMPPCA_THREADS env)
   --sketch KIND      gaussian|srht|countsketch (default gaussian)
@@ -167,5 +171,16 @@ mod tests {
     fn trailing_flag() {
         let a = parse("run --baselines");
         assert!(a.flag("baselines"));
+    }
+
+    #[test]
+    fn ingest_threads_option_documented_and_parses() {
+        assert!(HELP.contains("--ingest-threads"), "HELP must document the ingest pool knob");
+        let a = parse("run --ingest-threads 8");
+        assert_eq!(a.get_parse("ingest-threads", 0usize).unwrap(), 8);
+        // absent ⇒ main.rs falls back to the --workers value (default 2);
+        // the option itself reports absence so the caller can tell
+        let b = parse("run");
+        assert!(b.get("ingest-threads").is_none());
     }
 }

@@ -5,14 +5,16 @@
 use crate::algo::{finish_from_summaries_engine, SmpPcaConfig, SmpPcaOutput};
 use crate::coordinator::metrics::{Metrics, StageTimer};
 use crate::runtime::TileEngine;
-use crate::sketch::{SketchState, Summary};
-use crate::stream::{bounded, shard_of, Entry, EntrySource, MatrixId};
-use std::thread;
+use crate::sketch::ingest::{self, IngestConfig};
+use crate::sketch::Summary;
+use crate::stream::{EntrySource, MatrixId};
 
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
     pub algo: SmpPcaConfig,
-    /// Worker threads for the sketch pass ("cluster size" in Fig 3a).
+    /// Worker threads for the sketch pass ("cluster size" in Fig 3a);
+    /// `0` = auto (all cores, capped by `SMPPCA_THREADS`). CLI:
+    /// `--ingest-threads`.
     pub workers: usize,
     /// Bounded channel capacity per worker (entries) — the backpressure
     /// window.
@@ -64,114 +66,35 @@ impl Pipeline {
     }
 
     /// The single pass: shard entries to workers, each folding its columns
-    /// into per-worker sketch states; tree-merge at the end.
+    /// into per-worker sketch states; tree-merge at the end. All the
+    /// machinery lives in [`crate::sketch::ingest`] — this wrapper only
+    /// translates config and stats (the ingest subsystem is deliberately
+    /// coordinator-agnostic so checkpoint/resume and the benches can drive
+    /// it directly).
     pub fn sketch_pass(
         &self,
         source: Box<dyn EntrySource>,
         metrics: &mut Metrics,
     ) -> anyhow::Result<(Summary, Summary)> {
-        let meta = source.meta();
-        let w = self.cfg.workers.max(1);
-        let k = self.cfg.algo.sketch_size;
-        let kind = self.cfg.algo.sketch;
-        let seed = self.cfg.algo.seed;
-        let t_pass = StageTimer::start();
-
-        // Entries travel in batches: per-entry channel sends would put a
-        // mutex round-trip on every record (the `channel/*` group in
-        // `benches/hotpaths.rs` measures the gap; numbers recorded in
-        // EXPERIMENTS.md §Perf); batching amortizes it to noise.
-        const BATCH: usize = 1024;
-        let mut senders = Vec::with_capacity(w);
-        let mut handles = Vec::with_capacity(w);
-        for _ in 0..w {
-            let (tx, rx) = bounded::<Vec<Entry>>(self.cfg.channel_capacity.div_ceil(BATCH).max(2));
-            senders.push(tx);
-            let handle = thread::spawn(move || {
-                let mut st_a = SketchState::new(kind, seed, k, meta.d, meta.n1);
-                let mut st_b = SketchState::new(kind, seed, k, meta.d, meta.n2);
-                let mut local = Metrics::new();
-                let t = StageTimer::start();
-                while let Ok(batch) = rx.recv() {
-                    for e in batch {
-                        match e.matrix {
-                            MatrixId::A => {
-                                st_a.update_entry(e.row as usize, e.col as usize, e.value)
-                            }
-                            MatrixId::B => {
-                                st_b.update_entry(e.row as usize, e.col as usize, e.value)
-                            }
-                        }
-                    }
-                }
-                local.record_stage("worker/sketch", t.stop());
-                local.add("worker/entries", st_a.entries_seen() + st_b.entries_seen());
-                (st_a, st_b, local)
-            });
-            handles.push(handle);
-        }
-
-        // Reader thread = the driver iterating the DISK_ONLY RDD.
-        {
-            let mut routed = 0u64;
-            let mut buffers: Vec<Vec<Entry>> = (0..w).map(|_| Vec::with_capacity(BATCH)).collect();
-            let mut route = |e: Entry| {
-                let shard = shard_of(e.matrix, e.col, w);
-                let buf = &mut buffers[shard];
-                buf.push(e);
-                if buf.len() >= BATCH {
-                    // A send error means a worker died; surface via panic
-                    // here (join below reports the real panic).
-                    if senders[shard].send(std::mem::replace(buf, Vec::with_capacity(BATCH))).is_err()
-                    {
-                        panic!("worker {shard} hung up mid-pass");
-                    }
-                }
-                routed += 1;
-            };
-            source.for_each(&mut route);
-            for (shard, buf) in buffers.into_iter().enumerate() {
-                if !buf.is_empty() && senders[shard].send(buf).is_err() {
-                    panic!("worker {shard} hung up at flush");
-                }
-            }
-            metrics.add("entries_routed", routed);
-        }
-        drop(senders); // close channels; workers drain and finish
-
-        // Collect + tree-merge (binary reduction, as treeAggregate does).
-        let mut states: Vec<(SketchState, SketchState)> = Vec::with_capacity(w);
-        for h in handles {
-            let (sa, sb, local) = h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
-            metrics.merge(&local);
-            states.push((sa, sb));
-        }
-        metrics.record_stage("pass/total", t_pass.stop());
-
-        let t_merge = StageTimer::start();
-        let (sa, sb) = tree_merge(states);
-        metrics.record_stage("merge", t_merge.stop());
-        Ok((sa.finalize(), sb.finalize()))
+        let icfg = IngestConfig {
+            workers: self.cfg.workers,
+            channel_capacity: self.cfg.channel_capacity,
+            ..Default::default()
+        };
+        let run = ingest::ingest_entries(
+            source,
+            self.cfg.algo.sketch,
+            self.cfg.algo.seed,
+            self.cfg.algo.sketch_size,
+            &icfg,
+        )?;
+        metrics.add("entries_routed", run.stats.entries_routed);
+        metrics.add("worker/entries", run.stats.entries_sketched);
+        metrics.record_stage("worker/sketch", run.stats.worker_busy);
+        metrics.record_stage("pass/total", run.stats.pass_time);
+        metrics.record_stage("merge", run.stats.merge_time);
+        Ok((run.a, run.b))
     }
-}
-
-/// Binary tree reduction of per-worker states (associative + commutative —
-/// property-tested in sketch::tests::merge_equals_single_stream).
-fn tree_merge(mut states: Vec<(SketchState, SketchState)>) -> (SketchState, SketchState) {
-    assert!(!states.is_empty());
-    while states.len() > 1 {
-        let mut next = Vec::with_capacity(states.len().div_ceil(2));
-        let mut iter = states.into_iter();
-        while let Some((mut a1, mut b1)) = iter.next() {
-            if let Some((a2, b2)) = iter.next() {
-                a1.merge(&a2);
-                b1.merge(&b2);
-            }
-            next.push((a1, b1));
-        }
-        states = next;
-    }
-    states.pop().unwrap()
 }
 
 /// Two-pass LELA pipeline over replayable sources — the runtime baseline of
@@ -361,6 +284,9 @@ mod tests {
 
     #[test]
     fn worker_count_does_not_change_result() {
+        // Bitwise: the sharded pass produces bit-identical summaries at any
+        // worker count (tests/sketch_props.rs), and the leader finish is
+        // deterministic given the summaries.
         let (a, b) = dataset();
         let algo = SmpPcaConfig { rank: 2, sketch_size: 16, seed: 13, ..Default::default() };
         let run_with = |workers: usize| {
@@ -372,7 +298,10 @@ mod tests {
                 .factors
         };
         let f1 = run_with(1);
-        let f3 = run_with(3);
-        crate::testing::assert_close(f1.u.data(), f3.u.data(), 1e-10);
+        for workers in [3usize, 8] {
+            let fw = run_with(workers);
+            assert_eq!(f1.u.data(), fw.u.data(), "workers={workers}");
+            assert_eq!(f1.v.data(), fw.v.data(), "workers={workers}");
+        }
     }
 }

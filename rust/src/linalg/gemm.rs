@@ -59,6 +59,15 @@ pub fn resolve_threads(requested: usize) -> usize {
     }
 }
 
+/// Size a scoped worker pool: resolve `requested` through the shared
+/// `SMPPCA_THREADS` / core-count policy, then never exceed the number of
+/// independent work `items`. Pools with a known item count (gram tiles)
+/// use this; pools without one (sketch-ingest shards, whose stream length
+/// is unknown up front) use [`resolve_threads`] directly.
+pub fn pool_size(requested: usize, items: usize) -> usize {
+    resolve_threads(requested).min(items.max(1))
+}
+
 /// `C = A_eff · B_eff` over strided views of row-major storage.
 ///
 /// `A_eff[i, l] = a[i·a_rs + l·a_cs]` (shape `m × k`),

@@ -72,7 +72,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let k = args.get_parse("k", 100usize)?;
     let samples = args.get_parse("samples", 0.0f64)?;
     let iters = args.get_parse("iters", 10usize)?;
-    let workers = args.get_parse("workers", 2usize)?;
+    // `--ingest-threads` sizes the sketch-pass pool (0 = auto, capped by
+    // SMPPCA_THREADS); `--workers` is the pre-ingest-subsystem alias.
+    let workers = match args.get("ingest-threads") {
+        Some(_) => args.get_parse("ingest-threads", 0usize)?,
+        None => args.get_parse("workers", 2usize)?,
+    };
     let threads = args.get_parse("threads", 0usize)?;
     let seed = args.get_parse("seed", 1u64)?;
     let sketch: SketchKind = args
@@ -125,7 +130,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     };
     let meta = source.meta();
     println!(
-        "running SMP-PCA: d={} n1={} n2={} r={rank} k={k} workers={workers} engine={engine_name}",
+        "running SMP-PCA: d={} n1={} n2={} r={rank} k={k} ingest-threads={workers} engine={engine_name}",
         meta.d, meta.n1, meta.n2
     );
     let pipe = Pipeline::with_engine(cfg, engine);

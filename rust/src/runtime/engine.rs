@@ -139,7 +139,7 @@ where
 {
     let cover = TileCover::plan(sa.n(), sb.n(), omega, tile);
     let mut out = vec![0.0; omega.entries.len()];
-    let nthreads = gemm::resolve_threads(threads).min(cover.buckets.len().max(1));
+    let nthreads = gemm::pool_size(threads, cover.buckets.len());
     if nthreads <= 1 {
         for ((ti, tj), sample_ids) in &cover.buckets {
             let g = tile_fn(sa, sb, cover.i_block(*ti), cover.j_block(*tj));

@@ -14,6 +14,25 @@ pub fn bucket_sign(seed: u64, i: u64, k: usize) -> (usize, f64) {
     (bucket, sign)
 }
 
+/// Block-buffered form of [`bucket_sign`]: map `(i, v)` pairs to
+/// `(bucket, v·sign)` scatter ops, appended to `out` in input order. The
+/// batched ingest runs this hash loop first and the scatter loop second —
+/// two tight loops instead of one hash+scatter per entry — and because the
+/// scatter applies in the same order as the inputs, the accumulated bits
+/// are identical to per-entry updates.
+pub fn bucket_signs_into(
+    seed: u64,
+    k: usize,
+    entries: impl Iterator<Item = (u64, f64)>,
+    out: &mut Vec<(u32, f64)>,
+) {
+    out.clear();
+    for (i, v) in entries {
+        let (bucket, sign) = bucket_sign(seed, i, k);
+        out.push((bucket as u32, v * sign));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -36,6 +55,20 @@ mod tests {
         // roughly uniform: each bucket within 20% of 1000
         for &c in &counts {
             assert!((c as f64 - 1000.0).abs() < 200.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_entry() {
+        let k = 16;
+        let entries: Vec<(u64, f64)> = (0..200).map(|i| (i, (i as f64) * 0.5 - 40.0)).collect();
+        let mut out = vec![(9u32, 9.0)]; // stale contents must be cleared
+        bucket_signs_into(3, k, entries.iter().copied(), &mut out);
+        assert_eq!(out.len(), entries.len());
+        for (&(i, v), &(b, sv)) in entries.iter().zip(&out) {
+            let (bucket, sign) = bucket_sign(3, i, k);
+            assert_eq!(b as usize, bucket);
+            assert_eq!(sv, v * sign);
         }
     }
 

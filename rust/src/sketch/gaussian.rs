@@ -13,6 +13,19 @@
 
 use crate::rng::gaussian_column_into;
 
+/// Materialize the implicit `Π` for ambient rows `i0..i0+len`, column-major
+/// (`out[l*k..(l+1)*k] = Π[:, i0+l]`) — the packed GEMM operand of the
+/// batched column-block ingest (`SketchState::update_col_block`). Unlike the
+/// per-entry cache below, the block path regenerates sequentially: a column
+/// block walks every ambient row exactly once, so caching would only add
+/// tag-check overhead.
+pub fn materialize_block(seed: u64, i0: usize, len: usize, k: usize, out: &mut [f64]) {
+    assert!(out.len() >= len * k, "Π block scratch too small");
+    for l in 0..len {
+        gaussian_column_into(seed, (i0 + l) as u64, k, &mut out[l * k..(l + 1) * k]);
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ColumnCache {
     k: usize,
@@ -107,6 +120,16 @@ mod tests {
         // back to seed 1: must regenerate correctly, not serve stale
         let a2 = c.get(1, 5).to_vec();
         assert_eq!(a2, a);
+    }
+
+    #[test]
+    fn materialize_block_matches_columns() {
+        let k = 9;
+        let mut out = vec![0.0; 5 * k];
+        materialize_block(11, 3, 5, k, &mut out);
+        for l in 0..5 {
+            assert_eq!(&out[l * k..(l + 1) * k], gaussian_column(11, (3 + l) as u64, k).as_slice());
+        }
     }
 
     #[test]

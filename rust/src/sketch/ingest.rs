@@ -1,0 +1,547 @@
+//! Parallel, mergeable sketch ingestion — the paper's `treeAggregate` pass
+//! (§2.1 Step 1) as a worker pool.
+//!
+//! A single reader drives an [`EntrySource`] (or [`ColumnSource`]) through
+//! the deterministic column-affine router ([`crate::stream::shard_of`]) into
+//! bounded per-worker channels; each worker folds its shard into a private
+//! `(SketchState_A, SketchState_B)` pair with the batched kernels
+//! ([`SketchState::update_col_entries`] for entry shards,
+//! [`SketchState::update_col_block`] for column shards); the per-worker
+//! states then tree-reduce by sketch merge.
+//!
+//! # Determinism contract
+//!
+//! The result is **bitwise identical to the sequential pass** for every
+//! [`SketchKind`] and any worker count, because
+//! 1. columns are owned by exactly one worker (router), so accumulator slots
+//!    never interleave across workers;
+//! 2. the single reader + FIFO channels preserve each column's entry order,
+//!    and the grouped worker kernel replays exactly the per-entry ops
+//!    (column mode: the block kernel is bitwise invariant to block splits);
+//! 3. the merge tree therefore only ever adds a slot's unique value to
+//!    exact zeros, making the reduction associative and order-invariant at
+//!    the bit level.
+//!
+//! The laws are property-tested in `tests/sketch_props.rs`; benchmarked by
+//! the `sketch_ingest/*` groups in `benches/hotpaths.rs`.
+
+use super::{SketchKind, SketchState, Summary};
+use crate::linalg::gemm;
+use crate::stream::{
+    bounded, route_columns, route_entries, ColumnBlock, ColumnSource, Entry, EntrySource,
+    MatrixId, StreamMeta,
+};
+use std::time::{Duration, Instant};
+
+/// Columns per message on the column-granular path — also the width of the
+/// coalesced `update_cols` block each worker folds per message, so it is
+/// the Π-regeneration amortization window of the Gaussian GEMM kernel
+/// (matches `ingest_dense`'s DENSE_BLOCK).
+const COLS_PER_MSG: usize = 32;
+/// Messages a worker drains per lock acquisition.
+const RECV_CHUNK: usize = 8;
+
+/// Knobs of the parallel ingest pass.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Sketch-pass worker threads; `0` = auto (all cores, capped by the
+    /// `SMPPCA_THREADS` env like every other pool in the crate). Explicit
+    /// counts are honored literally — workers block on channels, so modest
+    /// oversubscription is harmless and keeps test matrices meaningful.
+    pub workers: usize,
+    /// Bounded per-worker buffer, in entries — the backpressure window.
+    pub channel_capacity: usize,
+    /// Entries per channel message (amortizes the mutex round-trip; see the
+    /// `channel/*` bench group).
+    pub batch: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        Self { workers: 0, channel_capacity: 8192, batch: 1024 }
+    }
+}
+
+impl IngestConfig {
+    /// The worker count this config resolves to: the crate-wide thread
+    /// policy (`0` = all cores under the `SMPPCA_THREADS` cap). No
+    /// work-item clamp here — the stream length is unknown up front.
+    pub fn resolve_workers(&self) -> usize {
+        gemm::resolve_threads(self.workers)
+    }
+}
+
+/// Counters and timings of one ingest pass.
+#[derive(Debug, Clone, Default)]
+pub struct IngestStats {
+    pub workers: usize,
+    /// Entries the reader routed (column mode: dense values shipped).
+    pub entries_routed: u64,
+    /// Columns the reader routed (column mode only).
+    pub columns_routed: u64,
+    /// Nonzero entries folded into sketches, summed over workers.
+    pub entries_sketched: u64,
+    /// Worker busy time, summed across workers.
+    pub worker_busy: Duration,
+    /// Wall time of the pass (route + sketch, excluding merge).
+    pub pass_time: Duration,
+    /// Wall time of the tree merge.
+    pub merge_time: Duration,
+}
+
+/// Finished pass: both summaries plus the stats.
+pub struct IngestRun {
+    pub a: Summary,
+    pub b: Summary,
+    pub stats: IngestStats,
+}
+
+/// Fresh zeroed per-worker state pairs for a stream shape. All workers share
+/// `(kind, seed, k)` so their implicit Π agree — the mergeability invariant.
+pub fn worker_states(
+    kind: SketchKind,
+    seed: u64,
+    k: usize,
+    meta: StreamMeta,
+    workers: usize,
+) -> Vec<(SketchState, SketchState)> {
+    (0..workers.max(1))
+        .map(|_| {
+            (
+                SketchState::new(kind, seed, k, meta.d, meta.n1),
+                SketchState::new(kind, seed, k, meta.d, meta.n2),
+            )
+        })
+        .collect()
+}
+
+/// Binary tree reduction of per-worker states (the paper's `treeAggregate`).
+/// Column sharding makes this bitwise order- and arity-invariant — see the
+/// module docs.
+pub fn tree_merge(mut states: Vec<(SketchState, SketchState)>) -> (SketchState, SketchState) {
+    assert!(!states.is_empty());
+    while states.len() > 1 {
+        let mut next = Vec::with_capacity(states.len().div_ceil(2));
+        let mut iter = states.into_iter();
+        while let Some((mut a1, mut b1)) = iter.next() {
+            if let Some((a2, b2)) = iter.next() {
+                a1.merge(&a2);
+                b1.merge(&b2);
+            }
+            next.push((a1, b1));
+        }
+        states = next;
+    }
+    states.pop().unwrap()
+}
+
+type WorkerHandle = std::thread::JoinHandle<(SketchState, SketchState, Duration)>;
+
+/// Spawn one folding worker per state pair. Each worker owns a bounded
+/// channel of `M` messages, drains it in [`RECV_CHUNK`] gulps, and applies
+/// the fold produced by `make_fold` (called once per worker, with the
+/// worker's states visible for sizing scratch) to every message. Shared by
+/// the entry- and column-sharded passes — only the message type and fold
+/// differ between them.
+fn spawn_workers<M, F>(
+    states: Vec<(SketchState, SketchState)>,
+    cap_msgs: usize,
+    make_fold: impl Fn(&SketchState, &SketchState) -> F,
+) -> (Vec<crate::stream::Sender<M>>, Vec<WorkerHandle>)
+where
+    M: Send + 'static,
+    F: FnMut(&mut SketchState, &mut SketchState, M) + Send + 'static,
+{
+    let w = states.len();
+    let mut senders = Vec::with_capacity(w);
+    let mut handles = Vec::with_capacity(w);
+    for (sa, sb) in states {
+        let (tx, rx) = bounded::<M>(cap_msgs);
+        senders.push(tx);
+        let mut fold = make_fold(&sa, &sb);
+        handles.push(std::thread::spawn(move || {
+            let (mut sa, mut sb) = (sa, sb);
+            let t = Instant::now();
+            let mut msgs: Vec<M> = Vec::with_capacity(RECV_CHUNK);
+            while rx.recv_many(RECV_CHUNK, &mut msgs).is_ok() {
+                for msg in msgs.drain(..) {
+                    fold(&mut sa, &mut sb, msg);
+                }
+            }
+            (sa, sb, t.elapsed())
+        }));
+    }
+    (senders, handles)
+}
+
+/// Join the pool, folding worker busy time and sketched-entry counts into
+/// `stats`; a worker panic surfaces as an error.
+fn join_workers(
+    handles: Vec<WorkerHandle>,
+    stats: &mut IngestStats,
+) -> anyhow::Result<Vec<(SketchState, SketchState)>> {
+    let mut out = Vec::with_capacity(handles.len());
+    for h in handles {
+        let (sa, sb, busy) =
+            h.join().map_err(|_| anyhow::anyhow!("sketch ingest worker panicked"))?;
+        stats.worker_busy += busy;
+        stats.entries_sketched += sa.entries_seen() + sb.entries_seen();
+        out.push((sa, sb));
+    }
+    Ok(out)
+}
+
+/// The resumable primitive under [`ingest_entries`]: run one entry-sharded
+/// pass starting from existing per-worker states (zeroed for a fresh pass,
+/// checkpoint-restored to resume mid-stream). The worker count is
+/// `states.len()` — resuming must reuse the original count so the column →
+/// worker assignment (and therefore bit-exactness vs an uninterrupted pass)
+/// is preserved. Returns the advanced states *before* merging, so callers
+/// can checkpoint them again.
+pub fn ingest_shards(
+    source: Box<dyn EntrySource>,
+    states: Vec<(SketchState, SketchState)>,
+    cfg: &IngestConfig,
+) -> anyhow::Result<(Vec<(SketchState, SketchState)>, IngestStats)> {
+    let w = states.len();
+    anyhow::ensure!(w > 0, "ingest needs at least one worker state");
+    let meta = source.meta();
+    for (sa, sb) in &states {
+        anyhow::ensure!(
+            sa.d() == meta.d && sb.d() == meta.d && sa.n() == meta.n1 && sb.n() == meta.n2,
+            "worker state shape does not match the stream: state ({}, {}/{}) vs meta {meta:?}",
+            sa.d(),
+            sa.n(),
+            sb.n(),
+        );
+    }
+    let batch = cfg.batch.max(1);
+    let cap_msgs = cfg.channel_capacity.div_ceil(batch).max(2);
+    let mut stats = IngestStats { workers: w, ..Default::default() };
+    // Resumed states carry prior-segment counts; report only THIS pass's
+    // folds so entries_sketched stays comparable to entries_routed.
+    let prior_seen: u64 =
+        states.iter().map(|(sa, sb)| sa.entries_seen() + sb.entries_seen()).sum();
+    let t_pass = Instant::now();
+
+    let (senders, handles) = spawn_workers(states, cap_msgs, |sa, sb| {
+        let mut grouper = ColumnGrouper::new(sa.n(), sb.n());
+        move |sa: &mut SketchState, sb: &mut SketchState, b: Vec<Entry>| {
+            grouper.for_each_group(&b, |matrix, col, entries| match matrix {
+                MatrixId::A => sa.update_col_entries(col, entries),
+                MatrixId::B => sb.update_col_entries(col, entries),
+            });
+        }
+    });
+
+    stats.entries_routed = route_entries(source, &senders, batch);
+    drop(senders); // close channels; workers drain and finish
+
+    let out = join_workers(handles, &mut stats)?;
+    stats.entries_sketched -= prior_seen;
+    stats.pass_time = t_pass.elapsed();
+    Ok((out, stats))
+}
+
+/// One full entry-sharded pass: fresh states, shard, tree-merge, finalize.
+pub fn ingest_entries(
+    source: Box<dyn EntrySource>,
+    kind: SketchKind,
+    seed: u64,
+    k: usize,
+    cfg: &IngestConfig,
+) -> anyhow::Result<IngestRun> {
+    let meta = source.meta();
+    let w = cfg.resolve_workers();
+    let states = worker_states(kind, seed, k, meta, w);
+    let (states, mut stats) = ingest_shards(source, states, cfg)?;
+    let t = Instant::now();
+    let (sa, sb) = tree_merge(states);
+    stats.merge_time = t.elapsed();
+    Ok(IngestRun { a: sa.finalize(), b: sb.finalize(), stats })
+}
+
+/// One full column-sharded pass: whole columns route to their owning worker,
+/// which coalesces each message's columns into one [`SketchState::update_cols`]
+/// block per matrix — so the Gaussian GEMM kernel amortizes Π regeneration
+/// over up to [`COLS_PER_MSG`] columns, exactly like the sequential blocked
+/// pass. Bitwise identical to [`SketchState::sketch_matrix`] at any worker
+/// count (block-split invariance).
+pub fn ingest_columns(
+    source: Box<dyn ColumnSource>,
+    kind: SketchKind,
+    seed: u64,
+    k: usize,
+    cfg: &IngestConfig,
+) -> anyhow::Result<IngestRun> {
+    let meta = source.meta();
+    let w = cfg.resolve_workers();
+    let cap_msgs = (cfg.channel_capacity / (COLS_PER_MSG * meta.d.max(1))).max(2);
+    let mut stats = IngestStats { workers: w, ..Default::default() };
+    let t_pass = Instant::now();
+
+    let (senders, handles) =
+        spawn_workers(worker_states(kind, seed, k, meta, w), cap_msgs, |_sa, _sb| {
+            |sa: &mut SketchState, sb: &mut SketchState, blk: ColumnBlock| {
+                let st = match blk.matrix {
+                    MatrixId::A => sa,
+                    MatrixId::B => sb,
+                };
+                st.update_cols(&blk.js, &blk.values);
+            }
+        });
+
+    let (cols, values) = route_columns(source, &senders, COLS_PER_MSG);
+    stats.columns_routed = cols;
+    stats.entries_routed = values;
+    drop(senders);
+
+    let states = join_workers(handles, &mut stats)?;
+    stats.pass_time = t_pass.elapsed();
+    let t = Instant::now();
+    let (sa, sb) = tree_merge(states);
+    stats.merge_time = t.elapsed();
+    Ok(IngestRun { a: sa.finalize(), b: sb.finalize(), stats })
+}
+
+/// Column-shard an in-memory pair (bench/test convenience for
+/// [`ingest_columns`]).
+pub fn ingest_matrices(
+    a: &crate::linalg::Mat,
+    b: &crate::linalg::Mat,
+    kind: SketchKind,
+    seed: u64,
+    k: usize,
+    cfg: &IngestConfig,
+) -> anyhow::Result<IngestRun> {
+    ingest_columns(
+        Box::new(crate::stream::DenseColumnSource { a: a.clone(), b: b.clone() }),
+        kind,
+        seed,
+        k,
+        cfg,
+    )
+}
+
+/// Stable counting-sort of an entry batch by `(matrix, column)`: groups a
+/// batch into per-column runs **preserving each column's arrival order**,
+/// so applying the grouped runs is bitwise identical to applying the batch
+/// entry-by-entry — while the accumulator row, Π plan and scatter buffer
+/// stay hot across a whole run. Buffers are reused across batches
+/// (O(n₁ + n₂) once per worker, O(batch) per call).
+pub struct ColumnGrouper {
+    n1: usize,
+    n2: usize,
+    /// Entries per flat key in the current batch (reset after each call).
+    counts: Vec<u32>,
+    /// Write cursor per flat key while scattering.
+    cursor: Vec<u32>,
+    /// Flat keys in first-seen order.
+    touched: Vec<u32>,
+    /// Batch entries regrouped column-contiguously.
+    sorted: Vec<(u32, f64)>,
+}
+
+impl ColumnGrouper {
+    pub fn new(n1: usize, n2: usize) -> Self {
+        Self {
+            n1,
+            n2,
+            counts: vec![0; n1 + n2],
+            cursor: vec![0; n1 + n2],
+            touched: Vec::new(),
+            sorted: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn key(&self, e: &Entry) -> usize {
+        let col = e.col as usize;
+        match e.matrix {
+            MatrixId::A => col,
+            MatrixId::B => self.n1 + col,
+        }
+    }
+
+    /// Visit the batch as per-column runs, each in arrival order. Panics on
+    /// out-of-range columns (corrupt streams must not fold in silently).
+    pub fn for_each_group(
+        &mut self,
+        batch: &[Entry],
+        mut f: impl FnMut(MatrixId, usize, &[(u32, f64)]),
+    ) {
+        for e in batch {
+            let key = self.key(e);
+            let in_range = match e.matrix {
+                MatrixId::A => (e.col as usize) < self.n1,
+                MatrixId::B => (e.col as usize) < self.n2,
+            };
+            assert!(in_range, "column {} out of range for matrix {:?}", e.col, e.matrix);
+            if self.counts[key] == 0 {
+                self.touched.push(key as u32);
+            }
+            self.counts[key] += 1;
+        }
+        let mut off = 0u32;
+        for &key in &self.touched {
+            self.cursor[key as usize] = off;
+            off += self.counts[key as usize];
+        }
+        self.sorted.resize(batch.len(), (0, 0.0));
+        for e in batch {
+            let key = self.key(e);
+            let at = self.cursor[key] as usize;
+            self.sorted[at] = (e.row, e.value);
+            self.cursor[key] += 1;
+        }
+        for ti in 0..self.touched.len() {
+            let key = self.touched[ti] as usize;
+            let end = self.cursor[key] as usize;
+            let start = end - self.counts[key] as usize;
+            let (matrix, col) = if key < self.n1 {
+                (MatrixId::A, key)
+            } else {
+                (MatrixId::B, key - self.n1)
+            };
+            f(matrix, col, &self.sorted[start..end]);
+            self.counts[key] = 0;
+        }
+        self.touched.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+    use crate::stream::{ShuffledMatrixSource, VecSource};
+
+    fn pair(seed: u64, d: usize, n1: usize, n2: usize) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let a = Mat::gaussian(d, n1, &mut rng);
+        let b = Mat::gaussian(d, n2, &mut rng);
+        (a, b)
+    }
+
+    #[test]
+    fn grouper_preserves_column_order_and_resets() {
+        let mut g = ColumnGrouper::new(3, 2);
+        let batch = vec![
+            Entry::a(0, 1, 1.0),
+            Entry::b(1, 0, 2.0),
+            Entry::a(2, 1, 3.0),
+            Entry::a(5, 0, 4.0),
+            Entry::b(3, 0, 5.0),
+        ];
+        let mut groups: Vec<(MatrixId, usize, Vec<(u32, f64)>)> = Vec::new();
+        g.for_each_group(&batch, |m, c, es| groups.push((m, c, es.to_vec())));
+        assert_eq!(groups.len(), 3);
+        // first-seen order of (matrix, col) keys
+        assert_eq!(groups[0], (MatrixId::A, 1, vec![(0, 1.0), (2, 3.0)]));
+        assert_eq!(groups[1], (MatrixId::B, 0, vec![(1, 2.0), (3, 5.0)]));
+        assert_eq!(groups[2], (MatrixId::A, 0, vec![(5, 4.0)]));
+        // reuse on a second batch must not leak state
+        let mut again: Vec<usize> = Vec::new();
+        g.for_each_group(&[Entry::a(0, 2, 9.0)], |_, c, es| {
+            again.push(c);
+            assert_eq!(es, [(0, 9.0)]);
+        });
+        assert_eq!(again, vec![2]);
+    }
+
+    #[test]
+    fn grouper_rejects_out_of_range_columns() {
+        let mut g = ColumnGrouper::new(2, 2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            g.for_each_group(&[Entry::a(0, 99, 1.0)], |_, _, _| {});
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn entry_ingest_counts_routed_and_sketched() {
+        let (a, b) = pair(1, 30, 11, 9);
+        let nnz = (a.data().iter().filter(|v| **v != 0.0).count()
+            + b.data().iter().filter(|v| **v != 0.0).count()) as u64;
+        let run = ingest_entries(
+            Box::new(ShuffledMatrixSource { a, b, seed: 3 }),
+            SketchKind::Gaussian,
+            7,
+            12,
+            &IngestConfig { workers: 3, channel_capacity: 64, batch: 16 },
+        )
+        .unwrap();
+        assert_eq!(run.stats.workers, 3);
+        assert_eq!(run.stats.entries_routed, nnz);
+        assert_eq!(run.stats.entries_sketched, nnz);
+        assert_eq!(run.a.n(), 11);
+        assert_eq!(run.b.n(), 9);
+    }
+
+    #[test]
+    fn column_ingest_matches_entry_ingest_norms_exactly() {
+        // Row-ordered arrival (InterleavedSource) makes the per-entry norm
+        // accumulation i-ascending — the same order as the column kernels —
+        // so the exact column norms must agree bitwise across both modes.
+        let (a, b) = pair(2, 24, 7, 8);
+        let cfg = IngestConfig { workers: 2, ..Default::default() };
+        let by_cols = ingest_matrices(&a, &b, SketchKind::Srht, 5, 8, &cfg).unwrap();
+        let by_entries = ingest_entries(
+            Box::new(crate::stream::InterleavedSource { a, b }),
+            SketchKind::Srht,
+            5,
+            8,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(by_cols.a.col_norms, by_entries.a.col_norms);
+        assert_eq!(by_cols.b.col_norms, by_entries.b.col_norms);
+        assert_eq!(by_cols.stats.columns_routed, 15);
+    }
+
+    #[test]
+    fn shard_resume_roundtrips_states() {
+        // ingest_shards must hand back resumable states whose merged result
+        // equals a one-shot pass (bitwise).
+        let (a, b) = pair(3, 20, 6, 5);
+        let meta = crate::stream::StreamMeta { d: 20, n1: 6, n2: 5 };
+        let mut entries = Vec::new();
+        Box::new(ShuffledMatrixSource { a, b, seed: 9 })
+            .for_each(&mut |e| entries.push(e));
+        let cfg = IngestConfig { workers: 4, channel_capacity: 32, batch: 8 };
+        let split = entries.len() / 3;
+        let states = worker_states(SketchKind::CountSketch, 2, 6, meta, 4);
+        let (states, _) = ingest_shards(
+            Box::new(VecSource { meta, entries: entries[..split].to_vec() }),
+            states,
+            &cfg,
+        )
+        .unwrap();
+        let (states, _) = ingest_shards(
+            Box::new(VecSource { meta, entries: entries[split..].to_vec() }),
+            states,
+            &cfg,
+        )
+        .unwrap();
+        let resumed = tree_merge(states).0.finalize();
+        let oneshot = ingest_entries(
+            Box::new(VecSource { meta, entries }),
+            SketchKind::CountSketch,
+            2,
+            6,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(resumed.sketch.data(), oneshot.a.sketch.data());
+        assert_eq!(resumed.col_norms, oneshot.a.col_norms);
+    }
+
+    #[test]
+    fn mismatched_state_shape_rejected() {
+        let meta = crate::stream::StreamMeta { d: 10, n1: 4, n2: 4 };
+        let wrong = worker_states(SketchKind::Gaussian, 1, 4, crate::stream::StreamMeta { d: 9, n1: 4, n2: 4 }, 2);
+        let src = Box::new(VecSource { meta, entries: vec![] });
+        assert!(ingest_shards(src, wrong, &IngestConfig::default()).is_err());
+    }
+}

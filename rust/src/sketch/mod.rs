@@ -18,13 +18,58 @@
 //! * [`SketchKind::CountSketch`] — sparse JL (1 nonzero/column): O(1) per
 //!   entry; included as the ablation point the paper alludes to
 //!   ("any oblivious subspace embedding").
+//!
+//! # Ingest paths and their contracts
+//!
+//! Each kind has three update paths, chosen by how the data arrives:
+//!
+//! 1. **Per-entry** ([`SketchState::update_entry`], and its grouped form
+//!    [`SketchState::update_col_entries`] used by the sharded worker pool in
+//!    [`ingest`]): the streaming hot path. The grouped form applies exactly
+//!    the same floating-point operations in the same order, so a sharded
+//!    pass is **bitwise identical** to a sequential one (see below).
+//! 2. **Per-column oracle** ([`SketchState::update_column`]): fold one whole
+//!    column; per-entry math for Gaussian/CountSketch, the O(d̂ log d̂) FWHT
+//!    for SRHT. Kept as the slow-but-obvious reference for the block path.
+//! 3. **Batched column block** ([`SketchState::update_col_block`]): the
+//!    default kernel for column-granular sources ([`ingest::ingest_columns`],
+//!    [`SketchState::sketch_matrix`]). Gaussian routes through the packed
+//!    GEMM over regenerated Π chunks, SRHT through the FWHT, CountSketch
+//!    through a block-buffered scatter. The result is bitwise invariant to
+//!    how columns are split into blocks (the Gaussian reduction chunks are
+//!    pinned to `GAUSS_CHUNK ≤ gemm::KC`, so each output element's reduction
+//!    order never depends on the block width).
+//!
+//! # Merge laws (the tree-reduce contract)
+//!
+//! Workers that share `(seed, kind, k, d)` hold states that combine by
+//! addition. On top of plain fp addition:
+//! * **commutativity is exact** — `a.merge(b) == b.merge(a)` bitwise for any
+//!   two states (IEEE-754 addition commutes);
+//! * **associativity is exact for column-sharded states** — the router
+//!   assigns whole columns to workers ([`crate::stream::shard_of`]), so each
+//!   accumulator slot has at most one nonzero contributor and every merge
+//!   tree reduces to `x + 0 + … + 0`. Hence the tree-reduce result is
+//!   bitwise invariant to the shard count *and* the merge order.
+//!
+//! Both laws, plus "sharded pass ≡ sequential pass, bitwise, for 1/2/8
+//! workers and every kind", are property-tested in `tests/sketch_props.rs`.
 
 pub mod checkpoint;
 pub mod countsketch;
 pub mod gaussian;
+pub mod ingest;
 pub mod srht;
 
 use crate::linalg::Mat;
+
+/// Ambient-chunk width of the Gaussian GEMM ingest. Must stay ≤ `gemm::KC`
+/// so every `Π_chunk · X_chunk` product is a single K-block: that pins each
+/// output element's reduction order independently of the block width, which
+/// is what makes [`SketchState::update_col_block`] bitwise invariant to the
+/// column-block split (and sharded column ingest bitwise equal to the
+/// sequential pass).
+pub(crate) const GAUSS_CHUNK: usize = crate::linalg::gemm::KC;
 
 /// Which oblivious subspace embedding backs the sketch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,6 +136,24 @@ pub struct SketchState {
     entries_seen: u64,
     gaussian_col_cache: gaussian::ColumnCache,
     srht: Option<srht::SrhtPlan>,
+    scratch: Scratch,
+}
+
+/// Reusable scratch for the batched kernels. Never serialized (checkpoints
+/// rebuild it via [`SketchState::new`]) and never read before being
+/// (re)filled, so its contents carry no state.
+#[derive(Debug, Clone, Default)]
+struct Scratch {
+    /// Column-major `k × GAUSS_CHUNK` Π block (GEMM A-operand).
+    pi_chunk: Vec<f64>,
+    /// `k × m` GEMM output tile for one column block.
+    temp: Vec<f64>,
+    /// `d_pad` FWHT buffer (SRHT batch path).
+    pad: Vec<f64>,
+    /// One sketched column (length k).
+    kvec: Vec<f64>,
+    /// `(bucket, signed value)` pairs for the CountSketch scatter.
+    count: Vec<(u32, f64)>,
 }
 
 impl SketchState {
@@ -112,6 +175,7 @@ impl SketchState {
             entries_seen: 0,
             gaussian_col_cache: gaussian::ColumnCache::new(k),
             srht,
+            scratch: Scratch::default(),
         }
     }
 
@@ -197,8 +261,75 @@ impl SketchState {
         }
     }
 
-    /// Fold a full column `X[:, j]` (batch path — used by in-memory drivers
-    /// and the XLA tile engine). Must agree exactly with per-entry updates.
+    /// Fold all of one column's entries from a routed batch, in arrival
+    /// order. Bitwise identical to calling [`SketchState::update_entry`] per
+    /// element — the grouped form only hoists the accumulator-row and plan
+    /// lookups out of the loop and, for CountSketch, buffers the
+    /// `(bucket, sign)` scatter — which is what lets the sharded ingest
+    /// ([`ingest`]) stay bitwise equal to the sequential pass no matter how
+    /// batch boundaries fall.
+    pub fn update_col_entries(&mut self, j: usize, entries: &[(u32, f64)]) {
+        debug_assert!(j < self.acc.rows(), "col {j} out of range n={}", self.acc.rows());
+        match self.kind {
+            SketchKind::Gaussian => {
+                for &(i, v) in entries {
+                    if v == 0.0 {
+                        continue;
+                    }
+                    debug_assert!((i as usize) < self.d, "row {i} out of range d={}", self.d);
+                    self.entries_seen += 1;
+                    self.norms_sq[j] += v * v;
+                    let col = self.gaussian_col_cache.get(self.seed, i as u64);
+                    let row = self.acc.row_mut(j);
+                    for (a, c) in row.iter_mut().zip(col) {
+                        *a += v * c;
+                    }
+                }
+            }
+            SketchKind::Srht => {
+                let plan = self.srht.as_ref().unwrap();
+                let scale = plan.scale();
+                let srows = plan.rows();
+                let acc_row = self.acc.row_mut(j);
+                for &(i, v) in entries {
+                    if v == 0.0 {
+                        continue;
+                    }
+                    debug_assert!((i as usize) < self.d, "row {i} out of range d={}", self.d);
+                    self.entries_seen += 1;
+                    self.norms_sq[j] += v * v;
+                    let sign_scale = v * plan.d_sign(i as usize) * scale;
+                    for (a, &s) in acc_row.iter_mut().zip(srows) {
+                        *a += sign_scale * crate::linalg::fwht::hadamard_entry_sign(s, i as usize);
+                    }
+                }
+            }
+            SketchKind::CountSketch => {
+                for &(i, v) in entries {
+                    if v == 0.0 {
+                        continue;
+                    }
+                    debug_assert!((i as usize) < self.d, "row {i} out of range d={}", self.d);
+                    self.entries_seen += 1;
+                    self.norms_sq[j] += v * v;
+                }
+                countsketch::bucket_signs_into(
+                    self.seed,
+                    self.k,
+                    entries.iter().filter(|&&(_, v)| v != 0.0).map(|&(i, v)| (i as u64, v)),
+                    &mut self.scratch.count,
+                );
+                let row = self.acc.row_mut(j);
+                for &(b, sv) in self.scratch.count.iter() {
+                    row[b as usize] += sv;
+                }
+            }
+        }
+    }
+
+    /// Fold a full column `X[:, j]` (per-column oracle path — per-entry math
+    /// for Gaussian/CountSketch, FWHT for SRHT). The batched default for
+    /// column-granular data is [`SketchState::update_col_block`].
     pub fn update_column(&mut self, j: usize, col: &[f64]) {
         assert_eq!(col.len(), self.d);
         match self.kind {
@@ -208,10 +339,12 @@ impl SketchState {
                 self.entries_seen += col.iter().filter(|v| **v != 0.0).count() as u64;
                 self.norms_sq[j] += col.iter().map(|v| v * v).sum::<f64>();
                 let plan = self.srht.as_ref().unwrap();
-                let out = plan.apply(col);
+                self.scratch.pad.resize(plan.d_pad(), 0.0);
+                self.scratch.kvec.resize(self.k, 0.0);
+                plan.apply_into(col, &mut self.scratch.pad, &mut self.scratch.kvec);
                 let row = self.acc.row_mut(j);
-                for (a, o) in row.iter_mut().zip(&out) {
-                    *a += o;
+                for (a, o) in row.iter_mut().zip(&self.scratch.kvec) {
+                    *a += *o;
                 }
             }
             _ => {
@@ -219,6 +352,135 @@ impl SketchState {
                     self.update_entry(i, j, v);
                 }
             }
+        }
+    }
+
+    /// Batched column-block ingest — the default kernel for column-granular
+    /// sources. `block` is column-major `d × m`: `block[c*d..(c+1)*d]` is
+    /// column `j0 + c`.
+    ///
+    /// Gaussian routes through the packed GEMM over `GAUSS_CHUNK`-row Π
+    /// chunks (amortizing Π regeneration over the whole block), SRHT through
+    /// the FWHT, CountSketch through the block-buffered scatter. The result
+    /// is **bitwise invariant to the block split**: folding the same columns
+    /// one at a time, or in blocks of any width, produces identical bits —
+    /// the property that makes per-column sharded ingest bitwise equal to a
+    /// sequential blocked pass (see the module docs and the `GAUSS_CHUNK`
+    /// invariant).
+    pub fn update_col_block(&mut self, j0: usize, m: usize, block: &[f64]) {
+        assert_eq!(block.len(), self.d * m, "column block shape mismatch");
+        assert!(j0 + m <= self.acc.rows(), "block cols {j0}+{m} out of range");
+        self.block_kernel(m, block, &|c| j0 + c);
+    }
+
+    /// Batched ingest of an arbitrary (not necessarily contiguous) column
+    /// set: `block[c*d..(c+1)*d]` holds column `js[c]`. This is the
+    /// worker-side kernel of `ingest::ingest_columns`, whose shards own
+    /// hashed (interleaved) column sets — same kernels as
+    /// [`SketchState::update_col_block`], so the same block-split bitwise
+    /// invariance applies.
+    pub fn update_cols(&mut self, js: &[u32], block: &[f64]) {
+        assert_eq!(block.len(), self.d * js.len(), "column block shape mismatch");
+        for &j in js {
+            assert!((j as usize) < self.acc.rows(), "col {j} out of range n={}", self.acc.rows());
+        }
+        self.block_kernel(js.len(), block, &|c| js[c] as usize);
+    }
+
+    /// Shared batched column-block kernel: fold `m` column-major columns,
+    /// with `col_of(c)` naming the sketch column of block column `c`.
+    fn block_kernel(&mut self, m: usize, block: &[f64], col_of: &dyn Fn(usize) -> usize) {
+        if m == 0 {
+            return;
+        }
+        let d = self.d;
+        let k = self.k;
+        match self.kind {
+            SketchKind::Gaussian => {
+                for c in 0..m {
+                    let col = &block[c * d..(c + 1) * d];
+                    self.entries_seen += col.iter().filter(|v| **v != 0.0).count() as u64;
+                    self.norms_sq[col_of(c)] += col.iter().map(|v| v * v).sum::<f64>();
+                }
+                self.scratch.temp.resize(k * m, 0.0);
+                self.scratch.pi_chunk.resize(k * GAUSS_CHUNK, 0.0);
+                let mut i0 = 0usize;
+                while i0 < d {
+                    let dc = GAUSS_CHUNK.min(d - i0);
+                    gaussian::materialize_block(self.seed, i0, dc, k, &mut self.scratch.pi_chunk);
+                    // temp = Π[:, i0..i0+dc] · X[i0..i0+dc, :] (k×m), single
+                    // K-block (dc ≤ KC) so the reduction order per element
+                    // is fixed regardless of m.
+                    crate::linalg::gemm::gemm(
+                        k,
+                        m,
+                        dc,
+                        &self.scratch.pi_chunk,
+                        1,
+                        k,
+                        &block[i0..],
+                        1,
+                        d,
+                        &mut self.scratch.temp,
+                        1,
+                    );
+                    for c in 0..m {
+                        let row = self.acc.row_mut(col_of(c));
+                        for (t, a) in row.iter_mut().enumerate() {
+                            *a += self.scratch.temp[t * m + c];
+                        }
+                    }
+                    i0 += dc;
+                }
+            }
+            SketchKind::Srht => {
+                for c in 0..m {
+                    self.update_column(col_of(c), &block[c * d..(c + 1) * d]);
+                }
+            }
+            SketchKind::CountSketch => {
+                for c in 0..m {
+                    let col = &block[c * d..(c + 1) * d];
+                    let j = col_of(c);
+                    self.entries_seen += col.iter().filter(|v| **v != 0.0).count() as u64;
+                    self.norms_sq[j] += col.iter().map(|v| v * v).sum::<f64>();
+                    countsketch::bucket_signs_into(
+                        self.seed,
+                        k,
+                        col.iter()
+                            .enumerate()
+                            .filter(|(_, v)| **v != 0.0)
+                            .map(|(i, &v)| (i as u64, v)),
+                        &mut self.scratch.count,
+                    );
+                    let row = self.acc.row_mut(j);
+                    for &(b, sv) in self.scratch.count.iter() {
+                        row[b as usize] += sv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fold an entire in-memory matrix through the batched column-block
+    /// kernel, `DENSE_BLOCK` columns per call (gathered column-major from
+    /// the row-major `Mat`).
+    pub fn ingest_dense(&mut self, x: &Mat) {
+        const DENSE_BLOCK: usize = 32;
+        assert_eq!(x.rows(), self.d, "ambient dimension mismatch");
+        assert!(x.cols() <= self.acc.rows(), "more columns than the sketch was sized for");
+        let d = x.rows();
+        let mut buf = vec![0.0; d * DENSE_BLOCK.min(x.cols().max(1))];
+        let mut j0 = 0usize;
+        while j0 < x.cols() {
+            let mb = DENSE_BLOCK.min(x.cols() - j0);
+            for c in 0..mb {
+                for i in 0..d {
+                    buf[c * d + i] = x[(i, j0 + c)];
+                }
+            }
+            self.update_col_block(j0, mb, &buf[..d * mb]);
+            j0 += mb;
         }
     }
 
@@ -248,16 +510,11 @@ impl SketchState {
         }
     }
 
-    /// Sketch a whole in-memory matrix (test/bench convenience).
+    /// Sketch a whole in-memory matrix through the batched column-block
+    /// kernel (the Step-1 path of the in-memory reference algorithm).
     pub fn sketch_matrix(kind: SketchKind, seed: u64, k: usize, x: &Mat) -> Summary {
         let mut st = SketchState::new(kind, seed, k, x.rows(), x.cols());
-        let mut col = vec![0.0; x.rows()];
-        for j in 0..x.cols() {
-            for i in 0..x.rows() {
-                col[i] = x[(i, j)];
-            }
-            st.update_column(j, &col);
-        }
+        st.ingest_dense(x);
         st.finalize()
     }
 }
@@ -346,6 +603,140 @@ mod tests {
                     1e-9,
                 );
             });
+        }
+    }
+
+    fn colmajor(x: &Mat) -> Vec<f64> {
+        let mut buf = vec![0.0; x.rows() * x.cols()];
+        for j in 0..x.cols() {
+            for i in 0..x.rows() {
+                buf[j * x.rows() + i] = x[(i, j)];
+            }
+        }
+        buf
+    }
+
+    #[test]
+    fn block_split_is_bitwise_invariant() {
+        // One whole-matrix block, 32-column blocks (sketch_matrix), and
+        // column-at-a-time blocks must produce identical bits — the
+        // contract sharded column ingest relies on.
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            prop(29, 4, |rng| {
+                let d = 5 + rng.next_below(300) as usize;
+                let n = 1 + rng.next_below(40) as usize;
+                let k = 1 + rng.next_below(24) as usize;
+                let x = Mat::gaussian(d, n, rng);
+                let buf = colmajor(&x);
+                let mut whole = SketchState::new(kind, 3, k, d, n);
+                whole.update_col_block(0, n, &buf);
+                let mut single = SketchState::new(kind, 3, k, d, n);
+                for j in 0..n {
+                    single.update_col_block(j, 1, &buf[j * d..(j + 1) * d]);
+                }
+                let blocked = SketchState::sketch_matrix(kind, 3, k, &x);
+                let s_whole = whole.finalize();
+                let s_single = single.finalize();
+                assert_eq!(s_whole.sketch.data(), s_single.sketch.data(), "{kind:?}");
+                assert_eq!(s_whole.sketch.data(), blocked.sketch.data(), "{kind:?}");
+                assert_eq!(s_whole.col_norms, s_single.col_norms);
+                assert_eq!(s_whole.col_norms, blocked.col_norms);
+            });
+        }
+    }
+
+    #[test]
+    fn update_cols_matches_contiguous_blocks_bitwise() {
+        // Scattered (hashed-shard-style) column sets through update_cols
+        // must produce the same bits as contiguous blocks — the contract
+        // ingest_columns workers rely on when they coalesce a message's
+        // columns into one kernel call.
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            prop(37, 4, |rng| {
+                let d = 5 + rng.next_below(300) as usize;
+                let n = 2 + rng.next_below(24) as usize;
+                let k = 1 + rng.next_below(16) as usize;
+                let x = Mat::gaussian(d, n, rng);
+                let buf = colmajor(&x);
+                let mut whole = SketchState::new(kind, 9, k, d, n);
+                whole.update_col_block(0, n, &buf);
+                // permuted column order, one gathered scattered block
+                let mut order: Vec<u32> = (0..n as u32).collect();
+                rng.shuffle(&mut order);
+                let gathered: Vec<f64> = order
+                    .iter()
+                    .flat_map(|&j| buf[j as usize * d..(j as usize + 1) * d].to_vec())
+                    .collect();
+                let mut scattered = SketchState::new(kind, 9, k, d, n);
+                scattered.update_cols(&order, &gathered);
+                let s1 = whole.finalize();
+                let s2 = scattered.finalize();
+                assert_eq!(s1.sketch.data(), s2.sketch.data(), "{kind:?}");
+                assert_eq!(s1.col_norms, s2.col_norms, "{kind:?}");
+            });
+        }
+    }
+
+    #[test]
+    fn grouped_entries_bitwise_match_per_entry() {
+        // update_col_entries is the sharded workers' kernel; it must be an
+        // exact re-expression of update_entry (same ops, same order).
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            prop(31, 4, |rng| {
+                let d = 4 + rng.next_below(40) as usize;
+                let n = 2 + rng.next_below(6) as usize;
+                let x = Mat::gaussian(d, n, rng);
+                // arrival order: shuffled, with explicit zeros sprinkled in
+                let mut entries: Vec<(usize, usize, f64)> = Vec::new();
+                for i in 0..d {
+                    for j in 0..n {
+                        entries.push((i, j, if rng.next_below(10) == 0 { 0.0 } else { x[(i, j)] }));
+                    }
+                }
+                rng.shuffle(&mut entries);
+                let mut per_entry = SketchState::new(kind, 7, 8, d, n);
+                for &(i, j, v) in &entries {
+                    per_entry.update_entry(i, j, v);
+                }
+                // grouped: same per-column arrival order
+                let mut grouped = SketchState::new(kind, 7, 8, d, n);
+                for j in 0..n {
+                    let g: Vec<(u32, f64)> = entries
+                        .iter()
+                        .filter(|&&(_, ej, _)| ej == j)
+                        .map(|&(i, _, v)| (i as u32, v))
+                        .collect();
+                    grouped.update_col_entries(j, &g);
+                }
+                assert_eq!(per_entry.entries_seen(), grouped.entries_seen());
+                let s1 = per_entry.finalize();
+                let s2 = grouped.finalize();
+                assert_eq!(s1.sketch.data(), s2.sketch.data(), "{kind:?}");
+                assert_eq!(s1.col_norms, s2.col_norms, "{kind:?}");
+            });
+        }
+    }
+
+    #[test]
+    fn block_kernel_matches_column_oracle() {
+        // The batched GEMM/scatter block path vs the per-entry column
+        // oracle: same math, different reduction order ⇒ fp-close.
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            let mut rng = Pcg64::new(41);
+            let x = Mat::gaussian(300, 17, &mut rng);
+            let mut oracle = SketchState::new(kind, 5, 16, 300, 17);
+            let mut col = vec![0.0; 300];
+            for j in 0..17 {
+                for i in 0..300 {
+                    col[i] = x[(i, j)];
+                }
+                oracle.update_column(j, &col);
+            }
+            let blocked = SketchState::sketch_matrix(kind, 5, 16, &x);
+            let s = oracle.finalize();
+            assert_close(s.sketch.data(), blocked.sketch.data(), 1e-10);
+            assert_eq!(s.col_norms, blocked.col_norms, "{kind:?} norms must be exact");
+            assert_eq!(blocked.fro_sq, s.fro_sq);
         }
     }
 

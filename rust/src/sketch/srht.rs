@@ -68,12 +68,30 @@ impl SrhtPlan {
 
     /// Batch path: apply Π to a full column (length d ≤ d_pad).
     pub fn apply(&self, col: &[f64]) -> Vec<f64> {
-        let mut buf = vec![0.0; self.d_pad];
-        for (i, &v) in col.iter().enumerate() {
-            buf[i] = v * self.d_sign(i);
+        let mut pad = vec![0.0; self.d_pad];
+        let mut out = vec![0.0; self.k];
+        self.apply_into(col, &mut pad, &mut out);
+        out
+    }
+
+    /// [`SrhtPlan::apply`] into caller-owned scratch: `pad` must hold at
+    /// least `d_pad` values (contents are overwritten), `out` exactly `k`.
+    /// Allocation-free — this is the kernel the batched column ingest loops
+    /// over, so per-call `Vec`s would dominate small-d workloads.
+    pub fn apply_into(&self, col: &[f64], pad: &mut [f64], out: &mut [f64]) {
+        assert!(col.len() <= self.d_pad, "column longer than the SRHT padding");
+        assert_eq!(out.len(), self.k, "output must have length k");
+        let pad = &mut pad[..self.d_pad];
+        for (i, (p, &v)) in pad.iter_mut().zip(col.iter()).enumerate() {
+            *p = v * self.d_sign(i);
         }
-        fwht_inplace(&mut buf);
-        self.rows.iter().map(|&s| buf[s] * self.scale).collect()
+        for p in pad[col.len()..].iter_mut() {
+            *p = 0.0;
+        }
+        fwht_inplace(pad);
+        for (o, &s) in out.iter_mut().zip(&self.rows) {
+            *o = pad[s] * self.scale;
+        }
     }
 }
 
@@ -100,6 +118,17 @@ mod tests {
             }
             assert_close(&batch, &acc, 1e-10);
         });
+    }
+
+    #[test]
+    fn apply_into_matches_apply_and_ignores_stale_scratch() {
+        let plan = SrhtPlan::new(9, 6, 20);
+        let col: Vec<f64> = (0..20).map(|i| (i as f64) - 9.5).collect();
+        let reference = plan.apply(&col);
+        let mut pad = vec![7.5; plan.d_pad() + 3]; // oversized + dirty
+        let mut out = vec![-1.0; 6];
+        plan.apply_into(&col, &mut pad, &mut out);
+        assert_eq!(out, reference);
     }
 
     #[test]

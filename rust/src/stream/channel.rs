@@ -98,6 +98,35 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Blocking bulk receive: wait for at least one item, then drain up to
+    /// `max` items into `out` under a single lock acquisition. Returns how
+    /// many were appended. Deep queues (a reader outpacing a worker) thus
+    /// cost one mutex round-trip per `max` items instead of one per item.
+    /// Errors like [`Receiver::recv`] once all senders drop and the buffer
+    /// is empty.
+    pub fn recv_many(&self, max: usize, out: &mut Vec<T>) -> Result<usize, Disconnected> {
+        assert!(max > 0);
+        let mut st = self.shared.queue.lock().unwrap();
+        loop {
+            if !st.buf.is_empty() {
+                let n = st.buf.len().min(max);
+                out.extend(st.buf.drain(..n));
+                if n > 1 {
+                    // several producers may have been blocked on the full
+                    // buffer; free slots for all of them
+                    self.shared.not_full.notify_all();
+                } else {
+                    self.shared.not_full.notify_one();
+                }
+                return Ok(n);
+            }
+            if st.senders == 0 {
+                return Err(Disconnected);
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
     /// Drain into an iterator (consumes until disconnect).
     pub fn iter(&self) -> impl Iterator<Item = T> + '_ {
         std::iter::from_fn(move || self.recv().ok())
@@ -182,6 +211,35 @@ mod tests {
         drop(tx);
         let total = c1.join().unwrap() + c2.join().unwrap();
         assert_eq!(total, 500);
+    }
+
+    #[test]
+    fn recv_many_preserves_fifo_and_drains() {
+        let (tx, rx) = bounded(16);
+        for i in 0..10u32 {
+            tx.send(i).unwrap();
+        }
+        let mut out = Vec::new();
+        assert_eq!(rx.recv_many(4, &mut out), Ok(4));
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(rx.recv_many(100, &mut out), Ok(6));
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+        drop(tx);
+        assert_eq!(rx.recv_many(1, &mut out), Err(Disconnected));
+    }
+
+    #[test]
+    fn recv_many_unblocks_backpressured_producer() {
+        let (tx, rx) = bounded(2);
+        let producer = thread::spawn(move || {
+            for i in 0..100u64 {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut got = Vec::new();
+        while rx.recv_many(8, &mut got).is_ok() {}
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
     }
 
     #[test]

@@ -9,8 +9,11 @@ pub mod source;
 
 pub use binfile::{BinFileSource, BinFileWriter};
 pub use channel::{bounded, Receiver, Sender};
-pub use router::shard_of;
-pub use source::{EntrySource, FileSource, InterleavedSource, ShuffledMatrixSource};
+pub use router::{route_columns, route_entries, shard_of};
+pub use source::{
+    ColumnSource, DenseColumnSource, EntrySource, FileSource, InterleavedSource,
+    ShuffledMatrixSource, VecSource,
+};
 
 /// Which of the two input matrices an entry belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -36,6 +39,30 @@ impl Entry {
 
     pub fn b(row: u32, col: u32, value: f64) -> Self {
         Self { matrix: MatrixId::B, row, col, value }
+    }
+}
+
+/// One routed block of dense columns from a single matrix — the message
+/// unit of the column-granular ingest path ([`route_columns`] →
+/// `sketch::ingest::ingest_columns`). Flat layout so the reader pays one
+/// allocation and one copy per *block*, not per column, and the worker maps
+/// it 1:1 onto a `SketchState::update_cols` call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnBlock {
+    pub matrix: MatrixId,
+    /// Column ids, in routed order.
+    pub js: Vec<u32>,
+    /// Column-major values: `values[c*d..(c+1)*d]` belongs to column `js[c]`.
+    pub values: Vec<f64>,
+}
+
+impl ColumnBlock {
+    pub fn empty(matrix: MatrixId) -> Self {
+        Self { matrix, js: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.js.len()
     }
 }
 

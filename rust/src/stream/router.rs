@@ -6,7 +6,7 @@
 //! works correctness-wise (states are mergeable regardless); column
 //! affinity just minimizes merge traffic and cache churn.
 
-use super::MatrixId;
+use super::{ColumnBlock, ColumnSource, Entry, EntrySource, MatrixId, Sender};
 use crate::rng::hash2;
 
 /// Stable shard assignment for an entry.
@@ -18,6 +18,93 @@ pub fn shard_of(matrix: MatrixId, col: u32, workers: usize) -> usize {
         MatrixId::B => 1u64,
     };
     (hash2(tag ^ 0x5aa5, col as u64) % workers as u64) as usize
+}
+
+/// A worker hanging up mid-pass means it panicked; panic here too — the
+/// caller's join reports the worker's real panic. Shared by both routers.
+fn send_or_panic<T>(sender: &Sender<T>, msg: T, shard: usize, when: &str) {
+    if sender.send(msg).is_err() {
+        panic!("sketch worker {shard} hung up {when}");
+    }
+}
+
+/// Drive a single-pass entry source into per-worker channels in
+/// column-affine batches of `batch` entries (per-entry sends would pay a
+/// mutex round-trip per record — see the `channel/*` bench group). The
+/// single reader plus FIFO channels guarantee that each column's entries
+/// reach their owning worker in stream order, which is what keeps the
+/// sharded pass bitwise identical to the sequential one. Returns the number
+/// of entries routed. Panics if a worker hangs up mid-pass (its panic is
+/// surfaced by the caller's join).
+pub fn route_entries(
+    source: Box<dyn EntrySource>,
+    senders: &[Sender<Vec<Entry>>],
+    batch: usize,
+) -> u64 {
+    let w = senders.len();
+    assert!(w > 0 && batch > 0);
+    let mut routed = 0u64;
+    let mut buffers: Vec<Vec<Entry>> = (0..w).map(|_| Vec::with_capacity(batch)).collect();
+    source.for_each(&mut |e| {
+        let shard = shard_of(e.matrix, e.col, w);
+        let buf = &mut buffers[shard];
+        buf.push(e);
+        if buf.len() >= batch {
+            let full = std::mem::replace(buf, Vec::with_capacity(batch));
+            send_or_panic(&senders[shard], full, shard, "mid-pass");
+        }
+        routed += 1;
+    });
+    for (shard, buf) in buffers.into_iter().enumerate() {
+        if !buf.is_empty() {
+            send_or_panic(&senders[shard], buf, shard, "at flush");
+        }
+    }
+    routed
+}
+
+/// Column-granular counterpart of [`route_entries`]: whole columns shard to
+/// their owning worker (same [`shard_of`] assignment), coalesced per
+/// `(shard, matrix)` into flat [`ColumnBlock`]s of up to `batch_cols`
+/// columns — one allocation and one copy per *block*, not per column (the
+/// reader is the serial stage of the column pass). Returns
+/// `(columns, values)` routed.
+pub fn route_columns(
+    source: Box<dyn ColumnSource>,
+    senders: &[Sender<ColumnBlock>],
+    batch_cols: usize,
+) -> (u64, u64) {
+    let w = senders.len();
+    assert!(w > 0 && batch_cols > 0);
+    let mut cols = 0u64;
+    let mut values = 0u64;
+    let mut blocks: Vec<[ColumnBlock; 2]> = (0..w)
+        .map(|_| [ColumnBlock::empty(MatrixId::A), ColumnBlock::empty(MatrixId::B)])
+        .collect();
+    source.for_each_column(&mut |matrix, col, data| {
+        let shard = shard_of(matrix, col, w);
+        let slot = match matrix {
+            MatrixId::A => 0,
+            MatrixId::B => 1,
+        };
+        let blk = &mut blocks[shard][slot];
+        blk.js.push(col);
+        blk.values.extend_from_slice(data);
+        cols += 1;
+        values += data.len() as u64;
+        if blk.cols() >= batch_cols {
+            let full = std::mem::replace(blk, ColumnBlock::empty(matrix));
+            send_or_panic(&senders[shard], full, shard, "mid-pass");
+        }
+    });
+    for (shard, pair) in blocks.into_iter().enumerate() {
+        for blk in pair {
+            if !blk.js.is_empty() {
+                send_or_panic(&senders[shard], blk, shard, "at flush");
+            }
+        }
+    }
+    (cols, values)
 }
 
 #[cfg(test)]
@@ -57,5 +144,93 @@ mod tests {
         for c in 0..100 {
             assert_eq!(shard_of(MatrixId::B, c, 1), 0);
         }
+    }
+
+    #[test]
+    fn route_entries_delivers_in_column_order() {
+        use crate::stream::{bounded, StreamMeta, VecSource};
+        let entries: Vec<Entry> = (0..100)
+            .map(|t| Entry::a((t % 7) as u32, (t % 5) as u32, t as f64))
+            .collect();
+        let src = Box::new(VecSource {
+            meta: StreamMeta { d: 7, n1: 5, n2: 1 },
+            entries: entries.clone(),
+        });
+        let w = 3;
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..w {
+            let (tx, rx) = bounded::<Vec<Entry>>(64);
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        // batch = 4 forces many partial flushes
+        let routed = route_entries(src, &senders, 4);
+        drop(senders);
+        assert_eq!(routed, 100);
+        let mut seen = 0usize;
+        for (shard, rx) in receivers.into_iter().enumerate() {
+            let mut per_col: std::collections::BTreeMap<u32, Vec<f64>> = Default::default();
+            while let Ok(batch) = rx.recv() {
+                for e in batch {
+                    assert_eq!(shard_of(e.matrix, e.col, w), shard, "mis-routed entry");
+                    per_col.entry(e.col).or_default().push(e.value);
+                    seen += 1;
+                }
+            }
+            // per-column arrival order must equal stream order
+            for (col, vals) in per_col {
+                let expect: Vec<f64> = entries
+                    .iter()
+                    .filter(|e| e.col == col)
+                    .map(|e| e.value)
+                    .collect();
+                assert_eq!(vals, expect);
+            }
+        }
+        assert_eq!(seen, 100);
+    }
+
+    #[test]
+    fn route_columns_ships_every_column_once_in_flat_blocks() {
+        use crate::linalg::Mat;
+        use crate::rng::Pcg64;
+        use crate::stream::{bounded, ColumnBlock, DenseColumnSource};
+        let mut rng = Pcg64::new(4);
+        let a = Mat::gaussian(6, 5, &mut rng);
+        let b = Mat::gaussian(6, 4, &mut rng);
+        let src = Box::new(DenseColumnSource { a: a.clone(), b: b.clone() });
+        let w = 2;
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..w {
+            let (tx, rx) = bounded::<ColumnBlock>(16);
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        // batch_cols = 2 forces several partial blocks per shard
+        let (cols, values) = route_columns(src, &senders, 2);
+        drop(senders);
+        assert_eq!(cols, 9);
+        assert_eq!(values, 6 * 9);
+        let mut seen = 0usize;
+        for (shard, rx) in receivers.into_iter().enumerate() {
+            while let Ok(blk) = rx.recv() {
+                assert!(blk.cols() >= 1 && blk.cols() <= 2);
+                assert_eq!(blk.values.len(), blk.cols() * 6);
+                let m = match blk.matrix {
+                    MatrixId::A => &a,
+                    MatrixId::B => &b,
+                };
+                for (c, &j) in blk.js.iter().enumerate() {
+                    assert_eq!(shard_of(blk.matrix, j, w), shard);
+                    for i in 0..6 {
+                        assert_eq!(blk.values[c * 6 + i], m[(i, j as usize)]);
+                    }
+                    seen += 1;
+                }
+            }
+        }
+        assert_eq!(seen, 9);
     }
 }

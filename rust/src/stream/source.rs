@@ -22,6 +22,63 @@ pub trait EntrySource {
     fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry));
 }
 
+/// Column-granular source: visits whole dense columns `(matrix, j, X[:, j])`
+/// exactly once each, in any column order. The batch-ingest counterpart of
+/// [`EntrySource`] for data that is already materialized per column
+/// (in-memory matrices, columnar files, the XLA tile feed) — it lets the
+/// sharded pass use the batched column-block sketch kernels instead of
+/// per-entry updates.
+pub trait ColumnSource {
+    fn meta(&self) -> StreamMeta;
+    /// Visit every column once. The slice is only valid for the duration of
+    /// the callback (implementations may reuse one buffer).
+    fn for_each_column(self: Box<Self>, f: &mut dyn FnMut(MatrixId, u32, &[f64]));
+}
+
+/// In-memory matrix pair emitted column-major, A's columns then B's.
+pub struct DenseColumnSource {
+    pub a: Mat,
+    pub b: Mat,
+}
+
+impl ColumnSource for DenseColumnSource {
+    fn meta(&self) -> StreamMeta {
+        StreamMeta { d: self.a.rows(), n1: self.a.cols(), n2: self.b.cols() }
+    }
+
+    fn for_each_column(self: Box<Self>, f: &mut dyn FnMut(MatrixId, u32, &[f64])) {
+        assert_eq!(self.a.rows(), self.b.rows(), "A and B must share the ambient dimension");
+        let mut buf = vec![0.0; self.a.rows()];
+        for (m, id) in [(&self.a, MatrixId::A), (&self.b, MatrixId::B)] {
+            for j in 0..m.cols() {
+                for (i, slot) in buf.iter_mut().enumerate() {
+                    *slot = m[(i, j)];
+                }
+                f(id, j as u32, &buf);
+            }
+        }
+    }
+}
+
+/// Replay a pre-collected entry list in order (checkpoint-resume and test
+/// helper: split a stream at an arbitrary point and feed each half).
+pub struct VecSource {
+    pub meta: StreamMeta,
+    pub entries: Vec<Entry>,
+}
+
+impl EntrySource for VecSource {
+    fn meta(&self) -> StreamMeta {
+        self.meta
+    }
+
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+        for e in self.entries {
+            f(e);
+        }
+    }
+}
+
 /// Emit all nonzero entries of (A, B) in a seeded random global order.
 pub struct ShuffledMatrixSource {
     pub a: Mat,
@@ -211,6 +268,45 @@ mod tests {
         let mut count = 0;
         src.for_each(&mut |_| count += 1);
         assert_eq!(count, 6 * 4 + 6 * 3);
+    }
+
+    #[test]
+    fn dense_column_source_emits_every_column_once() {
+        let (a, b) = small_pair();
+        let src = Box::new(DenseColumnSource { a: a.clone(), b: b.clone() });
+        assert_eq!(src.meta(), StreamMeta { d: 6, n1: 4, n2: 3 });
+        let mut seen_a = vec![0usize; 4];
+        let mut seen_b = vec![0usize; 3];
+        src.for_each_column(&mut |id, j, col| {
+            let m = match id {
+                MatrixId::A => {
+                    seen_a[j as usize] += 1;
+                    &a
+                }
+                MatrixId::B => {
+                    seen_b[j as usize] += 1;
+                    &b
+                }
+            };
+            assert_eq!(col.len(), 6);
+            for (i, &v) in col.iter().enumerate() {
+                assert_eq!(v, m[(i, j as usize)]);
+            }
+        });
+        assert!(seen_a.iter().all(|&c| c == 1));
+        assert!(seen_b.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn vec_source_replays_in_order() {
+        let entries = vec![Entry::a(0, 1, 2.0), Entry::b(3, 0, -1.0), Entry::a(2, 2, 0.5)];
+        let src = Box::new(VecSource {
+            meta: StreamMeta { d: 4, n1: 3, n2: 2 },
+            entries: entries.clone(),
+        });
+        let mut got = Vec::new();
+        src.for_each(&mut |e| got.push(e));
+        assert_eq!(got, entries);
     }
 
     #[test]

@@ -1,0 +1,397 @@
+//! Property suite for the sketch/stream contracts the parallel ingest
+//! subsystem relies on (ISSUE 2):
+//!
+//! * merge laws — commutative bitwise always; associative + shard-order +
+//!   shard-count invariant bitwise under column sharding;
+//! * sharded single pass ≡ sequential pass, bitwise, for every `SketchKind`
+//!   at 1 / 2 / 8 workers (entry mode and column mode);
+//! * SRHT: the O(d log d) FWHT column-batch ingest pins against the O(1)
+//!   popcount-parity oracle; `linalg::fwht` pins against a naive Hadamard
+//!   multiply (exactly, on integer data);
+//! * checkpoint: mid-stream save/resume of the sharded pass is bitwise
+//!   equal to an uninterrupted pass.
+
+use smppca::linalg::fwht::fwht_inplace;
+use smppca::linalg::Mat;
+use smppca::rng::Pcg64;
+use smppca::sketch::ingest::{
+    ingest_entries, ingest_matrices, ingest_shards, tree_merge, worker_states, IngestConfig,
+};
+use smppca::sketch::{SketchKind, SketchState, Summary};
+use smppca::stream::{
+    shard_of, Entry, EntrySource, MatrixId, ShuffledMatrixSource, StreamMeta, VecSource,
+};
+use smppca::testing::prop;
+
+const KINDS: [SketchKind; 3] =
+    [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch];
+
+fn entries_of(a: &Mat, b: &Mat, order_seed: u64) -> (StreamMeta, Vec<Entry>) {
+    let meta = StreamMeta { d: a.rows(), n1: a.cols(), n2: b.cols() };
+    let mut entries = Vec::new();
+    let src: Box<dyn EntrySource> =
+        Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: order_seed });
+    src.for_each(&mut |e| entries.push(e));
+    (meta, entries)
+}
+
+/// The sequential reference: one state pair, entries applied in stream order.
+fn sequential_pass(
+    kind: SketchKind,
+    seed: u64,
+    k: usize,
+    meta: StreamMeta,
+    entries: &[Entry],
+) -> (Summary, Summary) {
+    let (sa, sb) = sequential_states(kind, seed, k, meta, entries);
+    (sa.finalize(), sb.finalize())
+}
+
+fn sequential_states(
+    kind: SketchKind,
+    seed: u64,
+    k: usize,
+    meta: StreamMeta,
+    entries: &[Entry],
+) -> (SketchState, SketchState) {
+    let mut sa = SketchState::new(kind, seed, k, meta.d, meta.n1);
+    let mut sb = SketchState::new(kind, seed, k, meta.d, meta.n2);
+    for e in entries {
+        match e.matrix {
+            MatrixId::A => sa.update_entry(e.row as usize, e.col as usize, e.value),
+            MatrixId::B => sb.update_entry(e.row as usize, e.col as usize, e.value),
+        }
+    }
+    (sa, sb)
+}
+
+fn assert_summary_eq(x: &Summary, y: &Summary, ctx: &str) {
+    assert_eq!(x.sketch.data(), y.sketch.data(), "{ctx}: sketch bits differ");
+    assert_eq!(x.col_norms, y.col_norms, "{ctx}: column norms differ");
+    assert_eq!(x.fro_sq, y.fro_sq, "{ctx}: ‖·‖_F² differs");
+}
+
+// ------------------------------------------------------------ tentpole law
+
+#[test]
+fn sharded_entry_pass_is_bitwise_identical_to_sequential() {
+    // The acceptance criterion: Gaussian/SRHT/CountSketch at 1, 2 and 8
+    // workers, arbitrary (shuffled) entry order, bitwise equality.
+    for kind in KINDS {
+        prop(0x51, 2, |rng| {
+            let d = 6 + rng.next_below(40) as usize;
+            let n1 = 2 + rng.next_below(9) as usize;
+            let n2 = 2 + rng.next_below(9) as usize;
+            let k = 4 + rng.next_below(12) as usize;
+            let a = Mat::gaussian(d, n1, rng);
+            let b = Mat::gaussian(d, n2, rng);
+            let (meta, entries) = entries_of(&a, &b, rng.next_u64());
+            let (ref_a, ref_b) = sequential_pass(kind, 9, k, meta, &entries);
+            for workers in [1usize, 2, 8] {
+                let run = ingest_entries(
+                    Box::new(VecSource { meta, entries: entries.clone() }),
+                    kind,
+                    9,
+                    k,
+                    &IngestConfig { workers, channel_capacity: 64, batch: 7 },
+                )
+                .unwrap();
+                let ctx = format!("{kind:?} w={workers}");
+                assert_summary_eq(&run.a, &ref_a, &ctx);
+                assert_summary_eq(&run.b, &ref_b, &ctx);
+            }
+        });
+    }
+}
+
+#[test]
+fn sharded_column_pass_is_bitwise_identical_to_sequential_blocked() {
+    // Column mode: per-column shards through the batched block kernels vs
+    // the sequential blocked pass (sketch_matrix). Also pins the block
+    // kernel's block-split invariance end to end.
+    for kind in KINDS {
+        prop(0x52, 2, |rng| {
+            let d = 6 + rng.next_below(200) as usize;
+            let n1 = 2 + rng.next_below(20) as usize;
+            let n2 = 2 + rng.next_below(20) as usize;
+            let k = 4 + rng.next_below(16) as usize;
+            let a = Mat::gaussian(d, n1, rng);
+            let b = Mat::gaussian(d, n2, rng);
+            let ref_a = SketchState::sketch_matrix(kind, 11, k, &a);
+            let ref_b = SketchState::sketch_matrix(kind, 11, k, &b);
+            for workers in [1usize, 2, 8] {
+                let cfg = IngestConfig { workers, ..Default::default() };
+                let run = ingest_matrices(&a, &b, kind, 11, k, &cfg).unwrap();
+                let ctx = format!("{kind:?} column mode w={workers}");
+                assert_summary_eq(&run.a, &ref_a, &ctx);
+                assert_summary_eq(&run.b, &ref_b, &ctx);
+            }
+        });
+    }
+}
+
+// ------------------------------------------------------------- merge laws
+
+#[test]
+fn merge_is_commutative_bitwise_even_for_overlapping_states() {
+    // IEEE-754 addition commutes exactly, so a ⊕ b == b ⊕ a bitwise even
+    // when both states touched the same columns.
+    for kind in KINDS {
+        prop(0x53, 3, |rng| {
+            let d = 5 + rng.next_below(30) as usize;
+            let n = 2 + rng.next_below(8) as usize;
+            let x = Mat::gaussian(d, n, rng);
+            let mut p = SketchState::new(kind, 4, 8, d, n);
+            let mut q = SketchState::new(kind, 4, 8, d, n);
+            for i in 0..d {
+                for j in 0..n {
+                    // overlapping split by entry hash
+                    if (i * 7 + j * 13) % 2 == 0 {
+                        p.update_entry(i, j, x[(i, j)]);
+                    } else {
+                        q.update_entry(i, j, x[(i, j)]);
+                    }
+                }
+            }
+            let mut pq = p.clone();
+            pq.merge(&q);
+            let mut qp = q.clone();
+            qp.merge(&p);
+            assert_eq!(pq.entries_seen(), qp.entries_seen());
+            assert_summary_eq(&pq.finalize(), &qp.finalize(), &format!("{kind:?}"));
+        });
+    }
+}
+
+/// Per-shard states exactly as the router would build them.
+fn column_sharded_states(
+    kind: SketchKind,
+    x: &Mat,
+    seed: u64,
+    k: usize,
+    workers: usize,
+) -> Vec<SketchState> {
+    let mut parts: Vec<SketchState> =
+        (0..workers).map(|_| SketchState::new(kind, seed, k, x.rows(), x.cols())).collect();
+    for i in 0..x.rows() {
+        for j in 0..x.cols() {
+            let w = shard_of(MatrixId::A, j as u32, workers);
+            parts[w].update_entry(i, j, x[(i, j)]);
+        }
+    }
+    parts
+}
+
+#[test]
+fn merge_is_associative_bitwise_on_column_shards() {
+    for kind in KINDS {
+        prop(0x54, 3, |rng| {
+            let d = 5 + rng.next_below(30) as usize;
+            let n = 3 + rng.next_below(8) as usize;
+            let x = Mat::gaussian(d, n, rng);
+            let parts = column_sharded_states(kind, &x, 6, 8, 3);
+            let (x0, y0, z0) = (parts[0].clone(), parts[1].clone(), parts[2].clone());
+            // (x ⊕ y) ⊕ z
+            let mut left = x0.clone();
+            left.merge(&y0);
+            left.merge(&z0);
+            // x ⊕ (y ⊕ z)
+            let mut yz = y0.clone();
+            yz.merge(&z0);
+            let mut right = x0.clone();
+            right.merge(&yz);
+            assert_summary_eq(&left.finalize(), &right.finalize(), &format!("{kind:?}"));
+        });
+    }
+}
+
+#[test]
+fn tree_reduce_is_shard_order_and_count_invariant_bitwise() {
+    for kind in KINDS {
+        prop(0x55, 2, |rng| {
+            let d = 5 + rng.next_below(30) as usize;
+            let n = 3 + rng.next_below(8) as usize;
+            let x = Mat::gaussian(d, n, rng);
+            // reference: one shard (= sequential)
+            let reference =
+                column_sharded_states(kind, &x, 8, 8, 1).pop().unwrap().finalize();
+            for workers in [2usize, 5, 8] {
+                let parts = column_sharded_states(kind, &x, 8, 8, workers);
+                // forward fold
+                let mut fwd = parts[0].clone();
+                for p in &parts[1..] {
+                    fwd.merge(p);
+                }
+                // shuffled fold
+                let mut order: Vec<usize> = (0..workers).collect();
+                rng.shuffle(&mut order);
+                let mut shuf = parts[order[0]].clone();
+                for &w in &order[1..] {
+                    shuf.merge(&parts[w]);
+                }
+                // binary tree (what the coordinator runs)
+                let dummy: Vec<(SketchState, SketchState)> =
+                    parts.iter().map(|p| (p.clone(), p.clone())).collect();
+                let (tree, _) = tree_merge(dummy);
+                let ctx = format!("{kind:?} w={workers}");
+                assert_summary_eq(&fwd.finalize(), &reference, &ctx);
+                assert_summary_eq(&shuf.finalize(), &reference, &ctx);
+                assert_summary_eq(&tree.finalize(), &reference, &ctx);
+            }
+        });
+    }
+}
+
+// ----------------------------------------------------------- SRHT pinning
+
+#[test]
+fn srht_fwht_column_batch_pins_popcount_entry_path() {
+    // Same column through (a) the O(1)-per-entry popcount-parity oracle and
+    // (b) the O(d log d) FWHT batch kernel. Different reduction orders ⇒
+    // fp-close values; identical math ⇒ exact column norms.
+    prop(0x56, 8, |rng| {
+        let d = 3 + rng.next_below(120) as usize;
+        let k = 1 + rng.next_below(d.min(24) as u64) as usize;
+        let seed = rng.next_u64();
+        let col: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let mut by_entry = SketchState::new(SketchKind::Srht, seed, k, d, 1);
+        for (i, &v) in col.iter().enumerate() {
+            by_entry.update_entry(i, 0, v);
+        }
+        let mut by_fwht = SketchState::new(SketchKind::Srht, seed, k, d, 1);
+        by_fwht.update_column(0, &col);
+        let se = by_entry.finalize();
+        let sf = by_fwht.finalize();
+        smppca::testing::assert_close(se.sketch.data(), sf.sketch.data(), 1e-11);
+        assert_eq!(se.col_norms, sf.col_norms, "norms are order-identical sums");
+    });
+}
+
+/// Naive Sylvester Hadamard matrix by the block recursion
+/// `H_{2n} = [[H_n, H_n], [H_n, −H_n]]` — written without popcount so it is
+/// an independent oracle for both `fwht_inplace` and `hadamard_entry_sign`.
+fn naive_hadamard(n: usize) -> Vec<Vec<f64>> {
+    assert!(n.is_power_of_two());
+    let mut h = vec![vec![1.0]];
+    let mut m = 1;
+    while m < n {
+        let mut next = vec![vec![0.0; 2 * m]; 2 * m];
+        for (s, row) in h.iter().enumerate() {
+            for (i, &v) in row.iter().enumerate() {
+                next[s][i] = v;
+                next[s][i + m] = v;
+                next[s + m][i] = v;
+                next[s + m][i + m] = -v;
+            }
+        }
+        h = next;
+        m *= 2;
+    }
+    h
+}
+
+#[test]
+fn fwht_matches_naive_hadamard_multiply_on_small_pow2() {
+    for logn in 0..6 {
+        let n = 1usize << logn;
+        let h = naive_hadamard(n);
+        // Integer-valued input: H·x is integer arithmetic in f64, so the
+        // transform must match the naive multiply *exactly*.
+        let x: Vec<f64> = (0..n).map(|i| ((i as i64 % 7) - 3) as f64).collect();
+        let mut y = x.clone();
+        fwht_inplace(&mut y);
+        for s in 0..n {
+            let direct: f64 = (0..n).map(|i| h[s][i] * x[i]).sum();
+            assert_eq!(y[s], direct, "H_{n}[{s}] (integer data must be exact)");
+            // and the popcount-parity closed form agrees with the recursion
+            for i in 0..n {
+                assert_eq!(
+                    smppca::linalg::fwht::hadamard_entry_sign(s, i),
+                    h[s][i],
+                    "closed-form sign at ({s}, {i})"
+                );
+            }
+        }
+        // Gaussian input: fp-close.
+        let mut rng = Pcg64::new(7 + logn as u64);
+        let g: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut yg = g.clone();
+        fwht_inplace(&mut yg);
+        for s in 0..n {
+            let direct: f64 = (0..n).map(|i| h[s][i] * g[i]).sum();
+            assert!((yg[s] - direct).abs() < 1e-10, "row {s}: {} vs {direct}", yg[s]);
+        }
+    }
+}
+
+// ------------------------------------------------------ checkpoint/resume
+
+#[test]
+fn sharded_checkpoint_resume_is_bitwise_identical_to_uninterrupted() {
+    // Stop the sharded pass mid-stream, checkpoint every worker state,
+    // restore, finish the stream, merge: bitwise equal to both the one-shot
+    // sharded pass and the sequential reference.
+    let tmp = |tag: &str, w: usize, half: &str| {
+        std::env::temp_dir().join(format!(
+            "smppca_props_ckpt_{}_{tag}_{w}_{half}",
+            std::process::id()
+        ))
+    };
+    for kind in KINDS {
+        let tag = format!("{kind:?}");
+        let mut rng = Pcg64::new(0x57);
+        let a = Mat::gaussian(22, 7, &mut rng);
+        let b = Mat::gaussian(22, 6, &mut rng);
+        let (meta, entries) = entries_of(&a, &b, 31);
+        let k = 8;
+        let workers = 3;
+        let cfg = IngestConfig { workers, channel_capacity: 32, batch: 5 };
+        let split = entries.len() / 2;
+
+        // phase 1: first half, then checkpoint every per-worker state
+        let states = worker_states(kind, 13, k, meta, workers);
+        let (states, _) = ingest_shards(
+            Box::new(VecSource { meta, entries: entries[..split].to_vec() }),
+            states,
+            &cfg,
+        )
+        .unwrap();
+        let mut restored = Vec::new();
+        for (w, (sa, sb)) in states.iter().enumerate() {
+            let pa = tmp(&tag, w, "a");
+            let pb = tmp(&tag, w, "b");
+            sa.checkpoint(&pa).unwrap();
+            sb.checkpoint(&pb).unwrap();
+            let ra = SketchState::restore(&pa).unwrap();
+            let rb = SketchState::restore(&pb).unwrap();
+            std::fs::remove_file(&pa).ok();
+            std::fs::remove_file(&pb).ok();
+            restored.push((ra, rb));
+        }
+
+        // phase 2: resume from the restored states on the second half
+        let (states, _) = ingest_shards(
+            Box::new(VecSource { meta, entries: entries[split..].to_vec() }),
+            restored,
+            &cfg,
+        )
+        .unwrap();
+        let (ma, mb) = tree_merge(states);
+        let (res_a, res_b) = (ma.finalize(), mb.finalize());
+
+        // one-shot sharded + sequential references
+        let oneshot = ingest_entries(
+            Box::new(VecSource { meta, entries: entries.clone() }),
+            kind,
+            13,
+            k,
+            &cfg,
+        )
+        .unwrap();
+        let (seq_a, seq_b) = sequential_pass(kind, 13, k, meta, &entries);
+        assert_summary_eq(&res_a, &oneshot.a, &format!("{tag} resume vs one-shot A"));
+        assert_summary_eq(&res_b, &oneshot.b, &format!("{tag} resume vs one-shot B"));
+        assert_summary_eq(&res_a, &seq_a, &format!("{tag} resume vs sequential A"));
+        assert_summary_eq(&res_b, &seq_b, &format!("{tag} resume vs sequential B"));
+    }
+}
