@@ -28,7 +28,8 @@ fn main() -> anyhow::Result<()> {
     let smp_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let t1 = std::time::Instant::now();
-    let lela = smppca::algo::lela(&a, &b, &LelaConfig { rank: r, iters: 10, seed: 3, samples: 0.0 })?;
+    let lela =
+        smppca::algo::lela(&a, &b, &LelaConfig { rank: r, iters: 10, seed: 3, ..Default::default() })?;
     let lela_ms = t1.elapsed().as_secs_f64() * 1e3;
 
     let e_smp = spectral_error(&out.factors, &a, &b);

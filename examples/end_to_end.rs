@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         Box::new(e)
     } else {
         println!("estimation engine: native (run `make artifacts` for the XLA path)\n");
-        native_engine()
+        native_engine(0)
     };
 
     // --- streaming SMP-PCA through the coordinator
@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
     let e_arbr = spectral_error(&low_rank_product(&a, &b, r), &a, &b);
     // in-memory LELA for reference
     let e_lela_mem = spectral_error(
-        &smppca::algo::lela(&a, &b, &LelaConfig { rank: r, iters: 10, seed: 1, samples: 0.0 })?,
+        &smppca::algo::lela(&a, &b, &LelaConfig { rank: r, iters: 10, seed: 1, ..Default::default() })?,
         &a,
         &b,
     );

@@ -32,7 +32,7 @@ fn main() {
     });
     suite.bench("table1/lela_two_pass", || {
         black_box(
-            smppca::algo::lela(&a, &b, &LelaConfig { rank: 5, iters: 10, seed: 1, samples: 0.0 })
+            smppca::algo::lela(&a, &b, &LelaConfig { rank: 5, iters: 10, seed: 1, ..Default::default() })
                 .unwrap(),
         );
     });

@@ -4,8 +4,9 @@
 //! batched column-block kernels (`sketch_ingest/parallel/*`,
 //! `sketch_ingest/column_block/*`), gaussian column regeneration & cache,
 //! channel transport, sampling, estimation, packed/parallel GEMM vs the
-//! naive kernel, gram-tile worker-pool scaling, ALS solve, end-to-end
-//! leader finish.
+//! naive kernel, the blocked factorization subsystem (`factor/qr/*`,
+//! `factor/tsqr/*`, `factor/rsvd/*` vs their unblocked oracles),
+//! gram-tile worker-pool scaling, ALS solve, end-to-end leader finish.
 //!
 //! ```bash
 //! cargo bench --bench hotpaths            # human-readable table
@@ -258,6 +259,51 @@ fn main() {
         suite.bench_items("gemm/matmul_t/256x512x256", flops, || {
             black_box(p.matmul_t(&q));
         });
+    }
+
+    // --------------------------------------------- factorization subsystem
+    // Blocked compact-WY QR vs the unblocked Householder oracle, TSQR vs
+    // worker count on the WAltMin-init shape, and the randomized SVD
+    // driver vs the Jacobi oracle (see EXPERIMENTS.md §Perf for the
+    // recorded speedups and the NB / leaf-fan-in parameters).
+    {
+        use smppca::linalg::{factor, qr_thin, svd_jacobi};
+        let mut r = Pcg64::new(15);
+        let aq = Mat::gaussian(512, 128, &mut r);
+        let qr_flops = (2usize * 512 * 128 * 128) as u64;
+        suite.bench_items("factor/qr/unblocked/512x128", qr_flops, || {
+            black_box(qr_thin(&aq));
+        });
+        for t in [1usize, 4] {
+            suite.bench_items(&format!("factor/qr/blocked_t{t}/512x128"), qr_flops, || {
+                black_box(factor::qr_blocked(&aq, factor::NB, t));
+            });
+        }
+        let tall = Mat::gaussian(8192, 64, &mut r);
+        let tsqr_flops = (2usize * 8192 * 64 * 64) as u64;
+        suite.bench_items("factor/tsqr/blocked_baseline/8192x64", tsqr_flops, || {
+            black_box(factor::qr_blocked(&tall, factor::NB, 1));
+        });
+        for w in [1usize, 2, 4] {
+            suite.bench_items(&format!("factor/tsqr/w{w}/8192x64"), tsqr_flops, || {
+                black_box(factor::tsqr(&tall, w));
+            });
+        }
+        // Decaying spectrum: rank-16 randomized SVD vs the full Jacobi.
+        let mut dec = Mat::gaussian(384, 128, &mut r);
+        for i in 0..384 {
+            for j in 0..128 {
+                dec[(i, j)] /= (j + 1) as f64;
+            }
+        }
+        suite.bench("factor/rsvd/jacobi_baseline/384x128", || {
+            black_box(svd_jacobi(&dec));
+        });
+        for t in [1usize, 4] {
+            suite.bench(&format!("factor/rsvd/r16_t{t}/384x128"), || {
+                black_box(factor::rsvd(&dec, 16, 8, 2, 0x5eed, t));
+            });
+        }
     }
 
     // --------------------------------------------- gram tile worker pool

@@ -23,11 +23,15 @@ pub struct LelaConfig {
     pub samples: f64,
     pub iters: usize,
     pub seed: u64,
+    /// Worker threads for the completion stage (`0` = auto via
+    /// [`crate::linalg::max_threads`]); results are identical for any
+    /// thread count.
+    pub threads: usize,
 }
 
 impl Default for LelaConfig {
     fn default() -> Self {
-        Self { rank: 5, samples: 0.0, iters: 10, seed: 0x1e1a }
+        Self { rank: 5, samples: 0.0, iters: 10, seed: 0x1e1a, threads: 0 }
     }
 }
 
@@ -65,7 +69,7 @@ pub fn lela(a: &Mat, b: &Mat, cfg: &LelaConfig) -> anyhow::Result<LowRank> {
         seed: cfg.seed ^ 0xa17,
         split_samples: false,
         row_profile: Some(a_norms.iter().map(|&n| (n / fro).max(1e-12)).collect()),
-        threads: 0,
+        threads: cfg.threads,
     };
     Ok(waltmin(&obs, a.cols(), b.cols(), &wcfg).factors)
 }
@@ -129,7 +133,7 @@ mod tests {
         // consistent ordering in Fig 3(b)/Table 1.
         let mut rng = Pcg64::new(3);
         let (a, b) = datasets::gd_synthetic(120, 35, 35, &mut rng);
-        let lcfg = LelaConfig { rank: 4, iters: 8, seed: 5, samples: 3000.0 };
+        let lcfg = LelaConfig { rank: 4, iters: 8, seed: 5, samples: 3000.0, ..Default::default() };
         let scfg = crate::algo::SmpPcaConfig {
             rank: 4,
             sketch_size: 30, // deliberately modest k

@@ -13,11 +13,12 @@ pub mod streaming_pca;
 pub use crate::completion::LowRank;
 pub use lela::lela;
 pub use smppca::{
-    finish_from_summaries, finish_from_summaries_engine, smp_pca, SmpPcaConfig, SmpPcaOutput,
+    complete_stage, estimate_stage, finish_from_summaries, finish_from_summaries_engine,
+    sample_stage, smp_pca, SmpPcaConfig, SmpPcaOutput,
 };
 
+use crate::linalg::factor;
 use crate::linalg::ops::spectral_norm_diff_op;
-use crate::linalg::svd::truncated_svd_op;
 use crate::linalg::Mat;
 use crate::sketch::{SketchKind, SketchState, Summary};
 
@@ -102,14 +103,14 @@ pub fn optimal_rank_r(a: &Mat, b: &Mat, r: usize) -> LowRank {
     let use_exact = a.cols().min(b.cols()) <= 400;
     if use_exact {
         let prod = a.t_matmul(b);
-        let svd = crate::linalg::svd::svd_jacobi(&prod).truncate(r);
+        let svd = factor::svd(&prod, 0).truncate(r);
         lowrank_from_svd(svd)
     } else {
         use std::cell::RefCell;
         let d = a.rows();
         let s1 = RefCell::new(vec![0.0; d]);
         let s2 = RefCell::new(vec![0.0; d]);
-        let svd = truncated_svd_op(
+        let svd = factor::rsvd_op(
             &|x, y| {
                 let mut t = s1.borrow_mut();
                 b.gemv_into(x, &mut t);
@@ -126,6 +127,7 @@ pub fn optimal_rank_r(a: &Mat, b: &Mat, r: usize) -> LowRank {
             10,
             6,
             0x09f,
+            0,
         );
         lowrank_from_svd(svd)
     }
@@ -147,7 +149,7 @@ pub fn sketch_svd_from_summaries(sa: &Summary, sb: &Summary, r: usize) -> LowRan
     let k = sa.k();
     let s1 = RefCell::new(vec![0.0; k]);
     let s2 = RefCell::new(vec![0.0; k]);
-    let svd = truncated_svd_op(
+    let svd = factor::rsvd_op(
         &|x, y| {
             let mut t = s1.borrow_mut();
             sb.sketch.gemv_into(x, &mut t);
@@ -164,6 +166,7 @@ pub fn sketch_svd_from_summaries(sa: &Summary, sb: &Summary, r: usize) -> LowRan
         8,
         5,
         0x77,
+        0,
     );
     lowrank_from_svd(svd)
 }
@@ -171,8 +174,8 @@ pub fn sketch_svd_from_summaries(sa: &Summary, sb: &Summary, r: usize) -> LowRan
 /// Baseline `A_rᵀ·B_r` (Fig. 4c): best rank-r approximations of A and B
 /// individually (as streaming-PCA methods would produce), multiplied.
 pub fn low_rank_product(a: &Mat, b: &Mat, r: usize) -> LowRank {
-    let sa = crate::linalg::svd::truncated_svd(a, r, 8, 5, 0x41);
-    let sb = crate::linalg::svd::truncated_svd(b, r, 8, 5, 0x42);
+    let sa = factor::rsvd(a, r, 8, 5, 0x41, 0);
+    let sb = factor::rsvd(b, r, 8, 5, 0x42, 0);
     // A_r = Ua Sa Vaᵀ, B_r = Ub Sb Vbᵀ ⇒ A_rᵀB_r = Va Sa (UaᵀUb) Sb Vbᵀ.
     let mut core = sa.u.t_matmul(&sb.u); // r×r
     for i in 0..core.rows() {

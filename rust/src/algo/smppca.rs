@@ -95,24 +95,57 @@ pub fn finish_from_summaries_engine(
     cfg: &SmpPcaConfig,
     engine: &dyn crate::runtime::TileEngine,
 ) -> anyhow::Result<SmpPcaOutput> {
+    let omega = sample_stage(sa, sb, cfg)?;
+    let values = estimate_stage(sa, sb, cfg, engine, &omega);
+    complete_stage(sa, sb, cfg, &omega, &values)
+}
+
+/// Leader-finish stage 1: the biased entrywise sample set Ω (paper Eq. 1,
+/// drawn from the exact column norms of the summaries).
+pub fn sample_stage(
+    sa: &Summary,
+    sb: &Summary,
+    cfg: &SmpPcaConfig,
+) -> anyhow::Result<crate::sampling::SampleSet> {
     let n1 = sa.n();
     let n2 = sb.n();
     anyhow::ensure!(sa.k() == sb.k(), "sketch sizes differ");
     anyhow::ensure!(cfg.rank >= 1, "rank must be >= 1");
-
-    // ---- Step 2: biased sampling (Eq. 1) + rescaled JL estimates (Eq. 2).
     let m = if cfg.samples > 0.0 { cfg.samples } else { default_m(n1, n2, cfg.rank) };
     let profile = NormProfile::new(&sa.col_norms, &sb.col_norms);
     let mut rng = Pcg64::new(cfg.seed ^ 0x00e6a); // Ω-sampling stream
     let omega = sample_multinomial_fast(&profile, m, &mut rng);
     anyhow::ensure!(!omega.is_empty(), "sampling produced an empty Ω (m too small?)");
-    let values = if cfg.plain_estimator {
-        crate::estimate::estimate_samples_plain(sa, sb, &omega)
-    } else {
-        engine.estimate(sa, sb, &omega)
-    };
+    Ok(omega)
+}
 
-    // ---- Step 3: weighted alternating minimization (Algorithm 2).
+/// Leader-finish stage 2: rescaled-JL estimates of the sampled entries
+/// (paper Eq. 2) through the tile engine (or the plain-JL ablation path).
+pub fn estimate_stage(
+    sa: &Summary,
+    sb: &Summary,
+    cfg: &SmpPcaConfig,
+    engine: &dyn crate::runtime::TileEngine,
+    omega: &crate::sampling::SampleSet,
+) -> Vec<f64> {
+    if cfg.plain_estimator {
+        crate::estimate::estimate_samples_plain(sa, sb, omega)
+    } else {
+        engine.estimate(sa, sb, omega)
+    }
+}
+
+/// Leader-finish stage 3: weighted alternating minimization (Algorithm 2),
+/// init SVD and re-orthonormalization through `linalg::factor`.
+pub fn complete_stage(
+    sa: &Summary,
+    sb: &Summary,
+    cfg: &SmpPcaConfig,
+    omega: &crate::sampling::SampleSet,
+    values: &[f64],
+) -> anyhow::Result<SmpPcaOutput> {
+    let n1 = sa.n();
+    let n2 = sb.n();
     let obs: Vec<Observation> = omega
         .entries
         .iter()
@@ -121,7 +154,10 @@ pub fn finish_from_summaries_engine(
         .map(|((&(i, j), &q_hat), &value)| Observation { i, j, value, q_hat })
         .collect();
     let row_profile: Vec<f64> = {
-        let fro = profile.a_fro_sq.sqrt();
+        // ‖A‖_F from the exact column norms (same left-fold order as
+        // `NormProfile::new`, so the weights match the sampling stage bit
+        // for bit without rebuilding the whole profile here).
+        let fro = sa.col_norms.iter().map(|n| n * n).sum::<f64>().sqrt();
         sa.col_norms.iter().map(|&n| (n / fro).max(1e-12)).collect()
     };
     let wcfg = WAltMinConfig {
@@ -183,7 +219,7 @@ mod tests {
         let base =
             SmpPcaConfig { rank: 3, sketch_size: 40, seed: 11, threads: 1, ..Default::default() };
         let o1 = smp_pca(&a, &b, &base).unwrap();
-        for t in [2, 4] {
+        for t in [2, 4, 8] {
             let cfg = SmpPcaConfig { threads: t, ..base.clone() };
             let o2 = smp_pca(&a, &b, &cfg).unwrap();
             assert_eq!(o1.factors.u.data(), o2.factors.u.data(), "threads={t}");

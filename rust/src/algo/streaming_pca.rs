@@ -10,7 +10,7 @@
 //! needs).
 
 use crate::completion::LowRank;
-use crate::linalg::{svd_jacobi, Mat};
+use crate::linalg::{factor, Mat};
 
 /// Frequent Directions sketch over vectors of dimension `dim`.
 pub struct FrequentDirections {
@@ -41,7 +41,7 @@ impl FrequentDirections {
     /// keep the strongest ℓ directions.
     fn shrink(&mut self) {
         let active = Mat::from_fn(self.fill, self.buf.cols(), |i, j| self.buf[(i, j)]);
-        let svd = svd_jacobi(&active);
+        let svd = factor::svd(&active, 0);
         let pivot = if svd.s.len() > self.ell { svd.s[self.ell] } else { 0.0 };
         let pivot_sq = pivot * pivot;
         let mut out = Mat::zeros(self.buf.rows(), self.buf.cols());
@@ -89,7 +89,7 @@ pub fn fd_rank_r(x: &Mat, r: usize, ell: usize) -> Mat {
         fd.insert(&col);
     }
     let s = fd.sketch(); // ℓ'×n, SᵀS ≈ XᵀX
-    let svd = svd_jacobi(&s).truncate(r);
+    let svd = factor::svd(&s, 0).truncate(r);
     // A_r ≈ X V Vᵀ with V = top-r right singular vectors of S.
     let v = svd.v; // n×r
     let xv = x.matmul(&v); // d×r
@@ -101,7 +101,7 @@ pub fn fd_low_rank_product(a: &Mat, b: &Mat, r: usize, ell: usize) -> LowRank {
     let ar = fd_rank_r(a, r, ell);
     let br = fd_rank_r(b, r, ell);
     let prod = ar.t_matmul(&br);
-    let svd = crate::linalg::svd::truncated_svd(&prod, r, 6, 3, 0xfd);
+    let svd = factor::rsvd(&prod, r, 6, 3, 0xfd, 0);
     let mut u = svd.u;
     for i in 0..u.rows() {
         for (c, &s) in svd.s.iter().enumerate() {

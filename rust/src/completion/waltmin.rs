@@ -11,9 +11,9 @@
 
 use super::LowRank;
 use crate::linalg::cholesky::solve_normal_eq_flat;
+use crate::linalg::factor;
 use crate::linalg::sparse::Coo;
-use crate::linalg::svd::truncated_svd_op;
-use crate::linalg::{qr_thin, Mat};
+use crate::linalg::Mat;
 use crate::rng::Pcg64;
 
 /// One observed entry of `P_Ω(M̃)`: position, estimated value, and the
@@ -85,6 +85,7 @@ pub fn waltmin(
     assert!(r > 0, "rank must be positive");
     assert!(!obs.is_empty(), "WAltMin needs at least one observation");
     let t_iters = cfg.iters.max(1);
+    let threads = crate::linalg::resolve_threads(cfg.threads);
     let mut rng = Pcg64::new(cfg.seed);
 
     // ---- Step 1: partition Ω into 2T+1 parts (Algorithm 2 line 3). In
@@ -117,7 +118,9 @@ pub fn waltmin(
         }
     }
     let csr = coo.to_csr();
-    let svd = truncated_svd_op(
+    // Init SVD through the blocked subsystem: the QR re-orthonormalizations
+    // inside the range finder go TSQR/compact-WY (bitwise thread-invariant).
+    let svd = factor::rsvd_op(
         &|x, y| csr.spmv_into(x, y),
         &|x, y| csr.spmv_t_into(x, y),
         n1,
@@ -126,6 +129,7 @@ pub fn waltmin(
         (r + 6).min(n2.saturating_sub(r)).max(2),
         3,
         rng.next_u64(),
+        threads,
     );
     let mut u = svd.u; // n1×r orthonormal
 
@@ -151,7 +155,8 @@ pub fn waltmin(
             }
         }
         if trimmed {
-            u = qr_thin(&u).q;
+            // n1×r tall-skinny re-orthonormalization — the shape TSQR is for.
+            u = factor::orthonormalize(&u, threads);
         }
     }
 
@@ -167,7 +172,6 @@ pub fn waltmin(
     // list over observations) — avoids 2·T allocations of O(n + m).
     let mut heads_scratch: Vec<i64> = Vec::new();
     let mut next_scratch: Vec<i64> = vec![-1; obs.len()];
-    let threads = crate::linalg::resolve_threads(cfg.threads);
 
     for t in 0..t_iters {
         let part_v = (2 * t + 1).min(parts - 1);
@@ -491,7 +495,7 @@ mod tests {
         let obs = full_observations(&m_mat);
         let base = WAltMinConfig { rank: 6, iters: 2, threads: 1, ..Default::default() };
         let reference = waltmin(&obs, n, n, &base);
-        for t in [2, 4] {
+        for t in [2, 4, 8] {
             let cfg = WAltMinConfig { threads: t, ..base.clone() };
             let out = waltmin(&obs, n, n, &cfg);
             assert_eq!(out.factors.u.data(), reference.factors.u.data(), "threads={t}");

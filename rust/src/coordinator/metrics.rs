@@ -4,6 +4,25 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+/// Canonical stage names recorded by the pipeline. The leader finish is
+/// broken into its three stages (sampling / estimation / completion — the
+/// completion stage is where the `linalg::factor` init-SVD and TSQR
+/// re-orthonormalization time goes), so Fig. 3(a) can attribute runtime to
+/// the factorization work separately from the estimation kernels.
+pub mod stage {
+    /// The whole sharded sketch pass.
+    pub const PASS_TOTAL: &str = "pass/total";
+    /// Leader finish, end to end.
+    pub const LEADER_FINISH: &str = "leader/finish";
+    /// Leader stage 1: biased Ω sampling (paper Eq. 1).
+    pub const LEADER_SAMPLE: &str = "leader/sample";
+    /// Leader stage 2: rescaled-JL entry estimation (paper Eq. 2).
+    pub const LEADER_ESTIMATE: &str = "leader/estimate";
+    /// Leader stage 3: WAltMin completion incl. the factor-subsystem
+    /// init SVD (Algorithm 2).
+    pub const LEADER_COMPLETE: &str = "leader/waltmin";
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     stages: BTreeMap<String, Duration>,

@@ -2,8 +2,8 @@
 //! finish. Also hosts the two-pass LELA pipeline used for the Fig 3(a)
 //! runtime comparison (it re-reads the source — that's the point).
 
-use crate::algo::{finish_from_summaries_engine, SmpPcaConfig, SmpPcaOutput};
-use crate::coordinator::metrics::{Metrics, StageTimer};
+use crate::algo::{complete_stage, estimate_stage, sample_stage, SmpPcaConfig, SmpPcaOutput};
+use crate::coordinator::metrics::{stage, Metrics, StageTimer};
 use crate::runtime::TileEngine;
 use crate::sketch::ingest::{self, IngestConfig};
 use crate::sketch::Summary;
@@ -54,13 +54,24 @@ impl Pipeline {
         Self { cfg, engine }
     }
 
-    /// Run the full single-pass pipeline on a source.
+    /// Run the full single-pass pipeline on a source. The leader finish is
+    /// staged so the metrics attribute time to sampling, estimation, and
+    /// the (factor-subsystem-backed) completion separately — the composed
+    /// result is identical to `finish_from_summaries_engine`.
     pub fn run(&self, source: Box<dyn EntrySource>) -> anyhow::Result<PipelineOutput> {
         let mut metrics = Metrics::new();
         let (sa, sb) = self.sketch_pass(source, &mut metrics)?;
+        let t_total = StageTimer::start();
         let t = StageTimer::start();
-        let result = finish_from_summaries_engine(&sa, &sb, &self.cfg.algo, self.engine.as_ref())?;
-        metrics.record_stage("leader/finish", t.stop());
+        let omega = sample_stage(&sa, &sb, &self.cfg.algo)?;
+        metrics.record_stage(stage::LEADER_SAMPLE, t.stop());
+        let t = StageTimer::start();
+        let values = estimate_stage(&sa, &sb, &self.cfg.algo, self.engine.as_ref(), &omega);
+        metrics.record_stage(stage::LEADER_ESTIMATE, t.stop());
+        let t = StageTimer::start();
+        let result = complete_stage(&sa, &sb, &self.cfg.algo, &omega, &values)?;
+        metrics.record_stage(stage::LEADER_COMPLETE, t.stop());
+        metrics.record_stage(stage::LEADER_FINISH, t_total.stop());
         metrics.add("omega_samples", result.samples_drawn as u64);
         Ok(PipelineOutput { result, metrics })
     }
@@ -91,7 +102,7 @@ impl Pipeline {
         metrics.add("entries_routed", run.stats.entries_routed);
         metrics.add("worker/entries", run.stats.entries_sketched);
         metrics.record_stage("worker/sketch", run.stats.worker_busy);
-        metrics.record_stage("pass/total", run.stats.pass_time);
+        metrics.record_stage(stage::PASS_TOTAL, run.stats.pass_time);
         metrics.record_stage("merge", run.stats.merge_time);
         Ok((run.a, run.b))
     }
@@ -258,8 +269,11 @@ mod tests {
             .run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 3 }))
             .unwrap();
         assert_eq!(out.metrics.counter("entries_routed"), (60 * 20 + 60 * 22) as u64);
-        assert!(out.metrics.stage("pass/total").is_some());
-        assert!(out.metrics.stage("leader/finish").is_some());
+        assert!(out.metrics.stage(stage::PASS_TOTAL).is_some());
+        assert!(out.metrics.stage(stage::LEADER_FINISH).is_some());
+        assert!(out.metrics.stage(stage::LEADER_SAMPLE).is_some());
+        assert!(out.metrics.stage(stage::LEADER_ESTIMATE).is_some());
+        assert!(out.metrics.stage(stage::LEADER_COMPLETE).is_some());
         assert!(out.metrics.counter("omega_samples") > 0);
     }
 

@@ -189,7 +189,7 @@ pub fn url_like(d1: usize, d2: usize, n: usize, rng: &mut Pcg64) -> (Mat, Mat) {
 /// approximation of `AᵀB` even though each factor is well-approximated.
 pub fn orthogonal_topr(d: usize, n: usize, r: usize, rng: &mut Pcg64) -> (Mat, Mat) {
     assert!(2 * r <= d, "need 2r <= d for orthogonal top subspaces");
-    let q = crate::linalg::qr_thin(&Mat::gaussian(d, 2 * r, rng)).q;
+    let q = crate::linalg::factor::orthonormalize(&Mat::gaussian(d, 2 * r, rng), 0);
     let ua = q.cols_slice(0, r); // top-r left space of A
     let ub = q.cols_slice(r, 2 * r); // top-r left space of B, ⟂ to ua
     // A = hi·ua·v_hiᵀ + lo·ub·v_loᵀ: A's top-r lives in ua, but A keeps
@@ -203,7 +203,7 @@ pub fn orthogonal_topr(d: usize, n: usize, r: usize, rng: &mut Pcg64) -> (Mat, M
         // v_hi ⟂ v_lo: otherwise AAᵀ picks up ua↔ub cross terms and the
         // top-r left subspace is no longer exactly `hi_space`.
         assert!(2 * r <= n, "need 2r <= n");
-        let v_both = crate::linalg::qr_thin(&Mat::gaussian(n, 2 * r, rng)).q;
+        let v_both = crate::linalg::factor::orthonormalize(&Mat::gaussian(n, 2 * r, rng), 0);
         let v_hi = v_both.cols_slice(0, r);
         let v_lo = v_both.cols_slice(r, 2 * r);
         let mut m_hi = hi_space.matmul_t(&v_hi);

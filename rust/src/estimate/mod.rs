@@ -40,10 +40,28 @@ pub fn rescaled_jl_dot(sa: &[f64], sb: &[f64], na: f64, nb: f64) -> f64 {
 /// sketch columns out of the two summaries. Returns values aligned with
 /// `omega.entries`.
 ///
-/// Sorting by `i` gives cache locality on `Ã` and lets us hoist the
-/// `‖Ã_i‖` computation per row run; entries are returned in the original
-/// order regardless.
+/// All sketched column norms `‖Ã_i‖`, `‖B̃_j‖` are precomputed once through
+/// [`Summary::sketch_col_norms`] — O((n1+n2)·k) — instead of recomputing
+/// `‖B̃_j‖` per sampled entry, which was O(|Ω|·k) redundant work on top of
+/// the unavoidable per-entry sketch dot product. Sorting by `i` gives
+/// cache locality on `Ã` and hoists the `Ã_i` gather per row run; entries
+/// are returned in the original order regardless.
 pub fn estimate_samples(a: &Summary, b: &Summary, omega: &SampleSet) -> Vec<f64> {
+    let sna_all = a.sketch_col_norms();
+    let snb_all = b.sketch_col_norms();
+    estimate_samples_with_norms(a, b, omega, &sna_all, &snb_all)
+}
+
+/// [`estimate_samples`] with caller-supplied sketched column norms, so a
+/// sharded estimate (the `ParNativeEngine` worker pool) pays the
+/// O((n1+n2)·k) norm sweep once instead of once per worker shard.
+pub fn estimate_samples_with_norms(
+    a: &Summary,
+    b: &Summary,
+    omega: &SampleSet,
+    sna_all: &[f64],
+    snb_all: &[f64],
+) -> Vec<f64> {
     let k = a.k();
     assert_eq!(k, b.k(), "sketch size mismatch");
     let mut order: Vec<usize> = (0..omega.entries.len()).collect();
@@ -51,24 +69,19 @@ pub fn estimate_samples(a: &Summary, b: &Summary, omega: &SampleSet) -> Vec<f64>
     let mut out = vec![0.0; omega.entries.len()];
     let mut cur_i = usize::MAX;
     let mut sa: Vec<f64> = vec![0.0; k];
-    let mut sna = 0.0;
     for &t in &order {
         let (i, j) = omega.entries[t];
         if i != cur_i {
             for (row, v) in sa.iter_mut().enumerate() {
                 *v = a.sketch[(row, i)];
             }
-            sna = dot(&sa, &sa).sqrt();
             cur_i = i;
         }
         let mut sb_dot = 0.0;
-        let mut sb_sq = 0.0;
         for (row, &sav) in sa.iter().enumerate() {
-            let sbv = b.sketch[(row, j)];
-            sb_dot += sav * sbv;
-            sb_sq += sbv * sbv;
+            sb_dot += sav * b.sketch[(row, j)];
         }
-        let snb = sb_sq.sqrt();
+        let (sna, snb) = (sna_all[i], snb_all[j]);
         out[t] = if sna <= 0.0 || snb <= 0.0 {
             0.0
         } else {
@@ -104,29 +117,21 @@ pub fn rescaled_gram(a: &Summary, b: &Summary) -> Mat {
 }
 
 /// Apply the `D_A · G · D_B` rescale of Eq. (2) to a precomputed `ÃᵀB̃`.
+/// The sketched norms come from the one-sweep [`Summary::sketch_col_norms`]
+/// (bit-identical to per-column `col_norm` walks, without the stride-n
+/// traffic).
 pub fn scale_gram(g: &Mat, a: &Summary, b: &Summary) -> Mat {
     let n1 = g.rows();
     let n2 = g.cols();
-    let da: Vec<f64> = (0..n1)
-        .map(|i| {
-            let sn = a.sketch.col_norm(i);
-            if sn > 0.0 {
-                a.col_norms[i] / sn
-            } else {
-                0.0
-            }
-        })
-        .collect();
-    let db: Vec<f64> = (0..n2)
-        .map(|j| {
-            let sn = b.sketch.col_norm(j);
-            if sn > 0.0 {
-                b.col_norms[j] / sn
-            } else {
-                0.0
-            }
-        })
-        .collect();
+    let scale = |norms: &[f64], sketched: Vec<f64>| -> Vec<f64> {
+        sketched
+            .into_iter()
+            .zip(norms)
+            .map(|(sn, &n)| if sn > 0.0 { n / sn } else { 0.0 })
+            .collect()
+    };
+    let da = scale(&a.col_norms, a.sketch_col_norms());
+    let db = scale(&b.col_norms, b.sketch_col_norms());
     Mat::from_fn(n1, n2, |i, j| da[i] * g[(i, j)] * db[j])
 }
 

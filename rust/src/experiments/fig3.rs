@@ -93,7 +93,7 @@ pub fn fig3b(scale: f64) -> Table {
     ] {
         let opt = spectral_error(&optimal_rank_r(a, b, r), a, b);
         let lela_err = spectral_error(
-            &crate::algo::lela(a, b, &LelaConfig { rank: r, iters: 8, seed: 3, samples: 0.0 })
+            &crate::algo::lela(a, b, &LelaConfig { rank: r, iters: 8, seed: 3, ..Default::default() })
                 .expect("lela failed"),
             a,
             b,

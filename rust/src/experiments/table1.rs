@@ -43,7 +43,7 @@ pub fn table1(scale: f64) -> Table {
     ] {
         let e_opt = spectral_error(&optimal_rank_r(a, b, r), a, b);
         let e_lela = spectral_error(
-            &crate::algo::lela(a, b, &LelaConfig { rank: r, iters: 10, seed: 3, samples: 0.0 })
+            &crate::algo::lela(a, b, &LelaConfig { rank: r, iters: 10, seed: 3, ..Default::default() })
                 .expect("lela"),
             a,
             b,

@@ -203,6 +203,17 @@ impl Mat {
         Mat::from_fn(self.rows, hi - lo, |i, j| self[(i, lo + j)])
     }
 
+    /// Copy of rows `lo..hi` (contiguous in row-major storage — one
+    /// memcpy; the TSQR leaf/merge splits run through this).
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
     pub fn max_abs(&self) -> f64 {
         self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
     }

@@ -1,0 +1,273 @@
+//! Blocked Householder QR with compact-WY accumulation.
+//!
+//! Panels of width [`NB`] are factored with the same Level-2 scalar
+//! Householder sequence as the unblocked oracle ([`crate::linalg::qr_thin`],
+//! identical sign convention, `H = I − τ v vᵀ` with `τ = 2/‖v‖²`); the
+//! panel's reflectors are then aggregated into the compact-WY form
+//! `H₁…H_nb = I − V T Vᵀ` so the trailing update and the thin-Q
+//! accumulation become GEMM calls through [`crate::linalg::gemm`] — which
+//! makes them parallel (via the shared pool policy) and, because the GEMM
+//! row-shards without reordering any reduction, bitwise independent of the
+//! thread count.
+//!
+//! Degenerate (numerically zero) columns produce `τ = 0` reflectors: the
+//! corresponding V column is zero and the T column is zero, so
+//! `I − V T Vᵀ` treats them as the identity — no ‖v‖² division ever sees a
+//! zero vector, the guard contract shared with the unblocked oracle.
+
+use crate::linalg::dense::Mat;
+use crate::linalg::gemm;
+use crate::linalg::qr::QrThin;
+
+/// Panel width of the blocked QR (columns factored per compact-WY block).
+/// Wide enough that the two trailing GEMMs dominate, small enough that the
+/// Level-2 panel work stays in L1/L2. See EXPERIMENTS.md §Perf.
+pub const NB: usize = 32;
+
+/// One factored panel: global column offset, the lower-trapezoidal
+/// Householder vectors `V` (`(m−k0) × pw`, column `j` zero above row `j`),
+/// and the `pw × pw` upper-triangular compact-WY `T`.
+struct Panel {
+    k0: usize,
+    v: Mat,
+    t: Mat,
+}
+
+/// Blocked thin QR `A = Q R` (requires `rows ≥ cols`). `nb` is the panel
+/// width ([`NB`] is the tuned default), `threads` sizes the GEMM pool
+/// (`0` = auto) and never changes the result bits.
+pub fn qr_blocked(a: &Mat, nb: usize, threads: usize) -> QrThin {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "qr_blocked requires rows >= cols ({m} < {n})");
+    let nb = nb.max(1);
+    let mut r = a.clone();
+    let mut panels: Vec<Panel> = Vec::with_capacity(n.div_ceil(nb));
+    for k0 in (0..n).step_by(nb) {
+        let k1 = (k0 + nb).min(n);
+        let pw = k1 - k0;
+        let mh = m - k0;
+        // ---- Panel factorization: Level-2 Householder on pw columns.
+        let mut v = Mat::zeros(mh, pw);
+        let mut tau = vec![0.0f64; pw];
+        for j in 0..pw {
+            let k = k0 + j; // global pivot row/column
+            let mut norm2 = 0.0;
+            for i in k..m {
+                norm2 += r[(i, k)] * r[(i, k)];
+            }
+            if norm2 < f64::MIN_POSITIVE {
+                // Degenerate column: H = I, marked by τ = 0 (V column
+                // stays zero; every later application skips it).
+                continue;
+            }
+            let norm = norm2.sqrt();
+            let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+            for i in k..m {
+                v[(i - k0, j)] = r[(i, k)];
+            }
+            v[(j, j)] -= alpha;
+            let vnorm2: f64 = (j..mh).map(|i| v[(i, j)] * v[(i, j)]).sum();
+            if vnorm2 < f64::MIN_POSITIVE {
+                for i in j..mh {
+                    v[(i, j)] = 0.0;
+                }
+                continue;
+            }
+            tau[j] = 2.0 / vnorm2;
+            // Apply H to the remaining columns of this panel only — the
+            // trailing matrix is updated once per panel, below.
+            for c in (k + 1)..k1 {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[(i - k0, j)] * r[(i, c)];
+                }
+                let s = tau[j] * dot;
+                for i in k..m {
+                    r[(i, c)] -= s * v[(i - k0, j)];
+                }
+            }
+            r[(k, k)] = alpha;
+            for i in (k + 1)..m {
+                r[(i, k)] = 0.0;
+            }
+        }
+        let t = build_t(&v, &tau);
+        // ---- Trailing update: C ← (I − V T Vᵀ)ᵀ C = C − V Tᵀ (Vᵀ C),
+        // two big GEMMs plus a pw×pw triangular one.
+        if k1 < n {
+            let nc = n - k1;
+            let c = copy_block(&r, k0, m, k1, n);
+            let mut w = Mat::zeros(pw, nc);
+            gemm::t_matmul_into(&v, &c, &mut w, threads);
+            let mut w2 = Mat::zeros(pw, nc);
+            gemm::t_matmul_into(&t, &w, &mut w2, threads);
+            let mut vw = Mat::zeros(mh, nc);
+            gemm::matmul_into(&v, &w2, &mut vw, threads);
+            for i in 0..mh {
+                for (jj, vwv) in vw.row(i).iter().enumerate() {
+                    r[(k0 + i, k1 + jj)] = c[(i, jj)] - vwv;
+                }
+            }
+        }
+        panels.push(Panel { k0, v, t });
+    }
+    // ---- Thin Q: apply the panel factors in reverse order to the first n
+    // columns of the identity — Q·E = Q₁(Q₂(…(Q_p E))), each application
+    // X ← X − V (T (Vᵀ X)) being two GEMMs.
+    let mut q = Mat::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for p in panels.iter().rev() {
+        let mh = m - p.k0;
+        let pw = p.v.cols();
+        let x = q.rows_slice(p.k0, m); // full-width row block: one memcpy
+        let mut w = Mat::zeros(pw, n);
+        gemm::t_matmul_into(&p.v, &x, &mut w, threads);
+        let mut w2 = Mat::zeros(pw, n);
+        gemm::matmul_into(&p.t, &w, &mut w2, threads);
+        let mut vw = Mat::zeros(mh, n);
+        gemm::matmul_into(&p.v, &w2, &mut vw, threads);
+        for i in 0..mh {
+            for j in 0..n {
+                q[(p.k0 + i, j)] = x[(i, j)] - vw[(i, j)];
+            }
+        }
+    }
+    // R: the top n×n upper triangle (the panel loop already zeroed below
+    // the diagonal).
+    let mut r_out = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+    QrThin { q, r: r_out }
+}
+
+/// Build the upper-triangular compact-WY factor from the panel's reflector
+/// columns and their τ's: `H₁…H_pw = I − V T Vᵀ` via the column recurrence
+/// `T[0..j, j] = −τⱼ · T[0..j, 0..j] · (V[:, 0..j]ᵀ vⱼ)`, `T[j, j] = τⱼ`.
+/// A degenerate reflector (τ = 0) contributes a zero column — exactly the
+/// identity factor.
+fn build_t(v: &Mat, tau: &[f64]) -> Mat {
+    let pw = v.cols();
+    let mh = v.rows();
+    let mut t = Mat::zeros(pw, pw);
+    let mut w = vec![0.0f64; pw];
+    for j in 0..pw {
+        t[(j, j)] = tau[j];
+        if tau[j] == 0.0 || j == 0 {
+            continue;
+        }
+        // w = V[:, 0..j]ᵀ vⱼ (vⱼ is zero above row j, so start there).
+        for (p, wp) in w.iter_mut().enumerate().take(j) {
+            let mut acc = 0.0;
+            for i in j..mh {
+                acc += v[(i, p)] * v[(i, j)];
+            }
+            *wp = acc;
+        }
+        for p in 0..j {
+            let mut acc = 0.0;
+            for q in p..j {
+                acc += t[(p, q)] * w[q];
+            }
+            t[(p, j)] = -tau[j] * acc;
+        }
+    }
+    t
+}
+
+/// Contiguous copy of the block `src[r0..r1, c0..c1]`.
+fn copy_block(src: &Mat, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+    Mat::from_fn(r1 - r0, c1 - c0, |i, j| src[(r0 + i, c0 + j)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr_thin;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_close, prop};
+
+    fn check(a: &Mat, nb: usize, tol: f64) {
+        let QrThin { q, r } = qr_blocked(a, nb, 1);
+        assert_close(q.matmul(&r).data(), a.data(), tol);
+        assert_close(q.t_matmul(&q).data(), Mat::eye(a.cols()).data(), tol);
+        for i in 0..r.rows() {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < tol, "R not upper-tri at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_unblocked_oracle_on_ragged_shapes() {
+        // The blocked path runs the identical reflector sequence with a
+        // different (GEMM) update order — same R and Q to rounding.
+        prop(71, 20, |rng| {
+            // m ≥ n + 3 keeps the Gaussian draws comfortably conditioned,
+            // so the two computation orders agree well inside 1e-10.
+            let n = 1 + rng.next_below(12) as usize;
+            let m = n + 3 + rng.next_below(50) as usize;
+            let nb = 1 + rng.next_below(8) as usize;
+            let a = Mat::gaussian(m, n, rng);
+            let blocked = qr_blocked(&a, nb, 1);
+            let oracle = qr_thin(&a);
+            assert_close(blocked.r.data(), oracle.r.data(), 1e-10);
+            assert_close(blocked.q.data(), oracle.q.data(), 1e-10);
+        });
+    }
+
+    #[test]
+    fn panel_width_does_not_change_math() {
+        let mut rng = Pcg64::new(72);
+        let a = Mat::gaussian(90, 37, &mut rng);
+        for nb in [1, 2, 7, 32, 64] {
+            check(&a, nb, 1e-10);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let mut rng = Pcg64::new(73);
+        let a = Mat::gaussian(120, 40, &mut rng);
+        let f1 = qr_blocked(&a, NB, 1);
+        for t in [2, 4, 8] {
+            let ft = qr_blocked(&a, NB, t);
+            assert_eq!(ft.q.data(), f1.q.data(), "threads={t}");
+            assert_eq!(ft.r.data(), f1.r.data(), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn rank_deficient_and_zero_columns() {
+        // Zero column inside a panel and duplicated columns across panels:
+        // degenerate reflectors must be skipped, Q stays orthonormal.
+        let mut rng = Pcg64::new(74);
+        let base = Mat::gaussian(20, 1, &mut rng);
+        let a = Mat::from_fn(20, 5, |i, j| match j {
+            0 | 3 => base[(i, 0)],
+            2 => 0.0,
+            _ => ((i * 7 + j) % 5) as f64 - 2.0,
+        });
+        let QrThin { q, r } = qr_blocked(&a, 2, 1);
+        assert!(q.data().iter().all(|v| v.is_finite()));
+        assert_close(q.matmul(&r).data(), a.data(), 1e-9);
+        assert_close(q.t_matmul(&q).data(), Mat::eye(5).data(), 1e-9);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat::zeros(6, 3);
+        let QrThin { q, r } = qr_blocked(&a, NB, 1);
+        assert!(r.max_abs() < 1e-14);
+        assert_close(q.t_matmul(&q).data(), Mat::eye(3).data(), 1e-12);
+    }
+
+    #[test]
+    fn square_input() {
+        let mut rng = Pcg64::new(75);
+        let a = Mat::gaussian(33, 33, &mut rng);
+        check(&a, NB, 1e-10);
+    }
+}

@@ -1,0 +1,145 @@
+//! One-sided Jacobi SVD with rotations applied to contiguous column
+//! groups.
+//!
+//! The oracle ([`crate::linalg::svd_jacobi`]) rotates pairs of columns of a
+//! row-major working matrix — every touch is a stride-`n` walk. Here the
+//! working buffers are stored **transposed** (`n×m`: original column `j` is
+//! the contiguous row `j`), so the 2×2 Gram accumulation and the rotation
+//! of a column pair both stream two unit-stride rows. The arithmetic —
+//! sweep order, per-element rotation, accumulation order of every dot
+//! product, the sort — replays the oracle exactly, so the result is
+//! **bitwise identical** to `svd_jacobi` (pinned by a test); only the
+//! memory access pattern changes.
+
+use crate::linalg::dense::Mat;
+use crate::linalg::svd::Svd;
+
+/// One-sided Jacobi SVD of a dense matrix (any shape). Bitwise identical
+/// to [`crate::linalg::svd_jacobi`]; cache-friendly on large inputs.
+pub fn jacobi_svd(a: &Mat) -> Svd {
+    if a.rows() < a.cols() {
+        // SVD(Aᵀ) = V Σ Uᵀ — swap factors.
+        let t = jacobi_svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    let m = a.rows();
+    let n = a.cols();
+    let mut wt = a.transpose(); // n×m: row j = evolving column j (→ σⱼuⱼ)
+    let mut vt = Mat::eye(n); // n×n: row j = column j of V
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2×2 Gram of columns p, q — two contiguous rows of wt.
+                let (wp, wq) = row_pair(&mut wt, p, q);
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for (&xp, &xq) in wp.iter().zip(wq.iter()) {
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                let denom = (app * aqq).sqrt();
+                if denom > 0.0 {
+                    off = off.max(apq.abs() / denom);
+                }
+                if apq.abs() <= eps * denom {
+                    continue;
+                }
+                // Jacobi rotation zeroing the off-diagonal of the Gram.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate(wp, wq, c, s);
+                let (vp, vq) = row_pair(&mut vt, p, q);
+                rotate(vp, vq, c, s);
+            }
+        }
+        if off < 1e-13 {
+            break;
+        }
+    }
+    // Extract σ and U, sorted descending (same order and arithmetic as the
+    // oracle's `col_norm` walk).
+    let mut svals: Vec<(f64, usize)> = (0..n)
+        .map(|j| (wt.row(j).iter().map(|x| x * x).sum::<f64>().sqrt(), j))
+        .collect();
+    svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut u = Mat::zeros(m, n);
+    let mut vout = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (out_j, &(sigma, j)) in svals.iter().enumerate() {
+        s.push(sigma);
+        if sigma > 0.0 {
+            for (i, &w) in wt.row(j).iter().enumerate() {
+                u[(i, out_j)] = w / sigma;
+            }
+        }
+        // σ = 0: leave a zero U column (callers treat rank-aware).
+        for (i, &v) in vt.row(j).iter().enumerate() {
+            vout[(i, out_j)] = v;
+        }
+    }
+    Svd { u, s, v: vout }
+}
+
+/// Disjoint mutable borrows of rows `p < q`.
+fn row_pair(m: &mut Mat, p: usize, q: usize) -> (&mut [f64], &mut [f64]) {
+    debug_assert!(p < q);
+    let cols = m.cols();
+    let (lo, hi) = m.data_mut().split_at_mut(q * cols);
+    (&mut lo[p * cols..(p + 1) * cols], &mut hi[..cols])
+}
+
+/// Apply the Givens rotation to a contiguous row pair (element-wise — the
+/// unit-stride loops autovectorize).
+#[inline]
+fn rotate(rp: &mut [f64], rq: &mut [f64], c: f64, s: f64) {
+    for (xp, xq) in rp.iter_mut().zip(rq.iter_mut()) {
+        let p0 = *xp;
+        let q0 = *xq;
+        *xp = c * p0 - s * q0;
+        *xq = s * p0 + c * q0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_jacobi;
+    use crate::testing::prop;
+
+    #[test]
+    fn bitwise_identical_to_oracle() {
+        // The whole point: contiguous layout, same arithmetic, same bits.
+        prop(91, 12, |rng| {
+            let m = 1 + rng.next_below(14) as usize;
+            let n = 1 + rng.next_below(14) as usize;
+            let a = Mat::gaussian(m, n, rng);
+            let fast = jacobi_svd(&a);
+            let oracle = svd_jacobi(&a);
+            assert_eq!(fast.s, oracle.s);
+            assert_eq!(fast.u.data(), oracle.u.data());
+            assert_eq!(fast.v.data(), oracle.v.data());
+        });
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat::zeros(5, 4);
+        let svd = jacobi_svd(&a);
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+        assert!(svd.u.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Mat::from_fn(3, 3, |i, j| if i == j { (3 - i) as f64 } else { 0.0 });
+        let svd = jacobi_svd(&a);
+        crate::testing::assert_close(&svd.s, &[3.0, 2.0, 1.0], 1e-12);
+    }
+}

@@ -1,0 +1,196 @@
+//! Blocked, GEMM-backed dense factorizations — the Level-3 replacement for
+//! the column-at-a-time Householder QR and the sequential one-sided Jacobi
+//! that the leader finish used to run.
+//!
+//! Once the sketch pass is cheap (PR 2), the factorization of the sketch
+//! becomes the bottleneck — the same observation Tropp et al. make for
+//! practical sketching algorithms. Everything here therefore routes its
+//! flops through [`crate::linalg::gemm`] (packed, cache-blocked, optionally
+//! multithreaded) or through worker pools whose work assignment is a pure
+//! function of the problem shape:
+//!
+//! * [`qr_blocked`] — blocked Householder QR with compact-WY accumulation
+//!   (`I − V T Vᵀ`): panels of width [`NB`] are factored with Level-2
+//!   scalar code, trailing updates and Q accumulation are GEMM calls;
+//! * [`tsqr`] — tree-reduction tall-skinny QR for the `m ≫ n` shapes the
+//!   WAltMin init and the randomized range finder produce, sharded over a
+//!   scoped worker pool with a deterministic pairwise reduction (the same
+//!   `tree_merge` discipline as `sketch::ingest`);
+//! * [`jacobi_svd`] — the exact one-sided Jacobi fallback, with rotations
+//!   applied to contiguous column groups (the working buffer is stored
+//!   transposed so each column is a unit-stride row);
+//! * [`rsvd`] / [`rsvd_op`] — randomized truncated SVD by subspace
+//!   iteration, re-orthonormalizing through the blocked QR;
+//! * [`qr`] and [`svd`] — shape-aware drivers that dispatch between the
+//!   paths above.
+//!
+//! # Determinism contract
+//!
+//! Every function here is **bitwise independent of the thread count**: GEMM
+//! shards row panels without changing any reduction order, TSQR's leaf plan
+//! and reduction tree depend only on the matrix shape (each node is
+//! computed entirely by one worker), and the Jacobi sweeps are sequential.
+//! The unblocked [`crate::linalg::qr_thin`] and
+//! [`crate::linalg::svd_jacobi`] remain in-tree as the property-test
+//! oracles, mirroring the `gemm::matmul_naive` pattern.
+
+pub mod blocked;
+pub mod jacobi;
+pub mod rsvd;
+pub mod tsqr;
+
+pub use blocked::{qr_blocked, NB};
+pub use jacobi::jacobi_svd;
+pub use rsvd::{rsvd, rsvd_op};
+pub use tsqr::tsqr;
+
+use super::dense::Mat;
+use super::qr::QrThin;
+use super::svd::Svd;
+
+/// Aspect ratio (`rows / cols`) above which [`qr`] routes to [`tsqr`].
+pub const TSQR_ASPECT: usize = 8;
+/// Minimum row count before TSQR engages (below this the tree has a single
+/// leaf and the blocked path is strictly simpler).
+const TSQR_MIN_ROWS: usize = 256;
+/// Aspect ratio above which [`svd`] goes QR-first (factor, then Jacobi the
+/// small triangular factor) instead of rotating the full matrix.
+const QR_FIRST_ASPECT: usize = 2;
+
+/// Shape-aware thin QR: tree-reduction TSQR for genuinely tall-skinny
+/// inputs, blocked compact-WY Householder otherwise. `threads = 0` = auto
+/// (the crate-wide `SMPPCA_THREADS` policy); the result is bitwise
+/// identical for every thread count.
+pub fn qr(a: &Mat, threads: usize) -> QrThin {
+    let (m, n) = (a.rows(), a.cols());
+    if n > 0 && m >= TSQR_MIN_ROWS && m / n >= TSQR_ASPECT {
+        tsqr(a, threads)
+    } else {
+        qr_blocked(a, NB, threads)
+    }
+}
+
+/// Orthonormalize the columns of `a` (thin-Q of the shape-aware [`qr`]).
+pub fn orthonormalize(a: &Mat, threads: usize) -> Mat {
+    qr(a, threads).q
+}
+
+/// Shape-aware exact SVD driver.
+///
+/// * wide inputs are transposed (factors swap);
+/// * tall inputs (`rows ≥ 2·cols`) go **QR-first**: factor through the
+///   shape-aware [`qr`] (TSQR for the extreme aspect ratios), then Jacobi
+///   the small `n×n` triangular factor and push `U = Q·U_R` through the
+///   packed GEMM;
+/// * near-square inputs go straight to the contiguous-column-group Jacobi,
+///   which is bitwise identical to the [`crate::linalg::svd_jacobi`]
+///   oracle.
+pub fn svd(a: &Mat, threads: usize) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    if m < n {
+        // SVD(Aᵀ) = V Σ Uᵀ — swap factors.
+        let t = svd(&a.transpose(), threads);
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    if n > 0 && m >= QR_FIRST_ASPECT * n {
+        let QrThin { q, r } = qr(a, threads);
+        let small = jacobi_svd(&r); // n×n
+        let u = q.par_matmul(&small.u, threads);
+        return Svd { u, s: small.s, v: small.v };
+    }
+    jacobi_svd(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{fro_norm, svd_jacobi};
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_close, prop};
+
+    #[test]
+    fn qr_driver_contract_on_ragged_shapes() {
+        prop(61, 15, |rng| {
+            let n = 1 + rng.next_below(10) as usize;
+            let m = n + rng.next_below(40) as usize;
+            let a = Mat::gaussian(m, n, rng);
+            let QrThin { q, r } = qr(&a, 0);
+            assert_close(q.matmul(&r).data(), a.data(), 1e-10);
+            assert_close(q.t_matmul(&q).data(), Mat::eye(n).data(), 1e-10);
+            for i in 0..n {
+                for j in 0..i {
+                    assert!(r[(i, j)].abs() < 1e-12, "R not upper-tri at ({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn qr_dispatches_to_tsqr_for_tall() {
+        // Tall enough for the TSQR route; the contract must hold there too.
+        let mut rng = Pcg64::new(62);
+        let a = Mat::gaussian(600, 5, &mut rng);
+        let f1 = qr(&a, 1);
+        let f2 = tsqr(&a, 1);
+        assert_eq!(f1.q.data(), f2.q.data(), "tall shapes must route to tsqr");
+        assert_eq!(f1.r.data(), f2.r.data());
+    }
+
+    #[test]
+    fn svd_driver_matches_jacobi_oracle() {
+        prop(63, 12, |rng| {
+            let m = 2 + rng.next_below(30) as usize;
+            let n = 2 + rng.next_below(12) as usize;
+            let a = Mat::gaussian(m, n, rng);
+            let fast = svd(&a, 0);
+            let oracle = svd_jacobi(&a);
+            assert_close(&fast.s, &oracle.s, 1e-10);
+            let diff = fast.reconstruct().sub(&a);
+            assert!(fro_norm(&diff) <= 1e-10 * fro_norm(&a).max(1.0));
+        });
+    }
+
+    #[test]
+    fn svd_square_path_is_bitwise_jacobi() {
+        // Near-square dispatch goes straight to the contiguous-column
+        // Jacobi, which replays the oracle's arithmetic exactly.
+        let mut rng = Pcg64::new(64);
+        let a = Mat::gaussian(14, 11, &mut rng);
+        let fast = svd(&a, 0);
+        let oracle = svd_jacobi(&a);
+        assert_eq!(fast.s, oracle.s);
+        assert_eq!(fast.u.data(), oracle.u.data());
+        assert_eq!(fast.v.data(), oracle.v.data());
+    }
+
+    #[test]
+    fn svd_wide_input_swaps_factors() {
+        let mut rng = Pcg64::new(65);
+        let a = Mat::gaussian(6, 40, &mut rng);
+        let s = svd(&a, 0);
+        assert_eq!(s.u.rows(), 6);
+        assert_eq!(s.v.rows(), 40);
+        let diff = s.reconstruct().sub(&a);
+        assert!(fro_norm(&diff) <= 1e-9 * fro_norm(&a));
+    }
+
+    #[test]
+    fn orthonormalize_threads_do_not_change_bits() {
+        let mut rng = Pcg64::new(66);
+        for &(m, n) in &[(40usize, 7usize), (700, 6)] {
+            let a = Mat::gaussian(m, n, &mut rng);
+            let q1 = orthonormalize(&a, 1);
+            for t in [2, 4, 8] {
+                assert_eq!(orthonormalize(&a, t).data(), q1.data(), "threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn qr_zero_cols() {
+        let a = Mat::zeros(5, 0);
+        let f = qr(&a, 0);
+        assert_eq!(f.q.cols(), 0);
+        assert_eq!(f.r.rows(), 0);
+    }
+}

@@ -1,0 +1,218 @@
+//! TSQR — tree-reduction tall-skinny QR.
+//!
+//! The `m ≫ n` shapes the WAltMin init and the randomized range finder
+//! produce are factored as a reduction tree: the rows are split into leaf
+//! blocks (a pure function of the shape), each leaf is QR'd independently,
+//! and the small `n×n` R factors pairwise-reduce — stack `[R_a; R_b]`,
+//! factor the `2n×n` stack, and push the resulting orthogonal factor down
+//! into the children's Q's with two GEMMs. This is the same deterministic
+//! pairwise discipline as `sketch::ingest::tree_merge`: level by level,
+//! node `2p` merges with `2p + 1`, an odd tail node passes through.
+//!
+//! # Determinism contract
+//!
+//! The leaf plan and the reduction tree depend **only on the matrix
+//! shape**, never on the worker count; each leaf/merge is computed entirely
+//! by one worker with a fixed operation order (and the GEMMs inside are
+//! themselves bitwise thread-invariant), so the result is bitwise identical
+//! at any thread count — property-tested at 1/2/8 workers in
+//! `tests/factor_props.rs`.
+
+use super::blocked::{qr_blocked, NB};
+use crate::linalg::dense::Mat;
+use crate::linalg::gemm;
+use crate::linalg::qr::QrThin;
+
+/// Rows per leaf ≈ `LEAF_COLS_FACTOR · n` (floored at [`MIN_LEAF_ROWS`]) —
+/// leaves stay tall enough that the leaf QR is compute-bound.
+const LEAF_COLS_FACTOR: usize = 4;
+const MIN_LEAF_ROWS: usize = 128;
+
+/// One tree node: the accumulated orthonormal factor over its row range
+/// and the current `n×n` triangular factor.
+struct Node {
+    q: Mat,
+    r: Mat,
+}
+
+/// Tree-reduction thin QR `A = Q R` (requires `rows ≥ cols`). `threads`
+/// sizes the leaf/merge worker pool (`0` = auto); the result is bitwise
+/// identical for every thread count.
+pub fn tsqr(a: &Mat, threads: usize) -> QrThin {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "tsqr requires rows >= cols ({m} < {n})");
+    if n == 0 {
+        return qr_blocked(a, NB, threads);
+    }
+    let leaf_rows = (LEAF_COLS_FACTOR * n).max(MIN_LEAF_ROWS);
+    let nl = (m / leaf_rows).max(1);
+    if nl == 1 {
+        return qr_blocked(a, NB, threads);
+    }
+    // Row ranges: nearly equal chunks, first `rem` get one extra row. Every
+    // chunk has ≥ leaf_rows ≥ n rows.
+    let base = m / nl;
+    let rem = m % nl;
+    let mut ranges = Vec::with_capacity(nl);
+    let mut lo = 0usize;
+    for leaf in 0..nl {
+        let rows = base + usize::from(leaf < rem);
+        ranges.push((lo, lo + rows));
+        lo += rows;
+    }
+    // ---- Leaf factorizations (independent, sharded across the pool; the
+    // inner GEMMs run single-threaded — the leaves are the parallelism).
+    let mut nodes: Vec<Node> = run_indexed(ranges.len(), threads, |leaf| {
+        let (r0, r1) = ranges[leaf];
+        let f = qr_blocked(&a.rows_slice(r0, r1), NB, 1);
+        Node { q: f.q, r: f.r }
+    });
+    // ---- Pairwise reduction levels.
+    while nodes.len() > 1 {
+        let odd = if nodes.len() % 2 == 1 { nodes.pop() } else { None };
+        let mut pair_list: Vec<(Node, Node)> = Vec::with_capacity(nodes.len() / 2);
+        let mut it = nodes.into_iter();
+        while let (Some(x), Some(y)) = (it.next(), it.next()) {
+            pair_list.push((x, y));
+        }
+        // A single surviving pair gets the full GEMM pool; with many pairs
+        // the pair-level sharding is the parallelism. Either choice leaves
+        // the bits unchanged (GEMM is thread-invariant).
+        let inner = if pair_list.len() == 1 { threads } else { 1 };
+        let mut merged = run_indexed(pair_list.len(), threads, |p| {
+            let (x, y) = &pair_list[p];
+            merge(x, y, inner)
+        });
+        if let Some(node) = odd {
+            merged.push(node);
+        }
+        nodes = merged;
+    }
+    let root = nodes.pop().expect("tsqr tree cannot be empty");
+    QrThin { q: root.q, r: root.r }
+}
+
+/// Merge two sibling nodes: factor the stacked `[R_a; R_b]` and push the
+/// `2n×n` orthogonal factor down into the children's Q's.
+fn merge(a: &Node, b: &Node, threads: usize) -> Node {
+    let n = a.r.cols();
+    let f = qr_blocked(&vstack(&a.r, &b.r), NB, threads);
+    let q_top = f.q.rows_slice(0, n);
+    let q_bot = f.q.rows_slice(n, 2 * n);
+    let q = vstack(&a.q.par_matmul(&q_top, threads), &b.q.par_matmul(&q_bot, threads));
+    Node { q, r: f.r }
+}
+
+/// `[a; b]` — rows of `a` above rows of `b`.
+fn vstack(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "vstack column mismatch");
+    let mut data = Vec::with_capacity((a.rows() + b.rows()) * a.cols());
+    data.extend_from_slice(a.data());
+    data.extend_from_slice(b.data());
+    Mat::from_vec(a.rows() + b.rows(), a.cols(), data)
+}
+
+/// Evaluate `f(0..len)` with up to `pool_size(threads, len)` scoped
+/// workers striding the index space; results land in index order, so the
+/// output is identical to the sequential loop for any worker count.
+fn run_indexed<T: Send>(len: usize, threads: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let t = gemm::pool_size(threads, len);
+    if t <= 1 {
+        return (0..len).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..len).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(t);
+        for w in 0..t {
+            handles.push(s.spawn(move || {
+                let mut local = Vec::new();
+                let mut i = w;
+                while i < len {
+                    local.push((i, f(i)));
+                    i += t;
+                }
+                local
+            }));
+        }
+        for h in handles {
+            for (i, v) in h.join().expect("tsqr worker panicked") {
+                out[i] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|v| v.expect("tsqr index not covered")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr_thin;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_close, canonicalize_qr, prop};
+
+    #[test]
+    fn matches_oracle_up_to_signs_on_ragged_shapes() {
+        prop(81, 10, |rng| {
+            let n = 1 + rng.next_below(6) as usize;
+            let m = 300 + rng.next_below(500) as usize;
+            let a = Mat::gaussian(m, n, rng);
+            let (qt, rt) = canonicalize_qr(&tsqr(&a, 1));
+            let (qo, ro) = canonicalize_qr(&qr_thin(&a));
+            assert_close(rt.data(), ro.data(), 1e-10);
+            assert_close(qt.data(), qo.data(), 1e-10);
+        });
+    }
+
+    #[test]
+    fn contract_holds_on_multi_level_tree() {
+        let mut rng = Pcg64::new(82);
+        let a = Mat::gaussian(2000, 7, &mut rng); // > 4 leaves ⇒ ≥ 3 levels
+        let QrThin { q, r } = tsqr(&a, 2);
+        assert_close(q.matmul(&r).data(), a.data(), 1e-10);
+        assert_close(q.t_matmul(&q).data(), Mat::eye(7).data(), 1e-10);
+        for i in 0..7 {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_invariant_across_worker_counts() {
+        let mut rng = Pcg64::new(83);
+        for &(m, n) in &[(900usize, 5usize), (1537, 11)] {
+            let a = Mat::gaussian(m, n, &mut rng);
+            let f1 = tsqr(&a, 1);
+            for t in [2, 3, 8] {
+                let ft = tsqr(&a, t);
+                assert_eq!(ft.q.data(), f1.q.data(), "{m}x{n} threads={t}");
+                assert_eq!(ft.r.data(), f1.r.data(), "{m}x{n} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_input_falls_back_to_blocked() {
+        let mut rng = Pcg64::new(84);
+        let a = Mat::gaussian(50, 10, &mut rng);
+        let f1 = tsqr(&a, 4);
+        let f2 = qr_blocked(&a, NB, 1);
+        assert_eq!(f1.q.data(), f2.q.data());
+        assert_eq!(f1.r.data(), f2.r.data());
+    }
+
+    #[test]
+    fn rank_deficient_tall_input() {
+        // Rank-1 tall matrix: later R columns are degenerate in every leaf
+        // and every merge; Q must stay finite and orthonormal.
+        let mut rng = Pcg64::new(85);
+        let u = Mat::gaussian(700, 1, &mut rng);
+        let a = Mat::from_fn(700, 3, |i, j| u[(i, 0)] * (j + 1) as f64);
+        let QrThin { q, r } = tsqr(&a, 2);
+        assert!(q.data().iter().all(|v| v.is_finite()));
+        assert_close(q.matmul(&r).data(), a.data(), 1e-9);
+        assert_close(q.t_matmul(&q).data(), Mat::eye(3).data(), 1e-9);
+    }
+}

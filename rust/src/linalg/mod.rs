@@ -3,13 +3,18 @@
 //! The image ships no BLAS/LAPACK and no linear-algebra crates, so everything
 //! SMP-PCA needs is implemented here: a row-major dense matrix whose products
 //! route through the packed, cache-blocked, register-tiled (and optionally
-//! multithreaded) GEMM in [`gemm`], Householder QR, one-sided Jacobi SVD
-//! (plus a randomized subspace-iteration truncated SVD for large operators),
-//! SPD Cholesky for the r×r ALS normal equations, a CSR sparse matrix, and
-//! the fast Walsh–Hadamard transform backing the SRHT sketch.
+//! multithreaded) GEMM in [`gemm`]; the blocked factorization subsystem in
+//! [`factor`] (compact-WY QR, tree-reduction TSQR, contiguous-column Jacobi
+//! SVD, randomized subspace-iteration truncated SVD) that every dense
+//! factorization outside `linalg/` routes through; the unblocked Householder
+//! QR ([`qr_thin`]) and one-sided Jacobi ([`svd_jacobi`]) retained as the
+//! property-test oracles; SPD Cholesky for the r×r ALS normal equations; a
+//! CSR sparse matrix; and the fast Walsh–Hadamard transform backing the
+//! SRHT sketch.
 
 pub mod cholesky;
 pub mod dense;
+pub mod factor;
 pub mod fwht;
 pub mod gemm;
 pub mod ops;

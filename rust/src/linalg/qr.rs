@@ -9,29 +9,36 @@ pub struct QrThin {
     pub r: Mat,
 }
 
-/// Householder QR. Numerically stable (unlike Gram–Schmidt) — this is the
-/// orthonormalization primitive behind the randomized SVD range finder and
-/// the WAltMin iterate normalization.
+/// Householder QR. Numerically stable (unlike Gram–Schmidt) — retained as
+/// the unblocked property-test oracle for the blocked compact-WY /
+/// tree-reduction paths in [`crate::linalg::factor`] (which is what the
+/// rest of the crate routes through).
 pub fn qr_thin(a: &Mat) -> QrThin {
     let m = a.rows();
     let n = a.cols();
     assert!(m >= n, "qr_thin requires rows >= cols ({m} < {n})");
     let mut r = a.clone();
-    // Householder vectors stored column-wise.
+    // Householder vectors stored column-wise, with τ = 2/‖v‖² per
+    // reflector. Degenerate (numerically zero) columns carry τ = 0 and an
+    // empty v: both application loops skip them explicitly, so no ‖v‖²
+    // division ever sees a zero vector — the same guard contract as the
+    // blocked path.
     let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut taus: Vec<f64> = Vec::with_capacity(n);
     for k in 0..n {
         // Build the Householder vector for column k below the diagonal.
         let mut norm2 = 0.0;
         for i in k..m {
             norm2 += r[(i, k)] * r[(i, k)];
         }
-        let norm = norm2.sqrt();
-        let mut v = vec![0.0; m - k];
-        if norm == 0.0 {
-            // Zero column: identity reflector.
-            vs.push(v);
+        if norm2 < f64::MIN_POSITIVE {
+            // Zero column: identity reflector, skipped everywhere.
+            vs.push(Vec::new());
+            taus.push(0.0);
             continue;
         }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - k];
         let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
         for i in k..m {
             v[i - k] = r[(i, k)];
@@ -39,36 +46,38 @@ pub fn qr_thin(a: &Mat) -> QrThin {
         v[0] -= alpha;
         let vnorm2: f64 = v.iter().map(|x| x * x).sum();
         if vnorm2 < f64::MIN_POSITIVE {
-            vs.push(vec![0.0; m - k]);
+            vs.push(Vec::new());
+            taus.push(0.0);
             continue;
         }
-        // Apply H = I - 2 v vᵀ / ‖v‖² to R[k.., k..].
+        let tau = 2.0 / vnorm2;
+        // Apply H = I - τ v vᵀ to R[k.., k..].
         for j in k..n {
             let mut dot = 0.0;
             for i in k..m {
                 dot += v[i - k] * r[(i, j)];
             }
-            let s = 2.0 * dot / vnorm2;
+            let s = tau * dot;
             for i in k..m {
                 r[(i, j)] -= s * v[i - k];
             }
         }
         vs.push(v);
+        taus.push(tau);
     }
     // Accumulate thin Q by applying reflectors to the first n columns of I.
     let mut q = Mat::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
     for k in (0..n).rev() {
-        let v = &vs[k];
-        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
-        if vnorm2 < f64::MIN_POSITIVE {
+        if taus[k] == 0.0 {
             continue;
         }
+        let v = &vs[k];
         for j in 0..n {
             let mut dot = 0.0;
             for i in k..m {
                 dot += v[i - k] * q[(i, j)];
             }
-            let s = 2.0 * dot / vnorm2;
+            let s = taus[k] * dot;
             for i in k..m {
                 q[(i, j)] -= s * v[i - k];
             }
@@ -155,6 +164,27 @@ mod tests {
         assert_close(qr.data(), a.data(), 1e-9);
         let qtq = q.t_matmul(&q);
         assert_close(qtq.data(), Mat::eye(3).data(), 1e-9);
+    }
+
+    #[test]
+    fn qr_zero_interior_columns_regression() {
+        // Degenerate reflectors mid-factorization (a zero column between
+        // live ones, plus an exact duplicate that earlier reflectors
+        // annihilate to rounding noise): τ = 0 must skip the zero column in
+        // both application loops — everything finite, QR = A, QᵀQ = I.
+        let mut rng = Pcg64::new(7);
+        let base = Mat::gaussian(12, 1, &mut rng);
+        let a = Mat::from_fn(12, 4, |i, j| match j {
+            1 => 0.0,                                  // zero column
+            3 => base[(i, 0)] * (i % 3) as f64,        // duplicate of col 0
+            _ => base[(i, 0)] * ((i + j) % 3) as f64,  // j = 0 or 2
+        });
+        let QrThin { q, r } = qr_thin(&a);
+        assert!(q.data().iter().all(|v| v.is_finite()));
+        assert!(r.data().iter().all(|v| v.is_finite()));
+        let qr = q.matmul(&r);
+        assert_close(qr.data(), a.data(), 1e-9);
+        assert_close(q.t_matmul(&q).data(), Mat::eye(4).data(), 1e-9);
     }
 
     #[test]

@@ -4,11 +4,12 @@
 //!
 //! Jacobi is chosen over Golub–Kahan because it is simple, unconditionally
 //! convergent, and accurate for the modest `n` (≲ a few thousand) the
-//! coordinator ever decomposes exactly; the WAltMin init and the spectral
-//! error measurements use the randomized path.
+//! coordinator ever decomposes exactly. [`svd_jacobi`] is retained as the
+//! property-test oracle; the truncated entry points below are thin wrappers
+//! over the blocked subsystem in [`crate::linalg::factor`], which is what
+//! the WAltMin init and the spectral error measurements route through.
 
-use super::{qr_thin, Mat};
-use crate::rng::Pcg64;
+use super::Mat;
 
 /// Thin SVD `A = U Σ Vᵀ`, singular values sorted descending.
 pub struct Svd {
@@ -126,24 +127,16 @@ pub fn svd_jacobi(a: &Mat) -> Svd {
 }
 
 /// Randomized truncated SVD of a dense matrix via subspace iteration
-/// (Halko–Martinsson–Tropp): range finding with oversampling `p`, `q` power
-/// iterations with QR re-orthonormalization, then exact Jacobi SVD of the
-/// small projected matrix.
+/// (Halko–Martinsson–Tropp). Thin compatibility wrapper over
+/// [`crate::linalg::factor::rsvd`], where the range finder runs through the
+/// packed GEMM and the blocked/TSQR re-orthonormalization.
 pub fn truncated_svd(a: &Mat, r: usize, oversample: usize, power_iters: usize, seed: u64) -> Svd {
-    truncated_svd_op(
-        &|x, y| a.gemv_into(x, y),
-        &|x, y| a.gemv_t_into(x, y),
-        a.rows(),
-        a.cols(),
-        r,
-        oversample,
-        power_iters,
-        seed,
-    )
+    crate::linalg::factor::rsvd(a, r, oversample, power_iters, seed, 0)
 }
 
 /// Matrix-free randomized truncated SVD. `apply(x, y)` computes `y = Ax`,
-/// `apply_t(x, y)` computes `y = Aᵀx`.
+/// `apply_t(x, y)` computes `y = Aᵀx`. Thin compatibility wrapper over
+/// [`crate::linalg::factor::rsvd_op`] with auto thread sizing.
 #[allow(clippy::too_many_arguments)]
 pub fn truncated_svd_op(
     apply: &dyn Fn(&[f64], &mut [f64]),
@@ -155,66 +148,18 @@ pub fn truncated_svd_op(
     power_iters: usize,
     seed: u64,
 ) -> Svd {
-    let l = (r + oversample).min(cols).min(rows);
-    let mut rng = Pcg64::new(seed);
-    // Y = A * G, G cols×l gaussian
-    let g = Mat::gaussian(cols, l, &mut rng);
-    let mut y = Mat::zeros(rows, l);
-    let mut tmp_col = vec![0.0; rows];
-    let mut tmp_in = vec![0.0; cols];
-    for j in 0..l {
-        for i in 0..cols {
-            tmp_in[i] = g[(i, j)];
-        }
-        apply(&tmp_in, &mut tmp_col);
-        y.set_col(j, &tmp_col);
-    }
-    let mut q = qr_thin(&y).q;
-    // Power iterations: Q ← orth(A (Aᵀ Q))
-    let mut z = Mat::zeros(cols, l);
-    let mut tmp_r = vec![0.0; rows];
-    let mut tmp_c = vec![0.0; cols];
-    for _ in 0..power_iters {
-        for j in 0..l {
-            for i in 0..rows {
-                tmp_r[i] = q[(i, j)];
-            }
-            apply_t(&tmp_r, &mut tmp_c);
-            z.set_col(j, &tmp_c);
-        }
-        let qz = qr_thin(&z).q;
-        for j in 0..l {
-            for i in 0..cols {
-                tmp_c[i] = qz[(i, j)];
-            }
-            apply(&tmp_c, &mut tmp_r);
-            y.set_col(j, &tmp_r);
-        }
-        q = qr_thin(&y).q;
-    }
-    // B = Qᵀ A  (l×cols), via Bᵀ = Aᵀ Q
-    let mut bt = Mat::zeros(cols, l);
-    for j in 0..l {
-        for i in 0..rows {
-            tmp_r[i] = q[(i, j)];
-        }
-        apply_t(&tmp_r, &mut tmp_c);
-        bt.set_col(j, &tmp_c);
-    }
-    let b = bt.transpose();
-    let small = svd_jacobi(&b); // l×cols, l small
-    let u = q.matmul(&small.u); // rows×l
-    Svd { u, s: small.s, v: small.v }.truncate(r)
+    crate::linalg::factor::rsvd_op(apply, apply_t, rows, cols, r, oversample, power_iters, seed, 0)
 }
 
-/// Best rank-r approximation `A_r` of a dense matrix (exact via Jacobi when
-/// small, randomized otherwise).
+/// Best rank-r approximation `A_r` of a dense matrix (exact via the
+/// shape-aware [`crate::linalg::factor::svd`] when small, randomized
+/// otherwise).
 pub fn best_rank_r(a: &Mat, r: usize) -> Mat {
     let n = a.rows().min(a.cols());
     if n <= 400 {
-        svd_jacobi(a).truncate(r).reconstruct()
+        crate::linalg::factor::svd(a, 0).truncate(r).reconstruct()
     } else {
-        truncated_svd(a, r, 10, 4, 0x5eed).reconstruct()
+        crate::linalg::factor::rsvd(a, r, 10, 4, 0x5eed, 0).reconstruct()
     }
 }
 
@@ -222,6 +167,7 @@ pub fn best_rank_r(a: &Mat, r: usize) -> Mat {
 mod tests {
     use super::*;
     use crate::linalg::fro_norm;
+    use crate::rng::Pcg64;
     use crate::testing::{assert_close, prop};
 
     fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {

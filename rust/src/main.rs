@@ -98,7 +98,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let cfg = PipelineConfig { algo, workers, channel_capacity: 8192 };
 
     let engine: Box<dyn TileEngine> = match args.get("engine").unwrap_or("native") {
-        "native" => native_engine(),
+        "native" => native_engine(threads),
         "native-tiled" => {
             Box::new(smppca::runtime::TiledNativeEngine { threads, tile: 64 })
         }
@@ -149,7 +149,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         if args.flag("baselines") {
             let e_opt = spectral_error(&optimal_rank_r(&a, &b, rank), &a, &b);
             let e_lela = spectral_error(
-                &smppca::algo::lela(&a, &b, &LelaConfig { rank, iters, seed, samples })?,
+                &smppca::algo::lela(&a, &b, &LelaConfig { rank, iters, seed, samples, threads })?,
                 &a,
                 &b,
             );

@@ -265,18 +265,24 @@ impl TileEngine for ParNativeEngine {
         }
         let chunk = m.div_ceil(t);
         let mut out = vec![0.0; m];
+        // One O((n1+n2)·k) sketched-norm sweep shared by every shard.
+        let sna_all = sa.sketch_col_norms();
+        let snb_all = sb.sketch_col_norms();
         std::thread::scope(|s| {
+            let (sna_all, snb_all) = (&sna_all, &snb_all);
             for (w, piece) in out.chunks_mut(chunk).enumerate() {
                 let lo = w * chunk;
                 let hi = lo + piece.len();
                 s.spawn(move || {
-                    // `estimate_samples` only reads `entries`; the probs are
+                    // The estimator only reads `entries`; the probs are
                     // not needed to evaluate Eq. (2).
                     let sub = SampleSet {
                         entries: omega.entries[lo..hi].to_vec(),
                         probs: Vec::new(),
                     };
-                    piece.copy_from_slice(&crate::estimate::estimate_samples(sa, sb, &sub));
+                    piece.copy_from_slice(&crate::estimate::estimate_samples_with_norms(
+                        sa, sb, &sub, sna_all, snb_all,
+                    ));
                 });
             }
         });
@@ -314,10 +320,14 @@ impl TileEngine for TiledNativeEngine {
     }
 }
 
-/// Boxed engine for pipelines: the parallel native engine with auto worker
-/// count (identical output to the sequential reference).
-pub fn native_engine() -> Box<dyn TileEngine> {
-    Box::new(ParNativeEngine { threads: 0 })
+/// Boxed engine for pipelines: the parallel native engine. `threads`
+/// follows the crate-wide policy (`0` = auto under `SMPPCA_THREADS`) and
+/// is the same knob `SmpPcaConfig::threads` plumbs into the WAltMin solves
+/// and the `linalg::factor` init SVD — one worker-count contract across
+/// the whole leader finish. Output is identical to the sequential
+/// reference at any thread count.
+pub fn native_engine(threads: usize) -> Box<dyn TileEngine> {
+    Box::new(ParNativeEngine { threads })
 }
 
 #[cfg(test)]

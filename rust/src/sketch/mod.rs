@@ -115,6 +115,26 @@ impl Summary {
     pub fn k(&self) -> usize {
         self.sketch.rows()
     }
+
+    /// L2 norms of every *sketched* column `‖X̃_j‖` (length n), in one
+    /// cache-friendly row-major sweep of the k×n sketch — O(n·k) total.
+    /// The per-column accumulation order (sketch row 0, 1, …) matches
+    /// [`Mat::col_norm`], so substituting these for per-column walks is
+    /// bit-exact. Estimation paths that would otherwise recompute a
+    /// column norm per sampled entry (O(|Ω|·k)) precompute this once.
+    pub fn sketch_col_norms(&self) -> Vec<f64> {
+        let n = self.sketch.cols();
+        let mut acc = vec![0.0f64; n];
+        for row in 0..self.sketch.rows() {
+            for (a, &v) in acc.iter_mut().zip(self.sketch.row(row)) {
+                *a += v * v;
+            }
+        }
+        for a in &mut acc {
+            *a = a.sqrt();
+        }
+        acc
+    }
 }
 
 /// Mergeable streaming sketch accumulator for one matrix.
@@ -530,6 +550,19 @@ mod tests {
         let x = Mat::gaussian(37, 9, &mut rng);
         let s = SketchState::sketch_matrix(kind, 99, 16, &x);
         (x, s)
+    }
+
+    #[test]
+    fn sketch_col_norms_bitwise_matches_per_column_walk() {
+        // The one-sweep helper must be substitutable for `col_norm` calls
+        // without moving a single bit (same accumulation order).
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            let (_, s) = dense_for(kind);
+            let fast = s.sketch_col_norms();
+            for (j, &v) in fast.iter().enumerate() {
+                assert_eq!(v, s.sketch.col_norm(j), "kind={kind:?} j={j}");
+            }
+        }
     }
 
     #[test]

@@ -21,6 +21,26 @@ pub fn assert_close(got: &[f64], want: &[f64], tol: f64) {
     }
 }
 
+/// Flip column signs so `R`'s diagonal is nonnegative. Thin QR is unique
+/// up to these signs for full-rank inputs, so this is how two QR
+/// algorithms (TSQR vs the flat Householder oracle) are compared.
+pub fn canonicalize_qr(f: &crate::linalg::QrThin) -> (crate::linalg::Mat, crate::linalg::Mat) {
+    let n = f.r.cols();
+    let mut q = f.q.clone();
+    let mut r = f.r.clone();
+    for j in 0..n {
+        if r[(j, j)] < 0.0 {
+            for c in j..n {
+                r[(j, c)] = -r[(j, c)];
+            }
+            for i in 0..q.rows() {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    (q, r)
+}
+
 /// Assert a scalar is within relative tolerance of a (nonzero) expectation.
 #[track_caller]
 pub fn assert_rel(got: f64, want: f64, rel: f64) {

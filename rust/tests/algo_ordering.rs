@@ -24,7 +24,7 @@ fn table1_ordering_across_seeds() {
         let (a, b) = datasets::gd_synthetic(150, 60, 60, &mut rng);
         e_opt += spectral_error(&optimal_rank_r(&a, &b, 5), &a, &b);
         e_lela += spectral_error(
-            &smppca::algo::lela(&a, &b, &LelaConfig { rank: 5, iters: 8, seed: s, samples: 0.0 })
+            &smppca::algo::lela(&a, &b, &LelaConfig { rank: 5, iters: 8, seed: s, ..Default::default() })
                 .unwrap(),
             &a,
             &b,

@@ -107,7 +107,7 @@ fn lela_pipeline_matches_in_memory_lela_error() {
     let lr_mem = smppca::algo::lela(
         &a,
         &b,
-        &smppca::algo::lela::LelaConfig { rank: 3, iters: 6, seed: 13, samples: 0.0 },
+        &smppca::algo::lela::LelaConfig { rank: 3, iters: 6, seed: 13, ..Default::default() },
     )
     .unwrap();
     // Identical seeds ⇒ identical sampling ⇒ identical exact entries ⇒

@@ -1,0 +1,247 @@
+//! Property suite for the blocked factorization subsystem (ISSUE 3):
+//!
+//! * blocked compact-WY QR replays the unblocked Householder oracle
+//!   (`qr_thin`) to 1e-10 on ragged random shapes, with `QᵀQ − I`
+//!   orthogonality bounds;
+//! * TSQR matches the oracle up to column signs and is **bitwise**
+//!   invariant to the worker count at 1/2/8;
+//! * the shape-aware `factor::svd` matches the `svd_jacobi` oracle
+//!   (singular values + reconstruction ≤ 1e-10) on ragged shapes, and is
+//!   bit-identical on the near-square Jacobi dispatch;
+//! * the randomized `factor::rsvd_op` is bitwise thread-invariant;
+//! * end to end: the migrated WAltMin / `smp_pca` / streaming pipeline
+//!   produce **bitwise identical** output at 1/2/8 leader threads on the
+//!   seeded reference problem.
+//!
+//! Run under `SMPPCA_THREADS=1` and `=4` by the CI thread-matrix job.
+
+use smppca::algo::{smp_pca, SmpPcaConfig};
+use smppca::completion::waltmin::{waltmin, Observation, WAltMinConfig};
+use smppca::coordinator::{Pipeline, PipelineConfig};
+use smppca::linalg::factor;
+use smppca::linalg::{fro_norm, qr_thin, svd_jacobi, Mat, QrThin};
+use smppca::rng::Pcg64;
+use smppca::stream::ShuffledMatrixSource;
+use smppca::testing::{assert_close, canonicalize_qr, prop};
+
+fn orthogonality_defect(q: &Mat) -> f64 {
+    let qtq = q.t_matmul(q);
+    let mut worst = 0.0f64;
+    for i in 0..qtq.rows() {
+        for j in 0..qtq.cols() {
+            let expect = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((qtq[(i, j)] - expect).abs());
+        }
+    }
+    worst
+}
+
+#[test]
+fn blocked_qr_matches_oracle_on_ragged_shapes() {
+    prop(301, 25, |rng| {
+        // m ≥ n + 3: comfortably conditioned draws, so the blocked and
+        // unblocked computation orders agree well inside the 1e-10 bound.
+        let n = 1 + rng.next_below(14) as usize;
+        let m = n + 3 + rng.next_below(60) as usize;
+        let a = Mat::gaussian(m, n, rng);
+        let blocked = factor::qr_blocked(&a, factor::NB, 0);
+        let oracle = qr_thin(&a);
+        assert_close(blocked.r.data(), oracle.r.data(), 1e-10);
+        assert_close(blocked.q.data(), oracle.q.data(), 1e-10);
+        assert!(orthogonality_defect(&blocked.q) < 1e-10, "QᵀQ − I too large");
+    });
+}
+
+#[test]
+fn shape_aware_qr_contract_and_orthogonality() {
+    // The driver (blocked or TSQR, chosen by shape) always satisfies
+    // QR = A, ‖QᵀQ − I‖_max ≤ 1e-10, R upper-triangular.
+    prop(302, 15, |rng| {
+        let n = 1 + rng.next_below(8) as usize;
+        let m = n + rng.next_below(900) as usize; // spans both dispatch arms
+        let a = Mat::gaussian(m, n, rng);
+        let QrThin { q, r } = factor::qr(&a, 0);
+        assert_close(q.matmul(&r).data(), a.data(), 1e-10);
+        assert!(orthogonality_defect(&q) < 1e-10);
+        for i in 0..n {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < 1e-12);
+            }
+        }
+    });
+}
+
+#[test]
+fn tsqr_matches_oracle_and_is_thread_invariant_1_2_8() {
+    let mut rng = Pcg64::new(303);
+    for &(m, n) in &[(800usize, 6usize), (1536, 12), (2500, 3)] {
+        let a = Mat::gaussian(m, n, &mut rng);
+        let f1 = factor::tsqr(&a, 1);
+        // Oracle agreement (up to column signs).
+        let (qt, rt) = canonicalize_qr(&f1);
+        let (qo, ro) = canonicalize_qr(&qr_thin(&a));
+        assert_close(rt.data(), ro.data(), 1e-10);
+        assert_close(qt.data(), qo.data(), 1e-10);
+        // Bitwise identical at 2 and 8 workers.
+        for t in [2usize, 8] {
+            let ft = factor::tsqr(&a, t);
+            assert_eq!(ft.q.data(), f1.q.data(), "{m}x{n} workers={t}");
+            assert_eq!(ft.r.data(), f1.r.data(), "{m}x{n} workers={t}");
+        }
+    }
+}
+
+#[test]
+fn factor_svd_matches_jacobi_oracle_on_ragged_shapes() {
+    prop(304, 15, |rng| {
+        let m = 2 + rng.next_below(40) as usize;
+        let n = 2 + rng.next_below(14) as usize;
+        let a = Mat::gaussian(m, n, rng);
+        let fast = factor::svd(&a, 0);
+        let oracle = svd_jacobi(&a);
+        assert_close(&fast.s, &oracle.s, 1e-10);
+        let diff = fast.reconstruct().sub(&a);
+        assert!(
+            fro_norm(&diff) <= 1e-10 * fro_norm(&a).max(1.0),
+            "reconstruction defect {}",
+            fro_norm(&diff)
+        );
+        // U, V orthonormal up to rank.
+        for (factor_mat, dim) in [(&fast.u, n), (&fast.v, n)] {
+            let g = factor_mat.t_matmul(factor_mat);
+            for i in 0..dim {
+                if fast.s[i] > 1e-10 * fast.s[0].max(1e-300) {
+                    assert!((g[(i, i)] - 1.0).abs() < 1e-9);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn rsvd_op_is_thread_invariant_1_2_8() {
+    let mut rng = Pcg64::new(305);
+    let u = Mat::gaussian(700, 5, &mut rng);
+    let v = Mat::gaussian(60, 5, &mut rng);
+    let a = u.matmul_t(&v); // 700×60 rank-5
+    let run = |threads: usize| {
+        factor::rsvd_op(
+            &|x, y| a.gemv_into(x, y),
+            &|x, y| a.gemv_t_into(x, y),
+            700,
+            60,
+            5,
+            7,
+            2,
+            0xabc,
+            threads,
+        )
+    };
+    let s1 = run(1);
+    let diff = a.sub(&s1.reconstruct());
+    assert!(fro_norm(&diff) < 1e-8 * fro_norm(&a), "rsvd must recover rank-5 exactly");
+    for t in [2usize, 8] {
+        let st = run(t);
+        assert_eq!(st.s, s1.s, "threads={t}");
+        assert_eq!(st.u.data(), s1.u.data(), "threads={t}");
+        assert_eq!(st.v.data(), s1.v.data(), "threads={t}");
+    }
+}
+
+#[test]
+fn waltmin_bitwise_identical_at_1_2_8_threads() {
+    // Big enough that the init SVD goes through TSQR (n1 ≫ r) and the ALS
+    // solves cross the parallel grain.
+    let n1 = 400;
+    let n2 = 40;
+    let mut rng = Pcg64::new(306);
+    let u = Mat::gaussian(n1, 3, &mut rng);
+    let v = Mat::gaussian(n2, 3, &mut rng);
+    let m = u.matmul_t(&v);
+    let mut obs = Vec::new();
+    for i in 0..n1 {
+        for j in 0..n2 {
+            if (i + 3 * j) % 2 == 0 {
+                obs.push(Observation { i, j, value: m[(i, j)], q_hat: 0.5 });
+            }
+        }
+    }
+    let base = WAltMinConfig { rank: 3, iters: 3, threads: 1, ..Default::default() };
+    let reference = waltmin(&obs, n1, n2, &base);
+    for t in [2usize, 8] {
+        let cfg = WAltMinConfig { threads: t, ..base.clone() };
+        let out = waltmin(&obs, n1, n2, &cfg);
+        assert_eq!(out.factors.u.data(), reference.factors.u.data(), "threads={t}");
+        assert_eq!(out.factors.v.data(), reference.factors.v.data(), "threads={t}");
+        assert_eq!(out.residual_log, reference.residual_log, "threads={t}");
+    }
+}
+
+#[test]
+fn smp_pca_end_to_end_bitwise_identical_at_1_2_8_threads() {
+    // The seeded reference problem of the coordinator tests: the whole
+    // migrated leader finish (sampling → estimation → factor-backed
+    // WAltMin) must not move a bit when the thread knob changes.
+    let mut rng = Pcg64::new(42);
+    let (a, b) = smppca::datasets::gd_synthetic(60, 20, 22, &mut rng);
+    let base = SmpPcaConfig { rank: 3, sketch_size: 24, seed: 5, iters: 6, threads: 1, ..Default::default() };
+    let reference = smp_pca(&a, &b, &base).unwrap();
+    for t in [2usize, 8] {
+        let cfg = SmpPcaConfig { threads: t, ..base.clone() };
+        let out = smp_pca(&a, &b, &cfg).unwrap();
+        assert_eq!(out.factors.u.data(), reference.factors.u.data(), "threads={t}");
+        assert_eq!(out.factors.v.data(), reference.factors.v.data(), "threads={t}");
+        assert_eq!(out.samples_drawn, reference.samples_drawn, "threads={t}");
+        assert_eq!(out.residual_log, reference.residual_log, "threads={t}");
+    }
+}
+
+#[test]
+fn pipeline_bitwise_identical_across_leader_threads() {
+    // Streaming pipeline on the same reference problem: sketch-pass worker
+    // count AND leader thread count both swept; one reference output.
+    let mut rng = Pcg64::new(42);
+    let (a, b) = smppca::datasets::gd_synthetic(60, 20, 22, &mut rng);
+    let run = |threads: usize| {
+        let algo = SmpPcaConfig {
+            rank: 3,
+            sketch_size: 24,
+            seed: 5,
+            iters: 6,
+            threads,
+            ..Default::default()
+        };
+        let cfg = PipelineConfig { algo, workers: 2, channel_capacity: 64 };
+        Pipeline::new(cfg)
+            .run(Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 9 }))
+            .unwrap()
+            .result
+    };
+    let reference = run(1);
+    for t in [2usize, 8] {
+        let out = run(t);
+        assert_eq!(out.factors.u.data(), reference.factors.u.data(), "threads={t}");
+        assert_eq!(out.factors.v.data(), reference.factors.v.data(), "threads={t}");
+    }
+}
+
+#[test]
+fn rank_deficient_inputs_stay_finite_through_the_subsystem() {
+    // Regression for the degenerate-reflector guard: zero and duplicate
+    // columns through blocked QR, TSQR, and the SVD driver.
+    let mut rng = Pcg64::new(307);
+    let base = Mat::gaussian(600, 1, &mut rng);
+    let a = Mat::from_fn(600, 4, |i, j| match j {
+        1 => 0.0,
+        3 => base[(i, 0)],
+        _ => base[(i, 0)] * ((i + j) % 3) as f64,
+    });
+    for f in [factor::qr_blocked(&a, factor::NB, 0), factor::tsqr(&a, 2), factor::qr(&a, 0)] {
+        assert!(f.q.data().iter().all(|v| v.is_finite()));
+        assert_close(f.q.matmul(&f.r).data(), a.data(), 1e-9);
+        assert!(orthogonality_defect(&f.q) < 1e-9);
+    }
+    let s = factor::svd(&a, 0);
+    assert!(s.u.data().iter().all(|v| v.is_finite()));
+    assert!(s.s.iter().all(|v| v.is_finite()));
+}

@@ -54,7 +54,7 @@ fn full_stack_stream_all_baselines_ordering() {
     let e_stream = spectral_error(&out.result.factors, &a, &b);
     let e_opt = spectral_error(&optimal_rank_r(&a, &b, 5), &a, &b);
     let e_lela = spectral_error(
-        &smppca::algo::lela(&a, &b, &LelaConfig { rank: 5, iters: 8, seed: 7, samples: 0.0 })
+        &smppca::algo::lela(&a, &b, &LelaConfig { rank: 5, iters: 8, seed: 7, ..Default::default() })
             .unwrap(),
         &a,
         &b,
