@@ -6,7 +6,9 @@
 //! channel transport, sampling, estimation, packed/parallel GEMM vs the
 //! naive kernel, the blocked factorization subsystem (`factor/qr/*`,
 //! `factor/tsqr/*`, `factor/rsvd/*` vs their unblocked oracles),
-//! gram-tile worker-pool scaling, ALS solve, end-to-end leader finish.
+//! gram-tile worker-pool scaling, the serving subsystem (`server/ingest_qps/*`
+//! session ingest throughput and `server/snapshot_refresh/*` epoch refresh),
+//! ALS solve, end-to-end leader finish.
 //!
 //! ```bash
 //! cargo bench --bench hotpaths            # human-readable table
@@ -184,7 +186,7 @@ fn main() {
 
     // -------------------------------------------------------- sampling
     {
-        use smppca::sampling::{sample_multinomial_fast, NormProfile};
+        use smppca::sampling::{sample_multinomial_fast, sample_multinomial_fast_par, NormProfile};
         let nn = 2000usize;
         let norms: Vec<f64> = (0..nn).map(|j| 1.0 / (1.0 + j as f64).sqrt()).collect();
         let profile = NormProfile::new(&norms, &norms);
@@ -193,6 +195,15 @@ fn main() {
             let mut r = Pcg64::new(3);
             black_box(sample_multinomial_fast(&profile, m, &mut r));
         });
+        // Row-block sharded sampler (bitwise identical output) vs the
+        // serial oracle above — the leader/sample scaling that unblocks
+        // the serving layer's snapshot refresh.
+        for t in [1usize, 2, 4] {
+            suite.bench_items(&format!("sampling/fast_par_t{t}_n2000"), m as u64, || {
+                let mut r = Pcg64::new(3);
+                black_box(sample_multinomial_fast_par(&profile, m, &mut r, t));
+            });
+        }
     }
 
     // ------------------------------------------------------ estimation
@@ -339,6 +350,61 @@ fn main() {
                 },
             );
         }
+    }
+
+    // ------------------------------------------------- serving subsystem
+    // Long-lived session ingest throughput vs worker count (route →
+    // bounded queues → grouped batch kernels; `flush` is the fold barrier
+    // that closes the timing window) and the epoch snapshot refresh
+    // (freeze + tree merge + leader finish + publish) — the two serving
+    // hot paths (`server/ingest_qps/*`, `server/snapshot_refresh/*`).
+    {
+        use smppca::server::{StreamSession, StreamSpec};
+        use smppca::stream::{Entry, EntrySource, ShuffledMatrixSource, StreamMeta};
+        let mut r = Pcg64::new(33);
+        let ds = 512usize;
+        let ns = 64usize;
+        let am = Mat::gaussian(ds, ns, &mut r);
+        let bm = Mat::gaussian(ds, ns, &mut r);
+        let mut entries: Vec<Entry> = Vec::new();
+        Box::new(ShuffledMatrixSource { a: am, b: bm, seed: 5 })
+            .for_each(&mut |e| entries.push(e));
+        let spec = |w: usize| StreamSpec {
+            meta: StreamMeta { d: ds, n1: ns, n2: ns },
+            algo: smppca::algo::SmpPcaConfig {
+                rank: 5,
+                sketch_size: 64,
+                samples: 3000.0,
+                iters: 4,
+                seed: 9,
+                ..Default::default()
+            },
+            workers: w,
+            channel_capacity: 64,
+        };
+        let total = entries.len() as u64;
+        // Sessions open/close OUTSIDE the timed closure: thread spawn/join
+        // overhead grows with w and would pollute the w-scaling comparison.
+        // Folding accumulates into the long-lived states across iterations,
+        // which leaves the per-entry kernel cost unchanged.
+        for w in [1usize, 2, 4] {
+            let s = StreamSession::open("bench", spec(w)).unwrap();
+            suite.bench_items(&format!("server/ingest_qps/w{w}"), total, || {
+                for chunk in entries.chunks(1024) {
+                    s.ingest(chunk).unwrap();
+                }
+                black_box(s.flush().unwrap());
+            });
+            s.close().unwrap();
+        }
+        let s = StreamSession::open("bench-refresh", spec(2)).unwrap();
+        for chunk in entries.chunks(1024) {
+            s.ingest(chunk).unwrap();
+        }
+        suite.bench("server/snapshot_refresh/w2_k64", || {
+            black_box(s.refresh().unwrap());
+        });
+        s.close().unwrap();
     }
 
     // ------------------------------------------------------- ALS solve

@@ -9,7 +9,7 @@ use crate::completion::{waltmin, WAltMinConfig};
 use crate::completion::waltmin::Observation;
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
-use crate::sampling::{default_m, sample_multinomial_fast, NormProfile};
+use crate::sampling::{default_m, sample_multinomial_fast_par, NormProfile};
 use crate::sketch::{SketchKind, SketchState, Summary};
 
 /// Parameters of Algorithm 1. Defaults follow §4: `r = 5`, `T = 10`,
@@ -101,7 +101,9 @@ pub fn finish_from_summaries_engine(
 }
 
 /// Leader-finish stage 1: the biased entrywise sample set Ω (paper Eq. 1,
-/// drawn from the exact column norms of the summaries).
+/// drawn from the exact column norms of the summaries). Uses the row-block
+/// sharded sampler, which is bitwise identical to the single-threaded
+/// oracle at any `cfg.threads`.
 pub fn sample_stage(
     sa: &Summary,
     sb: &Summary,
@@ -114,7 +116,7 @@ pub fn sample_stage(
     let m = if cfg.samples > 0.0 { cfg.samples } else { default_m(n1, n2, cfg.rank) };
     let profile = NormProfile::new(&sa.col_norms, &sb.col_norms);
     let mut rng = Pcg64::new(cfg.seed ^ 0x00e6a); // Ω-sampling stream
-    let omega = sample_multinomial_fast(&profile, m, &mut rng);
+    let omega = sample_multinomial_fast_par(&profile, m, &mut rng, cfg.threads);
     anyhow::ensure!(!omega.is_empty(), "sampling produced an empty Ω (m too small?)");
     Ok(omega)
 }

@@ -90,9 +90,13 @@ USAGE:
 
 COMMANDS:
   run        run the streaming SMP-PCA pipeline on a dataset
+  serve      long-lived ingest-and-query server: concurrent sharded ingest,
+             epoch-snapshot refreshes, estimate/top queries over a line
+             protocol on stdin (type `help` inside the session)
   exp        regenerate a paper experiment: fig2a|fig2b|fig3a|fig3b|fig4a|
              fig4b|fig4c|table1|all
-  gen        generate a synthetic dataset CSV (for `run --input`)
+  gen        generate a synthetic dataset CSV (for `run --input` and the
+             serve protocol's `ingest-file`)
   help       show this message
 
 RUN OPTIONS:
@@ -117,6 +121,16 @@ RUN OPTIONS:
                      needs `make artifacts` + the `xla` build feature)
   --seed S           RNG seed (default 1)
   --baselines        also run LELA / SVD(ÃᵀB̃) / optimal and print errors
+
+SERVE OPTIONS:
+  --script PATH      read protocol commands from PATH instead of stdin
+                     (scripted sessions; the session still prints to stdout)
+
+  A serve session ingests entry streams in shards (bitwise identical to the
+  offline pipeline at any worker count), publishes epoch snapshots on
+  `refresh` (or `auto-refresh`), and answers `estimate`/`block`/`top`
+  queries from the published epoch while ingestion continues. Snapshots and
+  shard states persist via `save`/`load`/`checkpoint` (versioned format).
 
 EXP OPTIONS:
   --scale F          shrink experiment sizes by F (default 1.0 = paper-scaled
@@ -171,6 +185,15 @@ mod tests {
     fn trailing_flag() {
         let a = parse("run --baselines");
         assert!(a.flag("baselines"));
+    }
+
+    #[test]
+    fn serve_mode_documented() {
+        assert!(HELP.contains("serve"), "HELP must document the serve mode");
+        assert!(HELP.contains("--script"), "HELP must document scripted serve sessions");
+        let a = parse("serve --script cmds.txt");
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.get("script"), Some("cmds.txt"));
     }
 
     #[test]

@@ -21,6 +21,23 @@ pub mod stage {
     /// Leader stage 3: WAltMin completion incl. the factor-subsystem
     /// init SVD (Algorithm 2).
     pub const LEADER_COMPLETE: &str = "leader/waltmin";
+
+    // --- serving subsystem (`crate::server`) -------------------------
+    // Per-epoch latency and backpressure live here so `stats` sessions and
+    // offline pipeline runs read off one instrument panel.
+
+    /// Time the session's ingest call spends routing a batch into the
+    /// bounded worker queues. Sends block when workers fall behind, so this
+    /// stage *is* the backpressure meter: route time ≫ batch size ⇒ the
+    /// queues are full.
+    pub const SERVE_ROUTE: &str = "serve/route";
+    /// Epoch barrier: waiting for every worker to drain its queue up to the
+    /// freeze marker and hand back a frozen state clone.
+    pub const SERVE_FREEZE: &str = "serve/freeze";
+    /// One snapshot refresh end to end: freeze + merge + leader finish +
+    /// publish. The leader stages inside it are additionally recorded under
+    /// the `leader/*` names above, so refresh cost decomposes.
+    pub const SERVE_REFRESH: &str = "serve/refresh";
 }
 
 #[derive(Debug, Default, Clone)]

@@ -118,7 +118,7 @@ pub fn lela_pipeline(
     use crate::completion::waltmin::Observation;
     use crate::completion::{waltmin, WAltMinConfig};
     use crate::rng::Pcg64;
-    use crate::sampling::{default_m, sample_multinomial_fast, NormProfile};
+    use crate::sampling::{default_m, sample_multinomial_fast_par, NormProfile};
 
     let mut metrics = Metrics::new();
     // ---- Pass 1: column norms only.
@@ -145,7 +145,7 @@ pub fn lela_pipeline(
         default_m(meta.n1, meta.n2, cfg.algo.rank)
     };
     let mut rng = Pcg64::new(cfg.algo.seed ^ 0x00e6a);
-    let omega = sample_multinomial_fast(&profile, m, &mut rng);
+    let omega = sample_multinomial_fast_par(&profile, m, &mut rng, cfg.algo.threads);
     anyhow::ensure!(!omega.is_empty(), "empty Ω");
 
     // ---- Pass 2: exact dot products for sampled pairs, accumulated

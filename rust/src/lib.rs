@@ -12,7 +12,8 @@
 //!
 //! Architecture (three layers, python never on the request path):
 //! * L3 — this crate: streaming coordinator, sharded workers, tree merge,
-//!   sampling, completion, baselines, CLI, metrics.
+//!   sampling, completion, baselines, CLI, metrics, and the long-lived
+//!   serving layer (`server`: concurrent ingest + epoch-snapshot queries).
 //! * L2 — `python/compile/model.py`: JAX compute graphs, AOT-lowered to
 //!   HLO text artifacts.
 //! * L1 — `python/compile/kernels/`: Pallas kernels called by L2.
@@ -36,6 +37,7 @@ pub mod linalg;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod server;
 pub mod sketch;
 pub mod stream;
 pub mod testing;
@@ -45,6 +47,7 @@ pub mod prelude {
     pub use crate::algo::{lela, optimal_rank_r, sketch_svd, smp_pca, LowRank, SmpPcaConfig};
     pub use crate::coordinator::{Pipeline, PipelineConfig};
     pub use crate::linalg::Mat;
+    pub use crate::server::{ServeProtocol, SketchService, Snapshot, StreamSession, StreamSpec};
     pub use crate::sketch::SketchKind;
     pub use crate::stream::{Entry, MatrixId};
 }

@@ -32,6 +32,7 @@ fn real_main() -> anyhow::Result<()> {
     };
     match args.subcommand.as_str() {
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "exp" => cmd_exp(&args),
         "gen" => cmd_gen(&args),
         "help" | "--help" | "-h" => {
@@ -157,6 +158,35 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             println!("baselines: optimal={e_opt:.5}  lela={e_lela:.5}  svd(sketch)={e_svd:.5}");
         }
     }
+    Ok(())
+}
+
+/// The online serving loop: one protocol command per line (stdin by
+/// default, `--script PATH` for scripted sessions), one response per
+/// command on stdout. All the semantics live in
+/// [`smppca::server::ServeProtocol`]; this is only the I/O shell.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use std::io::BufRead;
+    let proto = smppca::server::ServeProtocol::new();
+    let reader: Box<dyn BufRead> = match args.get("script") {
+        Some(path) => Box::new(std::io::BufReader::new(std::fs::File::open(path)?)),
+        None => {
+            println!("smppca serve — line protocol on stdin (try 'help'; 'quit' exits)");
+            Box::new(std::io::BufReader::new(std::io::stdin()))
+        }
+    };
+    for line in reader.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        if smppca::server::ServeProtocol::is_quit(trimmed) {
+            break;
+        }
+        println!("{}", proto.handle(trimmed));
+    }
+    proto.service().close_all();
     Ok(())
 }
 

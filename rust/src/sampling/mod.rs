@@ -7,13 +7,20 @@
 //! ```
 //!
 //! so heavy rows/columns of the product are preferentially observed and
-//! `E[|Ω|] ≈ m`. Two samplers:
+//! `E[|Ω|] ≈ m`. Three samplers:
 //! * [`sample_binomial`] — the literal model: one coin per entry, O(n₁·n₂).
 //!   Ground truth for tests and fine at small n.
 //! * [`sample_multinomial_fast`] — Appendix C.5: per-row multinomial with an
 //!   *implicit* CDF (an affine function of the prefix sums of `‖B_j‖²`),
 //!   binary-searched per draw ⇒ O(n₁ + n₂ + m log n₂) total, nothing n²
-//!   ever materialized. This is the production path.
+//!   ever materialized. Kept as the single-threaded oracle.
+//! * [`sample_multinomial_fast_par`] — the production path: the same sampler
+//!   with the expensive part (the `m log n₂` binary searches plus dedup)
+//!   sharded over fixed row blocks. A cheap serial planning pass replays the
+//!   oracle's RNG calls in row order, so the output — entry order, probs,
+//!   and the generator's final position — is **bitwise identical to the
+//!   oracle at any thread count** (`leader/sample` no longer serializes the
+//!   snapshot refresh; see the 1/2/8-thread agreement tests).
 
 use crate::rng::Pcg64;
 
@@ -203,6 +210,209 @@ pub fn sample_multinomial_fast(profile: &NormProfile, m: f64, rng: &mut Pcg64) -
     out
 }
 
+/// Per-row record of the fast sampler's work, produced by the serial
+/// planning pass of [`sample_multinomial_fast_par`]: the deterministic
+/// prefix length (in sorted-column order) and this row's residual uniforms
+/// (already scaled by the row's residual mass `z`, exactly as the oracle
+/// draws them) as a range into one flat buffer.
+struct RowPlan {
+    det: usize,
+    start: usize,
+    draws: usize,
+}
+
+/// Execute planned rows `rows` exactly as the serial oracle would: emit the
+/// deterministic prefix of each row, then invert each stored uniform by the
+/// same binary search over the shared sorted prefix sums, deduplicating
+/// residual draws within the row (the only place duplicates can occur —
+/// rows are disjoint and the residual search never lands in the prefix).
+/// `mark`/`touched` are caller scratch (length n₂ / cleared per row).
+#[allow(clippy::too_many_arguments)]
+fn sample_planned_rows(
+    profile: &NormProfile,
+    m: f64,
+    order: &[usize],
+    prefix: &[f64],
+    plans: &[RowPlan],
+    us: &[f64],
+    rows: std::ops::Range<usize>,
+    mark: &mut [bool],
+    touched: &mut Vec<usize>,
+    out: &mut SampleSet,
+) {
+    let n1 = profile.n1();
+    let n2 = profile.n2();
+    let beta = 1.0 / (2.0 * n1 as f64 * profile.b_fro_sq);
+    for i in rows {
+        let plan = &plans[i];
+        let det = plan.det;
+        for &j in &order[..det] {
+            out.entries.push((i, j));
+            out.probs.push(1.0);
+        }
+        if plan.draws == 0 {
+            continue;
+        }
+        let alpha = profile.a_sq[i] / (2.0 * n2 as f64 * profile.a_fro_sq);
+        for &u in &us[plan.start..plan.start + plan.draws] {
+            // Same implicit-CDF inversion as the oracle: smallest c in
+            // [det, n2) with α·(c+1−det) + β·(S[c+1]−S[det]) ≥ u.
+            let mut lo = det;
+            let mut hi = n2 - 1;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                let cdf = alpha * (mid + 1 - det) as f64 + beta * (prefix[mid + 1] - prefix[det]);
+                if cdf >= u {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            let j = order[lo];
+            if !mark[j] {
+                mark[j] = true;
+                touched.push(j);
+                out.entries.push((i, j));
+                out.probs.push(profile.q_hat(m, i, j));
+            }
+        }
+        for &j in touched.iter() {
+            mark[j] = false;
+        }
+        touched.clear();
+    }
+}
+
+/// Row blocks are a fixed function of the row index only (never of the
+/// thread count), so the shard-to-row-block map — and therefore the output
+/// — is identical at any parallelism.
+const SAMPLE_ROW_BLOCK: usize = 64;
+
+/// Parallel fast sampler — bitwise identical to [`sample_multinomial_fast`]
+/// (same entries in the same order, same probs, same final `rng` position)
+/// at any `threads` (`0` = auto under the crate-wide `SMPPCA_THREADS`
+/// policy).
+///
+/// Phase 1 (serial, cheap): walk rows in order computing each row's
+/// deterministic prefix and residual mass, and replay the oracle's RNG
+/// calls — one Bernoulli plus `draws_i` uniforms per row — into a flat
+/// buffer. RNG consumption is data-dependent (the Bernoulli decides the
+/// draw count), which is why the stream cannot be split up front; but the
+/// calls themselves are O(n₁ log n₂ + m) cheap ops. Phase 2 (parallel):
+/// the O(m log n₂) binary searches, dedup and output assembly run over
+/// fixed [`SAMPLE_ROW_BLOCK`]-row blocks, strided across the pool, and the
+/// per-block outputs concatenate in block order. Dedup is row-local by
+/// construction (duplicates need equal `(i, j)` and each row lives in
+/// exactly one block), so sharding cannot change it.
+pub fn sample_multinomial_fast_par(
+    profile: &NormProfile,
+    m: f64,
+    rng: &mut Pcg64,
+    threads: usize,
+) -> SampleSet {
+    let n1 = profile.n1();
+    let n2 = profile.n2();
+    // Shared sorted column order + prefix sums (identical to the oracle).
+    let mut order: Vec<usize> = (0..n2).collect();
+    order.sort_unstable_by(|&x, &y| profile.b_sq[y].partial_cmp(&profile.b_sq[x]).unwrap());
+    let mut prefix = vec![0.0; n2 + 1];
+    for c in 0..n2 {
+        prefix[c + 1] = prefix[c] + profile.b_sq[order[c]];
+    }
+    let beta = 1.0 / (2.0 * n1 as f64 * profile.b_fro_sq);
+
+    // ---- Phase 1: plan rows, replaying the oracle's RNG call sequence.
+    let mut plans: Vec<RowPlan> = Vec::with_capacity(n1);
+    let mut us: Vec<f64> = Vec::new();
+    for i in 0..n1 {
+        let alpha = profile.a_sq[i] / (2.0 * n2 as f64 * profile.a_fro_sq);
+        let cut = (1.0 / m - alpha) / beta;
+        let det = if cut <= 0.0 {
+            n2
+        } else {
+            order.partition_point(|&j| profile.b_sq[j] >= cut)
+        };
+        let start = us.len();
+        let mut draws = 0usize;
+        if det < n2 {
+            let tail = (n2 - det) as f64;
+            let z = alpha * tail + beta * (prefix[n2] - prefix[det]);
+            if z > 0.0 {
+                let mi = m * z;
+                draws = mi.floor() as usize;
+                if rng.next_f64() < mi - mi.floor() {
+                    draws += 1;
+                }
+                for _ in 0..draws {
+                    us.push(rng.next_f64() * z);
+                }
+            }
+        }
+        plans.push(RowPlan { det, start, draws });
+    }
+
+    // ---- Phase 2: execute the plans over fixed row blocks.
+    let nblocks = n1.div_ceil(SAMPLE_ROW_BLOCK);
+    let workers = crate::linalg::gemm::pool_size(threads, nblocks);
+    if workers <= 1 {
+        let mut out = SampleSet::default();
+        let mut mark = vec![false; n2];
+        let mut touched = Vec::new();
+        sample_planned_rows(
+            profile, m, &order, &prefix, &plans, &us, 0..n1, &mut mark, &mut touched, &mut out,
+        );
+        return out;
+    }
+    let mut per_block: Vec<(usize, SampleSet)> = std::thread::scope(|s| {
+        let (order, prefix, plans, us) = (&order, &prefix, &plans, &us);
+        let handles: Vec<_> = (0..workers)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut mark = vec![false; n2];
+                    let mut touched = Vec::new();
+                    let mut outs: Vec<(usize, SampleSet)> = Vec::new();
+                    let mut blk = t;
+                    while blk < nblocks {
+                        let lo = blk * SAMPLE_ROW_BLOCK;
+                        let hi = (lo + SAMPLE_ROW_BLOCK).min(n1);
+                        let mut out = SampleSet::default();
+                        sample_planned_rows(
+                            profile,
+                            m,
+                            order,
+                            prefix,
+                            plans,
+                            us,
+                            lo..hi,
+                            &mut mark,
+                            &mut touched,
+                            &mut out,
+                        );
+                        outs.push((blk, out));
+                        blk += workers;
+                    }
+                    outs
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("sampling shard panicked"))
+            .collect()
+    });
+    per_block.sort_unstable_by_key(|&(b, _)| b);
+    let total: usize = per_block.iter().map(|(_, s)| s.len()).sum();
+    let mut out = SampleSet {
+        entries: Vec::with_capacity(total),
+        probs: Vec::with_capacity(total),
+    };
+    for (_, mut blk) in per_block {
+        out.entries.append(&mut blk.entries);
+        out.probs.append(&mut blk.probs);
+    }
+    out
+}
+
 /// Recommended default sample budget: the paper's experimental setting
 /// `m = 4 n r log n` (§4, "Sample complexity").
 pub fn default_m(n1: usize, n2: usize, r: usize) -> f64 {
@@ -368,6 +578,53 @@ mod tests {
     #[should_panic(expected = "all-zero")]
     fn rejects_all_zero() {
         NormProfile::new(&[0.0, 0.0], &[1.0]);
+    }
+
+    #[test]
+    fn par_sampler_bitwise_matches_serial_at_1_2_8_threads() {
+        // Skewed profile spanning several SAMPLE_ROW_BLOCK blocks, with m
+        // large enough that some rows carry a deterministic (q ≥ 1) prefix.
+        let n1 = 200usize;
+        let n2 = 37usize;
+        let a: Vec<f64> = (0..n1).map(|i| 0.1 + ((i * 7) % 13) as f64).collect();
+        let b: Vec<f64> = (0..n2).map(|j| 0.05 + ((j * 5) % 11) as f64).collect();
+        let p = profile_from(&a, &b);
+        for m in [50.0, 2000.0, 50_000.0] {
+            let mut r_ser = Pcg64::new(77);
+            let serial = sample_multinomial_fast(&p, m, &mut r_ser);
+            for threads in [1usize, 2, 8] {
+                let mut r_par = Pcg64::new(77);
+                let par = sample_multinomial_fast_par(&p, m, &mut r_par, threads);
+                assert_eq!(par.entries, serial.entries, "m={m} threads={threads}");
+                assert_eq!(par.probs, serial.probs, "m={m} threads={threads}");
+                // same stream position afterwards (shared-RNG callers rely
+                // on this when swapping the samplers)
+                assert_eq!(
+                    r_par.clone().next_u64(),
+                    r_ser.clone().next_u64(),
+                    "m={m} threads={threads}: RNG stream diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_sampler_prop_matches_serial_on_random_shapes() {
+        prop(9, 8, |rng| {
+            let n1 = 1 + rng.next_below(90) as usize;
+            let n2 = 1 + rng.next_below(40) as usize;
+            let a: Vec<f64> = (0..n1).map(|_| rng.next_f64() + 0.01).collect();
+            let b: Vec<f64> = (0..n2).map(|_| rng.next_f64() + 0.01).collect();
+            let p = profile_from(&a, &b);
+            let m = 1.0 + rng.next_f64() * 500.0;
+            let seed = rng.next_u64();
+            let mut r1 = Pcg64::new(seed);
+            let mut r2 = Pcg64::new(seed);
+            let s1 = sample_multinomial_fast(&p, m, &mut r1);
+            let s2 = sample_multinomial_fast_par(&p, m, &mut r2, 3);
+            assert_eq!(s1.entries, s2.entries);
+            assert_eq!(s1.probs, s2.probs);
+        });
     }
 
     #[test]

@@ -1,0 +1,57 @@
+//! Online sketch-serving subsystem: concurrent ingest + epoch-snapshot
+//! query serving.
+//!
+//! The paper's central observation is that the sketches plus the exact norm
+//! summaries are a *sufficient statistic* for the top components of `AᵀB`.
+//! A sufficient statistic does not have to be consumed once by a batch
+//! pipeline — it can be kept resident and served: entries keep streaming in
+//! while queries are answered from the most recent materialized estimate
+//! (the paper itself runs a long-lived Spark deployment; Tropp et al. and
+//! Yu et al. likewise treat the sketch as a maintainable state object from
+//! which approximations are re-extracted on demand). This module is that
+//! serving layer, built entirely out of the batch machinery below it:
+//!
+//! * [`StreamSession`] — one long-lived named stream: a bounded-queue
+//!   ingest worker pool holding per-worker mergeable
+//!   [`crate::sketch::SketchState`] pairs, sharded by the same
+//!   deterministic column router as offline ingestion
+//!   ([`crate::stream::shard_of`]), so a session's sketch is **bitwise
+//!   identical** to `Pipeline::run`'s on the same entry prefix at any
+//!   worker count.
+//! * **Epoch snapshots** — `refresh` freezes the current stream prefix
+//!   (a queue barrier + state clone; ingestion resumes immediately), runs
+//!   the standard leader finish off the frozen states (parallel sampling +
+//!   rescaled-JL estimation + WAltMin through `linalg::factor`), and
+//!   atomically publishes an immutable [`Snapshot`]. Query threads clone
+//!   the published `Arc` and then read it with no synchronization at all —
+//!   a snapshot can never be observed torn, and epochs are monotone.
+//! * [`SketchService`] — the session registry the protocol and embedders
+//!   talk to.
+//! * [`ServeProtocol`] — a line protocol over the whole thing (the `serve`
+//!   CLI mode drives it from stdin), scriptable and testable.
+//! * Persistence — epoch snapshots and per-worker sketch states both
+//!   serialize in the shared versioned SMPC container format
+//!   (`sketch::checkpoint`), so a killed server recovers by restoring its
+//!   shard states (bitwise resume) and/or re-installing its last published
+//!   snapshot.
+//!
+//! # Determinism contract
+//!
+//! For a fixed `(seed, kind, k)` and a fixed ingested prefix, a session's
+//! published snapshot factors are bitwise identical to the offline
+//! [`crate::coordinator::Pipeline::run`] on that prefix — at 1, 2, or 8
+//! ingest workers, with queries running concurrently. The chain: column
+//! sharding makes the frozen merged sketch bitwise equal to a sequential
+//! pass (PR 2 invariants), and every leader-finish stage is bitwise
+//! invariant to its own thread count (PRs 1–3 + the sharded sampler).
+//! `tests/server_serve.rs` pins all of it.
+
+mod protocol;
+mod service;
+mod session;
+mod snapshot;
+
+pub use protocol::{ServeProtocol, PROTOCOL_HELP};
+pub use service::SketchService;
+pub use session::{StreamSession, StreamSpec, StreamStats};
+pub use snapshot::Snapshot;

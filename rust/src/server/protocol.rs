@@ -1,0 +1,466 @@
+//! Line protocol over the serving subsystem — what `smppca serve` speaks on
+//! stdin. One command per line, one (possibly multi-line) response per
+//! command; every response starts with a stable keyword (`ok`, `err`,
+//! `estimate`, `block`, `top`, `stats`, `streams`), so sessions are
+//! scriptable with a shell pipe and assertable in tests.
+//!
+//! Estimates print with 17 significant decimal digits (`{:.17e}`), which
+//! round-trips f64 exactly — the integration tests parse responses back
+//! and compare bitwise against the offline pipeline.
+
+use super::service::SketchService;
+use super::session::StreamSpec;
+use super::snapshot::Snapshot;
+use crate::algo::SmpPcaConfig;
+use crate::sketch::SketchKind;
+use crate::stream::{Entry, EntrySource, FileSource, MatrixId, StreamMeta};
+use std::time::Duration;
+
+/// The `help` response (also embedded in the CLI help).
+pub const PROTOCOL_HELP: &str = "\
+serve protocol — one command per line:
+  open NAME d=D n1=N1 n2=N2 [k=100] [rank=5] [seed=1] [kind=gaussian]
+       [workers=0] [samples=0] [iters=10] [threads=0] [cap=64] [restore=DIR]
+                                  open a stream (restore= resumes shard
+                                  states from a `checkpoint` directory)
+  ingest NAME M:row:col:val ...   fold records (M is A or B); the batch is
+                                  validated and rejected atomically
+  ingest-file NAME PATH           stream a CSV triplet file (`gen` format)
+  refresh NAME                    freeze the prefix, publish a new epoch
+  auto-refresh NAME MILLIS        background refresher every MILLIS ms
+  stop-refresh NAME               stop the background refresher
+  estimate NAME I J               served (A^T B)[I, J] at the current epoch
+  block NAME I0 I1 J0 J1          served half-open block of A^T B
+  top NAME [R]                    leading component scales at the epoch
+  stats NAME                      counters + stage metrics
+  save NAME PATH                  persist the current epoch snapshot
+  load NAME PATH                  install a persisted snapshot (recovery)
+  checkpoint NAME DIR             persist per-worker shard states
+  close NAME                      drain and close the stream
+  streams                         list open streams
+  help                            this text
+  quit                            exit the server loop";
+
+/// Stateful protocol handler: a [`SketchService`] plus the line dispatch.
+pub struct ServeProtocol {
+    service: SketchService,
+}
+
+impl ServeProtocol {
+    pub fn new() -> Self {
+        Self { service: SketchService::new() }
+    }
+
+    pub fn service(&self) -> &SketchService {
+        &self.service
+    }
+
+    /// Does this line end the serve loop? (The loop owner decides what to
+    /// do; `handle` never sees quit lines in practice.)
+    pub fn is_quit(line: &str) -> bool {
+        matches!(line.trim(), "quit" | "exit")
+    }
+
+    /// Handle one protocol line. Never panics on malformed input; errors
+    /// come back as `err ...` lines so a scripted session keeps going.
+    pub fn handle(&self, line: &str) -> String {
+        match self.dispatch(line) {
+            Ok(resp) => resp,
+            Err(e) => format!("err {e}"),
+        }
+    }
+
+    fn dispatch(&self, line: &str) -> anyhow::Result<String> {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let (&cmd, rest) = toks
+            .split_first()
+            .ok_or_else(|| anyhow::anyhow!("empty command (try 'help')"))?;
+        match cmd {
+            "open" => self.cmd_open(rest),
+            "ingest" => self.cmd_ingest(rest),
+            "ingest-file" => self.cmd_ingest_file(rest),
+            "refresh" => self.cmd_refresh(rest),
+            "auto-refresh" => self.cmd_auto_refresh(rest),
+            "stop-refresh" => self.cmd_stop_refresh(rest),
+            "estimate" => self.cmd_estimate(rest),
+            "block" => self.cmd_block(rest),
+            "top" => self.cmd_top(rest),
+            "stats" => self.cmd_stats(rest),
+            "save" => self.cmd_save(rest),
+            "load" => self.cmd_load(rest),
+            "checkpoint" => self.cmd_checkpoint(rest),
+            "close" => self.cmd_close(rest),
+            "streams" => Ok(self.cmd_streams()),
+            "help" => Ok(PROTOCOL_HELP.to_string()),
+            other => anyhow::bail!("unknown command '{other}' (try 'help')"),
+        }
+    }
+
+    fn cmd_open(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let name = *rest.first().ok_or_else(|| anyhow::anyhow!("open needs a stream name"))?;
+        let (mut d, mut n1, mut n2) = (0usize, 0usize, 0usize);
+        let mut algo = SmpPcaConfig {
+            rank: 5,
+            sketch_size: 100,
+            samples: 0.0,
+            iters: 10,
+            seed: 1,
+            ..Default::default()
+        };
+        let mut workers = 0usize;
+        let mut cap = 64usize;
+        let mut restore: Option<String> = None;
+        for kv in &rest[1..] {
+            let (key, val) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("expected key=value, got '{kv}'"))?;
+            match key {
+                "d" => d = pv(key, val)?,
+                "n1" => n1 = pv(key, val)?,
+                "n2" => n2 = pv(key, val)?,
+                "k" => algo.sketch_size = pv(key, val)?,
+                "rank" => algo.rank = pv(key, val)?,
+                "seed" => algo.seed = pv(key, val)?,
+                "samples" => algo.samples = pv(key, val)?,
+                "iters" => algo.iters = pv(key, val)?,
+                "threads" => algo.threads = pv(key, val)?,
+                "kind" => {
+                    algo.sketch = val
+                        .parse::<SketchKind>()
+                        .map_err(|e| anyhow::anyhow!("bad value for kind: {e}"))?
+                }
+                "workers" => workers = pv(key, val)?,
+                "cap" => cap = pv(key, val)?,
+                "restore" => restore = Some(val.to_string()),
+                other => anyhow::bail!("unknown open option '{other}'"),
+            }
+        }
+        anyhow::ensure!(
+            d > 0 && n1 > 0 && n2 > 0,
+            "open requires d=, n1= and n2= (all positive)"
+        );
+        let spec = StreamSpec {
+            meta: StreamMeta { d, n1, n2 },
+            algo,
+            workers,
+            channel_capacity: cap,
+        };
+        let session = match restore {
+            Some(dir) => self.service.open_restored(name, spec, dir)?,
+            None => self.service.open(name, spec)?,
+        };
+        let sp = session.spec();
+        Ok(format!(
+            "ok open {name} d={d} n1={n1} n2={n2} k={} rank={} kind={:?} workers={} epoch=0",
+            sp.algo.sketch_size,
+            sp.algo.rank,
+            sp.algo.sketch,
+            session.workers()
+        ))
+    }
+
+    fn cmd_ingest(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let name = *rest.first().ok_or_else(|| anyhow::anyhow!("ingest needs a stream name"))?;
+        anyhow::ensure!(rest.len() > 1, "ingest needs at least one M:row:col:value record");
+        let entries: Vec<Entry> =
+            rest[1..].iter().map(|t| parse_record(t)).collect::<anyhow::Result<_>>()?;
+        let n = self.service.get(name)?.ingest(&entries)?;
+        Ok(format!("ok ingest {name} entries={n}"))
+    }
+
+    fn cmd_ingest_file(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name, path] = two(rest, "ingest-file NAME PATH")?;
+        let session = self.service.get(name)?;
+        let source = FileSource::open(path)?;
+        let file_meta = source.meta();
+        anyhow::ensure!(
+            file_meta == session.spec().meta,
+            "file shape {file_meta:?} does not match stream shape {:?}",
+            session.spec().meta
+        );
+        // Stream in 4096-entry batches — O(batch) memory, not O(file).
+        // for_each cannot early-exit, so on an ingest error the remaining
+        // records are skipped and the error surfaces afterwards.
+        let mut buf: Vec<Entry> = Vec::with_capacity(4096);
+        let mut total = 0u64;
+        let mut failed: Option<anyhow::Error> = None;
+        Box::new(source).for_each(&mut |e| {
+            if failed.is_some() {
+                return;
+            }
+            buf.push(e);
+            if buf.len() == 4096 {
+                match session.ingest(&buf) {
+                    Ok(n) => total += n,
+                    Err(err) => failed = Some(err),
+                }
+                buf.clear();
+            }
+        });
+        if let Some(err) = failed {
+            return Err(err);
+        }
+        if !buf.is_empty() {
+            total += session.ingest(&buf)?;
+        }
+        Ok(format!("ok ingest-file {name} entries={total}"))
+    }
+
+    fn cmd_refresh(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name] = one(rest, "refresh NAME")?;
+        let snap = self.service.get(name)?.refresh()?;
+        Ok(format!(
+            "ok refresh {name} epoch={} entries={} samples={} wall_ms={:.3}",
+            snap.epoch,
+            snap.entries_ingested,
+            snap.samples_drawn,
+            snap.refresh_wall.as_secs_f64() * 1e3
+        ))
+    }
+
+    fn cmd_auto_refresh(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name, ms] = two(rest, "auto-refresh NAME MILLIS")?;
+        let millis: u64 = pv("millis", ms)?;
+        self.service.get(name)?.start_auto_refresh(Duration::from_millis(millis))?;
+        Ok(format!("ok auto-refresh {name} every={millis}ms"))
+    }
+
+    fn cmd_stop_refresh(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name] = one(rest, "stop-refresh NAME")?;
+        let was = self.service.get(name)?.stop_auto_refresh();
+        Ok(format!("ok stop-refresh {name} was_running={was}"))
+    }
+
+    fn snapshot_of(&self, name: &str) -> anyhow::Result<std::sync::Arc<Snapshot>> {
+        self.service.get(name)?.snapshot().ok_or_else(|| {
+            anyhow::anyhow!("stream '{name}' has no published epoch yet — run 'refresh {name}'")
+        })
+    }
+
+    fn cmd_estimate(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name, i, j] = three(rest, "estimate NAME I J")?;
+        let (i, j): (usize, usize) = (pv("i", i)?, pv("j", j)?);
+        let snap = self.snapshot_of(name)?;
+        let v = snap.estimate_entry(i, j)?;
+        Ok(format!("estimate {name} epoch={} i={i} j={j} value={v:.17e}", snap.epoch))
+    }
+
+    fn cmd_block(&self, rest: &[&str]) -> anyhow::Result<String> {
+        anyhow::ensure!(rest.len() == 5, "usage: block NAME I0 I1 J0 J1");
+        let name = rest[0];
+        let (i0, i1, j0, j1): (usize, usize, usize, usize) = (
+            pv("i0", rest[1])?,
+            pv("i1", rest[2])?,
+            pv("j0", rest[3])?,
+            pv("j1", rest[4])?,
+        );
+        let snap = self.snapshot_of(name)?;
+        let m = snap.estimate_block(i0, i1, j0, j1)?;
+        let mut out = format!(
+            "block {name} epoch={} i={i0}..{i1} j={j0}..{j1} rows={}",
+            snap.epoch,
+            m.rows()
+        );
+        for r in 0..m.rows() {
+            out.push('\n');
+            let row: Vec<String> = m.row(r).iter().map(|v| format!("{v:.17e}")).collect();
+            out.push_str(&row.join(" "));
+        }
+        Ok(out)
+    }
+
+    fn cmd_top(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let name = *rest.first().ok_or_else(|| anyhow::anyhow!("top needs a stream name"))?;
+        let snap = self.snapshot_of(name)?;
+        let r = match rest.get(1) {
+            Some(v) => pv("r", v)?,
+            None => snap.rank,
+        };
+        let scales: Vec<String> =
+            snap.top_components(r).iter().map(|v| format!("{v:.17e}")).collect();
+        Ok(format!(
+            "top {name} epoch={} r={} scales={}",
+            snap.epoch,
+            scales.len(),
+            scales.join(" ")
+        ))
+    }
+
+    fn cmd_stats(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name] = one(rest, "stats NAME")?;
+        let session = self.service.get(name)?;
+        let st = session.stats();
+        let mut out = format!(
+            "stats {name} epoch={} entries={} batches={} queries={} workers={} d={} n1={} n2={} \
+             k={} rank={} auto_refresh={}",
+            st.published_epoch,
+            st.entries_routed,
+            st.batches_routed,
+            st.queries,
+            st.workers,
+            st.meta.d,
+            st.meta.n1,
+            st.meta.n2,
+            st.k,
+            st.rank,
+            st.auto_refresh
+        );
+        let report = session.metrics_report();
+        if !report.is_empty() {
+            out.push('\n');
+            out.push_str(report.trim_end());
+        }
+        Ok(out)
+    }
+
+    fn cmd_save(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name, path] = two(rest, "save NAME PATH")?;
+        let snap = self.snapshot_of(name)?;
+        snap.save(path)?;
+        Ok(format!("ok save {name} epoch={} path={path}", snap.epoch))
+    }
+
+    fn cmd_load(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name, path] = two(rest, "load NAME PATH")?;
+        let snap = Snapshot::load(path)?;
+        let epoch = snap.epoch;
+        self.service.get(name)?.install_snapshot(snap)?;
+        Ok(format!("ok load {name} epoch={epoch}"))
+    }
+
+    fn cmd_checkpoint(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name, dir] = two(rest, "checkpoint NAME DIR")?;
+        let shards = self.service.get(name)?.checkpoint(dir)?;
+        Ok(format!("ok checkpoint {name} shards={shards} dir={dir}"))
+    }
+
+    fn cmd_close(&self, rest: &[&str]) -> anyhow::Result<String> {
+        let [name] = one(rest, "close NAME")?;
+        self.service.close(name)?;
+        Ok(format!("ok close {name}"))
+    }
+
+    fn cmd_streams(&self) -> String {
+        let names = self.service.names();
+        if names.is_empty() {
+            "streams: (none)".to_string()
+        } else {
+            format!("streams: {}", names.join(" "))
+        }
+    }
+}
+
+impl Default for ServeProtocol {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn pv<T: std::str::FromStr>(key: &str, val: &str) -> anyhow::Result<T> {
+    val.parse()
+        .map_err(|_| anyhow::anyhow!("bad value for {key}: '{val}'"))
+}
+
+fn one<'a>(rest: &[&'a str], usage: &str) -> anyhow::Result<[&'a str; 1]> {
+    anyhow::ensure!(rest.len() == 1, "usage: {usage}");
+    Ok([rest[0]])
+}
+
+fn two<'a>(rest: &[&'a str], usage: &str) -> anyhow::Result<[&'a str; 2]> {
+    anyhow::ensure!(rest.len() == 2, "usage: {usage}");
+    Ok([rest[0], rest[1]])
+}
+
+fn three<'a>(rest: &[&'a str], usage: &str) -> anyhow::Result<[&'a str; 3]> {
+    anyhow::ensure!(rest.len() == 3, "usage: {usage}");
+    Ok([rest[0], rest[1], rest[2]])
+}
+
+/// Parse one `M:row:col:value` ingest record.
+fn parse_record(tok: &str) -> anyhow::Result<Entry> {
+    let parts: Vec<&str> = tok.split(':').collect();
+    anyhow::ensure!(parts.len() == 4, "bad record '{tok}' (want M:row:col:value)");
+    let matrix = match parts[0] {
+        "A" | "a" => MatrixId::A,
+        "B" | "b" => MatrixId::B,
+        other => anyhow::bail!("bad matrix tag '{other}' in record '{tok}' (want A or B)"),
+    };
+    Ok(Entry {
+        matrix,
+        row: pv("row", parts[1])?,
+        col: pv("col", parts[2])?,
+        value: pv("value", parts[3])?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_parsing() {
+        let e = parse_record("A:3:4:1.5").unwrap();
+        assert_eq!((e.matrix, e.row, e.col, e.value), (MatrixId::A, 3, 4, 1.5));
+        let e = parse_record("b:0:0:-2").unwrap();
+        assert_eq!(e.matrix, MatrixId::B);
+        assert!(parse_record("C:0:0:1").is_err());
+        assert!(parse_record("A:0:1").is_err());
+        assert!(parse_record("A:x:0:1").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_come_back_as_err_not_panics() {
+        let p = ServeProtocol::new();
+        for line in [
+            "",
+            "frobnicate",
+            "open",
+            "open s d=4",
+            "open s d=4 n1=2 n2=2 bogus=1",
+            "ingest nosuch A:0:0:1",
+            "estimate nosuch 0 0",
+            "refresh nosuch",
+            "block s 0 1 0",
+        ] {
+            let resp = p.handle(line);
+            assert!(resp.starts_with("err "), "line '{line}' → '{resp}'");
+        }
+        assert!(p.handle("help").contains("serve protocol"));
+        assert_eq!(p.handle("streams"), "streams: (none)");
+        assert!(ServeProtocol::is_quit(" quit "));
+        assert!(!ServeProtocol::is_quit("quits"));
+    }
+
+    #[test]
+    fn scripted_session_happy_path() {
+        let p = ServeProtocol::new();
+        let r = p.handle("open s d=6 n1=3 n2=3 k=8 rank=2 seed=3 workers=2 samples=60 iters=3");
+        assert!(r.starts_with("ok open s "), "{r}");
+        // fold a tiny dense pair
+        let mut records = Vec::new();
+        for i in 0..6u32 {
+            for j in 0..3u32 {
+                records.push(format!("A:{i}:{j}:{}", 0.3 + i as f64 + 0.1 * j as f64));
+                records.push(format!("B:{i}:{j}:{}", 1.1 - 0.2 * i as f64 + 0.05 * j as f64));
+            }
+        }
+        let line = format!("ingest s {}", records.join(" "));
+        let r = p.handle(&line);
+        assert_eq!(r, format!("ok ingest s entries={}", records.len()));
+        assert!(p.handle("estimate s 0 0").starts_with("err "), "no epoch yet");
+        let r = p.handle("refresh s");
+        assert!(r.starts_with("ok refresh s epoch=1 "), "{r}");
+        let r = p.handle("estimate s 0 0");
+        assert!(r.starts_with("estimate s epoch=1 i=0 j=0 value="), "{r}");
+        let r = p.handle("top s 2");
+        assert!(r.starts_with("top s epoch=1 r=2 scales="), "{r}");
+        let r = p.handle("block s 0 2 0 2");
+        assert!(r.starts_with("block s epoch=1 "), "{r}");
+        assert_eq!(r.lines().count(), 3, "header + 2 rows: {r}");
+        let r = p.handle("stats s");
+        assert!(r.starts_with("stats s epoch=1 "), "{r}");
+        assert_eq!(p.handle("streams"), "streams: s");
+        assert_eq!(p.handle("close s"), "ok close s");
+        assert_eq!(p.handle("streams"), "streams: (none)");
+    }
+}

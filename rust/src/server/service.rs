@@ -1,0 +1,140 @@
+//! The session registry: named streams behind one handle.
+//!
+//! A [`SketchService`] is what embedders and the line protocol talk to —
+//! open/close streams by name, hand out `Arc<StreamSession>`s for ingest
+//! and queries. All methods take `&self`; the registry lock is held only
+//! for map operations, never during ingest or refresh compute.
+
+use super::session::{StreamSession, StreamSpec};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+pub struct SketchService {
+    streams: Mutex<BTreeMap<String, Arc<StreamSession>>>,
+}
+
+impl SketchService {
+    pub fn new() -> Self {
+        Self { streams: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn validate_name(name: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !name.is_empty() && name.chars().all(|c| !c.is_whitespace()),
+            "stream names must be non-empty and contain no whitespace, got '{name}'"
+        );
+        Ok(())
+    }
+
+    /// Open a fresh stream under `name`.
+    pub fn open(&self, name: &str, spec: StreamSpec) -> anyhow::Result<Arc<StreamSession>> {
+        Self::validate_name(name)?;
+        let mut map = self.streams.lock().unwrap();
+        anyhow::ensure!(!map.contains_key(name), "stream '{name}' is already open");
+        let session = StreamSession::open(name, spec)?;
+        map.insert(name.to_string(), Arc::clone(&session));
+        Ok(session)
+    }
+
+    /// Open a stream resuming from a [`StreamSession::checkpoint`]
+    /// directory — the recovery path: shard states restore bitwise, and the
+    /// worker count is pinned to the checkpoint's so the column → worker
+    /// map (and bit-exactness vs an uninterrupted session) is preserved.
+    pub fn open_restored(
+        &self,
+        name: &str,
+        spec: StreamSpec,
+        dir: impl AsRef<Path>,
+    ) -> anyhow::Result<Arc<StreamSession>> {
+        Self::validate_name(name)?;
+        let states = StreamSession::restore_states(dir)?;
+        let mut map = self.streams.lock().unwrap();
+        anyhow::ensure!(!map.contains_key(name), "stream '{name}' is already open");
+        let session = StreamSession::open_with_states(name, spec, states)?;
+        map.insert(name.to_string(), Arc::clone(&session));
+        Ok(session)
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<Arc<StreamSession>> {
+        self.streams
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unknown stream '{name}' (open it first)"))
+    }
+
+    /// Close and unregister a stream (drains and joins its worker pool).
+    pub fn close(&self, name: &str) -> anyhow::Result<()> {
+        let session = self
+            .streams
+            .lock()
+            .unwrap()
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown stream '{name}' (open it first)"))?;
+        session.close()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.streams.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Close every stream (server shutdown); close errors are swallowed —
+    /// shutdown proceeds regardless.
+    pub fn close_all(&self) {
+        let drained: Vec<_> = std::mem::take(&mut *self.streams.lock().unwrap())
+            .into_values()
+            .collect();
+        for s in drained {
+            s.close().ok();
+        }
+    }
+}
+
+impl Default for SketchService {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::StreamMeta;
+
+    fn spec() -> StreamSpec {
+        let mut s = StreamSpec::new(StreamMeta { d: 8, n1: 3, n2: 3 });
+        s.workers = 1;
+        s
+    }
+
+    #[test]
+    fn registry_lifecycle() {
+        let svc = SketchService::new();
+        assert!(svc.get("s").is_err());
+        svc.open("s", spec()).unwrap();
+        assert!(svc.open("s", spec()).is_err(), "duplicate open must fail");
+        assert_eq!(svc.names(), vec!["s".to_string()]);
+        assert_eq!(svc.get("s").unwrap().name(), "s");
+        svc.close("s").unwrap();
+        assert!(svc.get("s").is_err());
+        assert!(svc.close("s").is_err());
+    }
+
+    #[test]
+    fn bad_names_rejected() {
+        let svc = SketchService::new();
+        assert!(svc.open("", spec()).is_err());
+        assert!(svc.open("two words", spec()).is_err());
+    }
+
+    #[test]
+    fn close_all_drains_everything() {
+        let svc = SketchService::new();
+        svc.open("a", spec()).unwrap();
+        svc.open("b", spec()).unwrap();
+        svc.close_all();
+        assert!(svc.names().is_empty());
+    }
+}

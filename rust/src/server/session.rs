@@ -1,0 +1,664 @@
+//! Long-lived ingest-and-query stream sessions — the serving core.
+//!
+//! One [`StreamSession`] owns a bounded-queue worker pool of mergeable
+//! sketch states (exactly the per-worker states of `sketch::ingest`, kept
+//! alive instead of consumed) plus one published epoch [`Snapshot`].
+//!
+//! # Epoch semantics
+//!
+//! The ingested stream is a growing prefix of entries. A **freeze** is a
+//! queue barrier: under the router lock, a freeze marker is enqueued on
+//! every worker channel, so each worker's reply (a clone of its states)
+//! reflects exactly the entries routed before the marker — a consistent
+//! prefix — while ingestion continues behind it. `refresh` freezes, runs
+//! the standard leader finish off the frozen states, and publishes the
+//! resulting [`Snapshot`] if its epoch is newer than the current one
+//! (concurrent refreshes cannot publish out of order). Readers clone the
+//! published `Arc` under a briefly-held read lock — never during any
+//! compute — and then query the immutable snapshot with no synchronization,
+//! so a torn snapshot is unobservable by construction.
+//!
+//! # Determinism
+//!
+//! Workers own whole columns ([`shard_of`]), the router preserves each
+//! column's entry order, and the grouped fold replays per-entry ops
+//! exactly, so the frozen merged sketch is bitwise identical to a
+//! sequential pass over the same prefix at any worker count — and the
+//! leader finish is bitwise invariant to its own thread count. Hence a
+//! snapshot at epoch E equals the offline `Pipeline::run` on the same
+//! prefix, bit for bit (`tests/server_serve.rs`).
+
+use super::snapshot::Snapshot;
+use crate::algo::{complete_stage, estimate_stage, sample_stage, SmpPcaConfig};
+use crate::coordinator::metrics::{stage, Metrics, StageTimer};
+use crate::linalg::gemm;
+use crate::runtime::ParNativeEngine;
+use crate::sketch::ingest::{tree_merge, worker_states, ColumnGrouper};
+use crate::sketch::SketchState;
+use crate::stream::{bounded, shard_of, Entry, MatrixId, Receiver, Sender, StreamMeta};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Messages a worker drains per lock acquisition (mirrors `sketch::ingest`).
+const RECV_CHUNK: usize = 8;
+
+/// Shape and algorithm parameters of one served stream. Everything the
+/// offline pipeline needs, plus the serving pool knobs.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    pub meta: StreamMeta,
+    /// Leader-finish configuration; its `sketch`, `seed` and `sketch_size`
+    /// also parameterize the ingest-side sketch states (all workers must
+    /// derive the same implicit Π).
+    pub algo: SmpPcaConfig,
+    /// Ingest pool size; `0` = auto (all cores under the `SMPPCA_THREADS`
+    /// cap). Fixed for the session lifetime — the column → worker map must
+    /// not change mid-stream.
+    pub workers: usize,
+    /// Bounded per-worker queue depth, in messages — the backpressure
+    /// window (`serve/route` time spikes when it fills).
+    pub channel_capacity: usize,
+}
+
+impl StreamSpec {
+    pub fn new(meta: StreamMeta) -> Self {
+        Self { meta, algo: SmpPcaConfig::default(), workers: 0, channel_capacity: 64 }
+    }
+}
+
+/// What a session worker drains from its bounded queue.
+enum WorkerMsg {
+    /// Routed sub-batch (this worker's columns only), in stream order.
+    Batch(Vec<Entry>),
+    /// Epoch barrier: clone the worker's states and reply with them.
+    Freeze(Sender<(usize, SketchState, SketchState)>),
+}
+
+struct Router {
+    senders: Vec<Sender<WorkerMsg>>,
+}
+
+struct Refresher {
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<()>,
+}
+
+/// Point-in-time counters of a session (the `stats` protocol answer).
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    pub name: String,
+    pub meta: StreamMeta,
+    pub k: usize,
+    pub rank: usize,
+    pub workers: usize,
+    pub entries_routed: u64,
+    pub batches_routed: u64,
+    /// Epoch of the currently published snapshot (0 = none yet).
+    pub published_epoch: u64,
+    pub queries: u64,
+    pub auto_refresh: bool,
+}
+
+/// One long-lived named stream: concurrent ingest, epoch snapshots,
+/// lock-free snapshot reads. See the module docs for the semantics.
+pub struct StreamSession {
+    name: String,
+    spec: StreamSpec,
+    workers: usize,
+    router: Mutex<Option<Router>>,
+    /// Published snapshot slot. Writers swap the Arc; readers clone it
+    /// under the shared lock (held for a pointer copy only).
+    published: RwLock<Option<Arc<Snapshot>>>,
+    /// Freeze ordinal — the epoch id the next publishable freeze gets.
+    epoch: AtomicU64,
+    /// Lifetime routing counters. Only ever written while holding the
+    /// router lock (so a freeze reads a value consistent with the frozen
+    /// prefix), but readable lock-free — and they survive `close`, unlike
+    /// the router itself.
+    entries_routed: AtomicU64,
+    batches_routed: AtomicU64,
+    metrics: Mutex<Metrics>,
+    queries: AtomicU64,
+    handles: Mutex<Vec<JoinHandle<(SketchState, SketchState)>>>,
+    refresher: Mutex<Option<Refresher>>,
+}
+
+impl StreamSession {
+    /// Open a fresh session: zeroed per-worker states, resolved pool size.
+    pub fn open(name: &str, spec: StreamSpec) -> anyhow::Result<Arc<Self>> {
+        let w = gemm::resolve_threads(spec.workers);
+        let states =
+            worker_states(spec.algo.sketch, spec.algo.seed, spec.algo.sketch_size, spec.meta, w);
+        Self::open_with_states(name, spec, states)
+    }
+
+    /// Open with restored per-worker states (checkpoint recovery). The
+    /// worker count is `states.len()` — a resumed session must reuse the
+    /// count its checkpoint was taken at, so the column → worker map (and
+    /// bit-exactness vs an uninterrupted session) is preserved.
+    pub fn open_with_states(
+        name: &str,
+        spec: StreamSpec,
+        states: Vec<(SketchState, SketchState)>,
+    ) -> anyhow::Result<Arc<Self>> {
+        let meta = spec.meta;
+        anyhow::ensure!(
+            meta.d > 0 && meta.n1 > 0 && meta.n2 > 0,
+            "degenerate stream shape d={} n1={} n2={}",
+            meta.d,
+            meta.n1,
+            meta.n2
+        );
+        anyhow::ensure!(spec.algo.rank >= 1, "rank must be >= 1");
+        anyhow::ensure!(spec.algo.sketch_size >= 1, "sketch size must be >= 1");
+        anyhow::ensure!(!states.is_empty(), "need at least one worker state");
+        for (sa, sb) in &states {
+            anyhow::ensure!(
+                sa.kind() == spec.algo.sketch
+                    && sa.seed() == spec.algo.seed
+                    && sa.k() == spec.algo.sketch_size
+                    && sa.d() == meta.d
+                    && sa.n() == meta.n1
+                    && sb.kind() == spec.algo.sketch
+                    && sb.seed() == spec.algo.seed
+                    && sb.k() == spec.algo.sketch_size
+                    && sb.d() == meta.d
+                    && sb.n() == meta.n2,
+                "restored worker state does not match the stream spec \
+                 (state A {}×{} k={} seed={} vs meta {meta:?} k={} seed={})",
+                sa.d(),
+                sa.n(),
+                sa.k(),
+                sa.seed(),
+                spec.algo.sketch_size,
+                spec.algo.seed,
+            );
+        }
+        let cap = spec.channel_capacity.max(2);
+        let workers = states.len();
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for (idx, (sa, sb)) in states.into_iter().enumerate() {
+            let (tx, rx) = bounded::<WorkerMsg>(cap);
+            senders.push(tx);
+            handles.push(Self::spawn_worker(idx, rx, sa, sb, meta));
+        }
+        Ok(Arc::new(Self {
+            name: name.to_string(),
+            spec,
+            workers,
+            router: Mutex::new(Some(Router { senders })),
+            published: RwLock::new(None),
+            epoch: AtomicU64::new(0),
+            entries_routed: AtomicU64::new(0),
+            batches_routed: AtomicU64::new(0),
+            metrics: Mutex::new(Metrics::new()),
+            queries: AtomicU64::new(0),
+            handles: Mutex::new(handles),
+            refresher: Mutex::new(None),
+        }))
+    }
+
+    fn spawn_worker(
+        idx: usize,
+        rx: Receiver<WorkerMsg>,
+        mut sa: SketchState,
+        mut sb: SketchState,
+        meta: StreamMeta,
+    ) -> JoinHandle<(SketchState, SketchState)> {
+        std::thread::spawn(move || {
+            let mut grouper = ColumnGrouper::new(meta.n1, meta.n2);
+            let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(RECV_CHUNK);
+            while rx.recv_many(RECV_CHUNK, &mut msgs).is_ok() {
+                for msg in msgs.drain(..) {
+                    match msg {
+                        WorkerMsg::Batch(batch) => {
+                            grouper.for_each_group(&batch, |matrix, col, entries| match matrix {
+                                MatrixId::A => sa.update_col_entries(col, entries),
+                                MatrixId::B => sb.update_col_entries(col, entries),
+                            });
+                        }
+                        WorkerMsg::Freeze(reply) => {
+                            // The receiver only hangs up if the freezer bailed;
+                            // either way this worker keeps serving.
+                            let _ = reply.send((idx, sa.clone(), sb.clone()));
+                        }
+                    }
+                }
+            }
+            (sa, sb)
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn spec(&self) -> &StreamSpec {
+        &self.spec
+    }
+
+    /// Resolved ingest pool size.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Route one batch of entries into the worker pool (blocking when the
+    /// bounded queues are full — the `serve/route` stage records that
+    /// backpressure). The whole batch is validated up front and rejected
+    /// atomically on any out-of-range record, so the accepted stream prefix
+    /// stays well-defined. Per-column arrival order is preserved, which is
+    /// what keeps the session bitwise equal to offline ingestion.
+    pub fn ingest(&self, entries: &[Entry]) -> anyhow::Result<u64> {
+        let meta = self.spec.meta;
+        for e in entries {
+            let (n, mname) = match e.matrix {
+                MatrixId::A => (meta.n1, "A"),
+                MatrixId::B => (meta.n2, "B"),
+            };
+            anyhow::ensure!(
+                (e.row as usize) < meta.d && (e.col as usize) < n,
+                "entry {mname}[{}, {}] out of range for d={} n={} — batch rejected, \
+                 nothing ingested",
+                e.row,
+                e.col,
+                meta.d,
+                n
+            );
+        }
+        // Partition outside the lock — the column → worker map depends only
+        // on the session-fixed worker count, so the critical section below
+        // shrinks to the sends that actually need prefix atomicity.
+        let w = self.workers;
+        let mut shards: Vec<Vec<Entry>> = vec![Vec::new(); w];
+        for &e in entries {
+            shards[shard_of(e.matrix, e.col, w)].push(e);
+        }
+        let t = StageTimer::start();
+        {
+            let guard = self.router.lock().unwrap();
+            let rt = guard
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("stream '{}' is closed", self.name))?;
+            for (s, batch) in shards.into_iter().enumerate() {
+                if !batch.is_empty() {
+                    rt.senders[s].send(WorkerMsg::Batch(batch)).map_err(|_| {
+                        anyhow::anyhow!("ingest worker {s} died (stream '{}')", self.name)
+                    })?;
+                }
+            }
+            self.entries_routed.fetch_add(entries.len() as u64, Ordering::Relaxed);
+            self.batches_routed.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut m = self.metrics.lock().unwrap();
+        m.record_stage(stage::SERVE_ROUTE, t.stop());
+        m.add("serve/entries", entries.len() as u64);
+        m.add("serve/batches", 1);
+        Ok(entries.len() as u64)
+    }
+
+    /// Enqueue a freeze marker on every worker (under the router lock, so
+    /// the frozen prefix is exactly the entries routed so far) and collect
+    /// the state clones. `publishable` freezes take the next epoch ordinal;
+    /// barriers (`flush`, `checkpoint`) do not consume one.
+    fn freeze(
+        &self,
+        publishable: bool,
+    ) -> anyhow::Result<(u64, u64, Vec<(SketchState, SketchState)>)> {
+        let t = StageTimer::start();
+        let (epoch, entries_at, w, rx) = {
+            let guard = self.router.lock().unwrap();
+            let rt = guard
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("stream '{}' is closed", self.name))?;
+            let epoch = if publishable {
+                self.epoch.fetch_add(1, Ordering::SeqCst) + 1
+            } else {
+                self.epoch.load(Ordering::SeqCst)
+            };
+            let (tx, rx) = bounded::<(usize, SketchState, SketchState)>(rt.senders.len());
+            for s in &rt.senders {
+                s.send(WorkerMsg::Freeze(tx.clone())).map_err(|_| {
+                    anyhow::anyhow!("ingest worker died (stream '{}')", self.name)
+                })?;
+            }
+            // Counter writes happen under this same lock, so the value read
+            // here is exactly the frozen prefix length.
+            (epoch, self.entries_routed.load(Ordering::Relaxed), rt.senders.len(), rx)
+        }; // router lock released — ingestion continues behind the markers
+        let mut frozen: Vec<(usize, SketchState, SketchState)> = Vec::with_capacity(w);
+        for _ in 0..w {
+            frozen.push(rx.recv().map_err(|_| {
+                anyhow::anyhow!("ingest worker died during freeze (stream '{}')", self.name)
+            })?);
+        }
+        frozen.sort_unstable_by_key(|t| t.0);
+        self.metrics.lock().unwrap().record_stage(stage::SERVE_FREEZE, t.stop());
+        Ok((epoch, entries_at, frozen.into_iter().map(|(_, a, b)| (a, b)).collect()))
+    }
+
+    /// Barrier: wait until every entry routed so far has been folded into
+    /// the worker states, returning how many that is. Does not publish an
+    /// epoch — benches use this to close an ingest timing window.
+    pub fn flush(&self) -> anyhow::Result<u64> {
+        let (_, entries, _) = self.freeze(false)?;
+        Ok(entries)
+    }
+
+    /// Take an epoch snapshot of the current stream prefix: freeze, merge,
+    /// run the leader finish (the exact `Pipeline::run` staging and engine,
+    /// so the result is bitwise what the offline pipeline would produce on
+    /// this prefix), and publish. Returns the snapshot — which is also the
+    /// published one unless a newer epoch won the race.
+    pub fn refresh(&self) -> anyhow::Result<Arc<Snapshot>> {
+        let t0 = Instant::now();
+        let (epoch, entries_at, states) = self.freeze(true)?;
+        let (sa, sb) = tree_merge(states);
+        let (sa, sb) = (sa.finalize(), sb.finalize());
+        anyhow::ensure!(
+            sa.fro_sq > 0.0 && sb.fro_sq > 0.0,
+            "stream '{}' has no mass on both matrices yet — ingest data before refreshing",
+            self.name
+        );
+        let algo = &self.spec.algo;
+        let t = StageTimer::start();
+        let omega = sample_stage(&sa, &sb, algo)?;
+        self.record(stage::LEADER_SAMPLE, t.stop());
+        let engine = ParNativeEngine { threads: algo.threads };
+        let t = StageTimer::start();
+        let values = estimate_stage(&sa, &sb, algo, &engine, &omega);
+        self.record(stage::LEADER_ESTIMATE, t.stop());
+        let t = StageTimer::start();
+        let out = complete_stage(&sa, &sb, algo, &omega, &values)?;
+        self.record(stage::LEADER_COMPLETE, t.stop());
+        let snap = Arc::new(Snapshot::from_parts(
+            epoch,
+            entries_at,
+            &self.spec,
+            sa.col_norms,
+            sb.col_norms,
+            out,
+            t0.elapsed(),
+        ));
+        self.publish(Arc::clone(&snap));
+        let mut m = self.metrics.lock().unwrap();
+        m.record_stage(stage::SERVE_REFRESH, t0.elapsed());
+        m.add("serve/epochs", 1);
+        Ok(snap)
+    }
+
+    /// Swap in a snapshot iff it is newer than the published one (epochs
+    /// are assigned in prefix order, so a slow older refresh can never
+    /// clobber a newer result).
+    fn publish(&self, snap: Arc<Snapshot>) {
+        let stale = {
+            let mut slot = self.published.write().unwrap();
+            let newer = slot.as_ref().map_or(true, |cur| snap.epoch > cur.epoch);
+            if newer {
+                *slot = Some(snap);
+            }
+            !newer
+        };
+        if stale {
+            self.metrics.lock().unwrap().add("serve/stale_drops", 1);
+        }
+    }
+
+    /// Install a recovered snapshot (see [`Snapshot::load`]) and advance
+    /// the epoch counter past it, so subsequent refreshes keep epochs
+    /// monotone across the restart.
+    pub fn install_snapshot(&self, snap: Snapshot) -> anyhow::Result<()> {
+        anyhow::ensure!(snap.verify_integrity(), "snapshot failed its integrity check");
+        snap.ensure_matches(&self.spec)?;
+        self.epoch.fetch_max(snap.epoch, Ordering::SeqCst);
+        self.publish(Arc::new(snap));
+        Ok(())
+    }
+
+    /// Current published snapshot (`None` before the first refresh). The
+    /// read lock is held only to clone the `Arc`; everything after is
+    /// synchronization-free reads of an immutable object.
+    pub fn snapshot(&self) -> Option<Arc<Snapshot>> {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.published.read().unwrap().clone()
+    }
+
+    /// Persist the frozen per-worker states (`shardN.a` / `shardN.b`, v2
+    /// container format) for bitwise resume via
+    /// [`StreamSession::restore_states`]. Ingestion continues immediately
+    /// after the freeze; the written prefix is everything routed before
+    /// this call.
+    pub fn checkpoint(&self, dir: impl AsRef<Path>) -> anyhow::Result<usize> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let (_, _, states) = self.freeze(false)?;
+        for (i, (sa, sb)) in states.iter().enumerate() {
+            sa.checkpoint(dir.join(format!("shard{i}.a")))?;
+            sb.checkpoint(dir.join(format!("shard{i}.b")))?;
+        }
+        Ok(states.len())
+    }
+
+    /// Read back a [`StreamSession::checkpoint`] directory. The shard count
+    /// (= worker count to resume with) is however many `shardN.*` pairs are
+    /// present.
+    pub fn restore_states(
+        dir: impl AsRef<Path>,
+    ) -> anyhow::Result<Vec<(SketchState, SketchState)>> {
+        let dir = dir.as_ref();
+        let mut out = Vec::new();
+        loop {
+            let pa = dir.join(format!("shard{}.a", out.len()));
+            let pb = dir.join(format!("shard{}.b", out.len()));
+            if !pa.exists() {
+                break;
+            }
+            out.push((SketchState::restore(&pa)?, SketchState::restore(&pb)?));
+        }
+        anyhow::ensure!(!out.is_empty(), "no shard checkpoints found in {}", dir.display());
+        Ok(out)
+    }
+
+    /// Start a background refresher publishing a new epoch every
+    /// `interval` (the receiver is an owned `Arc` — the refresher thread
+    /// keeps the session alive until stopped). Errors (e.g. an empty
+    /// stream) are counted, not fatal.
+    pub fn start_auto_refresh(self: Arc<Self>, interval: Duration) -> anyhow::Result<()> {
+        anyhow::ensure!(interval >= Duration::from_millis(1), "refresh interval too small");
+        let mut slot = self.refresher.lock().unwrap();
+        anyhow::ensure!(
+            slot.is_none(),
+            "auto-refresh is already running on '{}'",
+            self.name
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let me = Arc::clone(&self);
+        let handle = std::thread::spawn(move || {
+            while !flag.load(Ordering::Relaxed) {
+                // Chunked sleep so stop/close never waits a full interval.
+                let mut left = interval;
+                while left > Duration::ZERO && !flag.load(Ordering::Relaxed) {
+                    let step = left.min(Duration::from_millis(25));
+                    std::thread::sleep(step);
+                    left = left.saturating_sub(step);
+                }
+                if flag.load(Ordering::Relaxed) {
+                    break;
+                }
+                if me.refresh().is_err() {
+                    me.metrics.lock().unwrap().add("serve/refresh_errors", 1);
+                }
+            }
+        });
+        *slot = Some(Refresher { stop, handle });
+        Ok(())
+    }
+
+    /// Stop the background refresher, if any; returns whether one ran.
+    pub fn stop_auto_refresh(&self) -> bool {
+        let taken = self.refresher.lock().unwrap().take();
+        match taken {
+            Some(Refresher { stop, handle }) => {
+                stop.store(true, Ordering::Relaxed);
+                handle.join().ok();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Counters snapshot for `stats`. Valid after `close` too — the
+    /// lifetime counters outlive the router, matching the still-queryable
+    /// published snapshot.
+    pub fn stats(&self) -> StreamStats {
+        let entries_routed = self.entries_routed.load(Ordering::Relaxed);
+        let batches_routed = self.batches_routed.load(Ordering::Relaxed);
+        let published_epoch =
+            self.published.read().unwrap().as_ref().map_or(0, |s| s.epoch);
+        StreamStats {
+            name: self.name.clone(),
+            meta: self.spec.meta,
+            k: self.spec.algo.sketch_size,
+            rank: self.spec.algo.rank,
+            workers: self.workers,
+            entries_routed,
+            batches_routed,
+            published_epoch,
+            queries: self.queries.load(Ordering::Relaxed),
+            auto_refresh: self.refresher.lock().unwrap().is_some(),
+        }
+    }
+
+    /// Formatted stage/counter report (the pipeline metrics panel).
+    pub fn metrics_report(&self) -> String {
+        self.metrics.lock().unwrap().report()
+    }
+
+    fn record(&self, name: &str, elapsed: Duration) {
+        self.metrics.lock().unwrap().record_stage(name, elapsed);
+    }
+
+    /// Stop the refresher, drain and join the worker pool. Idempotent; the
+    /// published snapshot stays queryable after close.
+    pub fn close(&self) -> anyhow::Result<()> {
+        self.stop_auto_refresh();
+        let rt = self.router.lock().unwrap().take();
+        drop(rt); // senders drop → workers drain their queues and exit
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            h.join().map_err(|_| {
+                anyhow::anyhow!("ingest worker panicked (stream '{}')", self.name)
+            })?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+    use crate::stream::{EntrySource, ShuffledMatrixSource};
+
+    fn spec(workers: usize) -> StreamSpec {
+        StreamSpec {
+            meta: StreamMeta { d: 18, n1: 7, n2: 6 },
+            algo: SmpPcaConfig {
+                rank: 2,
+                sketch_size: 12,
+                samples: 200.0,
+                iters: 4,
+                seed: 5,
+                ..Default::default()
+            },
+            workers,
+            channel_capacity: 8,
+        }
+    }
+
+    fn entries() -> Vec<Entry> {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::gaussian(18, 7, &mut rng);
+        let b = Mat::gaussian(18, 6, &mut rng);
+        let mut out = Vec::new();
+        Box::new(ShuffledMatrixSource { a, b, seed: 4 }).for_each(&mut |e| out.push(e));
+        out
+    }
+
+    #[test]
+    fn ingest_refresh_query_roundtrip() {
+        let s = StreamSession::open("t", spec(2)).unwrap();
+        assert!(s.snapshot().is_none());
+        let es = entries();
+        for chunk in es.chunks(13) {
+            s.ingest(chunk).unwrap();
+        }
+        let snap = s.refresh().unwrap();
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.entries_ingested, es.len() as u64);
+        assert!(snap.verify_integrity());
+        assert_eq!(s.snapshot().unwrap().epoch, 1);
+        let v = snap.estimate_entry(0, 0).unwrap();
+        assert!(v.is_finite());
+        let st = s.stats();
+        assert_eq!(st.entries_routed, es.len() as u64);
+        assert_eq!(st.published_epoch, 1);
+        assert!(st.queries >= 1);
+        s.close().unwrap();
+        // post-close: ingestion refused; snapshot and lifetime counters
+        // still served
+        assert!(s.ingest(&es[..1]).is_err());
+        assert!(s.snapshot().is_some());
+        assert_eq!(s.stats().entries_routed, es.len() as u64);
+        s.close().unwrap(); // idempotent
+    }
+
+    #[test]
+    fn refresh_on_empty_stream_is_a_clean_error() {
+        let s = StreamSession::open("empty", spec(1)).unwrap();
+        let err = s.refresh().unwrap_err().to_string();
+        assert!(err.contains("no mass"), "unhelpful error: {err}");
+        s.close().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_batch_rejected_atomically() {
+        let s = StreamSession::open("oob", spec(2)).unwrap();
+        let bad = vec![Entry::a(0, 0, 1.0), Entry::a(0, 99, 1.0)];
+        assert!(s.ingest(&bad).is_err());
+        assert_eq!(s.stats().entries_routed, 0, "rejected batch must not count");
+        s.close().unwrap();
+    }
+
+    #[test]
+    fn flush_is_a_barrier_not_an_epoch() {
+        let s = StreamSession::open("fl", spec(3)).unwrap();
+        let es = entries();
+        s.ingest(&es).unwrap();
+        assert_eq!(s.flush().unwrap(), es.len() as u64);
+        let snap = s.refresh().unwrap();
+        assert_eq!(snap.epoch, 1, "flush must not consume epoch ordinals");
+        s.close().unwrap();
+    }
+
+    #[test]
+    fn auto_refresh_publishes_and_stops() {
+        let s = StreamSession::open("auto", spec(2)).unwrap();
+        s.ingest(&entries()).unwrap();
+        s.clone().start_auto_refresh(Duration::from_millis(10)).unwrap();
+        assert!(s.clone().start_auto_refresh(Duration::from_millis(10)).is_err());
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while s.snapshot().is_none() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(s.snapshot().is_some(), "auto-refresh never published");
+        assert!(s.stop_auto_refresh());
+        assert!(!s.stop_auto_refresh());
+        s.close().unwrap();
+    }
+}

@@ -1,0 +1,434 @@
+//! Immutable epoch snapshots: the query-side artifact a refresh publishes.
+//!
+//! A [`Snapshot`] is a frozen, self-contained answer set — top-r factors of
+//! `AᵀB`, the exact norm profiles, and provenance (epoch id, entries at
+//! freeze, sketch parameters). It is built once by the refresher, published
+//! by pointer swap, and then only ever read; a fingerprint over the payload
+//! lets paranoid readers (and the torn-snapshot property test) verify they
+//! are holding a consistent object. Snapshots persist in the shared SMPC
+//! container format (`sketch::checkpoint`), version-checked on load.
+
+use super::session::StreamSpec;
+use crate::algo::SmpPcaOutput;
+use crate::completion::LowRank;
+use crate::linalg::Mat;
+use crate::sketch::checkpoint::{
+    read_f64s, read_header, read_u64, sketch_kind_code, sketch_kind_from_code, write_header,
+    PayloadKind,
+};
+use crate::sketch::SketchKind;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::time::Duration;
+
+/// One published epoch of a served stream. Immutable after construction.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Freeze ordinal of the owning session (1-based; monotone).
+    pub epoch: u64,
+    /// Entries routed into the session when this epoch froze — the prefix
+    /// length this snapshot summarizes.
+    pub entries_ingested: u64,
+    pub kind: SketchKind,
+    pub seed: u64,
+    /// Ambient (row) dimension of the sketched stream.
+    pub d: usize,
+    /// Sketch size the summaries were taken at.
+    pub k: usize,
+    pub rank: usize,
+    /// The leader-finish parameters the factors were computed under (a
+    /// snapshot from a differently-configured session must not install).
+    pub samples_cfg: f64,
+    pub iters: usize,
+    pub plain_estimator: bool,
+    /// The served estimate: `AᵀB ≈ U Vᵀ` (U is n₁×r, V is n₂×r).
+    pub factors: LowRank,
+    /// Exact column norms `‖A_i‖` / `‖B_j‖` at the freeze (the stream's
+    /// norm profile — also what the next refresh's sampling will see).
+    pub a_norms: Vec<f64>,
+    pub b_norms: Vec<f64>,
+    /// |Ω| the completion ran on.
+    pub samples_drawn: usize,
+    /// Wall time of the refresh that produced this epoch.
+    pub refresh_wall: Duration,
+    /// FNV-1a fingerprint of the payload, fixed at construction.
+    checksum: u64,
+}
+
+fn fnv(acc: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *acc ^= b as u64;
+        *acc = acc.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+impl Snapshot {
+    /// Build (and fingerprint) a snapshot from a finished leader run.
+    pub(crate) fn from_parts(
+        epoch: u64,
+        entries_ingested: u64,
+        spec: &StreamSpec,
+        a_norms: Vec<f64>,
+        b_norms: Vec<f64>,
+        out: SmpPcaOutput,
+        refresh_wall: Duration,
+    ) -> Snapshot {
+        let mut s = Snapshot {
+            epoch,
+            entries_ingested,
+            kind: spec.algo.sketch,
+            seed: spec.algo.seed,
+            d: spec.meta.d,
+            k: spec.algo.sketch_size,
+            rank: spec.algo.rank,
+            samples_cfg: spec.algo.samples,
+            iters: spec.algo.iters,
+            plain_estimator: spec.algo.plain_estimator,
+            factors: out.factors,
+            a_norms,
+            b_norms,
+            samples_drawn: out.samples_drawn,
+            refresh_wall,
+            checksum: 0,
+        };
+        s.checksum = s.fingerprint();
+        s
+    }
+
+    fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        fnv(&mut h, &self.epoch.to_le_bytes());
+        fnv(&mut h, &self.entries_ingested.to_le_bytes());
+        fnv(&mut h, &[sketch_kind_code(self.kind)]);
+        fnv(&mut h, &self.seed.to_le_bytes());
+        for dim in [self.d, self.k, self.rank, self.n1(), self.n2(), self.samples_drawn, self.iters]
+        {
+            fnv(&mut h, &(dim as u64).to_le_bytes());
+        }
+        fnv(&mut h, &self.samples_cfg.to_le_bytes());
+        fnv(&mut h, &[self.plain_estimator as u8]);
+        for v in self
+            .factors
+            .u
+            .data()
+            .iter()
+            .chain(self.factors.v.data())
+            .chain(&self.a_norms)
+            .chain(&self.b_norms)
+        {
+            fnv(&mut h, &v.to_le_bytes());
+        }
+        h
+    }
+
+    /// Recompute the payload fingerprint and compare against the one fixed
+    /// at construction. Readers of the published pointer use this in the
+    /// torn-snapshot property test; it also guards `load`.
+    pub fn verify_integrity(&self) -> bool {
+        self.fingerprint() == self.checksum
+    }
+
+    pub fn n1(&self) -> usize {
+        self.factors.n1()
+    }
+
+    pub fn n2(&self) -> usize {
+        self.factors.n2()
+    }
+
+    /// Served estimate of the single product entry `(AᵀB)[i, j]` at this
+    /// epoch: `Σ_t U[i,t]·V[j,t]`.
+    pub fn estimate_entry(&self, i: usize, j: usize) -> anyhow::Result<f64> {
+        anyhow::ensure!(
+            i < self.n1() && j < self.n2(),
+            "entry ({i}, {j}) out of range for the {}×{} product",
+            self.n1(),
+            self.n2()
+        );
+        let r = self.factors.rank();
+        let mut acc = 0.0;
+        for t in 0..r {
+            acc += self.factors.u[(i, t)] * self.factors.v[(j, t)];
+        }
+        Ok(acc)
+    }
+
+    /// Served estimate of the half-open block `[i0, i1) × [j0, j1)` of
+    /// `AᵀB` at this epoch.
+    pub fn estimate_block(
+        &self,
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+    ) -> anyhow::Result<Mat> {
+        anyhow::ensure!(
+            i0 <= i1 && i1 <= self.n1() && j0 <= j1 && j1 <= self.n2(),
+            "half-open block [{i0}, {i1}) × [{j0}, {j1}) out of range for the {}×{} product",
+            self.n1(),
+            self.n2()
+        );
+        let r = self.factors.rank();
+        Ok(Mat::from_fn(i1 - i0, j1 - j0, |bi, bj| {
+            let mut acc = 0.0;
+            for t in 0..r {
+                acc += self.factors.u[(i0 + bi, t)] * self.factors.v[(j0 + bj, t)];
+            }
+            acc
+        }))
+    }
+
+    /// Scales of the leading components at this epoch: `‖U_t‖·‖V_t‖` for
+    /// `t < min(r, rank)` — the serving-side "how big is component t"
+    /// answer (the WAltMin factors carry the singular weight jointly, so
+    /// the per-component product of column norms is the natural magnitude).
+    pub fn top_components(&self, r: usize) -> Vec<f64> {
+        (0..r.min(self.factors.rank()))
+            .map(|t| self.factors.u.col_norm(t) * self.factors.v.col_norm(t))
+            .collect()
+    }
+
+    /// Reject installation into a session whose parameters this snapshot
+    /// was not produced under — shape, sketch identity, *and* the leader
+    /// finish knobs (samples/iters/estimator), so consecutive epochs of one
+    /// stream can never silently mix estimates of different quality.
+    pub(crate) fn ensure_matches(&self, spec: &StreamSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.kind == spec.algo.sketch
+                && self.seed == spec.algo.seed
+                && self.d == spec.meta.d
+                && self.k == spec.algo.sketch_size
+                && self.rank == spec.algo.rank
+                && self.samples_cfg == spec.algo.samples
+                && self.iters == spec.algo.iters
+                && self.plain_estimator == spec.algo.plain_estimator
+                && self.n1() == spec.meta.n1
+                && self.n2() == spec.meta.n2,
+            "snapshot (kind={:?} seed={} d={} k={} rank={} samples={} iters={} plain={} {}×{}) \
+             does not match the stream spec (kind={:?} seed={} d={} k={} rank={} samples={} \
+             iters={} plain={} {}×{})",
+            self.kind,
+            self.seed,
+            self.d,
+            self.k,
+            self.rank,
+            self.samples_cfg,
+            self.iters,
+            self.plain_estimator,
+            self.n1(),
+            self.n2(),
+            spec.algo.sketch,
+            spec.algo.seed,
+            spec.meta.d,
+            spec.algo.sketch_size,
+            spec.algo.rank,
+            spec.algo.samples,
+            spec.algo.iters,
+            spec.algo.plain_estimator,
+            spec.meta.n1,
+            spec.meta.n2,
+        );
+        Ok(())
+    }
+
+    /// Persist in the shared SMPC v2 container (payload kind
+    /// `ServeSnapshot`). Layout after the header, little-endian:
+    /// epoch u64, entries u64, sketch-kind u8, seed u64, d u64, k u64,
+    /// rank u64, n1 u64, n2 u64, samples u64, iters u64, samples_cfg f64,
+    /// plain u8, refresh_nanos u64, U f64×(n1·r), V f64×(n2·r),
+    /// a_norms f64×n1, b_norms f64×n2, checksum u64.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        write_header(&mut w, PayloadKind::ServeSnapshot)?;
+        w.write_all(&self.epoch.to_le_bytes())?;
+        w.write_all(&self.entries_ingested.to_le_bytes())?;
+        w.write_all(&[sketch_kind_code(self.kind)])?;
+        w.write_all(&self.seed.to_le_bytes())?;
+        for dim in [self.d, self.k, self.rank, self.n1(), self.n2(), self.samples_drawn, self.iters]
+        {
+            w.write_all(&(dim as u64).to_le_bytes())?;
+        }
+        w.write_all(&self.samples_cfg.to_le_bytes())?;
+        w.write_all(&[self.plain_estimator as u8])?;
+        w.write_all(&(self.refresh_wall.as_nanos() as u64).to_le_bytes())?;
+        for v in self
+            .factors
+            .u
+            .data()
+            .iter()
+            .chain(self.factors.v.data())
+            .chain(&self.a_norms)
+            .chain(&self.b_norms)
+        {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&self.checksum.to_le_bytes())?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a persisted snapshot; rejects wrong payload kinds, implausible
+    /// shapes, and fingerprint mismatches.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Snapshot> {
+        let mut r = BufReader::new(std::fs::File::open(path)?);
+        let payload = read_header(&mut r)?;
+        anyhow::ensure!(
+            payload == PayloadKind::ServeSnapshot,
+            "this file holds a {payload:?} payload, not a serve snapshot"
+        );
+        let epoch = read_u64(&mut r)?;
+        let entries_ingested = read_u64(&mut r)?;
+        let mut kind_b = [0u8; 1];
+        r.read_exact(&mut kind_b)?;
+        let kind = sketch_kind_from_code(kind_b[0])?;
+        let seed = read_u64(&mut r)?;
+        let d = read_u64(&mut r)? as usize;
+        let k = read_u64(&mut r)? as usize;
+        let rank = read_u64(&mut r)? as usize;
+        let n1 = read_u64(&mut r)? as usize;
+        let n2 = read_u64(&mut r)? as usize;
+        let samples_drawn = read_u64(&mut r)? as usize;
+        let iters = read_u64(&mut r)? as usize;
+        let mut f8 = [0u8; 8];
+        r.read_exact(&mut f8)?;
+        let samples_cfg = f64::from_le_bytes(f8);
+        let mut plain_b = [0u8; 1];
+        r.read_exact(&mut plain_b)?;
+        let plain_estimator = plain_b[0] != 0;
+        let refresh_wall = Duration::from_nanos(read_u64(&mut r)?);
+        // Plausibility gate before allocating from untrusted lengths: the
+        // whole payload is capped at 2²⁴ cells (128 MiB of f64s) so a
+        // corrupt length field fails cleanly here instead of attempting a
+        // multi-GiB allocation ahead of the checksum verification.
+        let cells = rank
+            .checked_mul(n1.max(n2))
+            .filter(|&c| rank >= 1 && n1 >= 1 && n2 >= 1 && c <= 1 << 24);
+        anyhow::ensure!(
+            cells.is_some() && n1 <= 1 << 24 && n2 <= 1 << 24,
+            "implausible snapshot shape r={rank} n1={n1} n2={n2}"
+        );
+        let u = Mat::from_vec(n1, rank, read_f64s(&mut r, n1 * rank)?);
+        let v = Mat::from_vec(n2, rank, read_f64s(&mut r, n2 * rank)?);
+        let a_norms = read_f64s(&mut r, n1)?;
+        let b_norms = read_f64s(&mut r, n2)?;
+        let checksum = read_u64(&mut r)?;
+        let snap = Snapshot {
+            epoch,
+            entries_ingested,
+            kind,
+            seed,
+            d,
+            k,
+            rank,
+            samples_cfg,
+            iters,
+            plain_estimator,
+            factors: LowRank { u, v },
+            a_norms,
+            b_norms,
+            samples_drawn,
+            refresh_wall,
+            checksum,
+        };
+        anyhow::ensure!(
+            snap.verify_integrity(),
+            "snapshot payload corrupt (fingerprint mismatch)"
+        );
+        Ok(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::stream::StreamMeta;
+
+    fn toy_snapshot() -> Snapshot {
+        let mut rng = Pcg64::new(3);
+        let u = Mat::gaussian(5, 2, &mut rng);
+        let v = Mat::gaussian(4, 2, &mut rng);
+        let spec = StreamSpec::new(StreamMeta { d: 10, n1: 5, n2: 4 });
+        let out = SmpPcaOutput {
+            factors: LowRank { u, v },
+            samples_drawn: 17,
+            residual_log: vec![],
+        };
+        Snapshot::from_parts(
+            3,
+            123,
+            &spec,
+            vec![1.0; 5],
+            vec![2.0; 4],
+            out,
+            Duration::from_millis(7),
+        )
+    }
+
+    #[test]
+    fn entry_and_block_queries_agree_with_factors() {
+        let s = toy_snapshot();
+        assert!(s.verify_integrity());
+        let full = s.estimate_block(0, 5, 0, 4).unwrap();
+        for i in 0..5 {
+            for j in 0..4 {
+                let e = s.estimate_entry(i, j).unwrap();
+                assert_eq!(e, full[(i, j)]);
+                let direct: f64 =
+                    (0..2).map(|t| s.factors.u[(i, t)] * s.factors.v[(j, t)]).sum();
+                assert_eq!(e, direct);
+            }
+        }
+        assert!(s.estimate_entry(5, 0).is_err());
+        assert!(s.estimate_block(0, 6, 0, 4).is_err());
+        assert_eq!(s.top_components(10).len(), 2);
+    }
+
+    #[test]
+    fn save_load_roundtrips_bitwise() {
+        let s = toy_snapshot();
+        let path = std::env::temp_dir()
+            .join(format!("smppca_snap_{}_rt.bin", std::process::id()));
+        s.save(&path).unwrap();
+        let loaded = Snapshot::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.epoch, s.epoch);
+        assert_eq!(loaded.entries_ingested, s.entries_ingested);
+        assert_eq!(loaded.kind, s.kind);
+        assert_eq!(loaded.factors.u.data(), s.factors.u.data());
+        assert_eq!(loaded.factors.v.data(), s.factors.v.data());
+        assert_eq!(loaded.a_norms, s.a_norms);
+        assert_eq!(loaded.b_norms, s.b_norms);
+        assert_eq!(loaded.samples_drawn, s.samples_drawn);
+        assert_eq!(loaded.refresh_wall, s.refresh_wall);
+        assert!(loaded.verify_integrity());
+    }
+
+    #[test]
+    fn load_rejects_flipped_payload_bit() {
+        let s = toy_snapshot();
+        let path = std::env::temp_dir()
+            .join(format!("smppca_snap_{}_flip.bin", std::process::id()));
+        s.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Snapshot::load(&path);
+        std::fs::remove_file(&path).ok();
+        assert!(err.is_err(), "flipped payload byte must not load cleanly");
+    }
+
+    #[test]
+    fn load_rejects_sketch_checkpoint_files() {
+        use crate::sketch::{SketchKind, SketchState};
+        let path = std::env::temp_dir()
+            .join(format!("smppca_snap_{}_sk.bin", std::process::id()));
+        let mut st = SketchState::new(SketchKind::Gaussian, 1, 4, 8, 3);
+        st.update_entry(0, 0, 1.0);
+        st.checkpoint(&path).unwrap();
+        let err = Snapshot::load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("SketchState"), "unhelpful error: {err}");
+    }
+}

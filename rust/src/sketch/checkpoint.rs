@@ -4,9 +4,24 @@
 //! Because states are mergeable, a worker that lost *some* entries can
 //! also be replayed from the log segment after its last checkpoint.
 //!
-//! Layout (little-endian):
+//! # Container format
+//!
+//! All SMPC on-disk artifacts — worker sketch-state checkpoints *and* the
+//! serving subsystem's epoch snapshots ([`crate::server::Snapshot`]) —
+//! share one versioned header, so a reader can always tell what a file is
+//! (and refuse what it cannot parse) before touching the payload:
+//!
 //! ```text
-//! magic "SMPC", version u32
+//! magic "SMPC", version u32 (current: 2), payload-kind u8
+//! ```
+//!
+//! Version 1 files (the pre-server format) carry no payload-kind byte —
+//! they are sketch-state checkpoints by definition, and [`read_header`]
+//! maps them to [`PayloadKind::SketchState`] as a legacy fallback. Any
+//! other version is rejected with a clear error instead of a garbage read.
+//!
+//! Sketch-state payload (little-endian, unchanged since v1):
+//! ```text
 //! kind u8 (0 gauss, 1 srht, 2 count), seed u64, k u64, d u64, n u64
 //! entries_seen u64
 //! acc  f64 × (k·n)
@@ -18,20 +33,92 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SMPC";
-const VERSION: u32 = 1;
+/// Current container version. v1 = headerless-kind legacy (read-only
+/// fallback); v2 adds the payload-kind byte shared with server snapshots.
+pub(crate) const FORMAT_VERSION: u32 = 2;
+
+/// What an SMPC container file holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum PayloadKind {
+    /// A mergeable worker [`SketchState`] (ingest checkpoint/resume).
+    SketchState,
+    /// A published epoch snapshot from the serving subsystem.
+    ServeSnapshot,
+}
+
+impl PayloadKind {
+    fn code(self) -> u8 {
+        match self {
+            PayloadKind::SketchState => 1,
+            PayloadKind::ServeSnapshot => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> anyhow::Result<Self> {
+        match c {
+            1 => Ok(PayloadKind::SketchState),
+            2 => Ok(PayloadKind::ServeSnapshot),
+            other => anyhow::bail!("unknown SMPC payload kind {other}"),
+        }
+    }
+}
+
+/// Write the shared v2 container header.
+pub(crate) fn write_header(w: &mut impl Write, kind: PayloadKind) -> anyhow::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&FORMAT_VERSION.to_le_bytes())?;
+    w.write_all(&[kind.code()])?;
+    Ok(())
+}
+
+/// Read and validate the shared container header, returning the payload
+/// kind. Legacy v1 files map to [`PayloadKind::SketchState`] (their payload
+/// begins right after the version word). Unknown versions are rejected —
+/// never guessed at.
+pub(crate) fn read_header(r: &mut impl Read) -> anyhow::Result<PayloadKind> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not an SMPC checkpoint/snapshot (bad magic)");
+    let version = read_u32(r)?;
+    match version {
+        1 => Ok(PayloadKind::SketchState),
+        2 => {
+            let mut kind_b = [0u8; 1];
+            r.read_exact(&mut kind_b)?;
+            PayloadKind::from_code(kind_b[0])
+        }
+        other => anyhow::bail!(
+            "unsupported SMPC format version {other} (this build reads 1..={FORMAT_VERSION}); \
+             refusing to guess at the payload"
+        ),
+    }
+}
+
+/// The sketch-kind byte of the on-disk payload (shared with the server
+/// snapshot codec so the two formats can never drift apart).
+pub(crate) fn sketch_kind_code(kind: SketchKind) -> u8 {
+    match kind {
+        SketchKind::Gaussian => 0,
+        SketchKind::Srht => 1,
+        SketchKind::CountSketch => 2,
+    }
+}
+
+pub(crate) fn sketch_kind_from_code(c: u8) -> anyhow::Result<SketchKind> {
+    match c {
+        0 => Ok(SketchKind::Gaussian),
+        1 => Ok(SketchKind::Srht),
+        2 => Ok(SketchKind::CountSketch),
+        other => anyhow::bail!("corrupt sketch kind {other}"),
+    }
+}
 
 impl SketchState {
-    /// Snapshot to disk.
+    /// Snapshot to disk (v2 container, sketch-state payload).
     pub fn checkpoint(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
         let mut w = BufWriter::new(std::fs::File::create(path)?);
-        w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
-        let kind = match self.kind() {
-            SketchKind::Gaussian => 0u8,
-            SketchKind::Srht => 1,
-            SketchKind::CountSketch => 2,
-        };
-        w.write_all(&[kind])?;
+        write_header(&mut w, PayloadKind::SketchState)?;
+        w.write_all(&[sketch_kind_code(self.kind())])?;
         w.write_all(&self.seed().to_le_bytes())?;
         w.write_all(&(self.k() as u64).to_le_bytes())?;
         w.write_all(&(self.d() as u64).to_le_bytes())?;
@@ -47,22 +134,17 @@ impl SketchState {
         Ok(())
     }
 
-    /// Restore a snapshot.
+    /// Restore a snapshot (v2 or the legacy v1 layout).
     pub fn restore(path: impl AsRef<Path>) -> anyhow::Result<SketchState> {
         let mut r = BufReader::new(std::fs::File::open(path)?);
-        let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "not an SMPC checkpoint");
-        let version = read_u32(&mut r)?;
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let payload = read_header(&mut r)?;
+        anyhow::ensure!(
+            payload == PayloadKind::SketchState,
+            "this file holds a {payload:?} payload, not a sketch-state checkpoint"
+        );
         let mut kind_b = [0u8; 1];
         r.read_exact(&mut kind_b)?;
-        let kind = match kind_b[0] {
-            0 => SketchKind::Gaussian,
-            1 => SketchKind::Srht,
-            2 => SketchKind::CountSketch,
-            other => anyhow::bail!("corrupt sketch kind {other}"),
-        };
+        let kind = sketch_kind_from_code(kind_b[0])?;
         let seed = read_u64(&mut r)?;
         let k = read_u64(&mut r)? as usize;
         let d = read_u64(&mut r)? as usize;
@@ -90,10 +172,22 @@ fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
-fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
+pub(crate) fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+/// Read `n` little-endian f64s (payload helper shared with the snapshot
+/// codec).
+pub(crate) fn read_f64s(r: &mut impl Read, n: usize) -> std::io::Result<Vec<f64>> {
+    let mut out = vec![0.0f64; n];
+    let mut buf = [0u8; 8];
+    for slot in &mut out {
+        r.read_exact(&mut buf)?;
+        *slot = f64::from_le_bytes(buf);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -186,5 +280,89 @@ mod tests {
         std::fs::write(&path, b"garbage").unwrap();
         assert!(SketchState::restore(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Byte-for-byte writer of the pre-server v1 layout (magic, version=1,
+    /// payload with no payload-kind byte) — the format every pre-v2 file on
+    /// disk has.
+    fn write_legacy_v1(st: &SketchState, path: &std::path::Path) {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
+        w.write_all(b"SMPC").unwrap();
+        w.write_all(&1u32.to_le_bytes()).unwrap();
+        w.write_all(&[sketch_kind_code(st.kind())]).unwrap();
+        w.write_all(&st.seed().to_le_bytes()).unwrap();
+        w.write_all(&(st.k() as u64).to_le_bytes()).unwrap();
+        w.write_all(&(st.d() as u64).to_le_bytes()).unwrap();
+        w.write_all(&(st.n() as u64).to_le_bytes()).unwrap();
+        w.write_all(&st.entries_seen().to_le_bytes()).unwrap();
+        for &v in st.acc_data() {
+            w.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for &v in st.norms_sq() {
+            w.write_all(&v.to_le_bytes()).unwrap();
+        }
+        w.flush().unwrap();
+    }
+
+    #[test]
+    fn legacy_v1_reads_via_fallback_bitwise() {
+        // Regression: v1 files (no payload-kind byte) must keep restoring
+        // exactly, through the legacy branch of read_header.
+        let mut rng = Pcg64::new(9);
+        let x = Mat::gaussian(14, 4, &mut rng);
+        let mut st = SketchState::new(SketchKind::Srht, 11, 8, 14, 4);
+        for i in 0..14 {
+            for j in 0..4 {
+                st.update_entry(i, j, x[(i, j)]);
+            }
+        }
+        let path = tmp("v1");
+        write_legacy_v1(&st, &path);
+        let restored = SketchState::restore(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(restored.entries_seen(), st.entries_seen());
+        let s1 = st.finalize();
+        let s2 = restored.finalize();
+        assert_eq!(s1.sketch.data(), s2.sketch.data());
+        assert_eq!(s1.col_norms, s2.col_norms);
+    }
+
+    #[test]
+    fn unknown_version_rejected_with_clear_error() {
+        let path = tmp("v99");
+        let mut bytes = b"SMPC".to_vec();
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&[1, 2, 3, 4]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SketchState::restore(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("version 99"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn snapshot_payload_rejected_by_sketch_restore() {
+        // A v2 container holding a serve snapshot must be refused by the
+        // sketch-state reader before any payload bytes are interpreted.
+        let path = tmp("kindmix");
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+            write_header(&mut w, PayloadKind::ServeSnapshot).unwrap();
+        }
+        let err = SketchState::restore(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("ServeSnapshot"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn unknown_payload_kind_rejected() {
+        let path = tmp("kind9");
+        let mut bytes = b"SMPC".to_vec();
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.push(9);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SketchState::restore(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("payload kind 9"), "unhelpful error: {err}");
     }
 }

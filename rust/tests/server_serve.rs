@@ -1,0 +1,266 @@
+//! Serving-subsystem integration: epoch snapshots vs the offline pipeline.
+//!
+//! The contract under test (ISSUE 4 acceptance): a serve session that
+//! ingests a stream in shards, refreshes an epoch snapshot mid-stream, and
+//! answers queries produces factors **bitwise identical** to the offline
+//! `Pipeline::run` on the same entry prefix — at 1, 2 and 8 ingest workers,
+//! with queries running concurrently and never observing a torn snapshot.
+//! Run under the CI thread-matrix job (`SMPPCA_THREADS=1/4`) as well.
+
+use smppca::algo::SmpPcaConfig;
+use smppca::coordinator::{Pipeline, PipelineConfig};
+use smppca::linalg::Mat;
+use smppca::rng::Pcg64;
+use smppca::server::{ServeProtocol, Snapshot, StreamSession, StreamSpec};
+use smppca::stream::{Entry, EntrySource, ShuffledMatrixSource, StreamMeta, VecSource};
+
+const D: usize = 40;
+const N1: usize = 14;
+const N2: usize = 12;
+
+fn algo() -> SmpPcaConfig {
+    SmpPcaConfig {
+        rank: 3,
+        sketch_size: 24,
+        samples: 500.0,
+        iters: 5,
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+fn meta() -> StreamMeta {
+    StreamMeta { d: D, n1: N1, n2: N2 }
+}
+
+fn spec(workers: usize) -> StreamSpec {
+    StreamSpec { meta: meta(), algo: algo(), workers, channel_capacity: 16 }
+}
+
+/// The full entry stream, in a fixed arbitrary (shuffled) order.
+fn stream_entries() -> Vec<Entry> {
+    let mut rng = Pcg64::new(42);
+    let a = Mat::gaussian(D, N1, &mut rng);
+    let b = Mat::gaussian(D, N2, &mut rng);
+    let mut out = Vec::new();
+    Box::new(ShuffledMatrixSource { a, b, seed: 77 }).for_each(&mut |e| out.push(e));
+    out
+}
+
+/// Offline reference: the batch pipeline on an entry prefix.
+fn offline_factors(entries: &[Entry]) -> (Mat, Mat, usize) {
+    let cfg = PipelineConfig { algo: algo(), workers: 2, channel_capacity: 64 };
+    let out = Pipeline::new(cfg)
+        .run(Box::new(VecSource { meta: meta(), entries: entries.to_vec() }))
+        .unwrap();
+    (out.result.factors.u, out.result.factors.v, out.result.samples_drawn)
+}
+
+#[test]
+fn mid_stream_snapshot_bitwise_matches_offline_pipeline_at_1_2_8_workers() {
+    let entries = stream_entries();
+    let split = entries.len() * 3 / 5;
+    let (u_prefix, v_prefix, m_prefix) = offline_factors(&entries[..split]);
+    let (u_full, v_full, m_full) = offline_factors(&entries);
+    for workers in [1usize, 2, 8] {
+        let s = StreamSession::open("bw", spec(workers)).unwrap();
+        // odd chunk size so batch boundaries never align with anything
+        for chunk in entries[..split].chunks(7) {
+            s.ingest(chunk).unwrap();
+        }
+        let snap1 = s.refresh().unwrap();
+        assert_eq!(snap1.epoch, 1);
+        assert_eq!(snap1.entries_ingested, split as u64);
+        assert_eq!(snap1.samples_drawn, m_prefix, "workers={workers}");
+        assert_eq!(snap1.factors.u.data(), u_prefix.data(), "workers={workers} (U, mid)");
+        assert_eq!(snap1.factors.v.data(), v_prefix.data(), "workers={workers} (V, mid)");
+        // keep streaming past the snapshot, then take the next epoch
+        for chunk in entries[split..].chunks(11) {
+            s.ingest(chunk).unwrap();
+        }
+        let snap2 = s.refresh().unwrap();
+        assert_eq!(snap2.epoch, 2);
+        assert_eq!(snap2.samples_drawn, m_full, "workers={workers}");
+        assert_eq!(snap2.factors.u.data(), u_full.data(), "workers={workers} (U, full)");
+        assert_eq!(snap2.factors.v.data(), v_full.data(), "workers={workers} (V, full)");
+        // the published snapshot advanced; epoch-1 readers keep their Arc
+        assert_eq!(s.snapshot().unwrap().epoch, 2);
+        assert_eq!(snap1.epoch, 1);
+        s.close().unwrap();
+    }
+}
+
+#[test]
+fn concurrent_queries_never_observe_torn_snapshots() {
+    let entries = stream_entries();
+    let s = StreamSession::open("torn", spec(2)).unwrap();
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let session = &s;
+        let stop_ref = &stop;
+        let mut readers = Vec::new();
+        for _ in 0..4 {
+            readers.push(scope.spawn(move || {
+                let mut last_epoch = 0u64;
+                let mut observed = 0u64;
+                while !stop_ref.load(std::sync::atomic::Ordering::Relaxed) {
+                    if let Some(snap) = session.snapshot() {
+                        assert!(snap.verify_integrity(), "torn snapshot observed");
+                        assert!(
+                            snap.epoch >= last_epoch,
+                            "epoch went backwards: {} after {last_epoch}",
+                            snap.epoch
+                        );
+                        last_epoch = snap.epoch;
+                        let v = snap.estimate_entry(0, 0).unwrap();
+                        assert!(v.is_finite());
+                        observed += 1;
+                    }
+                    std::thread::yield_now();
+                }
+                observed
+            }));
+        }
+        // writer: interleave ingest batches with refreshes
+        for (i, chunk) in entries.chunks(37).enumerate() {
+            session.ingest(chunk).unwrap();
+            if i % 2 == 0 {
+                session.refresh().unwrap();
+            }
+        }
+        session.refresh().unwrap();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total > 0, "readers never saw a snapshot");
+    });
+    assert!(s.snapshot().unwrap().epoch >= 1);
+    s.close().unwrap();
+}
+
+#[test]
+fn checkpointed_session_resumes_bitwise() {
+    let entries = stream_entries();
+    let split = entries.len() / 2;
+    let (u_full, v_full, _) = offline_factors(&entries);
+    let dir = std::env::temp_dir().join(format!("smppca_serve_ckpt_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    // first life: ingest half, checkpoint shard states, die
+    {
+        let s = StreamSession::open("life1", spec(3)).unwrap();
+        for chunk in entries[..split].chunks(9) {
+            s.ingest(chunk).unwrap();
+        }
+        assert_eq!(s.checkpoint(&dir).unwrap(), s.workers());
+        s.close().unwrap();
+    }
+    // second life: restore (worker count pinned by the checkpoint), finish
+    // the stream, refresh — bitwise the uninterrupted offline run
+    let states = StreamSession::restore_states(&dir).unwrap();
+    assert_eq!(states.len(), 3);
+    let s = StreamSession::open_with_states("life2", spec(3), states).unwrap();
+    for chunk in entries[split..].chunks(13) {
+        s.ingest(chunk).unwrap();
+    }
+    let snap = s.refresh().unwrap();
+    assert_eq!(snap.factors.u.data(), u_full.data());
+    assert_eq!(snap.factors.v.data(), v_full.data());
+    s.close().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_persistence_recovers_into_a_fresh_session() {
+    let entries = stream_entries();
+    let path = std::env::temp_dir().join(format!("smppca_serve_snap_{}.bin", std::process::id()));
+    let saved = {
+        let s = StreamSession::open("persist", spec(2)).unwrap();
+        s.ingest(&entries).unwrap();
+        let snap = s.refresh().unwrap();
+        snap.save(&path).unwrap();
+        s.close().unwrap();
+        snap
+    };
+    let loaded = Snapshot::load(&path).unwrap();
+    assert_eq!(loaded.epoch, saved.epoch);
+    assert_eq!(loaded.factors.u.data(), saved.factors.u.data());
+    assert_eq!(loaded.factors.v.data(), saved.factors.v.data());
+    // recovery: fresh session serves queries from the restored snapshot
+    // before re-ingesting anything, and its next refresh epoch advances
+    // past the restored one
+    let s = StreamSession::open("recovered", spec(2)).unwrap();
+    s.install_snapshot(loaded).unwrap();
+    let snap = s.snapshot().unwrap();
+    assert_eq!(snap.epoch, saved.epoch);
+    assert_eq!(snap.estimate_entry(1, 2).unwrap(), saved.estimate_entry(1, 2).unwrap());
+    s.ingest(&entries).unwrap();
+    let next = s.refresh().unwrap();
+    assert!(next.epoch > saved.epoch, "epochs must stay monotone across recovery");
+    s.close().unwrap();
+    std::fs::remove_file(&path).ok();
+    // spec mismatch is refused
+    let other = StreamSession::open(
+        "otherspec",
+        StreamSpec {
+            algo: SmpPcaConfig { seed: 999, ..algo() },
+            ..spec(1)
+        },
+    )
+    .unwrap();
+    assert!(other.install_snapshot(saved).is_err());
+    other.close().unwrap();
+}
+
+#[test]
+fn protocol_serve_session_matches_offline_pipeline_bitwise() {
+    // Drive the whole thing through the line protocol (what `smppca serve`
+    // speaks): ingest in shards, refresh mid-stream, query — the printed
+    // estimate at (i, j) must equal the offline pipeline's factor product
+    // exactly (17-significant-digit prints round-trip f64).
+    let entries = stream_entries();
+    let split = entries.len() * 3 / 5;
+    let (u_prefix, v_prefix, _) = offline_factors(&entries[..split]);
+    let p = ServeProtocol::new();
+    let a = algo();
+    let r = p.handle(&format!(
+        "open s d={D} n1={N1} n2={N2} k={} rank={} seed={} samples={} iters={} workers=2",
+        a.sketch_size, a.rank, a.seed, a.samples, a.iters
+    ));
+    assert!(r.starts_with("ok open s "), "{r}");
+    for chunk in entries[..split].chunks(25) {
+        let records: Vec<String> = chunk
+            .iter()
+            .map(|e| {
+                let m = match e.matrix {
+                    smppca::stream::MatrixId::A => "A",
+                    smppca::stream::MatrixId::B => "B",
+                };
+                format!("{m}:{}:{}:{:.17e}", e.row, e.col, e.value)
+            })
+            .collect();
+        let resp = p.handle(&format!("ingest s {}", records.join(" ")));
+        assert!(resp.starts_with("ok ingest s "), "{resp}");
+    }
+    let r = p.handle("refresh s");
+    assert!(r.starts_with("ok refresh s epoch=1 "), "{r}");
+    for i in [0usize, 3, N1 - 1] {
+        for j in [0usize, 5, N2 - 1] {
+            let resp = p.handle(&format!("estimate s {i} {j}"));
+            let value: f64 = resp
+                .rsplit("value=")
+                .next()
+                .unwrap()
+                .trim()
+                .parse()
+                .unwrap_or_else(|_| panic!("unparsable response '{resp}'"));
+            let expect: f64 =
+                (0..a.rank).map(|t| u_prefix[(i, t)] * v_prefix[(j, t)]).sum();
+            assert_eq!(value, expect, "({i}, {j}): protocol vs offline factors");
+        }
+    }
+    let r = p.handle("top s");
+    assert!(r.starts_with("top s epoch=1 r=3 scales="), "{r}");
+    let r = p.handle("stats s");
+    assert!(r.contains("epoch=1"), "{r}");
+    assert!(r.contains("serve/refresh"), "stats must carry the stage metrics: {r}");
+    assert_eq!(p.handle("close s"), "ok close s");
+}
