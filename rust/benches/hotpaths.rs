@@ -8,7 +8,9 @@
 //! `factor/tsqr/*`, `factor/rsvd/*` vs their unblocked oracles),
 //! gram-tile worker-pool scaling, the serving subsystem (`server/ingest_qps/*`
 //! session ingest throughput and `server/snapshot_refresh/*` epoch refresh),
-//! ALS solve, end-to-end leader finish.
+//! the unified runtime (`pool/spawn_overhead/*` persistent-pool dispatch vs
+//! fresh scoped spawn/join, `gemm/small_par/*` small-GEMM parallel cost on
+//! the pool vs the scoped baseline), ALS solve, end-to-end leader finish.
 //!
 //! ```bash
 //! cargo bench --bench hotpaths            # human-readable table
@@ -154,7 +156,7 @@ fn main() {
             .collect();
         suite.bench_items("channel/batched_1024/100k_entries", items.len() as u64, || {
             let (tx, rx) = bounded::<Vec<Entry>>(8);
-            let consumer = std::thread::spawn(move || {
+            let consumer = smppca::runtime::spawn_thread("bench-consumer", move || {
                 let mut count = 0usize;
                 while let Ok(batch) = rx.recv() {
                     count += batch.len();
@@ -169,7 +171,7 @@ fn main() {
         });
         suite.bench_items("channel/per_entry/100k_entries", items.len() as u64, || {
             let (tx, rx) = bounded::<Entry>(8192);
-            let consumer = std::thread::spawn(move || {
+            let consumer = smppca::runtime::spawn_thread("bench-consumer", move || {
                 let mut count = 0usize;
                 while rx.recv().is_ok() {
                     count += 1;
@@ -232,6 +234,69 @@ fn main() {
         suite.bench("leader_finish/n256_k100_T10", || {
             black_box(smppca::algo::finish_from_summaries(&sa, &sb, &cfg).unwrap());
         });
+    }
+
+    // ------------------------------------------------------ runtime pool
+    // Dispatch overhead of the persistent pool vs a fresh scoped spawn/join
+    // per call — the per-invocation cost the unified runtime deletes from
+    // every parallel stage. Tiny per-task work so the harness cost
+    // dominates; same task set, same index-ordered output contract.
+    {
+        use smppca::runtime::pool::{run_indexed_scoped, ExecCtx};
+        let tasks = 64usize;
+        let work = |i: usize| {
+            let x = i as f64 + 0.5;
+            x * x - 3.0 * x
+        };
+        for t in [2usize, 4] {
+            suite.bench_items(&format!("pool/spawn_overhead/scoped_t{t}"), tasks as u64, || {
+                black_box(run_indexed_scoped(t, tasks, work));
+            });
+            let ctx = ExecCtx::with_threads(t);
+            suite.bench_items(&format!("pool/spawn_overhead/pooled_t{t}"), tasks as u64, || {
+                black_box(ctx.run_indexed(tasks, work));
+            });
+        }
+    }
+
+    // --------------------------------------------------- small GEMM pool
+    // Small/medium parallel GEMMs are the shapes where per-call thread
+    // spawn/join used to rival the compute (the repeated leader-finish and
+    // snapshot-refresh products); `packed_t*` now rides the persistent
+    // pool. `scoped_t*` reruns the same row-sharded product through a fresh
+    // scoped spawn per call — the pre-runtime baseline.
+    {
+        use smppca::runtime::pool::run_indexed_scoped;
+        let mut r = Pcg64::new(17);
+        for &(m, kdim, n2) in &[(64usize, 64usize, 64usize), (160, 160, 160)] {
+            let a = Mat::gaussian(m, kdim, &mut r);
+            let b = Mat::gaussian(kdim, n2, &mut r);
+            let flops = (2 * m * kdim * n2) as u64;
+            suite.bench_items(&format!("gemm/small_par/seq/{m}x{kdim}x{n2}"), flops, || {
+                black_box(a.par_matmul(&b, 1));
+            });
+            for t in [2usize, 4] {
+                suite.bench_items(
+                    &format!("gemm/small_par/packed_t{t}/{m}x{kdim}x{n2}"),
+                    flops,
+                    || {
+                        black_box(a.par_matmul(&b, t));
+                    },
+                );
+                let rows_per = m.div_ceil(t);
+                suite.bench_items(
+                    &format!("gemm/small_par/scoped_t{t}/{m}x{kdim}x{n2}"),
+                    flops,
+                    || {
+                        let chunks = run_indexed_scoped(t, m.div_ceil(rows_per), |w| {
+                            let hi = ((w + 1) * rows_per).min(m);
+                            a.rows_slice(w * rows_per, hi).par_matmul(&b, 1)
+                        });
+                        black_box(chunks);
+                    },
+                );
+            }
+        }
     }
 
     // ----------------------------------------------------- gemm kernels

@@ -23,8 +23,8 @@ pub struct LelaConfig {
     pub samples: f64,
     pub iters: usize,
     pub seed: u64,
-    /// Worker threads for the completion stage (`0` = auto via
-    /// [`crate::linalg::max_threads`]); results are identical for any
+    /// Worker threads for the completion stage (`0` = auto under the
+    /// crate-wide `runtime::pool` policy); results are identical for any
     /// thread count.
     pub threads: usize,
 }

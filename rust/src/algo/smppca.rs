@@ -29,9 +29,10 @@ pub struct SmpPcaConfig {
     /// paper's SMP-PCA always rescales).
     pub plain_estimator: bool,
     /// Worker threads for the leader finish (estimation + ALS solves);
-    /// `0` = auto via [`crate::linalg::max_threads`]. The finish stages are
-    /// sharded over independent work items, so the result is identical for
-    /// any thread count.
+    /// `0` = auto under the crate-wide `runtime::pool` policy
+    /// (`SMPPCA_THREADS` cap). Every stage executes on the persistent
+    /// runtime pool over independent work items, so the result is
+    /// identical for any thread count.
     pub threads: usize,
 }
 

@@ -108,13 +108,19 @@ RUN OPTIONS:
   --k K              sketch size (default 100)
   --samples M        expected |Ω| (default 4·n·r·ln n)
   --iters T          WAltMin iterations (default 10)
-  --ingest-threads W sketch-pass (single pass) worker threads; 0 = auto
-                     (all cores, capped by the SMPPCA_THREADS env). When the
-                     flag is absent the --workers value applies (default 2).
-                     The sharded pass is bitwise identical to
+  --ingest-threads W sketch-pass (single pass) worker threads; 0 = auto.
+                     When the flag is absent the --workers value applies
+                     (default 2). The sharded pass is bitwise identical to
                      --ingest-threads 1 for every sketch kind.
   --threads T        leader-finish worker threads: GEMM, estimation, ALS
-                     (default 0 = all cores; also SMPPCA_THREADS env)
+                     (default 0 = auto). Results are bitwise identical at
+                     any thread count.
+
+  Thread-count precedence (one policy, resolved in runtime::pool for every
+  stage): an explicit positive --threads/--ingest-threads value is honored
+  literally; 0 means auto = all cores capped by the SMPPCA_THREADS env var
+  (the env caps auto sizing only — explicit counts keep their width on the
+  persistent worker pool). See EXPERIMENTS.md §Runtime.
   --sketch KIND      gaussian|srht|countsketch (default gaussian)
   --engine E         native|native-tiled|xla (default native; native-tiled
                      batches gram tiles through the GEMM worker pool; xla
@@ -194,6 +200,16 @@ mod tests {
         let a = parse("serve --script cmds.txt");
         assert_eq!(a.subcommand, "serve");
         assert_eq!(a.get("script"), Some("cmds.txt"));
+    }
+
+    #[test]
+    fn thread_policy_precedence_documented() {
+        // One sizing policy for every pool — the help must spell out the
+        // precedence (explicit count > auto under SMPPCA_THREADS) and point
+        // at the runtime module that owns it.
+        assert!(HELP.contains("precedence"), "HELP must document thread-count precedence");
+        assert!(HELP.contains("SMPPCA_THREADS"), "HELP must name the env cap");
+        assert!(HELP.contains("runtime::pool"), "HELP must point at the policy's one home");
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::linalg::factor;
 use crate::linalg::sparse::Coo;
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
+use crate::runtime::pool::{self, ExecCtx};
 
 /// One observed entry of `P_Ω(M̃)`: position, estimated value, and the
 /// sampling probability `q̂_ij` (weight = 1/q̂).
@@ -45,9 +46,9 @@ pub struct WAltMinConfig {
     /// Spark code) do; far more sample-efficient at small m.
     pub split_samples: bool,
     /// Worker threads for the per-row/column least-squares solves
-    /// (`0` = auto via [`crate::linalg::max_threads`]). The solves are
-    /// independent per row/column, so the result is identical for any
-    /// thread count.
+    /// (`0` = auto under the crate-wide `runtime::pool` policy). The
+    /// solves are independent per row/column and run on the persistent
+    /// runtime pool, so the result is identical for any thread count.
     pub threads: usize,
 }
 
@@ -85,7 +86,7 @@ pub fn waltmin(
     assert!(r > 0, "rank must be positive");
     assert!(!obs.is_empty(), "WAltMin needs at least one observation");
     let t_iters = cfg.iters.max(1);
-    let threads = crate::linalg::resolve_threads(cfg.threads);
+    let threads = pool::resolve_threads(cfg.threads);
     let mut rng = Pcg64::new(cfg.seed);
 
     // ---- Step 1: partition Ω into 2T+1 parts (Algorithm 2 line 3). In
@@ -231,8 +232,8 @@ pub fn waltmin(
 /// solve the r×r weighted system over observations in `part`, writing into
 /// `out` (n2×r) given fixed `fixed` = U (n1×r). With `by_row = true` the
 /// roles flip. Groups are mutually independent, so for large Ω they are
-/// sharded across `threads` scoped workers (disjoint row chunks of `out`);
-/// the result does not depend on the thread count.
+/// sharded as disjoint row chunks of `out` across the persistent runtime
+/// pool; the result does not depend on the thread count.
 #[allow(clippy::too_many_arguments)]
 fn solve_side(
     obs: &[Observation],
@@ -272,27 +273,23 @@ fn solve_side(
         return;
     }
     let rows_per = groups.div_ceil(t);
-    std::thread::scope(|s| {
-        for (ci, chunk) in out.data_mut().chunks_mut(rows_per * r).enumerate() {
-            let g0 = ci * rows_per;
-            s.spawn(move || {
-                let mut gbuf = vec![0.0; r * r];
-                let mut bbuf = vec![0.0; r];
-                for (local, orow) in chunk.chunks_mut(r).enumerate() {
-                    solve_group(
-                        obs,
-                        heads_ro,
-                        next_ro,
-                        g0 + local,
-                        by_row,
-                        fixed,
-                        r,
-                        &mut gbuf,
-                        &mut bbuf,
-                        orow,
-                    );
-                }
-            });
+    ExecCtx::with_threads(t).run_chunks_mut(out.data_mut(), rows_per * r, |ci, chunk| {
+        let g0 = ci * rows_per;
+        let mut gbuf = vec![0.0; r * r];
+        let mut bbuf = vec![0.0; r];
+        for (local, orow) in chunk.chunks_mut(r).enumerate() {
+            solve_group(
+                obs,
+                heads_ro,
+                next_ro,
+                g0 + local,
+                by_row,
+                fixed,
+                r,
+                &mut gbuf,
+                &mut bbuf,
+                orow,
+            );
         }
     });
 }

@@ -13,8 +13,8 @@ use crate::stream::{EntrySource, MatrixId};
 pub struct PipelineConfig {
     pub algo: SmpPcaConfig,
     /// Worker threads for the sketch pass ("cluster size" in Fig 3a);
-    /// `0` = auto (all cores, capped by `SMPPCA_THREADS`). CLI:
-    /// `--ingest-threads`.
+    /// `0` = auto under the crate-wide `runtime::pool` policy (all cores,
+    /// capped by `SMPPCA_THREADS`). CLI: `--ingest-threads`.
     pub workers: usize,
     /// Bounded channel capacity per worker (entries) — the backpressure
     /// window.

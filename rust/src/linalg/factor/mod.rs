@@ -13,9 +13,10 @@
 //!   (`I − V T Vᵀ`): panels of width [`NB`] are factored with Level-2
 //!   scalar code, trailing updates and Q accumulation are GEMM calls;
 //! * [`tsqr`] — tree-reduction tall-skinny QR for the `m ≫ n` shapes the
-//!   WAltMin init and the randomized range finder produce, sharded over a
-//!   scoped worker pool with a deterministic pairwise reduction (the same
-//!   `tree_merge` discipline as `sketch::ingest`);
+//!   WAltMin init and the randomized range finder produce, sharded over
+//!   the persistent runtime pool (`runtime::pool::ExecCtx`) with a
+//!   deterministic pairwise reduction (the same `tree_merge` discipline as
+//!   `sketch::ingest`);
 //! * [`jacobi_svd`] — the exact one-sided Jacobi fallback, with rotations
 //!   applied to contiguous column groups (the working buffer is stored
 //!   transposed so each column is a unit-stride row);

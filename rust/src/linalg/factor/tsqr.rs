@@ -13,15 +13,15 @@
 //!
 //! The leaf plan and the reduction tree depend **only on the matrix
 //! shape**, never on the worker count; each leaf/merge is computed entirely
-//! by one worker with a fixed operation order (and the GEMMs inside are
-//! themselves bitwise thread-invariant), so the result is bitwise identical
-//! at any thread count — property-tested at 1/2/8 workers in
-//! `tests/factor_props.rs`.
+//! by one executor of the persistent runtime pool with a fixed operation
+//! order (and the GEMMs inside are themselves bitwise thread-invariant), so
+//! the result is bitwise identical at any thread count — property-tested at
+//! 1/2/8 workers in `tests/factor_props.rs`.
 
 use super::blocked::{qr_blocked, NB};
 use crate::linalg::dense::Mat;
-use crate::linalg::gemm;
 use crate::linalg::qr::QrThin;
+use crate::runtime::pool::ExecCtx;
 
 /// Rows per leaf ≈ `LEAF_COLS_FACTOR · n` (floored at [`MIN_LEAF_ROWS`]) —
 /// leaves stay tall enough that the leaf QR is compute-bound.
@@ -61,9 +61,11 @@ pub fn tsqr(a: &Mat, threads: usize) -> QrThin {
         ranges.push((lo, lo + rows));
         lo += rows;
     }
-    // ---- Leaf factorizations (independent, sharded across the pool; the
-    // inner GEMMs run single-threaded — the leaves are the parallelism).
-    let mut nodes: Vec<Node> = run_indexed(ranges.len(), threads, |leaf| {
+    // ---- Leaf factorizations (independent, sharded across the runtime
+    // pool; the inner GEMMs run single-threaded — the leaves are the
+    // parallelism).
+    let ctx = ExecCtx::with_threads(threads);
+    let mut nodes: Vec<Node> = ctx.run_indexed(ranges.len(), |leaf| {
         let (r0, r1) = ranges[leaf];
         let f = qr_blocked(&a.rows_slice(r0, r1), NB, 1);
         Node { q: f.q, r: f.r }
@@ -76,11 +78,12 @@ pub fn tsqr(a: &Mat, threads: usize) -> QrThin {
         while let (Some(x), Some(y)) = (it.next(), it.next()) {
             pair_list.push((x, y));
         }
-        // A single surviving pair gets the full GEMM pool; with many pairs
+        // A single surviving pair gets the full GEMM width; with many pairs
         // the pair-level sharding is the parallelism. Either choice leaves
-        // the bits unchanged (GEMM is thread-invariant).
+        // the bits unchanged (GEMM is thread-invariant), and a nested GEMM
+        // issued from inside a pool task degrades to inline execution.
         let inner = if pair_list.len() == 1 { threads } else { 1 };
-        let mut merged = run_indexed(pair_list.len(), threads, |p| {
+        let mut merged = ctx.run_indexed(pair_list.len(), |p| {
             let (x, y) = &pair_list[p];
             merge(x, y, inner)
         });
@@ -111,38 +114,6 @@ fn vstack(a: &Mat, b: &Mat) -> Mat {
     data.extend_from_slice(a.data());
     data.extend_from_slice(b.data());
     Mat::from_vec(a.rows() + b.rows(), a.cols(), data)
-}
-
-/// Evaluate `f(0..len)` with up to `pool_size(threads, len)` scoped
-/// workers striding the index space; results land in index order, so the
-/// output is identical to the sequential loop for any worker count.
-fn run_indexed<T: Send>(len: usize, threads: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
-    let t = gemm::pool_size(threads, len);
-    if t <= 1 {
-        return (0..len).map(f).collect();
-    }
-    let mut out: Vec<Option<T>> = (0..len).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut handles = Vec::with_capacity(t);
-        for w in 0..t {
-            handles.push(s.spawn(move || {
-                let mut local = Vec::new();
-                let mut i = w;
-                while i < len {
-                    local.push((i, f(i)));
-                    i += t;
-                }
-                local
-            }));
-        }
-        for h in handles {
-            for (i, v) in h.join().expect("tsqr worker panicked") {
-                out[i] = Some(v);
-            }
-        }
-    });
-    out.into_iter().map(|v| v.expect("tsqr index not covered")).collect()
 }
 
 #[cfg(test)]

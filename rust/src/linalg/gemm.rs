@@ -9,9 +9,10 @@
 //!   `(row-stride, col-stride)` packing view — nothing is materialized);
 //! * an `MR × NR` register-tiled microkernel accumulates into a fixed-size
 //!   local array with unrolled unit-stride loops that autovectorize;
-//! * `threads > 1` shards row-panels of C across scoped `std::thread`
-//!   workers (disjoint `chunks_mut`, shared read-only operands — the same
-//!   worker pattern as the sketch pass in `coordinator/pipeline.rs`).
+//! * `threads > 1` shards row-panels of C across the persistent runtime
+//!   pool ([`crate::runtime::pool::ExecCtx::run_chunks_mut`] — disjoint
+//!   chunks, shared read-only operands), so repeated small/medium GEMMs no
+//!   longer pay a thread spawn/join per call.
 //!
 //! Sharding by rows keeps the reduction order per C entry identical to the
 //! single-threaded kernel, so results are **bitwise independent of the
@@ -19,7 +20,11 @@
 //! §Perf together with the measured speedups over [`matmul_naive`].
 
 use super::dense::Mat;
-use std::sync::OnceLock;
+use crate::runtime::pool::{self, ExecCtx};
+
+// Thread-count policy lives in `runtime::pool`; re-exported here for the
+// historical `gemm::max_threads` / `gemm::pool_size` callers.
+pub use crate::runtime::pool::{max_threads, pool_size, resolve_threads};
 
 /// Microkernel rows (register tile height).
 pub const MR: usize = 4;
@@ -36,37 +41,6 @@ pub const NC: usize = 512;
 const PAR_FLOP_GRAIN: usize = 1 << 22;
 /// Parallel gemv threshold (elements touched per extra worker).
 const GEMV_PAR_GRAIN: usize = 1 << 20;
-
-/// Worker-thread cap for all dense-kernel parallelism: `SMPPCA_THREADS` if
-/// set (≥ 1), else the machine's available parallelism.
-pub fn max_threads() -> usize {
-    static CAP: OnceLock<usize> = OnceLock::new();
-    *CAP.get_or_init(|| {
-        std::env::var("SMPPCA_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&t| t >= 1)
-            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
-    })
-}
-
-/// `0` means "auto" (the [`max_threads`] cap); anything else is literal.
-pub fn resolve_threads(requested: usize) -> usize {
-    if requested == 0 {
-        max_threads()
-    } else {
-        requested
-    }
-}
-
-/// Size a scoped worker pool: resolve `requested` through the shared
-/// `SMPPCA_THREADS` / core-count policy, then never exceed the number of
-/// independent work `items`. Pools with a known item count (gram tiles)
-/// use this; pools without one (sketch-ingest shards, whose stream length
-/// is unknown up front) use [`resolve_threads`] directly.
-pub fn pool_size(requested: usize, items: usize) -> usize {
-    resolve_threads(requested).min(items.max(1))
-}
 
 /// `C = A_eff · B_eff` over strided views of row-major storage.
 ///
@@ -97,22 +71,16 @@ pub fn gemm(
         return;
     }
     let flops = m.saturating_mul(n).saturating_mul(k);
-    let want = resolve_threads(threads);
-    let auto = if threads == 0 { want.min(flops / PAR_FLOP_GRAIN + 1) } else { want };
-    let t = auto.min(m);
+    let t = pool::pool_size_grained(threads, m, flops, PAR_FLOP_GRAIN);
     if t <= 1 {
         gemm_st(m, n, k, a, a_rs, a_cs, b, b_rs, b_cs, c, n);
         return;
     }
     let rows_per = m.div_ceil(t);
-    std::thread::scope(|s| {
-        for (w, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
-            let mw = c_chunk.len() / n;
-            let a_w = &a[w * rows_per * a_rs..];
-            s.spawn(move || {
-                gemm_st(mw, n, k, a_w, a_rs, a_cs, b, b_rs, b_cs, c_chunk, n);
-            });
-        }
+    ExecCtx::with_threads(t).run_chunks_mut(c, rows_per * n, |w, c_chunk| {
+        let mw = c_chunk.len() / n;
+        let a_w = &a[w * rows_per * a_rs..];
+        gemm_st(mw, n, k, a_w, a_rs, a_cs, b, b_rs, b_cs, c_chunk, n);
     });
 }
 
@@ -340,13 +308,7 @@ pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
 pub fn gemv(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64], threads: usize) {
     assert_eq!(x.len(), cols, "x length mismatch");
     assert_eq!(y.len(), rows, "y length mismatch");
-    let want = resolve_threads(threads);
-    let auto = if threads == 0 {
-        want.min(rows.saturating_mul(cols) / GEMV_PAR_GRAIN + 1)
-    } else {
-        want
-    };
-    let t = auto.min(rows.max(1));
+    let t = pool::pool_size_grained(threads, rows, rows.saturating_mul(cols), GEMV_PAR_GRAIN);
     if t <= 1 {
         for (i, yo) in y.iter_mut().enumerate() {
             *yo = dot_unrolled(&a[i * cols..(i + 1) * cols], x);
@@ -354,14 +316,10 @@ pub fn gemv(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64], threa
         return;
     }
     let rows_per = rows.div_ceil(t);
-    std::thread::scope(|s| {
-        for (w, yc) in y.chunks_mut(rows_per).enumerate() {
-            let a_w = &a[w * rows_per * cols..];
-            s.spawn(move || {
-                for (i, yo) in yc.iter_mut().enumerate() {
-                    *yo = dot_unrolled(&a_w[i * cols..(i + 1) * cols], x);
-                }
-            });
+    ExecCtx::with_threads(t).run_chunks_mut(y, rows_per, |w, yc| {
+        let a_w = &a[w * rows_per * cols..];
+        for (i, yo) in yc.iter_mut().enumerate() {
+            *yo = dot_unrolled(&a_w[i * cols..(i + 1) * cols], x);
         }
     });
 }

@@ -1,7 +1,8 @@
 //! The tile-engine contract shared by the native and PJRT/XLA backends,
 //! plus the tile-level worker pool that parallelizes the leader finish.
 
-use crate::linalg::{gemm, Mat};
+use crate::linalg::Mat;
+use crate::runtime::pool::{self, ExecCtx};
 use crate::sampling::SampleSet;
 use crate::sketch::Summary;
 
@@ -121,11 +122,11 @@ impl TileCover {
     }
 }
 
-/// Evaluate every covered gram tile of `omega` with a pool of `threads`
-/// scoped workers (`0` = auto), striding buckets across workers for load
-/// balance. `tile_fn` must be a pure function of its inputs; each tile is
-/// computed by exactly one worker, so the result is identical to the
-/// sequential cover regardless of thread count.
+/// Evaluate every covered gram tile of `omega` across the persistent
+/// runtime pool (`threads = 0` = auto), one bucket per task. `tile_fn` must
+/// be a pure function of its inputs; each tile is computed by exactly one
+/// executor, so the result is identical to the sequential cover regardless
+/// of thread count.
 pub fn estimate_tiles_parallel<F>(
     sa: &Summary,
     sb: &Summary,
@@ -139,7 +140,7 @@ where
 {
     let cover = TileCover::plan(sa.n(), sb.n(), omega, tile);
     let mut out = vec![0.0; omega.entries.len()];
-    let nthreads = gemm::pool_size(threads, cover.buckets.len());
+    let nthreads = pool::pool_size(threads, cover.buckets.len());
     if nthreads <= 1 {
         for ((ti, tj), sample_ids) in &cover.buckets {
             let g = tile_fn(sa, sb, cover.i_block(*ti), cover.j_block(*tj));
@@ -147,33 +148,24 @@ where
         }
         return out;
     }
-    std::thread::scope(|s| {
-        let cover = &cover;
-        let tile_fn = &tile_fn;
-        let mut handles = Vec::with_capacity(nthreads);
-        for w in 0..nthreads {
-            handles.push(s.spawn(move || {
-                let mut local: Vec<(usize, f64)> = Vec::new();
-                let mut bi = w;
-                while bi < cover.buckets.len() {
-                    let ((ti, tj), sample_ids) = &cover.buckets[bi];
-                    let g = tile_fn(sa, sb, cover.i_block(*ti), cover.j_block(*tj));
-                    for &t in sample_ids {
-                        let (i, j) = omega.entries[t];
-                        let (p, q) = cover.local(*ti, *tj, i, j);
-                        local.push((t, g[(p, q)]));
-                    }
-                    bi += nthreads;
-                }
-                local
-            }));
-        }
-        for h in handles {
-            for (t, v) in h.join().expect("gram-tile worker panicked") {
-                out[t] = v;
-            }
-        }
+    let ctx = ExecCtx::with_threads(threads);
+    let per_bucket: Vec<Vec<(usize, f64)>> = ctx.run_indexed(cover.buckets.len(), |bi| {
+        let ((ti, tj), sample_ids) = &cover.buckets[bi];
+        let g = tile_fn(sa, sb, cover.i_block(*ti), cover.j_block(*tj));
+        sample_ids
+            .iter()
+            .map(|&t| {
+                let (i, j) = omega.entries[t];
+                let (p, q) = cover.local(*ti, *tj, i, j);
+                (t, g[(p, q)])
+            })
+            .collect()
     });
+    for bucket in per_bucket {
+        for (t, v) in bucket {
+            out[t] = v;
+        }
+    }
     out
 }
 
@@ -237,7 +229,7 @@ impl TileEngine for NativeEngine {
 /// Native engine with a sample-sharded worker pool for `estimate` (each
 /// worker runs the direct per-sample path on a disjoint slice of Ω, so the
 /// output is bitwise identical to [`NativeEngine`] at any thread count).
-/// `threads = 0` means auto ([`crate::linalg::max_threads`]) with a
+/// `threads = 0` means auto (the `runtime::pool` policy) with a
 /// size-based grain; an explicit count is honored as given.
 pub struct ParNativeEngine {
     pub threads: usize,
@@ -254,12 +246,7 @@ impl TileEngine for ParNativeEngine {
 
     fn estimate(&self, sa: &Summary, sb: &Summary, omega: &SampleSet) -> Vec<f64> {
         let m = omega.entries.len();
-        let auto = if self.threads == 0 {
-            gemm::max_threads().min(m / EST_PAR_GRAIN + 1)
-        } else {
-            self.threads
-        };
-        let t = auto.min(m.max(1));
+        let t = pool::pool_size_grained(self.threads, m, m, EST_PAR_GRAIN);
         if t <= 1 {
             return crate::estimate::estimate_samples(sa, sb, omega);
         }
@@ -268,23 +255,18 @@ impl TileEngine for ParNativeEngine {
         // One O((n1+n2)·k) sketched-norm sweep shared by every shard.
         let sna_all = sa.sketch_col_norms();
         let snb_all = sb.sketch_col_norms();
-        std::thread::scope(|s| {
-            let (sna_all, snb_all) = (&sna_all, &snb_all);
-            for (w, piece) in out.chunks_mut(chunk).enumerate() {
-                let lo = w * chunk;
-                let hi = lo + piece.len();
-                s.spawn(move || {
-                    // The estimator only reads `entries`; the probs are
-                    // not needed to evaluate Eq. (2).
-                    let sub = SampleSet {
-                        entries: omega.entries[lo..hi].to_vec(),
-                        probs: Vec::new(),
-                    };
-                    piece.copy_from_slice(&crate::estimate::estimate_samples_with_norms(
-                        sa, sb, &sub, sna_all, snb_all,
-                    ));
-                });
-            }
+        ExecCtx::with_threads(t).run_chunks_mut(&mut out, chunk, |w, piece| {
+            let lo = w * chunk;
+            let hi = lo + piece.len();
+            // The estimator only reads `entries`; the probs are not
+            // needed to evaluate Eq. (2).
+            let sub = SampleSet {
+                entries: omega.entries[lo..hi].to_vec(),
+                probs: Vec::new(),
+            };
+            piece.copy_from_slice(&crate::estimate::estimate_samples_with_norms(
+                sa, sb, &sub, &sna_all, &snb_all,
+            ));
         });
         out
     }

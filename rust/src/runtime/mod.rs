@@ -1,4 +1,7 @@
-//! Runtime: tile engines serving the leader's estimation stage.
+//! Runtime: the unified execution substrate ([`pool`] — one persistent
+//! worker pool + [`ExecCtx`] behind every parallel stage in the crate, plus
+//! the thread-count policy) and the tile engines serving the leader's
+//! estimation stage.
 //!
 //! The L2/L1 python stack AOT-lowers two compute graphs to HLO text
 //! artifacts (`make artifacts`):
@@ -17,7 +20,10 @@
 //! engines entry-for-entry.
 
 pub mod engine;
+pub mod pool;
 pub mod xla_engine;
+
+pub use pool::{spawn_thread, ExecCtx, WorkerPool};
 
 pub use engine::{
     estimate_tiles_parallel, native_engine, native_gram_tile, NativeEngine, ParNativeEngine,

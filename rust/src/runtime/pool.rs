@@ -1,0 +1,635 @@
+//! The unified deterministic runtime: one persistent worker pool behind an
+//! [`ExecCtx`] handle, executing every data-parallel stage in the crate.
+//!
+//! Before this module, each parallel layer (`linalg/gemm`, `factor/tsqr`,
+//! `completion/waltmin`, `sampling`, `runtime/engine`) paid a fresh
+//! `std::thread::scope` spawn/join per invocation, and the long-lived
+//! ingest/serving pools (`sketch/ingest`, `server/session`) hand-rolled
+//! their own `std::thread::spawn` calls — so one `Pipeline::run` created
+//! and destroyed OS threads dozens of times, and thread-count policy
+//! (`SMPPCA_THREADS`, `--threads`, `--ingest-threads`, per-struct
+//! `threads: usize` knobs) was re-resolved in several places. Now:
+//!
+//! * [`WorkerPool`] — a persistent pool created once (lazily, sized by the
+//!   machine with a floor so explicit width requests keep real
+//!   concurrency) or explicitly ([`WorkerPool::new`], for tests). Workers
+//!   live for the process (or the pool instance) and park between task
+//!   sets.
+//! * [`ExecCtx`] — the cheap, cloneable execution handle the layers use
+//!   instead of ad-hoc scoped spawns. Its primitives are *structured*:
+//!   [`ExecCtx::run_indexed`] evaluates `f(0..n)` and returns the results
+//!   **in index order**; [`ExecCtx::run_chunks_mut`] hands each task one
+//!   disjoint chunk of a mutable slice.
+//! * [`spawn_thread`] — dedicated threads for the channel-blocking
+//!   ingest/session workers and background refreshers (pooling those would
+//!   starve the task pool); every thread the crate creates originates in
+//!   this module.
+//! * the sizing policy — [`max_threads`] / [`resolve_threads`] /
+//!   [`pool_size`] / [`pool_size_grained`] — lives here and nowhere else
+//!   (`linalg::gemm` re-exports it for its historical callers).
+//!
+//! # Determinism contract
+//!
+//! Each index is claimed by exactly one executor and writes only its own
+//! output slot, so for pure `f` the result is **bitwise identical to the
+//! sequential loop** at any worker count and any scheduling interleaving —
+//! a pure scheduling substitution for the scoped pools this replaced (all
+//! of which already pinned bitwise invariance in their property tests).
+//!
+//! # Panics and nesting
+//!
+//! A panic in any task is caught, the remaining tasks of that set are
+//! skipped, and the payload is re-raised on the submitting thread once the
+//! set drains. A nested `run_indexed`/`run_chunks_mut` issued *from inside
+//! a pool task* degrades to inline execution instead of re-entering the
+//! queue, so nested parallelism (e.g. a TSQR merge calling the parallel
+//! GEMM) can never deadlock the pool. The submitting thread always
+//! participates in its own task set, so progress is guaranteed even when
+//! every pool worker is busy with other sets.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+// ---------------------------------------------------------- sizing policy
+
+/// Worker cap for all parallelism in the crate: `SMPPCA_THREADS` if set
+/// (≥ 1), else the machine's available parallelism. Read once per process.
+pub fn max_threads() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("SMPPCA_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// `0` means "auto" (the [`max_threads`] cap); anything else is literal.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        max_threads()
+    } else {
+        requested
+    }
+}
+
+/// Size a worker set with a known item count: resolve `requested` through
+/// the shared `SMPPCA_THREADS` / core-count policy, then never exceed the
+/// number of independent work `items`. Pools without a known item count
+/// (sketch-ingest shards, whose stream length is unknown up front) use
+/// [`resolve_threads`] directly.
+pub fn pool_size(requested: usize, items: usize) -> usize {
+    resolve_threads(requested).min(items.max(1))
+}
+
+/// [`pool_size`] with a work grain: when `requested` is 0 (auto), engage at
+/// most one extra worker per `grain` units of `work`, so tiny problems stay
+/// sequential. Explicit requests are honored as given (capped by `items`).
+pub fn pool_size_grained(requested: usize, items: usize, work: usize, grain: usize) -> usize {
+    let want = resolve_threads(requested);
+    let auto = if requested == 0 { want.min(work / grain.max(1) + 1) } else { want };
+    auto.min(items.max(1))
+}
+
+// --------------------------------------------------------------- task set
+
+/// Type-erased pointer to the submitting frame's task closure. Raw (not a
+/// reference) so late-arriving workers may hold it *dangling* after the set
+/// completes — they check `next >= len` and return without dereferencing.
+/// Validity argument: every dereference happens while executing a claimed
+/// index `i < len`, and the submitting frame blocks in [`TaskSet::wait`]
+/// until all claimed indices have finished executing.
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+/// One submitted batch of indexed tasks, shared between the submitting
+/// thread and any pool workers that picked up a ticket for it.
+struct TaskSet {
+    task: TaskPtr,
+    len: usize,
+    /// Next unclaimed index (may race past `len`; claims ≥ `len` are no-ops).
+    next: AtomicUsize,
+    /// Finished (or abort-skipped) claims; completion at `done == len`.
+    done: AtomicUsize,
+    /// Set on the first task panic: remaining tasks are skipped.
+    abort: AtomicBool,
+    /// First panic payload, re-raised by the submitting thread.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+    complete: Mutex<bool>,
+    completed: Condvar,
+}
+
+impl TaskSet {
+    fn new(task: TaskPtr, len: usize) -> Self {
+        Self {
+            task,
+            len,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            abort: AtomicBool::new(false),
+            panic: Mutex::new(None),
+            complete: Mutex::new(false),
+            completed: Condvar::new(),
+        }
+    }
+
+    /// Claim and execute indices until the set is exhausted. Called by pool
+    /// workers holding a ticket and by the submitting thread itself.
+    fn run_worker(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.len {
+                return;
+            }
+            if !self.abort.load(Ordering::Relaxed) {
+                // Soundness: `i < len` and the submitter waits for
+                // `done == len`, so the pointee closure is still alive.
+                let f = unsafe { &*self.task.0 };
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    let mut slot = self.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    self.abort.store(true, Ordering::Relaxed);
+                }
+            }
+            // AcqRel: the final increment observes every earlier worker's
+            // Release, so all task writes are visible to whoever completes.
+            if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.len {
+                *self.complete.lock().unwrap() = true;
+                self.completed.notify_all();
+            }
+        }
+    }
+
+    fn wait(&self) {
+        let mut done = self.complete.lock().unwrap();
+        while !*done {
+            done = self.completed.wait(done).unwrap();
+        }
+    }
+}
+
+// ------------------------------------------------------------------- pool
+
+struct PoolState {
+    /// FIFO of tickets; one ticket admits one worker to a task set. A set
+    /// is pushed `width - 1` times (the submitter is the final executor).
+    tickets: VecDeque<Arc<TaskSet>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolState>,
+    work_ready: Condvar,
+}
+
+struct PoolInner {
+    shared: Arc<PoolShared>,
+    width: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for PoolInner {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.work_ready.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+thread_local! {
+    static IS_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
+
+fn is_pool_worker() -> bool {
+    IS_POOL_WORKER.with(|f| f.get())
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let set = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(s) = st.tickets.pop_front() {
+                    break s;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        set.run_worker();
+    }
+}
+
+/// Floor on the global pool's resident worker count, so explicit width
+/// requests up to 8 executors get real concurrency on any machine.
+const MIN_GLOBAL_WORKERS: usize = 7;
+
+/// A persistent set of worker threads. Cheap to clone (shared handle); the
+/// workers exit and join when the last clone of an explicit pool drops.
+/// The process-wide instance ([`WorkerPool::global`]) lives forever.
+#[derive(Clone)]
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WorkerPool(width={})", self.inner.width)
+    }
+}
+
+impl WorkerPool {
+    /// Spawn an explicit pool of `width` workers (tests; the crate's normal
+    /// path is the lazily-created [`WorkerPool::global`]).
+    pub fn new(width: usize) -> Self {
+        let width = width.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolState { tickets: VecDeque::new(), shutdown: false }),
+            work_ready: Condvar::new(),
+        });
+        let handles = (0..width)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("smppca-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        Self { inner: Arc::new(PoolInner { shared, width, handles: Mutex::new(handles) }) }
+    }
+
+    /// The process-wide pool, created on first parallel use. Sized by the
+    /// *machine*, not by `SMPPCA_THREADS`: the env var caps **auto** (0)
+    /// sizing via [`resolve_threads`], while explicit thread requests have
+    /// always been honored literally — so the resident pool keeps a floor
+    /// of [`MIN_GLOBAL_WORKERS`] workers (8 executors with the submitter)
+    /// and explicit-width call sites (the 1/2/8 bitwise test matrix)
+    /// exercise real concurrency even under `SMPPCA_THREADS=1`. Parked
+    /// workers cost only their stacks.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let machine =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            WorkerPool::new(machine.saturating_sub(1).max(MIN_GLOBAL_WORKERS))
+        })
+    }
+
+    /// Number of resident worker threads.
+    pub fn width(&self) -> usize {
+        self.inner.width
+    }
+
+    /// Run `task(0..len)` with up to `width` concurrent executors (this
+    /// thread plus up to `width - 1` pool workers). Blocks until every
+    /// index has run; re-raises the first task panic.
+    fn execute(&self, len: usize, width: usize, task: &(dyn Fn(usize) + Sync)) {
+        debug_assert!(len >= 1 && width >= 2);
+        let set = Arc::new(TaskSet::new(TaskPtr(task as *const _), len));
+        let tickets = (width - 1).min(len).min(self.inner.width);
+        {
+            let mut st = self.inner.shared.queue.lock().unwrap();
+            for _ in 0..tickets {
+                st.tickets.push_back(Arc::clone(&set));
+            }
+        }
+        if tickets == 1 {
+            self.inner.shared.work_ready.notify_one();
+        } else {
+            self.inner.shared.work_ready.notify_all();
+        }
+        set.run_worker();
+        set.wait();
+        if let Some(payload) = set.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- ExecCtx
+
+struct SlotPtr<T>(*mut Option<T>);
+unsafe impl<T: Send> Send for SlotPtr<T> {}
+unsafe impl<T: Send> Sync for SlotPtr<T> {}
+
+struct SlicePtr<T>(*mut T);
+unsafe impl<T: Send> Send for SlicePtr<T> {}
+unsafe impl<T: Send> Sync for SlicePtr<T> {}
+
+/// The execution handle threaded through the parallel layers: a worker
+/// pool (the global one unless a test injects its own) plus the requested
+/// width (`0` = auto under the [`max_threads`] policy). Cloning is cheap.
+#[derive(Clone, Default)]
+pub struct ExecCtx {
+    /// `None` = the lazily-created global pool (so building a ctx for a
+    /// sequential run never spawns threads).
+    pool: Option<WorkerPool>,
+    threads: usize,
+}
+
+impl std::fmt::Debug for ExecCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ExecCtx(threads={})", self.threads)
+    }
+}
+
+impl ExecCtx {
+    /// Auto-sized context (`threads = 0`) on the global pool.
+    pub fn auto() -> Self {
+        Self::with_threads(0)
+    }
+
+    /// Context with an explicit width request on the global pool.
+    pub fn with_threads(threads: usize) -> Self {
+        Self { pool: None, threads }
+    }
+
+    /// Context bound to an explicit pool instance (tests).
+    pub fn on_pool(pool: &WorkerPool, threads: usize) -> Self {
+        Self { pool: Some(pool.clone()), threads }
+    }
+
+    /// The requested width (`0` = auto).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Resolved executor count for `items` independent work items.
+    pub fn width(&self, items: usize) -> usize {
+        pool_size(self.threads, items)
+    }
+
+    fn pool(&self) -> &WorkerPool {
+        self.pool.as_ref().unwrap_or_else(|| WorkerPool::global())
+    }
+
+    /// Evaluate `f(0..n)` across the pool and return the results **in index
+    /// order** — bitwise identical to `(0..n).map(f).collect()` for pure
+    /// `f`, at any worker count. Runs inline when the resolved width is 1,
+    /// `n <= 1`, or the caller is itself a pool task (nesting). Task panics
+    /// propagate to this caller.
+    pub fn run_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let width = self.width(n);
+        if width <= 1 || n == 1 || is_pool_worker() {
+            return (0..n).map(f).collect();
+        }
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let slots = SlotPtr(out.as_mut_ptr());
+        let task = move |i: usize| {
+            let v = f(i);
+            // Disjoint per-index slots; `ptr::write` skips dropping the
+            // existing `None` (nothing to drop), and completion sync in
+            // `execute` publishes the writes before `out` is read below.
+            // `Option` slots (vs `MaybeUninit`) keep the Vec drop-correct,
+            // so results computed before a task panic are freed, not
+            // leaked, when `execute` re-raises.
+            unsafe { slots.0.add(i).write(Some(v)) };
+        };
+        self.pool().execute(n, width, &task);
+        // `execute` returned without unwinding ⇒ every slot was written.
+        out.into_iter()
+            .map(|s| s.expect("pool task set completed with an unwritten slot"))
+            .collect()
+    }
+
+    /// Split `data` into contiguous `chunk`-sized pieces (last one ragged)
+    /// and run `f(chunk_index, piece)` for each, one piece per task —
+    /// the pooled replacement for the `chunks_mut` + scoped-spawn pattern.
+    /// Same inline/nesting/panic rules as [`ExecCtx::run_indexed`].
+    pub fn run_chunks_mut<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk = chunk.max(1);
+        if data.is_empty() {
+            return;
+        }
+        let n = data.len().div_ceil(chunk);
+        let width = self.width(n);
+        if width <= 1 || n == 1 || is_pool_worker() {
+            for (i, piece) in data.chunks_mut(chunk).enumerate() {
+                f(i, piece);
+            }
+            return;
+        }
+        let total = data.len();
+        let base = SlicePtr(data.as_mut_ptr());
+        let task = move |i: usize| {
+            let lo = i * chunk;
+            let hi = (lo + chunk).min(total);
+            // Chunks are disjoint by construction; each index is claimed
+            // by exactly one executor.
+            let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+            f(i, piece);
+        };
+        self.pool().execute(n, width, &task);
+    }
+}
+
+// ------------------------------------------------- dedicated-thread spawn
+
+/// Spawn a dedicated long-lived thread (ingest shards, session workers,
+/// background refreshers, channel-draining bench consumers). These block on
+/// channels for their whole life, which would starve the task pool — so
+/// they stay dedicated, but every spawn in the crate routes through here
+/// and worker *counts* come from the sizing policy above.
+pub fn spawn_thread<T, F>(name: &str, f: F) -> std::thread::JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(format!("smppca-{name}"))
+        .spawn(f)
+        .expect("failed to spawn dedicated thread")
+}
+
+/// Human-readable panic payload (for surfacing worker panics as errors).
+pub fn panic_message(payload: &(dyn Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
+// ------------------------------------------------------ scoped-spawn oracle
+
+/// The pre-pool execution pattern, retained as the comparison baseline for
+/// the `pool/spawn_overhead` bench group and as a property-test oracle
+/// (the `matmul_naive` pattern): same contract as [`ExecCtx::run_indexed`]
+/// — index-ordered, sequential-identical results — but paying a fresh
+/// `std::thread::scope` spawn/join on every call, which is exactly the
+/// hot-path cost the persistent pool deletes.
+pub fn run_indexed_scoped<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let t = pool_size(threads, n);
+    if t <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (0..t)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    let mut i = w;
+                    while i < n {
+                        local.push((i, f(i)));
+                        i += t;
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("scoped worker panicked") {
+                out[i] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|v| v.expect("index not covered")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn run_indexed_matches_sequential_in_index_order() {
+        prop(91, 12, |rng| {
+            let n = rng.next_below(200) as usize;
+            let threads = 1 + rng.next_below(8) as usize;
+            let f = |i: usize| (i as f64 + 0.5) * (i as f64 - 3.25);
+            let want: Vec<f64> = (0..n).map(f).collect();
+            let got = ExecCtx::with_threads(threads).run_indexed(n, f);
+            assert_eq!(got, want, "n={n} threads={threads}");
+            let scoped = run_indexed_scoped(threads, n, f);
+            assert_eq!(scoped, want, "scoped oracle diverged");
+        });
+    }
+
+    #[test]
+    fn explicit_pool_instance_runs_and_joins_on_drop() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.width(), 3);
+        let ctx = ExecCtx::on_pool(&pool, 3);
+        let got = ctx.run_indexed(50, |i| i * i);
+        assert_eq!(got, (0..50).map(|i| i * i).collect::<Vec<_>>());
+        drop(ctx);
+        drop(pool); // must join the three workers without hanging
+    }
+
+    #[test]
+    fn nested_invocation_falls_back_inline_without_deadlock() {
+        let ctx = ExecCtx::with_threads(4);
+        let inner = ExecCtx::with_threads(4);
+        let got = ctx.run_indexed(12, |i| {
+            // From a pool task this degrades to the inline loop; from the
+            // participating submitter it may go back to the pool. Both are
+            // bitwise the sequential result either way.
+            inner.run_indexed(5, move |j| i * 10 + j)
+        });
+        for (i, row) in got.iter().enumerate() {
+            assert_eq!(row, &(0..5).map(|j| i * 10 + j).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller() {
+        let ctx = ExecCtx::with_threads(4);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            ctx.run_indexed(16, |i| {
+                if i == 7 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        }));
+        let payload = result.expect_err("panic must propagate");
+        assert!(panic_message(payload.as_ref()).contains("boom at 7"));
+        // The pool must still be serviceable after a panicked set.
+        assert_eq!(ctx.run_indexed(4, |i| i + 1), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn run_chunks_mut_matches_sequential_chunking() {
+        prop(92, 10, |rng| {
+            let len = rng.next_below(300) as usize;
+            let chunk = 1 + rng.next_below(40) as usize;
+            let threads = 1 + rng.next_below(6) as usize;
+            let mut par: Vec<f64> = (0..len).map(|i| i as f64).collect();
+            let mut seq = par.clone();
+            let f = |ci: usize, piece: &mut [f64]| {
+                for (off, v) in piece.iter_mut().enumerate() {
+                    *v = *v * 2.0 + ci as f64 + off as f64 * 0.25;
+                }
+            };
+            ExecCtx::with_threads(threads).run_chunks_mut(&mut par, chunk, f);
+            for (ci, piece) in seq.chunks_mut(chunk).enumerate() {
+                f(ci, piece);
+            }
+            assert_eq!(par, seq, "len={len} chunk={chunk} threads={threads}");
+        });
+    }
+
+    #[test]
+    fn sizing_policy_grained() {
+        // Explicit requests are literal (capped by items)…
+        assert_eq!(pool_size_grained(5, 3, 1_000_000, 1024), 3);
+        assert_eq!(pool_size_grained(2, 100, 1, 1024), 2);
+        // …auto engages one extra worker per grain of work.
+        let auto_small = pool_size_grained(0, 100, 10, 1024);
+        assert_eq!(auto_small, 1);
+        assert!(pool_size_grained(0, 100, 1 << 30, 1024) >= auto_small);
+        assert_eq!(pool_size(4, 0), 1);
+        assert_eq!(pool_size(0, 1), 1);
+    }
+
+    #[test]
+    fn global_pool_keeps_explicit_width_headroom() {
+        // The resident pool is machine-sized with a floor, NOT capped by
+        // SMPPCA_THREADS — the env var caps auto sizing only, so explicit
+        // 8-wide requests (the bitwise test matrix) still get concurrency
+        // under SMPPCA_THREADS=1.
+        assert!(WorkerPool::global().width() >= MIN_GLOBAL_WORKERS);
+    }
+
+    #[test]
+    fn empty_and_single_item_run_inline() {
+        let ctx = ExecCtx::auto();
+        assert!(ctx.run_indexed(0, |i| i).is_empty());
+        assert_eq!(ctx.run_indexed(1, |i| i + 9), vec![9]);
+        let mut data: [f64; 0] = [];
+        ctx.run_chunks_mut(&mut data, 8, |_, _| unreachable!());
+    }
+}

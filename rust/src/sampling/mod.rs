@@ -351,9 +351,15 @@ pub fn sample_multinomial_fast_par(
         plans.push(RowPlan { det, start, draws });
     }
 
-    // ---- Phase 2: execute the plans over fixed row blocks.
+    // ---- Phase 2: execute the plans over fixed row blocks on the runtime
+    // pool — one task per *worker*, each striding blocks w, w+workers, …
+    // and reusing its O(n₂) mark/touched scratch across them (the same
+    // assignment as the pre-pool scoped version; allocating scratch per
+    // block would zero O(nblocks·n₂) instead of O(workers·n₂)). Outputs
+    // are keyed by block and reassembled in block order, so the
+    // concatenation is exactly the serial oracle's output.
     let nblocks = n1.div_ceil(SAMPLE_ROW_BLOCK);
-    let workers = crate::linalg::gemm::pool_size(threads, nblocks);
+    let workers = crate::runtime::pool::pool_size(threads, nblocks);
     if workers <= 1 {
         let mut out = SampleSet::default();
         let mut mark = vec![false; n2];
@@ -363,43 +369,26 @@ pub fn sample_multinomial_fast_par(
         );
         return out;
     }
-    let mut per_block: Vec<(usize, SampleSet)> = std::thread::scope(|s| {
-        let (order, prefix, plans, us) = (&order, &prefix, &plans, &us);
-        let handles: Vec<_> = (0..workers)
-            .map(|t| {
-                s.spawn(move || {
-                    let mut mark = vec![false; n2];
-                    let mut touched = Vec::new();
-                    let mut outs: Vec<(usize, SampleSet)> = Vec::new();
-                    let mut blk = t;
-                    while blk < nblocks {
-                        let lo = blk * SAMPLE_ROW_BLOCK;
-                        let hi = (lo + SAMPLE_ROW_BLOCK).min(n1);
-                        let mut out = SampleSet::default();
-                        sample_planned_rows(
-                            profile,
-                            m,
-                            order,
-                            prefix,
-                            plans,
-                            us,
-                            lo..hi,
-                            &mut mark,
-                            &mut touched,
-                            &mut out,
-                        );
-                        outs.push((blk, out));
-                        blk += workers;
-                    }
-                    outs
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("sampling shard panicked"))
-            .collect()
+    let ctx = crate::runtime::pool::ExecCtx::with_threads(workers);
+    let per_worker: Vec<Vec<(usize, SampleSet)>> = ctx.run_indexed(workers, |w| {
+        let mut mark = vec![false; n2];
+        let mut touched = Vec::new();
+        let mut outs: Vec<(usize, SampleSet)> = Vec::new();
+        let mut blk = w;
+        while blk < nblocks {
+            let lo = blk * SAMPLE_ROW_BLOCK;
+            let hi = (lo + SAMPLE_ROW_BLOCK).min(n1);
+            let mut out = SampleSet::default();
+            sample_planned_rows(
+                profile, m, &order, &prefix, &plans, &us, lo..hi, &mut mark, &mut touched,
+                &mut out,
+            );
+            outs.push((blk, out));
+            blk += workers;
+        }
+        outs
     });
+    let mut per_block: Vec<(usize, SampleSet)> = per_worker.into_iter().flatten().collect();
     per_block.sort_unstable_by_key(|&(b, _)| b);
     let total: usize = per_block.iter().map(|(_, s)| s.len()).sum();
     let mut out = SampleSet {

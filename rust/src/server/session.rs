@@ -31,7 +31,7 @@
 use super::snapshot::Snapshot;
 use crate::algo::{complete_stage, estimate_stage, sample_stage, SmpPcaConfig};
 use crate::coordinator::metrics::{stage, Metrics, StageTimer};
-use crate::linalg::gemm;
+use crate::runtime::pool;
 use crate::runtime::ParNativeEngine;
 use crate::sketch::ingest::{tree_merge, worker_states, ColumnGrouper};
 use crate::sketch::SketchState;
@@ -129,7 +129,7 @@ pub struct StreamSession {
 impl StreamSession {
     /// Open a fresh session: zeroed per-worker states, resolved pool size.
     pub fn open(name: &str, spec: StreamSpec) -> anyhow::Result<Arc<Self>> {
-        let w = gemm::resolve_threads(spec.workers);
+        let w = pool::resolve_threads(spec.workers);
         let states =
             worker_states(spec.algo.sketch, spec.algo.seed, spec.algo.sketch_size, spec.meta, w);
         Self::open_with_states(name, spec, states)
@@ -209,7 +209,7 @@ impl StreamSession {
         mut sb: SketchState,
         meta: StreamMeta,
     ) -> JoinHandle<(SketchState, SketchState)> {
-        std::thread::spawn(move || {
+        pool::spawn_thread(&format!("session-{idx}"), move || {
             let mut grouper = ColumnGrouper::new(meta.n1, meta.n2);
             let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(RECV_CHUNK);
             while rx.recv_many(RECV_CHUNK, &mut msgs).is_ok() {
@@ -477,7 +477,7 @@ impl StreamSession {
         let stop = Arc::new(AtomicBool::new(false));
         let flag = Arc::clone(&stop);
         let me = Arc::clone(&self);
-        let handle = std::thread::spawn(move || {
+        let handle = pool::spawn_thread("auto-refresh", move || {
             while !flag.load(Ordering::Relaxed) {
                 // Chunked sleep so stop/close never waits a full interval.
                 let mut left = interval;
@@ -549,12 +549,25 @@ impl StreamSession {
         let rt = self.router.lock().unwrap().take();
         drop(rt); // senders drop → workers drain their queues and exit
         let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        // Join every worker before reporting the first panic (same policy
+        // as sketch::ingest::join_workers) — bailing on the first failed
+        // join would leave later workers unjoined and their panics unseen.
+        let mut failure: Option<anyhow::Error> = None;
         for h in handles {
-            h.join().map_err(|_| {
-                anyhow::anyhow!("ingest worker panicked (stream '{}')", self.name)
-            })?;
+            if let Err(payload) = h.join() {
+                if failure.is_none() {
+                    failure = Some(anyhow::anyhow!(
+                        "ingest worker panicked (stream '{}'): {}",
+                        self.name,
+                        pool::panic_message(payload.as_ref())
+                    ));
+                }
+            }
         }
-        Ok(())
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 

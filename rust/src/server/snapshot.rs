@@ -53,6 +53,11 @@ pub struct Snapshot {
     pub refresh_wall: Duration,
     /// FNV-1a fingerprint of the payload, fixed at construction.
     checksum: u64,
+    /// Per-component scales `‖U_t‖·‖V_t‖`, precomputed once at construction
+    /// (publish/load time) so `top` queries stop recomputing the column
+    /// norms per call. Derived from `factors` — not part of the persisted
+    /// payload or the fingerprint; rebuilt bitwise identically on load.
+    component_scales: Vec<f64>,
 }
 
 fn fnv(acc: &mut u64, bytes: &[u8]) {
@@ -60,6 +65,17 @@ fn fnv(acc: &mut u64, bytes: &[u8]) {
         *acc ^= b as u64;
         *acc = acc.wrapping_mul(0x100_0000_01b3);
     }
+}
+
+/// The serving-side "how big is component t" answer: the WAltMin factors
+/// carry the singular weight jointly, so the per-component product of
+/// column norms is the natural magnitude. Evaluated once per snapshot —
+/// the same expression `top` queries historically computed per call, so
+/// the cached values are bitwise identical to the on-the-fly ones.
+fn component_scales(factors: &LowRank) -> Vec<f64> {
+    (0..factors.rank())
+        .map(|t| factors.u.col_norm(t) * factors.v.col_norm(t))
+        .collect()
 }
 
 impl Snapshot {
@@ -90,7 +106,9 @@ impl Snapshot {
             samples_drawn: out.samples_drawn,
             refresh_wall,
             checksum: 0,
+            component_scales: Vec::new(),
         };
+        s.component_scales = component_scales(&s.factors);
         s.checksum = s.fingerprint();
         s
     }
@@ -179,13 +197,11 @@ impl Snapshot {
     }
 
     /// Scales of the leading components at this epoch: `‖U_t‖·‖V_t‖` for
-    /// `t < min(r, rank)` — the serving-side "how big is component t"
-    /// answer (the WAltMin factors carry the singular weight jointly, so
-    /// the per-component product of column norms is the natural magnitude).
+    /// `t < min(r, rank)`, served from the cache precomputed at publish
+    /// time — bitwise identical to recomputing from the factors (pinned in
+    /// `tests/server_serve.rs`), without the per-query norm sweeps.
     pub fn top_components(&self, r: usize) -> Vec<f64> {
-        (0..r.min(self.factors.rank()))
-            .map(|t| self.factors.u.col_norm(t) * self.factors.v.col_norm(t))
-            .collect()
+        self.component_scales[..r.min(self.component_scales.len())].to_vec()
     }
 
     /// Reject installation into a session whose parameters this snapshot
@@ -312,6 +328,8 @@ impl Snapshot {
         let a_norms = read_f64s(&mut r, n1)?;
         let b_norms = read_f64s(&mut r, n2)?;
         let checksum = read_u64(&mut r)?;
+        let factors = LowRank { u, v };
+        let scales = component_scales(&factors);
         let snap = Snapshot {
             epoch,
             entries_ingested,
@@ -323,12 +341,13 @@ impl Snapshot {
             samples_cfg,
             iters,
             plain_estimator,
-            factors: LowRank { u, v },
+            factors,
             a_norms,
             b_norms,
             samples_drawn,
             refresh_wall,
             checksum,
+            component_scales: scales,
         };
         anyhow::ensure!(
             snap.verify_integrity(),

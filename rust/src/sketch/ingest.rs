@@ -26,7 +26,7 @@
 //! the `sketch_ingest/*` groups in `benches/hotpaths.rs`.
 
 use super::{SketchKind, SketchState, Summary};
-use crate::linalg::gemm;
+use crate::runtime::pool;
 use crate::stream::{
     bounded, route_columns, route_entries, ColumnBlock, ColumnSource, Entry, EntrySource,
     MatrixId, StreamMeta,
@@ -63,11 +63,12 @@ impl Default for IngestConfig {
 }
 
 impl IngestConfig {
-    /// The worker count this config resolves to: the crate-wide thread
-    /// policy (`0` = all cores under the `SMPPCA_THREADS` cap). No
-    /// work-item clamp here — the stream length is unknown up front.
+    /// The worker count this config resolves to: the crate-wide
+    /// `runtime::pool` policy (`0` = all cores under the `SMPPCA_THREADS`
+    /// cap). No work-item clamp here — the stream length is unknown up
+    /// front.
     pub fn resolve_workers(&self) -> usize {
-        gemm::resolve_threads(self.workers)
+        pool::resolve_threads(self.workers)
     }
 }
 
@@ -159,7 +160,7 @@ where
         let (tx, rx) = bounded::<M>(cap_msgs);
         senders.push(tx);
         let mut fold = make_fold(&sa, &sb);
-        handles.push(std::thread::spawn(move || {
+        handles.push(pool::spawn_thread("ingest", move || {
             let (mut sa, mut sb) = (sa, sb);
             let t = Instant::now();
             let mut msgs: Vec<M> = Vec::with_capacity(RECV_CHUNK);
@@ -175,20 +176,39 @@ where
 }
 
 /// Join the pool, folding worker busy time and sketched-entry counts into
-/// `stats`; a worker panic surfaces as an error.
+/// `stats`. A worker panic (e.g. a corrupt stream tripping the grouper's
+/// range assert) surfaces as an error carrying the worker's panic message —
+/// the router has already stopped routing on the dead worker's channel
+/// disconnect, so the whole pass fails cleanly instead of unwinding.
 fn join_workers(
     handles: Vec<WorkerHandle>,
     stats: &mut IngestStats,
 ) -> anyhow::Result<Vec<(SketchState, SketchState)>> {
     let mut out = Vec::with_capacity(handles.len());
+    let mut failure: Option<anyhow::Error> = None;
     for h in handles {
-        let (sa, sb, busy) =
-            h.join().map_err(|_| anyhow::anyhow!("sketch ingest worker panicked"))?;
-        stats.worker_busy += busy;
-        stats.entries_sketched += sa.entries_seen() + sb.entries_seen();
-        out.push((sa, sb));
+        match h.join() {
+            Ok((sa, sb, busy)) => {
+                stats.worker_busy += busy;
+                stats.entries_sketched += sa.entries_seen() + sb.entries_seen();
+                out.push((sa, sb));
+            }
+            Err(payload) => {
+                // Keep joining the remaining workers (their channels are
+                // closed, so they exit) before reporting the first panic.
+                if failure.is_none() {
+                    failure = Some(anyhow::anyhow!(
+                        "sketch ingest worker panicked: {}",
+                        pool::panic_message(payload.as_ref())
+                    ));
+                }
+            }
+        }
     }
-    Ok(out)
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
 }
 
 /// The resumable primitive under [`ingest_entries`]: run one entry-sharded
@@ -535,6 +555,30 @@ mod tests {
         .unwrap();
         assert_eq!(resumed.sketch.data(), oneshot.a.sketch.data());
         assert_eq!(resumed.col_norms, oneshot.a.col_norms);
+    }
+
+    #[test]
+    fn poisoned_source_surfaces_worker_panic_as_error() {
+        // An out-of-range column trips the owning worker's grouper assert.
+        // The pass must come back as Err carrying the worker's panic
+        // message — not unwind through the router when the dead worker's
+        // channel disconnects (the pre-runtime behavior).
+        let (a, b) = pair(9, 16, 5, 4);
+        let meta = crate::stream::StreamMeta { d: 16, n1: 5, n2: 4 };
+        let mut entries = Vec::new();
+        Box::new(ShuffledMatrixSource { a, b, seed: 11 }).for_each(&mut |e| entries.push(e));
+        // Poison early so routing keeps running after the worker dies.
+        entries.insert(1, Entry::a(0, 99, 1.0));
+        let result = ingest_entries(
+            Box::new(VecSource { meta, entries }),
+            SketchKind::CountSketch,
+            3,
+            6,
+            &IngestConfig { workers: 2, channel_capacity: 8, batch: 2 },
+        );
+        let err = format!("{:#}", result.expect_err("poisoned stream must fail"));
+        assert!(err.contains("panicked"), "unhelpful error: {err}");
+        assert!(err.contains("out of range"), "panic message lost: {err}");
     }
 
     #[test]

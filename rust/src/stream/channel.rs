@@ -153,7 +153,7 @@ impl<T> Drop for Receiver<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::thread;
+    use crate::runtime::pool::spawn_thread;
 
     #[test]
     fn fifo_single_thread() {
@@ -169,7 +169,7 @@ mod tests {
     #[test]
     fn producer_consumer_threads() {
         let (tx, rx) = bounded(4);
-        let producer = thread::spawn(move || {
+        let producer = spawn_thread("chan-producer", move || {
             for i in 0..1000u64 {
                 tx.send(i).unwrap();
             }
@@ -185,7 +185,7 @@ mod tests {
         // With capacity 2 and a slow consumer, the producer must block:
         // verify total passes through and order holds.
         let (tx, rx) = bounded(2);
-        let producer = thread::spawn(move || {
+        let producer = spawn_thread("chan-producer", move || {
             for i in 0..100u64 {
                 tx.send(i).unwrap();
             }
@@ -203,8 +203,8 @@ mod tests {
     fn multi_consumer_partitions_items() {
         let (tx, rx) = bounded(8);
         let rx2 = rx.clone();
-        let c1 = thread::spawn(move || rx.iter().count());
-        let c2 = thread::spawn(move || rx2.iter().count());
+        let c1 = spawn_thread("chan-c1", move || rx.iter().count());
+        let c2 = spawn_thread("chan-c2", move || rx2.iter().count());
         for i in 0..500u64 {
             tx.send(i).unwrap();
         }
@@ -231,7 +231,7 @@ mod tests {
     #[test]
     fn recv_many_unblocks_backpressured_producer() {
         let (tx, rx) = bounded(2);
-        let producer = thread::spawn(move || {
+        let producer = spawn_thread("chan-producer", move || {
             for i in 0..100u64 {
                 tx.send(i).unwrap();
             }

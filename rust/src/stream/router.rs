@@ -20,12 +20,12 @@ pub fn shard_of(matrix: MatrixId, col: u32, workers: usize) -> usize {
     (hash2(tag ^ 0x5aa5, col as u64) % workers as u64) as usize
 }
 
-/// A worker hanging up mid-pass means it panicked; panic here too — the
-/// caller's join reports the worker's real panic. Shared by both routers.
-fn send_or_panic<T>(sender: &Sender<T>, msg: T, shard: usize, when: &str) {
-    if sender.send(msg).is_err() {
-        panic!("sketch worker {shard} hung up {when}");
-    }
+/// A worker hanging up mid-pass means it panicked. The router must NOT
+/// panic in response — it stops routing, lets the pass wind down, and the
+/// caller's join surfaces the worker's real panic as an error
+/// (`sketch::ingest::join_workers`). Returns whether the send landed.
+fn send_or_stop<T>(sender: &Sender<T>, msg: T) -> bool {
+    sender.send(msg).is_ok()
 }
 
 /// Drive a single-pass entry source into per-worker channels in
@@ -34,8 +34,9 @@ fn send_or_panic<T>(sender: &Sender<T>, msg: T, shard: usize, when: &str) {
 /// single reader plus FIFO channels guarantee that each column's entries
 /// reach their owning worker in stream order, which is what keeps the
 /// sharded pass bitwise identical to the sequential one. Returns the number
-/// of entries routed. Panics if a worker hangs up mid-pass (its panic is
-/// surfaced by the caller's join).
+/// of entries routed. If a worker hangs up mid-pass (it panicked), routing
+/// stops — the remaining stream is drained unsent and the caller's join
+/// reports the worker's panic as an error.
 pub fn route_entries(
     source: Box<dyn EntrySource>,
     senders: &[Sender<Vec<Entry>>],
@@ -44,20 +45,29 @@ pub fn route_entries(
     let w = senders.len();
     assert!(w > 0 && batch > 0);
     let mut routed = 0u64;
+    let mut dead = false;
     let mut buffers: Vec<Vec<Entry>> = (0..w).map(|_| Vec::with_capacity(batch)).collect();
     source.for_each(&mut |e| {
+        if dead {
+            return; // for_each cannot early-exit; drain the source unsent
+        }
         let shard = shard_of(e.matrix, e.col, w);
         let buf = &mut buffers[shard];
         buf.push(e);
         if buf.len() >= batch {
             let full = std::mem::replace(buf, Vec::with_capacity(batch));
-            send_or_panic(&senders[shard], full, shard, "mid-pass");
+            if !send_or_stop(&senders[shard], full) {
+                dead = true;
+                return;
+            }
         }
         routed += 1;
     });
-    for (shard, buf) in buffers.into_iter().enumerate() {
-        if !buf.is_empty() {
-            send_or_panic(&senders[shard], buf, shard, "at flush");
+    if !dead {
+        for (shard, buf) in buffers.into_iter().enumerate() {
+            if !buf.is_empty() && !send_or_stop(&senders[shard], buf) {
+                break;
+            }
         }
     }
     routed
@@ -78,10 +88,14 @@ pub fn route_columns(
     assert!(w > 0 && batch_cols > 0);
     let mut cols = 0u64;
     let mut values = 0u64;
+    let mut dead = false;
     let mut blocks: Vec<[ColumnBlock; 2]> = (0..w)
         .map(|_| [ColumnBlock::empty(MatrixId::A), ColumnBlock::empty(MatrixId::B)])
         .collect();
     source.for_each_column(&mut |matrix, col, data| {
+        if dead {
+            return;
+        }
         let shard = shard_of(matrix, col, w);
         let slot = match matrix {
             MatrixId::A => 0,
@@ -94,13 +108,17 @@ pub fn route_columns(
         values += data.len() as u64;
         if blk.cols() >= batch_cols {
             let full = std::mem::replace(blk, ColumnBlock::empty(matrix));
-            send_or_panic(&senders[shard], full, shard, "mid-pass");
+            if !send_or_stop(&senders[shard], full) {
+                dead = true;
+            }
         }
     });
-    for (shard, pair) in blocks.into_iter().enumerate() {
-        for blk in pair {
-            if !blk.js.is_empty() {
-                send_or_panic(&senders[shard], blk, shard, "at flush");
+    if !dead {
+        'flush: for (shard, pair) in blocks.into_iter().enumerate() {
+            for blk in pair {
+                if !blk.js.is_empty() && !send_or_stop(&senders[shard], blk) {
+                    break 'flush;
+                }
             }
         }
     }

@@ -92,48 +92,72 @@ fn mid_stream_snapshot_bitwise_matches_offline_pipeline_at_1_2_8_workers() {
 
 #[test]
 fn concurrent_queries_never_observe_torn_snapshots() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
     let entries = stream_entries();
     let s = StreamSession::open("torn", spec(2)).unwrap();
-    let stop = std::sync::atomic::AtomicBool::new(false);
-    std::thread::scope(|scope| {
-        let session = &s;
-        let stop_ref = &stop;
-        let mut readers = Vec::new();
-        for _ in 0..4 {
-            readers.push(scope.spawn(move || {
-                let mut last_epoch = 0u64;
-                let mut observed = 0u64;
-                while !stop_ref.load(std::sync::atomic::Ordering::Relaxed) {
-                    if let Some(snap) = session.snapshot() {
-                        assert!(snap.verify_integrity(), "torn snapshot observed");
-                        assert!(
-                            snap.epoch >= last_epoch,
-                            "epoch went backwards: {} after {last_epoch}",
-                            snap.epoch
-                        );
-                        last_epoch = snap.epoch;
-                        let v = snap.estimate_entry(0, 0).unwrap();
-                        assert!(v.is_finite());
-                        observed += 1;
-                    }
-                    std::thread::yield_now();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for r in 0..4 {
+        let session = Arc::clone(&s);
+        let stop_ref = Arc::clone(&stop);
+        readers.push(smppca::runtime::spawn_thread(&format!("serve-reader-{r}"), move || {
+            let mut last_epoch = 0u64;
+            let mut observed = 0u64;
+            while !stop_ref.load(Ordering::Relaxed) {
+                if let Some(snap) = session.snapshot() {
+                    assert!(snap.verify_integrity(), "torn snapshot observed");
+                    assert!(
+                        snap.epoch >= last_epoch,
+                        "epoch went backwards: {} after {last_epoch}",
+                        snap.epoch
+                    );
+                    last_epoch = snap.epoch;
+                    let v = snap.estimate_entry(0, 0).unwrap();
+                    assert!(v.is_finite());
+                    observed += 1;
                 }
-                observed
-            }));
-        }
-        // writer: interleave ingest batches with refreshes
-        for (i, chunk) in entries.chunks(37).enumerate() {
-            session.ingest(chunk).unwrap();
-            if i % 2 == 0 {
-                session.refresh().unwrap();
+                std::thread::yield_now();
             }
+            observed
+        }));
+    }
+    // writer: interleave ingest batches with refreshes
+    for (i, chunk) in entries.chunks(37).enumerate() {
+        s.ingest(chunk).unwrap();
+        if i % 2 == 0 {
+            s.refresh().unwrap();
         }
-        session.refresh().unwrap();
-        stop.store(true, std::sync::atomic::Ordering::Relaxed);
-        let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
-        assert!(total > 0, "readers never saw a snapshot");
-    });
+    }
+    s.refresh().unwrap();
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+    assert!(total > 0, "readers never saw a snapshot");
     assert!(s.snapshot().unwrap().epoch >= 1);
+    s.close().unwrap();
+}
+
+#[test]
+fn top_component_scales_cached_at_publish_bitwise_match_factors() {
+    // Query-side caching: `top_components` now serves scales precomputed at
+    // snapshot publish time. Pin them bitwise against the historical
+    // per-call computation (‖U_t‖·‖V_t‖ from the published factors), on the
+    // live snapshot and across a save/load round trip.
+    let entries = stream_entries();
+    let s = StreamSession::open("topcache", spec(2)).unwrap();
+    s.ingest(&entries).unwrap();
+    let snap = s.refresh().unwrap();
+    let want: Vec<f64> = (0..snap.rank)
+        .map(|t| snap.factors.u.col_norm(t) * snap.factors.v.col_norm(t))
+        .collect();
+    assert_eq!(snap.top_components(snap.rank), want, "cached scales diverged from factors");
+    assert_eq!(snap.top_components(2), want[..2].to_vec(), "prefix query must slice the same cache");
+    assert_eq!(snap.top_components(100).len(), snap.rank, "r clamps to the factor rank");
+    let path = std::env::temp_dir().join(format!("smppca_top_cache_{}.bin", std::process::id()));
+    snap.save(&path).unwrap();
+    let loaded = Snapshot::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.top_components(snap.rank), want, "reloaded cache diverged");
     s.close().unwrap();
 }
 
