@@ -7,8 +7,9 @@
 //! naive kernel, the blocked factorization subsystem (`factor/qr/*`,
 //! `factor/tsqr/*`, `factor/rsvd/*` vs their unblocked oracles),
 //! gram-tile worker-pool scaling, the serving subsystem (`server/ingest_qps/*`
-//! session ingest throughput and `server/snapshot_refresh/*` epoch refresh),
-//! the unified runtime (`pool/spawn_overhead/*` persistent-pool dispatch vs
+//! session ingest throughput, `server/snapshot_refresh/*` epoch refresh, and
+//! `server/recovery_replay/*` worker-kill recovery cost under an armed fault
+//! plan), the unified runtime (`pool/spawn_overhead/*` persistent-pool dispatch vs
 //! fresh scoped spawn/join, `gemm/small_par/*` small-GEMM parallel cost on
 //! the pool vs the scoped baseline), ALS solve, end-to-end leader finish.
 //!
@@ -470,6 +471,62 @@ fn main() {
             black_box(s.refresh().unwrap());
         });
         s.close().unwrap();
+    }
+
+    // --------------------------------------------- recovery replay cost
+    // What a worker-kill episode costs the ingest path: the same full
+    // session pass (open → chunked ingest → flush → close), clean vs with
+    // a deterministic kill plan armed (`runtime::fault`). Each faulted
+    // pass kills a worker 8 times (256 batch folds / every=32), so the
+    // delta over `clean` prices 8 × (restart + checkpoint restore +
+    // journal replay). Session open/close is inside the timed closure in
+    // BOTH arms — recovery respawns threads mid-pass, so spawn cost is
+    // part of what is being measured.
+    {
+        use smppca::runtime::fault;
+        use smppca::server::{StreamSession, StreamSpec};
+        use smppca::stream::{Entry, EntrySource, ShuffledMatrixSource, StreamMeta};
+        let mut r = Pcg64::new(35);
+        let dr = 256usize;
+        let nr = 48usize;
+        let ar = Mat::gaussian(dr, nr, &mut r);
+        let br = Mat::gaussian(dr, nr, &mut r);
+        let mut entries: Vec<Entry> = Vec::new();
+        Box::new(ShuffledMatrixSource { a: ar, b: br, seed: 6 })
+            .for_each(&mut |e| entries.push(e));
+        let spec = StreamSpec {
+            meta: StreamMeta { d: dr, n1: nr, n2: nr },
+            algo: smppca::algo::SmpPcaConfig {
+                rank: 4,
+                sketch_size: 48,
+                samples: 2000.0,
+                iters: 3,
+                seed: 9,
+                ..Default::default()
+            },
+            workers: 2,
+            channel_capacity: 16,
+        };
+        let total = entries.len() as u64;
+        let pass = |spec: &StreamSpec| {
+            let s = StreamSession::open("bench-recovery", spec.clone()).unwrap();
+            for chunk in entries.chunks(192) {
+                s.ingest(chunk).unwrap();
+            }
+            s.flush().unwrap();
+            let stats = s.stats();
+            s.close().unwrap();
+            stats
+        };
+        suite.bench_items("server/recovery_replay/clean_w2", total, || {
+            black_box(pass(&spec).entries_routed);
+        });
+        fault::install("serve/worker/batch:panic@every=32").unwrap();
+        suite.bench_items("server/recovery_replay/kill8_w2", total, || {
+            let stats = pass(&spec);
+            black_box((stats.recoveries, stats.replayed_batches));
+        });
+        fault::clear();
     }
 
     // ------------------------------------------------------- ALS solve

@@ -131,6 +131,13 @@ RUN OPTIONS:
 SERVE OPTIONS:
   --script PATH      read protocol commands from PATH instead of stdin
                      (scripted sessions; the session still prints to stdout)
+  --fault-plan PLAN  arm deterministic fault injection (testing/chaos runs):
+                     `point:action@trigger[;...]` with actions panic|ioerr|
+                     delay=MS and triggers every=N|nth=N|once|prob=P[,seed=S],
+                     e.g. 'serve/worker/batch:panic@every=37'. Also readable
+                     from the SMPPCA_FAULT_PLAN env var (any command). The
+                     serving stack self-heals injected worker deaths from
+                     in-memory checkpoints, bitwise-exactly.
 
   A serve session ingests entry streams in shards (bitwise identical to the
   offline pipeline at any worker count), publishes epoch snapshots on
@@ -200,6 +207,14 @@ mod tests {
         let a = parse("serve --script cmds.txt");
         assert_eq!(a.subcommand, "serve");
         assert_eq!(a.get("script"), Some("cmds.txt"));
+    }
+
+    #[test]
+    fn fault_plan_option_documented_and_parses() {
+        assert!(HELP.contains("--fault-plan"), "HELP must document fault injection");
+        assert!(HELP.contains("SMPPCA_FAULT_PLAN"), "HELP must name the env twin");
+        let a = parse("serve --fault-plan serve/worker/batch:panic@every=37");
+        assert_eq!(a.get("fault-plan"), Some("serve/worker/batch:panic@every=37"));
     }
 
     #[test]

@@ -38,6 +38,9 @@ pub mod stage {
     /// publish. The leader stages inside it are additionally recorded under
     /// the `leader/*` names above, so refresh cost decomposes.
     pub const SERVE_REFRESH: &str = "serve/refresh";
+    /// Self-healing supervisor: time spent restarting a dead ingest worker
+    /// from its in-memory checkpoint and replaying its journaled batches.
+    pub const SERVE_RECOVERY: &str = "serve/recovery";
 }
 
 #[derive(Debug, Default, Clone)]

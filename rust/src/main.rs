@@ -167,6 +167,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// [`smppca::server::ServeProtocol`]; this is only the I/O shell.
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use std::io::BufRead;
+    if let Some(plan) = args.get("fault-plan") {
+        smppca::runtime::fault::install(plan)?;
+        eprintln!("[smppca] fault plan armed: {plan}");
+    }
     let proto = smppca::server::ServeProtocol::new();
     let reader: Box<dyn BufRead> = match args.get("script") {
         Some(path) => Box::new(std::io::BufReader::new(std::fs::File::open(path)?)),
@@ -186,7 +190,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         println!("{}", proto.handle(trimmed));
     }
-    proto.service().close_all();
+    for (name, e) in proto.service().close_all() {
+        eprintln!("[smppca] stream '{name}' closed with an error: {e:#}");
+    }
     Ok(())
 }
 

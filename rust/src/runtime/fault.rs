@@ -1,0 +1,479 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Production code declares *named fault points* — `fault::point("ingest/worker/batch")`
+//! on infallible paths, `fault::point_io("checkpoint/write")?` on I/O paths —
+//! and a *plan* decides what (if anything) happens there. With no plan
+//! installed a fault point is one relaxed atomic load, so the hooks can stay
+//! in release builds.
+//!
+//! A plan is a `;`-separated list of rules:
+//!
+//! ```text
+//! point:action@trigger[;point:action@trigger...]
+//! ```
+//!
+//! * `point` — the fault-point name, matched exactly
+//!   (`ingest/worker/batch`, `checkpoint/write`, `serve/refresh`, ...).
+//! * `action` — `panic` | `ioerr` | `delay=MILLIS`.
+//! * `trigger` — `every=N` (hits N, 2N, 3N, ...), `nth=N` (hit N only),
+//!   `once` (alias for `nth=1`), or `prob=P[,seed=S]` (seeded Bernoulli —
+//!   the same plan string always fires on the same hit sequence; the seed
+//!   defaults to a hash of the point name so distinct points decorrelate).
+//!
+//! Example: `ingest/worker/batch:panic@every=37;checkpoint/write:ioerr@nth=2`
+//! kills an ingest worker on every 37th batch it receives and fails the
+//! second checkpoint write with an `io::Error`.
+//!
+//! Plans come from the `SMPPCA_FAULT_PLAN` environment variable (read once,
+//! on the first fault-point hit) or programmatically via [`install`] (the
+//! `--fault-plan` CLI flag and the test suites). Hit counters are global to
+//! the process, keyed per rule, which is what makes runs reproducible:
+//! the Nth arrival at a point is the same arrival in every run of a
+//! deterministic pipeline.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once};
+use std::time::Duration;
+
+use crate::rng::{hash2, Pcg64};
+use anyhow::{bail, Result};
+
+/// What an armed rule does when its trigger matches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Action {
+    Panic,
+    IoErr,
+    Delay(u64),
+}
+
+/// When a rule fires, as a function of the per-rule hit counter.
+#[derive(Debug, Clone)]
+enum Trigger {
+    Every(u64),
+    Nth(u64),
+    Prob { p: f64, rng: Pcg64 },
+}
+
+#[derive(Debug)]
+struct Rule {
+    point: String,
+    action: Action,
+    trigger: Trigger,
+    hits: u64,
+}
+
+impl Rule {
+    /// Count a hit and decide whether this rule fires on it.
+    fn fire(&mut self) -> bool {
+        self.hits += 1;
+        match &mut self.trigger {
+            Trigger::Every(n) => self.hits % *n == 0,
+            Trigger::Nth(n) => self.hits == *n,
+            Trigger::Prob { p, rng } => rng.next_f64() < *p,
+        }
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static ENV_INIT: Once = Once::new();
+static PLAN: Mutex<Vec<Rule>> = Mutex::new(Vec::new());
+
+/// Domain the installed plan applies to: 0 = every thread (env / CLI
+/// installs), otherwise only threads descended from the installer (scoped
+/// installs — what keeps parallel tests in one binary from injecting
+/// faults into each other's worker pools).
+static PLAN_DOMAIN: AtomicU64 = AtomicU64::new(0);
+static NEXT_DOMAIN: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static CURRENT_DOMAIN: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// The current thread's fault domain — [`crate::runtime::pool::spawn_thread`]
+/// captures this in the parent and replays it in the child, so domains
+/// follow thread lineage.
+pub(crate) fn current_domain() -> u64 {
+    CURRENT_DOMAIN.with(|d| d.get())
+}
+
+pub(crate) fn set_domain(domain: u64) {
+    CURRENT_DOMAIN.with(|d| d.set(domain));
+}
+
+fn plan_lock() -> std::sync::MutexGuard<'static, Vec<Rule>> {
+    // A rule that panicked by design poisons the mutex; the plan itself is
+    // still consistent (fire() completed before the panic), so keep going.
+    PLAN.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Parse a plan string into rules. Empty string → empty plan.
+fn parse(plan: &str) -> Result<Vec<Rule>> {
+    let mut rules = Vec::new();
+    for part in plan.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (point, rest) = match part.rsplit_once(':') {
+            Some(pr) => pr,
+            None => bail!("fault rule '{part}' is missing ':action@trigger'"),
+        };
+        let (action_s, trigger_s) = match rest.split_once('@') {
+            Some(at) => at,
+            None => bail!("fault rule '{part}' is missing '@trigger'"),
+        };
+        let action = if action_s == "panic" {
+            Action::Panic
+        } else if action_s == "ioerr" {
+            Action::IoErr
+        } else if let Some(ms) = action_s.strip_prefix("delay=") {
+            Action::Delay(ms.parse().map_err(|_| {
+                anyhow::anyhow!("fault rule '{part}': bad delay millis '{ms}'")
+            })?)
+        } else {
+            bail!("fault rule '{part}': unknown action '{action_s}' (panic|ioerr|delay=MS)");
+        };
+        let trigger = parse_trigger(part, point, trigger_s)?;
+        if point.is_empty() {
+            bail!("fault rule '{part}' has an empty point name");
+        }
+        rules.push(Rule { point: point.to_string(), action, trigger, hits: 0 });
+    }
+    Ok(rules)
+}
+
+fn parse_trigger(rule: &str, point: &str, s: &str) -> Result<Trigger> {
+    if s == "once" {
+        return Ok(Trigger::Nth(1));
+    }
+    if let Some(n) = s.strip_prefix("every=") {
+        let n: u64 = n.parse().map_err(|_| anyhow::anyhow!("fault rule '{rule}': bad every count"))?;
+        anyhow::ensure!(n > 0, "fault rule '{rule}': every=0 is meaningless");
+        return Ok(Trigger::Every(n));
+    }
+    if let Some(n) = s.strip_prefix("nth=") {
+        let n: u64 = n.parse().map_err(|_| anyhow::anyhow!("fault rule '{rule}': bad nth count"))?;
+        anyhow::ensure!(n > 0, "fault rule '{rule}': hits are 1-based, nth=0 never fires");
+        return Ok(Trigger::Nth(n));
+    }
+    if let Some(spec) = s.strip_prefix("prob=") {
+        let (p_s, seed) = match spec.split_once(",seed=") {
+            Some((p_s, seed_s)) => {
+                let seed: u64 = seed_s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault rule '{rule}': bad seed"))?;
+                (p_s, seed)
+            }
+            None => (spec, hash2(0xfa117, point.len() as u64) ^ fnv_name(point)),
+        };
+        let p: f64 = p_s.parse().map_err(|_| anyhow::anyhow!("fault rule '{rule}': bad probability"))?;
+        anyhow::ensure!((0.0..=1.0).contains(&p), "fault rule '{rule}': prob must be in [0,1]");
+        return Ok(Trigger::Prob { p, rng: Pcg64::new(seed) });
+    }
+    bail!("fault rule '{rule}': unknown trigger '{s}' (every=N|nth=N|once|prob=P[,seed=S])")
+}
+
+fn fnv_name(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Install a fault plan for the whole process, replacing any previous plan
+/// and resetting hit counters. Errors (leaving the old plan armed) if the
+/// grammar is invalid.
+pub fn install(plan: &str) -> Result<()> {
+    install_in_domain(plan, 0)
+}
+
+/// Install a plan that fires only in the given fault domain (0 = all
+/// threads). Scoped installs are how test suites inject faults into their
+/// own session's threads without touching concurrently running tests.
+fn install_in_domain(plan: &str, domain: u64) -> Result<()> {
+    let rules = parse(plan)?;
+    let mut guard = plan_lock();
+    PLAN_DOMAIN.store(domain, Ordering::Release);
+    ARMED.store(!rules.is_empty(), Ordering::Release);
+    *guard = rules;
+    Ok(())
+}
+
+/// Remove the installed plan; fault points go back to a single atomic load.
+/// The `fault/injected` counter is preserved (it is cumulative per process).
+pub fn clear() {
+    let mut guard = plan_lock();
+    guard.clear();
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Total faults injected so far in this process — surfaced as the
+/// `fault/injected` counter in session stats.
+pub fn injected_count() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+fn armed() -> bool {
+    ENV_INIT.call_once(|| {
+        if let Ok(plan) = std::env::var("SMPPCA_FAULT_PLAN") {
+            if let Err(e) = install(&plan) {
+                eprintln!("[smppca] ignoring invalid SMPPCA_FAULT_PLAN: {e}");
+            }
+        }
+    });
+    if !ARMED.load(Ordering::Acquire) {
+        return false;
+    }
+    let domain = PLAN_DOMAIN.load(Ordering::Acquire);
+    domain == 0 || domain == current_domain()
+}
+
+/// Hit a fault point and return the action to perform, if any. Counts the
+/// injection. Delay rules sleep here (they never need caller cooperation).
+fn check(name: &str) -> Option<Action> {
+    let mut fired = None;
+    {
+        let mut rules = plan_lock();
+        for rule in rules.iter_mut() {
+            if rule.point == name && rule.fire() {
+                fired = Some(rule.action);
+                break;
+            }
+        }
+    }
+    if let Some(action) = fired {
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+        if let Action::Delay(ms) = action {
+            std::thread::sleep(Duration::from_millis(ms));
+            return None;
+        }
+    }
+    fired
+}
+
+/// Fault point on an infallible path: `panic` rules panic, `delay` rules
+/// sleep. An `ioerr` rule here escalates to a panic — the caller has no
+/// error channel to thread it through.
+#[inline]
+pub fn point(name: &str) {
+    if !armed() {
+        return;
+    }
+    match check(name) {
+        None => {}
+        Some(Action::Panic) => panic!("fault injected: panic at '{name}'"),
+        Some(Action::IoErr) => panic!("fault injected: ioerr at non-io point '{name}'"),
+        Some(Action::Delay(_)) => unreachable!("delay handled in check()"),
+    }
+}
+
+/// Fault point on an I/O path: `ioerr` rules surface as `Err`, `panic`
+/// rules panic, `delay` rules sleep.
+#[inline]
+pub fn point_io(name: &str) -> io::Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    match check(name) {
+        None => Ok(()),
+        Some(Action::Panic) => panic!("fault injected: panic at '{name}'"),
+        Some(Action::IoErr) => Err(io::Error::new(
+            io::ErrorKind::Other,
+            format!("fault injected: ioerr at '{name}'"),
+        )),
+        Some(Action::Delay(_)) => unreachable!("delay handled in check()"),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use std::sync::atomic::Ordering;
+    use std::sync::Mutex;
+
+    /// Plan storage is process-global; tests that install one hold this lock
+    /// so two fault tests never overwrite each other's plan. The install is
+    /// additionally *domain-scoped* to the calling thread's lineage, so
+    /// tests that are NOT fault tests (and thus don't take this lock) can
+    /// keep running in parallel without being injected into.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    pub struct PlanGuard {
+        _lock: std::sync::MutexGuard<'static, ()>,
+        prev_domain: u64,
+    }
+
+    impl PlanGuard {
+        /// Swap the plan mid-test (same domain, counters reset) — for
+        /// multi-phase tests that set up cleanly and then arm a fault.
+        pub fn install(&self, plan: &str) {
+            super::install_in_domain(plan, super::current_domain())
+                .expect("test fault plan must parse");
+        }
+    }
+
+    impl Drop for PlanGuard {
+        fn drop(&mut self) {
+            super::clear();
+            super::set_domain(self.prev_domain);
+        }
+    }
+
+    pub fn with_plan(plan: &str) -> PlanGuard {
+        let lock = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let prev_domain = super::current_domain();
+        let domain = super::NEXT_DOMAIN.fetch_add(1, Ordering::Relaxed);
+        super::set_domain(domain);
+        super::install_in_domain(plan, domain).expect("test fault plan must parse");
+        PlanGuard { _lock: lock, prev_domain }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lock() -> test_support::PlanGuard {
+        test_support::with_plan("")
+    }
+
+    #[test]
+    fn unarmed_points_are_noops() {
+        let _g = lock();
+        point("nonexistent/point");
+        point_io("nonexistent/io").unwrap();
+    }
+
+    #[test]
+    fn every_n_fires_on_multiples() {
+        let _g = test_support::with_plan("p/every:ioerr@every=3");
+        let mut fired = Vec::new();
+        for i in 1..=9 {
+            if point_io("p/every").is_err() {
+                fired.push(i);
+            }
+        }
+        assert_eq!(fired, vec![3, 6, 9]);
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let _g = test_support::with_plan("p/nth:ioerr@nth=2");
+        assert!(point_io("p/nth").is_ok());
+        assert!(point_io("p/nth").is_err());
+        for _ in 0..10 {
+            assert!(point_io("p/nth").is_ok());
+        }
+    }
+
+    #[test]
+    fn once_is_nth_1() {
+        let _g = test_support::with_plan("p/once:ioerr@once");
+        assert!(point_io("p/once").is_err());
+        assert!(point_io("p/once").is_ok());
+    }
+
+    #[test]
+    fn panic_rule_panics_with_point_name() {
+        let _g = test_support::with_plan("p/panic:panic@once");
+        let err = std::panic::catch_unwind(|| point("p/panic")).unwrap_err();
+        let msg = crate::runtime::pool::panic_message(&*err);
+        assert!(msg.contains("fault injected"), "got: {msg}");
+        assert!(msg.contains("p/panic"), "got: {msg}");
+    }
+
+    #[test]
+    fn points_match_exactly_not_by_prefix() {
+        let _g = test_support::with_plan("a/b:ioerr@every=1");
+        assert!(point_io("a/b/c").is_ok());
+        assert!(point_io("a").is_ok());
+        assert!(point_io("a/b").is_err());
+    }
+
+    #[test]
+    fn seeded_prob_is_reproducible() {
+        let run = || {
+            let _g = test_support::with_plan("p/prob:ioerr@prob=0.3,seed=42");
+            (1..=64).filter(|_| point_io("p/prob").is_err()).collect::<Vec<u32>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(!a.is_empty() && a.len() < 64, "p=0.3 over 64 hits: {a:?}");
+    }
+
+    #[test]
+    fn delay_rule_sleeps_without_failing() {
+        let _g = test_support::with_plan("p/delay:delay=1@every=1");
+        let t0 = std::time::Instant::now();
+        point("p/delay");
+        point_io("p/delay").unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn injected_counter_advances() {
+        let _g = test_support::with_plan("p/count:ioerr@every=1");
+        let before = injected_count();
+        let _ = point_io("p/count");
+        let _ = point_io("p/count");
+        assert_eq!(injected_count() - before, 2);
+    }
+
+    #[test]
+    fn bad_grammar_is_rejected_with_context() {
+        let _g = lock();
+        for bad in [
+            "missing-action",
+            "p:panic",
+            "p:frobnicate@once",
+            "p:panic@every=0",
+            "p:panic@nth=0",
+            "p:delay=abc@once",
+            "p:panic@prob=1.5",
+            ":panic@once",
+        ] {
+            let err = install(bad).expect_err(&format!("'{bad}' should not parse"));
+            assert!(err.to_string().contains("fault rule"), "{bad}: {err}");
+        }
+        // an invalid install leaves the previous plan in place
+        install("p/x:ioerr@once").unwrap();
+        assert!(install("garbage").is_err());
+        assert!(point_io("p/x").is_err());
+    }
+
+    #[test]
+    fn scoped_plans_follow_thread_lineage_only() {
+        let _g = test_support::with_plan("p/domain:ioerr@every=1");
+        // fires on the installing thread...
+        assert!(point_io("p/domain").is_err());
+        // ...and in pool threads spawned from it (lineage propagation)...
+        let child = crate::runtime::pool::spawn_thread("fault-child", || {
+            point_io("p/domain").is_err()
+        });
+        assert!(child.join().unwrap(), "pool children must inherit the fault domain");
+        // ...but never in an unrelated thread (fresh std thread = domain 0).
+        let stranger = std::thread::spawn(|| point_io("p/domain").is_ok());
+        assert!(stranger.join().unwrap(), "foreign threads must not be injected into");
+    }
+
+    #[test]
+    fn guard_install_swaps_plan_in_place() {
+        let g = test_support::with_plan("p/first:ioerr@every=1");
+        assert!(point_io("p/first").is_err());
+        g.install("p/second:ioerr@every=1");
+        assert!(point_io("p/first").is_ok(), "old plan must be gone");
+        assert!(point_io("p/second").is_err());
+    }
+
+    #[test]
+    fn empty_plan_disarms() {
+        let _g = lock();
+        install("p/y:ioerr@once").unwrap();
+        install("").unwrap();
+        assert!(point_io("p/y").is_ok());
+    }
+}

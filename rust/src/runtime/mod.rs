@@ -20,6 +20,7 @@
 //! engines entry-for-entry.
 
 pub mod engine;
+pub mod fault;
 pub mod pool;
 pub mod xla_engine;
 

@@ -460,9 +460,15 @@ where
     T: Send + 'static,
     F: FnOnce() -> T + Send + 'static,
 {
+    // Fault-injection domains follow thread lineage (a scoped fault plan
+    // applies to the installer's thread tree, not the whole process).
+    let domain = crate::runtime::fault::current_domain();
     std::thread::Builder::new()
         .name(format!("smppca-{name}"))
-        .spawn(f)
+        .spawn(move || {
+            crate::runtime::fault::set_domain(domain);
+            f()
+        })
         .expect("failed to spawn dedicated thread")
 }
 

@@ -31,9 +31,15 @@
 //!   CLI mode drives it from stdin), scriptable and testable.
 //! * Persistence — epoch snapshots and per-worker sketch states both
 //!   serialize in the shared versioned SMPC container format
-//!   (`sketch::checkpoint`), so a killed server recovers by restoring its
-//!   shard states (bitwise resume) and/or re-installing its last published
-//!   snapshot.
+//!   (`sketch::checkpoint`: atomic tmp-file + rename writes, CRC-sealed v3
+//!   payloads), so a killed server recovers by restoring its shard states
+//!   (bitwise resume) and/or re-installing its last published snapshot.
+//! * **Self-healing ingest** — workers offer periodic in-memory state
+//!   checkpoints; the router journals routed batches and, when a worker
+//!   dies (exercised by `runtime::fault` injection plans), restarts it from
+//!   the checkpoint and replays the journal — bitwise-exactly. Exhausted
+//!   restart budgets degrade the session to read-only serving of the last
+//!   published snapshot. `tests/server_recovery.rs` pins the whole story.
 //!
 //! # Determinism contract
 //!

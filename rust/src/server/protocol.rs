@@ -292,7 +292,8 @@ impl ServeProtocol {
         let st = session.stats();
         let mut out = format!(
             "stats {name} epoch={} entries={} batches={} queries={} workers={} d={} n1={} n2={} \
-             k={} rank={} auto_refresh={}",
+             k={} rank={} auto_refresh={} recoveries={} replayed={} faults_injected={} \
+             degraded={}",
             st.published_epoch,
             st.entries_routed,
             st.batches_routed,
@@ -303,7 +304,11 @@ impl ServeProtocol {
             st.meta.n2,
             st.k,
             st.rank,
-            st.auto_refresh
+            st.auto_refresh,
+            st.recoveries,
+            st.replayed_batches,
+            st.fault_injected,
+            st.degraded
         );
         let report = session.metrics_report();
         if !report.is_empty() {
@@ -343,10 +348,20 @@ impl ServeProtocol {
     fn cmd_streams(&self) -> String {
         let names = self.service.names();
         if names.is_empty() {
-            "streams: (none)".to_string()
-        } else {
-            format!("streams: {}", names.join(" "))
+            return "streams: (none)".to_string();
         }
+        let degraded = self.service.degraded_names();
+        let tagged: Vec<String> = names
+            .into_iter()
+            .map(|n| {
+                if degraded.contains(&n) {
+                    format!("{n}(degraded)")
+                } else {
+                    n
+                }
+            })
+            .collect();
+        format!("streams: {}", tagged.join(" "))
     }
 }
 

@@ -80,15 +80,33 @@ impl SketchService {
         self.streams.lock().unwrap().keys().cloned().collect()
     }
 
-    /// Close every stream (server shutdown); close errors are swallowed —
-    /// shutdown proceeds regardless.
-    pub fn close_all(&self) {
+    /// Names of streams that degraded to read-only serving (an ingest shard
+    /// was irrecoverable) — operators poll this to know what needs a
+    /// checkpoint-restore.
+    pub fn degraded_names(&self) -> Vec<String> {
+        self.streams
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.is_degraded())
+            .map(|s| s.name().to_string())
+            .collect()
+    }
+
+    /// Close every stream (server shutdown). Every stream is closed even if
+    /// some fail; the collected errors come back so shutdown can report
+    /// them without having aborted half-way.
+    pub fn close_all(&self) -> Vec<(String, anyhow::Error)> {
         let drained: Vec<_> = std::mem::take(&mut *self.streams.lock().unwrap())
-            .into_values()
+            .into_iter()
             .collect();
-        for s in drained {
-            s.close().ok();
+        let mut failures = Vec::new();
+        for (name, s) in drained {
+            if let Err(e) = s.close() {
+                failures.push((name, e));
+            }
         }
+        failures
     }
 }
 
@@ -134,7 +152,9 @@ mod tests {
         let svc = SketchService::new();
         svc.open("a", spec()).unwrap();
         svc.open("b", spec()).unwrap();
-        svc.close_all();
+        assert!(svc.degraded_names().is_empty());
+        let failures = svc.close_all();
+        assert!(failures.is_empty(), "clean sessions must close cleanly: {failures:?}");
         assert!(svc.names().is_empty());
     }
 }

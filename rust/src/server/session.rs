@@ -27,15 +27,38 @@
 //! leader finish is bitwise invariant to its own thread count. Hence a
 //! snapshot at epoch E equals the offline `Pipeline::run` on the same
 //! prefix, bit for bit (`tests/server_serve.rs`).
+//!
+//! # Self-healing ingest
+//!
+//! Sketch linearity makes worker failure cheap to mask. Every worker
+//! offers the supervisor an in-memory checkpoint of its states after each
+//! `SMPPCA_CKPT_INTERVAL` batches (default 32), tagged with the batch
+//! sequence number the clone reflects; the router journals each routed
+//! batch per worker and prunes the journal up to the last acknowledged
+//! checkpoint, so the journal stays bounded by the checkpoint interval
+//! plus the channel depth. When a send finds a worker dead (it panicked —
+//! e.g. through the `serve/worker/batch` fault point), the supervisor
+//! joins the corpse, respawns the worker from the checkpointed states, and
+//! replays the journal into the fresh queue. The dead incarnation's
+//! partial progress past its checkpoint is discarded wholesale, and the
+//! replayed fold is the same deterministic per-column op sequence
+//! ([`shard_of`] never changes mid-session), so the recovered shard is
+//! **bitwise identical** to one that never failed. Restarts are bounded
+//! (with exponential backoff); an irrecoverable shard flips the session to
+//! *degraded* read-only serving: ingest/refresh refuse with a clear error
+//! while the last published snapshot keeps answering queries. Recovery
+//! traffic is surfaced as `serve/recoveries` / `serve/replayed_batches`
+//! counters and the `degraded` flag in [`StreamStats`].
 
 use super::snapshot::Snapshot;
 use crate::algo::{complete_stage, estimate_stage, sample_stage, SmpPcaConfig};
 use crate::coordinator::metrics::{stage, Metrics, StageTimer};
-use crate::runtime::pool;
+use crate::runtime::{fault, pool};
 use crate::runtime::ParNativeEngine;
 use crate::sketch::ingest::{tree_merge, worker_states, ColumnGrouper};
 use crate::sketch::SketchState;
 use crate::stream::{bounded, shard_of, Entry, MatrixId, Receiver, Sender, StreamMeta};
+use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -44,6 +67,37 @@ use std::time::{Duration, Instant};
 
 /// Messages a worker drains per lock acquisition (mirrors `sketch::ingest`).
 const RECV_CHUNK: usize = 8;
+
+/// Default worker self-checkpoint cadence, in routed batches — the bound
+/// on journal length and replay work. Override with `SMPPCA_CKPT_INTERVAL`.
+const DEFAULT_CKPT_INTERVAL: u64 = 32;
+
+/// Restart attempts within one recovery episode (one ingest/freeze call)
+/// before the shard is declared irrecoverable.
+const MAX_RECOVERY_ATTEMPTS: u32 = 3;
+
+/// Whole-freeze retries when a worker dies *after* its marker was enqueued
+/// (the death is only observable as a missing reply; the retry's marker
+/// send is what detects and recovers the corpse).
+const MAX_FREEZE_ATTEMPTS: u32 = 4;
+
+/// Lifetime restart budget per worker; beyond it the session degrades to
+/// read-only serving instead of thrashing.
+const MAX_WORKER_RESTARTS: u32 = 16;
+
+const RECOVERY_BACKOFF_BASE: Duration = Duration::from_millis(5);
+const RECOVERY_BACKOFF_CAP: Duration = Duration::from_millis(100);
+
+/// Auto-refresh backoff cap, as a multiple of the configured interval.
+const REFRESH_BACKOFF_CAP_MULT: u32 = 32;
+
+fn ckpt_interval() -> u64 {
+    std::env::var("SMPPCA_CKPT_INTERVAL")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_CKPT_INTERVAL)
+}
 
 /// Shape and algorithm parameters of one served stream. Everything the
 /// offline pipeline needs, plus the serving pool knobs.
@@ -77,8 +131,50 @@ enum WorkerMsg {
     Freeze(Sender<(usize, SketchState, SketchState)>),
 }
 
+/// A worker's checkpoint offer: `(worker, batches folded, state A, state B)`
+/// — the states are exactly the fold of that worker's first `seq` batches.
+type CkptMsg = (usize, u64, SketchState, SketchState);
+
+/// Supervision state of one ingest worker, owned by the router.
+struct WorkerSlot {
+    sender: Sender<WorkerMsg>,
+    /// Batches routed to this worker since session start.
+    sent_seq: u64,
+    /// Last acknowledged checkpoint: `(seq, state A, state B)` — the fold
+    /// of the worker's first `seq` batches. Starts at `(0, fresh states)`.
+    ckpt: (u64, SketchState, SketchState),
+    /// Batches with sequence > `ckpt.0`, retained for crash replay.
+    journal: VecDeque<(u64, Vec<Entry>)>,
+    /// Lifetime restarts consumed from the [`MAX_WORKER_RESTARTS`] budget.
+    restarts: u32,
+}
+
 struct Router {
-    senders: Vec<Sender<WorkerMsg>>,
+    slots: Vec<WorkerSlot>,
+    /// Checkpoint-offer channel: workers `try_send`, the supervisor drains
+    /// under the router lock. The router keeps one sender alive so the
+    /// receiver never disconnects and respawned workers can clone it.
+    ckpt_tx: Sender<CkptMsg>,
+    ckpt_rx: Receiver<CkptMsg>,
+    ckpt_every: u64,
+}
+
+impl Router {
+    /// Absorb pending checkpoint offers and prune the covered journal
+    /// prefixes. A checkpoint is a pure function of the batch prefix, so
+    /// even an offer from an already-dead incarnation is valid — only the
+    /// sequence number matters, and it only ever advances.
+    fn drain_checkpoints(&mut self) {
+        while let Ok(Some((idx, seq, sa, sb))) = self.ckpt_rx.try_recv() {
+            let slot = &mut self.slots[idx];
+            if seq > slot.ckpt.0 {
+                slot.ckpt = (seq, sa, sb);
+                while slot.journal.front().map_or(false, |(s, _)| *s <= seq) {
+                    slot.journal.pop_front();
+                }
+            }
+        }
+    }
 }
 
 struct Refresher {
@@ -100,10 +196,19 @@ pub struct StreamStats {
     pub published_epoch: u64,
     pub queries: u64,
     pub auto_refresh: bool,
+    /// Worker restarts performed by the self-healing supervisor.
+    pub recoveries: u64,
+    /// Journaled batches re-sent to respawned workers.
+    pub replayed_batches: u64,
+    /// Process-wide injected-fault count (`SMPPCA_FAULT_PLAN`).
+    pub fault_injected: u64,
+    /// True once an ingest shard proved irrecoverable: the session serves
+    /// its last published snapshot read-only and refuses ingest/refresh.
+    pub degraded: bool,
 }
 
 /// One long-lived named stream: concurrent ingest, epoch snapshots,
-/// lock-free snapshot reads. See the module docs for the semantics.
+/// lock-free snapshot reads, self-healing workers. See the module docs.
 pub struct StreamSession {
     name: String,
     spec: StreamSpec,
@@ -122,7 +227,10 @@ pub struct StreamSession {
     batches_routed: AtomicU64,
     metrics: Mutex<Metrics>,
     queries: AtomicU64,
-    handles: Mutex<Vec<JoinHandle<(SketchState, SketchState)>>>,
+    recoveries: AtomicU64,
+    replayed: AtomicU64,
+    degraded: AtomicBool,
+    handles: Mutex<Vec<Option<JoinHandle<(SketchState, SketchState)>>>>,
     refresher: Mutex<Option<Refresher>>,
 }
 
@@ -179,47 +287,90 @@ impl StreamSession {
         }
         let cap = spec.channel_capacity.max(2);
         let workers = states.len();
-        let mut senders = Vec::with_capacity(workers);
+        let ckpt_every = ckpt_interval();
+        let (ckpt_tx, ckpt_rx) = bounded::<CkptMsg>((workers * 2).max(4));
+        let mut slots = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for (idx, (sa, sb)) in states.into_iter().enumerate() {
             let (tx, rx) = bounded::<WorkerMsg>(cap);
-            senders.push(tx);
-            handles.push(Self::spawn_worker(idx, rx, sa, sb, meta));
+            // The birth checkpoint: recovery of a worker that dies before
+            // its first periodic offer restarts from these exact states.
+            let ckpt = (0u64, sa.clone(), sb.clone());
+            handles.push(Some(Self::spawn_worker(
+                idx,
+                rx,
+                sa,
+                sb,
+                meta,
+                ckpt_tx.clone(),
+                0,
+                ckpt_every,
+            )));
+            slots.push(WorkerSlot {
+                sender: tx,
+                sent_seq: 0,
+                ckpt,
+                journal: VecDeque::new(),
+                restarts: 0,
+            });
         }
         Ok(Arc::new(Self {
             name: name.to_string(),
             spec,
             workers,
-            router: Mutex::new(Some(Router { senders })),
+            router: Mutex::new(Some(Router { slots, ckpt_tx, ckpt_rx, ckpt_every })),
             published: RwLock::new(None),
             epoch: AtomicU64::new(0),
             entries_routed: AtomicU64::new(0),
             batches_routed: AtomicU64::new(0),
             metrics: Mutex::new(Metrics::new()),
             queries: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            replayed: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
             handles: Mutex::new(handles),
             refresher: Mutex::new(None),
         }))
     }
 
+    /// Spawn one ingest worker. `start_seq` is the batch ordinal its states
+    /// already reflect (0 for a fresh worker, the checkpoint sequence for a
+    /// respawn) — the periodic checkpoint offers continue that numbering,
+    /// which is what lets the supervisor prune the journal correctly across
+    /// incarnations.
     fn spawn_worker(
         idx: usize,
         rx: Receiver<WorkerMsg>,
         mut sa: SketchState,
         mut sb: SketchState,
         meta: StreamMeta,
+        ckpt_tx: Sender<CkptMsg>,
+        start_seq: u64,
+        ckpt_every: u64,
     ) -> JoinHandle<(SketchState, SketchState)> {
         pool::spawn_thread(&format!("session-{idx}"), move || {
             let mut grouper = ColumnGrouper::new(meta.n1, meta.n2);
             let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(RECV_CHUNK);
+            let mut seq = start_seq;
             while rx.recv_many(RECV_CHUNK, &mut msgs).is_ok() {
                 for msg in msgs.drain(..) {
                     match msg {
                         WorkerMsg::Batch(batch) => {
+                            // Fault point BEFORE any fold: a kill here loses
+                            // the whole batch, never half of one, so replay
+                            // from the last checkpoint is exact.
+                            fault::point("serve/worker/batch");
                             grouper.for_each_group(&batch, |matrix, col, entries| match matrix {
                                 MatrixId::A => sa.update_col_entries(col, entries),
                                 MatrixId::B => sb.update_col_entries(col, entries),
                             });
+                            seq += 1;
+                            if seq % ckpt_every == 0 {
+                                // Best-effort offer: a full channel skips
+                                // this checkpoint (the journal just stays
+                                // longer); a closed one means shutdown.
+                                let _ = ckpt_tx.try_send((idx, seq, sa.clone(), sb.clone()));
+                            }
                         }
                         WorkerMsg::Freeze(reply) => {
                             // The receiver only hangs up if the freezer bailed;
@@ -246,12 +397,137 @@ impl StreamSession {
         self.workers
     }
 
+    /// Whether the session has degraded to read-only snapshot serving.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::SeqCst)
+    }
+
+    fn closed_err(&self) -> anyhow::Error {
+        if self.is_degraded() {
+            anyhow::anyhow!(
+                "stream '{}' is degraded to read-only serving (an ingest shard was \
+                 irrecoverable); the last published snapshot still answers queries",
+                self.name
+            )
+        } else {
+            anyhow::anyhow!("stream '{}' is closed", self.name)
+        }
+    }
+
+    /// Restart worker `s` from its last in-memory checkpoint and replay the
+    /// journaled batches routed since — bitwise-equivalent to the worker
+    /// never having died, because the checkpoint is an exact state clone
+    /// and the journal replays the identical per-column op sequence.
+    /// Called under the router lock. `Err` means the shard is
+    /// irrecoverable (restart budget exhausted) and the caller must
+    /// degrade the session.
+    fn recover_worker(&self, rt: &mut Router, s: usize) -> anyhow::Result<()> {
+        let meta = self.spec.meta;
+        let cap = self.spec.channel_capacity.max(2);
+        let t = StageTimer::start();
+        let mut attempt = 0u32;
+        let mut respawns_here = 0u64;
+        let mut replayed_here = 0u64;
+        let outcome = loop {
+            attempt += 1;
+            // Join the dead incarnation first: consume its panic so close()
+            // reports only unexpected ones, and let its queue (with any
+            // in-flight checkpoint offer) finish unwinding.
+            let dead_msg = {
+                let mut handles = self.handles.lock().unwrap();
+                handles[s]
+                    .take()
+                    .and_then(|h| h.join().err())
+                    .map(|p| pool::panic_message(p.as_ref()).to_string())
+            };
+            if attempt == 1 {
+                eprintln!(
+                    "[smppca] stream '{}': ingest worker {s} died ({}); restarting from its \
+                     checkpoint",
+                    self.name,
+                    dead_msg.as_deref().unwrap_or("hung up without a panic")
+                );
+            }
+            rt.drain_checkpoints();
+            if attempt > MAX_RECOVERY_ATTEMPTS || rt.slots[s].restarts >= MAX_WORKER_RESTARTS {
+                break Err(anyhow::anyhow!(
+                    "ingest worker {s} is irrecoverable after {} restart(s) (stream '{}')",
+                    rt.slots[s].restarts,
+                    self.name
+                ));
+            }
+            let (ckpt_seq, sa, sb, restarts) = {
+                let slot = &mut rt.slots[s];
+                slot.restarts += 1;
+                (slot.ckpt.0, slot.ckpt.1.clone(), slot.ckpt.2.clone(), slot.restarts)
+            };
+            if restarts > 1 {
+                let backoff = RECOVERY_BACKOFF_BASE
+                    .saturating_mul(1u32 << (restarts - 1).min(8))
+                    .min(RECOVERY_BACKOFF_CAP);
+                std::thread::sleep(backoff);
+            }
+            let (tx, rx) = bounded::<WorkerMsg>(cap);
+            let handle = Self::spawn_worker(
+                s,
+                rx,
+                sa,
+                sb,
+                meta,
+                rt.ckpt_tx.clone(),
+                ckpt_seq,
+                rt.ckpt_every,
+            );
+            rt.slots[s].sender = tx;
+            self.handles.lock().unwrap()[s] = Some(handle);
+            self.recoveries.fetch_add(1, Ordering::Relaxed);
+            respawns_here += 1;
+            // Replay everything routed past the checkpoint, in order. A
+            // death mid-replay (the fault that killed the worker may still
+            // be armed) just loops into the next bounded attempt.
+            let mut alive = true;
+            for i in 0..rt.slots[s].journal.len() {
+                let batch = rt.slots[s].journal[i].1.clone();
+                replayed_here += 1;
+                if rt.slots[s].sender.send(WorkerMsg::Batch(batch)).is_err() {
+                    alive = false;
+                    break;
+                }
+            }
+            if alive {
+                break Ok(());
+            }
+        };
+        self.replayed.fetch_add(replayed_here, Ordering::Relaxed);
+        let mut m = self.metrics.lock().unwrap();
+        m.record_stage(stage::SERVE_RECOVERY, t.stop());
+        m.add("serve/recoveries", respawns_here);
+        m.add("serve/replayed_batches", replayed_here);
+        drop(m);
+        outcome
+    }
+
+    /// Mark the session degraded and drop the router (workers wind down;
+    /// already-joined corpses stay consumed). The published snapshot keeps
+    /// serving.
+    fn degrade(&self, guard: &mut std::sync::MutexGuard<'_, Option<Router>>) {
+        self.degraded.store(true, Ordering::SeqCst);
+        **guard = None;
+        self.metrics.lock().unwrap().add("serve/degraded", 1);
+        eprintln!(
+            "[smppca] stream '{}' degraded to read-only serving of its last published snapshot",
+            self.name
+        );
+    }
+
     /// Route one batch of entries into the worker pool (blocking when the
     /// bounded queues are full — the `serve/route` stage records that
     /// backpressure). The whole batch is validated up front and rejected
     /// atomically on any out-of-range record, so the accepted stream prefix
     /// stays well-defined. Per-column arrival order is preserved, which is
-    /// what keeps the session bitwise equal to offline ingestion.
+    /// what keeps the session bitwise equal to offline ingestion. A dead
+    /// worker is transparently restarted from its checkpoint + journal; the
+    /// call fails only when the session is closed or degrades.
     pub fn ingest(&self, entries: &[Entry]) -> anyhow::Result<u64> {
         let meta = self.spec.meta;
         for e in entries {
@@ -279,16 +555,31 @@ impl StreamSession {
         }
         let t = StageTimer::start();
         {
-            let guard = self.router.lock().unwrap();
-            let rt = guard
-                .as_ref()
-                .ok_or_else(|| anyhow::anyhow!("stream '{}' is closed", self.name))?;
+            let mut guard = self.router.lock().unwrap();
+            let rt = guard.as_mut().ok_or_else(|| self.closed_err())?;
+            rt.drain_checkpoints();
+            let mut failure: Option<anyhow::Error> = None;
             for (s, batch) in shards.into_iter().enumerate() {
-                if !batch.is_empty() {
-                    rt.senders[s].send(WorkerMsg::Batch(batch)).map_err(|_| {
-                        anyhow::anyhow!("ingest worker {s} died (stream '{}')", self.name)
-                    })?;
+                if batch.is_empty() {
+                    continue;
                 }
+                let slot = &mut rt.slots[s];
+                let seq = slot.sent_seq + 1;
+                slot.sent_seq = seq;
+                // Journal before sending, so a death discovered by this very
+                // send can replay the batch it swallowed.
+                slot.journal.push_back((seq, batch.clone()));
+                if slot.sender.send(WorkerMsg::Batch(batch)).is_ok() {
+                    continue;
+                }
+                if let Err(e) = self.recover_worker(rt, s) {
+                    failure = Some(e);
+                    break;
+                }
+            }
+            if let Some(e) = failure {
+                self.degrade(&mut guard);
+                return Err(e);
             }
             self.entries_routed.fetch_add(entries.len() as u64, Ordering::Relaxed);
             self.batches_routed.fetch_add(1, Ordering::Relaxed);
@@ -303,41 +594,93 @@ impl StreamSession {
     /// Enqueue a freeze marker on every worker (under the router lock, so
     /// the frozen prefix is exactly the entries routed so far) and collect
     /// the state clones. `publishable` freezes take the next epoch ordinal;
-    /// barriers (`flush`, `checkpoint`) do not consume one.
+    /// barriers (`flush`, `checkpoint`) do not consume one. A worker found
+    /// dead here is recovered (checkpoint + journal replay) before its
+    /// marker is re-sent — the reply then still reflects the full routed
+    /// prefix, because replay precedes the marker in its queue.
     fn freeze(
         &self,
         publishable: bool,
     ) -> anyhow::Result<(u64, u64, Vec<(SketchState, SketchState)>)> {
         let t = StageTimer::start();
-        let (epoch, entries_at, w, rx) = {
-            let guard = self.router.lock().unwrap();
-            let rt = guard
-                .as_ref()
-                .ok_or_else(|| anyhow::anyhow!("stream '{}' is closed", self.name))?;
-            let epoch = if publishable {
-                self.epoch.fetch_add(1, Ordering::SeqCst) + 1
-            } else {
-                self.epoch.load(Ordering::SeqCst)
-            };
-            let (tx, rx) = bounded::<(usize, SketchState, SketchState)>(rt.senders.len());
-            for s in &rt.senders {
-                s.send(WorkerMsg::Freeze(tx.clone())).map_err(|_| {
-                    anyhow::anyhow!("ingest worker died (stream '{}')", self.name)
-                })?;
+        fault::point("serve/freeze");
+        // Assigned once and pinned across retries (a retry is the same
+        // logical freeze, just with a recovered worker).
+        let mut epoch_assigned: Option<u64> = None;
+        for attempt in 1..=MAX_FREEZE_ATTEMPTS {
+            let (epoch, entries_at, w, rx) = {
+                let mut guard = self.router.lock().unwrap();
+                let rt = guard.as_mut().ok_or_else(|| self.closed_err())?;
+                rt.drain_checkpoints();
+                let epoch = match epoch_assigned {
+                    Some(e) => e,
+                    None if publishable => self.epoch.fetch_add(1, Ordering::SeqCst) + 1,
+                    None => self.epoch.load(Ordering::SeqCst),
+                };
+                let workers = rt.slots.len();
+                let (tx, rx) = bounded::<(usize, SketchState, SketchState)>(workers);
+                let mut failure: Option<anyhow::Error> = None;
+                for s in 0..workers {
+                    if rt.slots[s].sender.send(WorkerMsg::Freeze(tx.clone())).is_ok() {
+                        continue;
+                    }
+                    match self.recover_worker(rt, s) {
+                        Ok(()) => {
+                            if rt.slots[s].sender.send(WorkerMsg::Freeze(tx.clone())).is_err() {
+                                failure = Some(anyhow::anyhow!(
+                                    "ingest worker {s} died again during freeze (stream '{}')",
+                                    self.name
+                                ));
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            failure = Some(e);
+                            break;
+                        }
+                    }
+                }
+                if let Some(e) = failure {
+                    self.degrade(&mut guard);
+                    return Err(e);
+                }
+                // Counter writes happen under this same lock, so the value
+                // read here is exactly the frozen prefix length.
+                (epoch, self.entries_routed.load(Ordering::Relaxed), workers, rx)
+            }; // router lock released — ingestion continues behind the markers
+            epoch_assigned = Some(epoch);
+            let mut frozen: Vec<(usize, SketchState, SketchState)> = Vec::with_capacity(w);
+            let mut reply_lost = false;
+            for _ in 0..w {
+                match rx.recv() {
+                    Ok(reply) => frozen.push(reply),
+                    Err(_) => {
+                        // A worker died on a batch queued before its marker,
+                        // taking the un-replied marker down with it. The next
+                        // attempt's marker send hits the dead channel, which
+                        // is what routes it through recover_worker. Stale
+                        // replies to this attempt's dropped channel are
+                        // discarded harmlessly by the workers.
+                        reply_lost = true;
+                        break;
+                    }
+                }
             }
-            // Counter writes happen under this same lock, so the value read
-            // here is exactly the frozen prefix length.
-            (epoch, self.entries_routed.load(Ordering::Relaxed), rt.senders.len(), rx)
-        }; // router lock released — ingestion continues behind the markers
-        let mut frozen: Vec<(usize, SketchState, SketchState)> = Vec::with_capacity(w);
-        for _ in 0..w {
-            frozen.push(rx.recv().map_err(|_| {
-                anyhow::anyhow!("ingest worker died during freeze (stream '{}')", self.name)
-            })?);
+            if reply_lost {
+                if attempt == MAX_FREEZE_ATTEMPTS {
+                    break;
+                }
+                continue;
+            }
+            frozen.sort_unstable_by_key(|t| t.0);
+            self.metrics.lock().unwrap().record_stage(stage::SERVE_FREEZE, t.stop());
+            return Ok((epoch, entries_at, frozen.into_iter().map(|(_, a, b)| (a, b)).collect()));
         }
-        frozen.sort_unstable_by_key(|t| t.0);
-        self.metrics.lock().unwrap().record_stage(stage::SERVE_FREEZE, t.stop());
-        Ok((epoch, entries_at, frozen.into_iter().map(|(_, a, b)| (a, b)).collect()))
+        Err(anyhow::anyhow!(
+            "ingest workers kept dying during freeze after {MAX_FREEZE_ATTEMPTS} attempts \
+             (stream '{}')",
+            self.name
+        ))
     }
 
     /// Barrier: wait until every entry routed so far has been folded into
@@ -355,6 +698,7 @@ impl StreamSession {
     /// published one unless a newer epoch won the race.
     pub fn refresh(&self) -> anyhow::Result<Arc<Snapshot>> {
         let t0 = Instant::now();
+        fault::point_io("serve/refresh")?;
         let (epoch, entries_at, states) = self.freeze(true)?;
         let (sa, sb) = tree_merge(states);
         let (sa, sb) = (sa.finalize(), sb.finalize());
@@ -426,8 +770,8 @@ impl StreamSession {
         self.published.read().unwrap().clone()
     }
 
-    /// Persist the frozen per-worker states (`shardN.a` / `shardN.b`, v2
-    /// container format) for bitwise resume via
+    /// Persist the frozen per-worker states (`shardN.a` / `shardN.b`, v3
+    /// container format, written atomically) for bitwise resume via
     /// [`StreamSession::restore_states`]. Ingestion continues immediately
     /// after the freeze; the written prefix is everything routed before
     /// this call.
@@ -465,7 +809,10 @@ impl StreamSession {
     /// Start a background refresher publishing a new epoch every
     /// `interval` (the receiver is an owned `Arc` — the refresher thread
     /// keeps the session alive until stopped). Errors (e.g. an empty
-    /// stream) are counted, not fatal.
+    /// stream) are counted, not fatal — but a failure *streak* backs off
+    /// exponentially (capped at [`REFRESH_BACKOFF_CAP_MULT`]× the interval,
+    /// reset on the first success) instead of hammering a stream that
+    /// cannot refresh, and the first error of each streak is logged.
     pub fn start_auto_refresh(self: Arc<Self>, interval: Duration) -> anyhow::Result<()> {
         anyhow::ensure!(interval >= Duration::from_millis(1), "refresh interval too small");
         let mut slot = self.refresher.lock().unwrap();
@@ -478,9 +825,11 @@ impl StreamSession {
         let flag = Arc::clone(&stop);
         let me = Arc::clone(&self);
         let handle = pool::spawn_thread("auto-refresh", move || {
+            let mut delay = interval;
+            let mut streak = 0u64;
             while !flag.load(Ordering::Relaxed) {
-                // Chunked sleep so stop/close never waits a full interval.
-                let mut left = interval;
+                // Chunked sleep so stop/close never waits a full delay.
+                let mut left = delay;
                 while left > Duration::ZERO && !flag.load(Ordering::Relaxed) {
                     let step = left.min(Duration::from_millis(25));
                     std::thread::sleep(step);
@@ -489,8 +838,23 @@ impl StreamSession {
                 if flag.load(Ordering::Relaxed) {
                     break;
                 }
-                if me.refresh().is_err() {
-                    me.metrics.lock().unwrap().add("serve/refresh_errors", 1);
+                match me.refresh() {
+                    Ok(_) => {
+                        delay = interval;
+                        streak = 0;
+                    }
+                    Err(e) => {
+                        streak += 1;
+                        if streak == 1 {
+                            eprintln!(
+                                "[smppca] auto-refresh on '{}' failing: {e} (backing off \
+                                 exponentially until a refresh succeeds)",
+                                me.name
+                            );
+                        }
+                        me.metrics.lock().unwrap().add("serve/refresh_errors", 1);
+                        delay = next_refresh_delay(delay, interval);
+                    }
                 }
             }
         });
@@ -530,6 +894,10 @@ impl StreamSession {
             published_epoch,
             queries: self.queries.load(Ordering::Relaxed),
             auto_refresh: self.refresher.lock().unwrap().is_some(),
+            recoveries: self.recoveries.load(Ordering::Relaxed),
+            replayed_batches: self.replayed.load(Ordering::Relaxed),
+            fault_injected: fault::injected_count(),
+            degraded: self.is_degraded(),
         }
     }
 
@@ -552,8 +920,9 @@ impl StreamSession {
         // Join every worker before reporting the first panic (same policy
         // as sketch::ingest::join_workers) — bailing on the first failed
         // join would leave later workers unjoined and their panics unseen.
+        // Corpses already consumed by the recovery supervisor are `None`.
         let mut failure: Option<anyhow::Error> = None;
-        for h in handles {
+        for h in handles.into_iter().flatten() {
             if let Err(payload) = h.join() {
                 if failure.is_none() {
                     failure = Some(anyhow::anyhow!(
@@ -571,11 +940,18 @@ impl StreamSession {
     }
 }
 
+/// Auto-refresh backoff policy: double the current delay, capped at
+/// [`REFRESH_BACKOFF_CAP_MULT`]× the configured interval.
+fn next_refresh_delay(cur: Duration, interval: Duration) -> Duration {
+    cur.saturating_mul(2).min(interval.saturating_mul(REFRESH_BACKOFF_CAP_MULT))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::Mat;
     use crate::rng::Pcg64;
+    use crate::runtime::fault::test_support;
     use crate::stream::{EntrySource, ShuffledMatrixSource};
 
     fn spec(workers: usize) -> StreamSpec {
@@ -622,6 +998,7 @@ mod tests {
         assert_eq!(st.entries_routed, es.len() as u64);
         assert_eq!(st.published_epoch, 1);
         assert!(st.queries >= 1);
+        assert!(!st.degraded);
         s.close().unwrap();
         // post-close: ingestion refused; snapshot and lifetime counters
         // still served
@@ -673,5 +1050,85 @@ mod tests {
         assert!(s.stop_auto_refresh());
         assert!(!s.stop_auto_refresh());
         s.close().unwrap();
+    }
+
+    #[test]
+    fn refresh_backoff_doubles_and_caps() {
+        let iv = Duration::from_millis(10);
+        let mut d = iv;
+        let mut seen = Vec::new();
+        for _ in 0..12 {
+            d = next_refresh_delay(d, iv);
+            seen.push(d);
+        }
+        assert_eq!(seen[0], iv * 2);
+        assert_eq!(seen[1], iv * 4);
+        let cap = iv * REFRESH_BACKOFF_CAP_MULT;
+        assert!(seen.iter().all(|&x| x <= cap));
+        assert_eq!(*seen.last().unwrap(), cap, "must saturate at the cap");
+    }
+
+    #[test]
+    fn worker_kill_mid_stream_recovers_bitwise() {
+        // Baseline without faults.
+        let es = entries();
+        let run = |name: &str| {
+            let s = StreamSession::open(name, spec(2)).unwrap();
+            for chunk in es.chunks(7) {
+                s.ingest(chunk).unwrap();
+            }
+            let snap = s.refresh().unwrap();
+            let stats = s.stats();
+            s.close().unwrap();
+            (snap, stats)
+        };
+        let (clean, _) = run("clean");
+        // Same stream with one worker killed mid-stream: the supervisor
+        // must restart it from its checkpoint + journal and the published
+        // factors must be bitwise identical.
+        let _g = test_support::with_plan("serve/worker/batch:panic@nth=5");
+        let (healed, stats) = run("healed");
+        assert!(stats.recoveries >= 1, "no recovery happened: {stats:?}");
+        assert!(stats.fault_injected >= 1);
+        assert!(!stats.degraded);
+        assert_eq!(healed.entries_ingested, clean.entries_ingested);
+        assert_eq!(healed.factors.u.data(), clean.factors.u.data());
+        assert_eq!(healed.factors.v.data(), clean.factors.v.data());
+        assert_eq!(healed.a_norms, clean.a_norms);
+        assert_eq!(healed.b_norms, clean.b_norms);
+    }
+
+    #[test]
+    fn irrecoverable_shard_degrades_to_read_only() {
+        let es = entries();
+        // Publish one epoch cleanly first, then arm a kill-every-batch plan
+        // — recovery can never outrun it, so the session must degrade while
+        // the old snapshot keeps serving. The empty guard pins the fault
+        // domain before the workers spawn; install() arms the kill in it.
+        let g = test_support::with_plan("");
+        let s = StreamSession::open("degrade", spec(1)).unwrap();
+        s.ingest(&es).unwrap();
+        let published = s.refresh().unwrap();
+        g.install("serve/worker/batch:panic@every=1");
+        let mut degraded_err = None;
+        for _ in 0..200 {
+            if let Err(e) = s.ingest(&es[..3]) {
+                degraded_err = Some(e.to_string());
+                break;
+            }
+        }
+        let err = degraded_err.expect("session never degraded");
+        assert!(err.contains("irrecoverable"), "unexpected error: {err}");
+        let st = s.stats();
+        assert!(st.degraded, "degraded flag must be set");
+        assert!(st.recoveries >= 1);
+        // Read path survives degradation.
+        let snap = s.snapshot().expect("published snapshot must survive degradation");
+        assert_eq!(snap.epoch, published.epoch);
+        let refused = s.ingest(&es[..1]).unwrap_err().to_string();
+        assert!(refused.contains("degraded"), "unexpected error: {refused}");
+        let refresh_err = s.refresh().unwrap_err().to_string();
+        assert!(refresh_err.contains("degraded"), "unexpected error: {refresh_err}");
+        s.close().unwrap(); // degraded close is clean — panics were consumed
     }
 }

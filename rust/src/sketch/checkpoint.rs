@@ -12,13 +12,27 @@
 //! (and refuse what it cannot parse) before touching the payload:
 //!
 //! ```text
-//! magic "SMPC", version u32 (current: 2), payload-kind u8
+//! magic "SMPC", version u32 (current: 3), payload-kind u8
 //! ```
 //!
 //! Version 1 files (the pre-server format) carry no payload-kind byte —
 //! they are sketch-state checkpoints by definition, and [`read_header`]
-//! maps them to [`PayloadKind::SketchState`] as a legacy fallback. Any
-//! other version is rejected with a clear error instead of a garbage read.
+//! maps them to [`PayloadKind::SketchState`] as a legacy fallback. Version
+//! 2 added the payload-kind byte; version 3 appends a CRC32 (IEEE) trailer
+//! over every byte before it, so torn, truncated, or bit-flipped files are
+//! refused with an error naming the byte offset instead of restoring as
+//! silently wrong state. v1/v2 files still read (no trailer expected).
+//! Any other version is rejected with a clear error instead of a garbage
+//! read.
+//!
+//! # Crash consistency
+//!
+//! All container writes go through [`atomic_write`]: payload to a sibling
+//! `<name>.tmp` file, flush, `sync_all`, atomic rename over the final
+//! path, then an fsync of the parent directory so the rename itself is
+//! durable. A crash at any point leaves either the old bytes or the new
+//! bytes at the canonical path — never a torn hybrid; at worst an inert
+//! `.tmp` sibling leaks, which no reader ever opens.
 //!
 //! Sketch-state payload (little-endian, unchanged since v1):
 //! ```text
@@ -26,16 +40,19 @@
 //! entries_seen u64
 //! acc  f64 × (k·n)
 //! norms_sq f64 × n
+//! [v3: crc32 u32 over all preceding bytes]
 //! ```
 
 use super::{SketchKind, SketchState};
+use crate::runtime::fault;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::OnceLock;
 
 const MAGIC: &[u8; 4] = b"SMPC";
-/// Current container version. v1 = headerless-kind legacy (read-only
-/// fallback); v2 adds the payload-kind byte shared with server snapshots.
-pub(crate) const FORMAT_VERSION: u32 = 2;
+/// Current container version. v1 = headerless-kind legacy; v2 adds the
+/// payload-kind byte; v3 adds the CRC32 trailer. v1/v2 remain readable.
+pub(crate) const FORMAT_VERSION: u32 = 3;
 
 /// What an SMPC container file holds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,7 +80,192 @@ impl PayloadKind {
     }
 }
 
-/// Write the shared v2 container header.
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) — the zlib/zip polynomial.
+
+fn crc32_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    })
+}
+
+/// Incrementally extend a CRC32 over `bytes` (composable:
+/// `crc32_update(crc32_update(0, a), b) == crc32_update(0, a ++ b)`).
+pub(crate) fn crc32_update(crc: u32, bytes: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = crc ^ 0xFFFF_FFFF;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Checksummed, position-tracked I/O wrappers shared by both payload codecs.
+
+/// Writer that folds every byte into a running CRC32 — the container
+/// trailer is `crc()` at payload end (written *outside* this wrapper so
+/// the trailer doesn't checksum itself).
+pub(crate) struct CrcWriter<W: Write> {
+    inner: W,
+    crc: u32,
+}
+
+impl<W: Write> CrcWriter<W> {
+    pub(crate) fn new(inner: W) -> Self {
+        Self { inner, crc: 0 }
+    }
+
+    pub(crate) fn crc(&self) -> u32 {
+        self.crc
+    }
+
+    pub(crate) fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc = crc32_update(self.crc, &buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Reader that tracks the byte offset (for precise corruption errors) and
+/// the running CRC32 of everything read through it.
+pub(crate) struct Tracked<R> {
+    inner: R,
+    pos: u64,
+    crc: u32,
+}
+
+impl<R: Read> Tracked<R> {
+    pub(crate) fn new(inner: R) -> Self {
+        Self { inner, pos: 0, crc: 0 }
+    }
+
+    /// `read_exact` with offset-aware errors and CRC accumulation.
+    pub(crate) fn fill(&mut self, buf: &mut [u8]) -> anyhow::Result<()> {
+        let at = self.pos;
+        self.inner.read_exact(buf).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                anyhow::anyhow!(
+                    "truncated SMPC container: wanted {} byte(s) at byte offset {at}, \
+                     hit end of file",
+                    buf.len()
+                )
+            } else {
+                anyhow::anyhow!("read error at byte offset {at}: {e}")
+            }
+        })?;
+        self.crc = crc32_update(self.crc, buf);
+        self.pos += buf.len() as u64;
+        Ok(())
+    }
+
+    pub(crate) fn u8(&mut self) -> anyhow::Result<u8> {
+        let mut b = [0u8; 1];
+        self.fill(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> anyhow::Result<u32> {
+        let mut b = [0u8; 4];
+        self.fill(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub(crate) fn u64(&mut self) -> anyhow::Result<u64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub(crate) fn f64(&mut self) -> anyhow::Result<f64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    /// Bulk-read `out.len()` little-endian f64s in large chunks (one
+    /// `read_exact` per 8 KiB, not one per value).
+    pub(crate) fn fill_f64s(&mut self, out: &mut [f64]) -> anyhow::Result<()> {
+        const CHUNK: usize = 1024;
+        let mut buf = [0u8; 8 * CHUNK];
+        let mut i = 0;
+        while i < out.len() {
+            let take = (out.len() - i).min(CHUNK);
+            let bytes = &mut buf[..8 * take];
+            self.fill(bytes)?;
+            for (slot, chunk) in out[i..i + take].iter_mut().zip(bytes.chunks_exact(8)) {
+                *slot = f64::from_le_bytes(chunk.try_into().unwrap());
+            }
+            i += take;
+        }
+        Ok(())
+    }
+
+    pub(crate) fn f64s(&mut self, n: usize) -> anyhow::Result<Vec<f64>> {
+        let mut out = vec![0.0f64; n];
+        self.fill_f64s(&mut out)?;
+        Ok(out)
+    }
+
+    /// Payload-end check: for v3+, read the 4-byte CRC trailer (not folded
+    /// into the CRC) and compare against the running checksum; for every
+    /// version, refuse trailing garbage after the payload.
+    pub(crate) fn finish(&mut self, version: u32) -> anyhow::Result<()> {
+        if version >= 3 {
+            let computed = self.crc;
+            let at = self.pos;
+            let mut b = [0u8; 4];
+            self.inner.read_exact(&mut b).map_err(|_| {
+                anyhow::anyhow!(
+                    "truncated SMPC container: missing 4-byte CRC trailer at byte offset {at}"
+                )
+            })?;
+            self.pos += 4;
+            let stored = u32::from_le_bytes(b);
+            anyhow::ensure!(
+                stored == computed,
+                "SMPC container CRC mismatch over bytes 0..{at}: stored {stored:#010x}, \
+                 computed {computed:#010x} — file is corrupt"
+            );
+        }
+        let mut probe = [0u8; 1];
+        match self.inner.read(&mut probe) {
+            Ok(0) => Ok(()),
+            Ok(_) => anyhow::bail!(
+                "trailing garbage after SMPC payload at byte offset {}",
+                self.pos
+            ),
+            Err(e) => anyhow::bail!(
+                "read error probing for end of file at byte offset {}: {e}",
+                self.pos
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Header + atomic container write.
+
+/// Write the shared v3 container header.
 pub(crate) fn write_header(w: &mut impl Write, kind: PayloadKind) -> anyhow::Result<()> {
     w.write_all(MAGIC)?;
     w.write_all(&FORMAT_VERSION.to_le_bytes())?;
@@ -72,27 +274,81 @@ pub(crate) fn write_header(w: &mut impl Write, kind: PayloadKind) -> anyhow::Res
 }
 
 /// Read and validate the shared container header, returning the payload
-/// kind. Legacy v1 files map to [`PayloadKind::SketchState`] (their payload
-/// begins right after the version word). Unknown versions are rejected —
-/// never guessed at.
-pub(crate) fn read_header(r: &mut impl Read) -> anyhow::Result<PayloadKind> {
+/// kind and the on-disk version (the caller passes the version to
+/// [`Tracked::finish`] so v3 files get their trailer verified). Legacy v1
+/// files map to [`PayloadKind::SketchState`] (their payload begins right
+/// after the version word). Unknown versions are rejected — never guessed
+/// at.
+pub(crate) fn read_header<R: Read>(t: &mut Tracked<R>) -> anyhow::Result<(PayloadKind, u32)> {
     let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
+    t.fill(&mut magic)?;
     anyhow::ensure!(&magic == MAGIC, "not an SMPC checkpoint/snapshot (bad magic)");
-    let version = read_u32(r)?;
+    let version = t.u32()?;
     match version {
-        1 => Ok(PayloadKind::SketchState),
-        2 => {
-            let mut kind_b = [0u8; 1];
-            r.read_exact(&mut kind_b)?;
-            PayloadKind::from_code(kind_b[0])
-        }
+        1 => Ok((PayloadKind::SketchState, 1)),
+        2 | 3 => Ok((PayloadKind::from_code(t.u8()?)?, version)),
         other => anyhow::bail!(
             "unsupported SMPC format version {other} (this build reads 1..={FORMAT_VERSION}); \
              refusing to guess at the payload"
         ),
     }
 }
+
+/// Bulk-write little-endian f64s in 8 KiB chunks.
+pub(crate) fn write_f64s(w: &mut impl Write, xs: &[f64]) -> std::io::Result<()> {
+    const CHUNK: usize = 1024;
+    let mut buf = Vec::with_capacity(8 * xs.len().min(CHUNK));
+    for chunk in xs.chunks(CHUNK) {
+        buf.clear();
+        for &v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Crash-safe container write: header + payload stream to a sibling
+/// `<name>.tmp` file through a [`CrcWriter`], the CRC32 trailer is
+/// appended, the file is flushed and `sync_all`ed, atomically renamed over
+/// `path`, and the parent directory is fsynced so the rename itself
+/// survives a power cut. A crash (or an injected `checkpoint/write` /
+/// `checkpoint/sync` io-error) at any point leaves either the old bytes or
+/// the new bytes at `path` — never a torn hybrid. A leftover `.tmp`
+/// sibling is inert: no reader ever opens it.
+pub(crate) fn atomic_write(
+    path: &Path,
+    kind: PayloadKind,
+    payload: impl FnOnce(&mut CrcWriter<BufWriter<std::fs::File>>) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    fault::point_io("checkpoint/write")?;
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("container path '{}' has no file name", path.display()))?;
+    let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
+    let mut w = CrcWriter::new(BufWriter::new(std::fs::File::create(&tmp)?));
+    write_header(&mut w, kind)?;
+    payload(&mut w)?;
+    fault::point_io("checkpoint/sync")?;
+    let crc = w.crc();
+    let mut bw = w.into_inner();
+    bw.write_all(&crc.to_le_bytes())?;
+    bw.flush()?;
+    let file = bw.into_inner().map_err(|e| {
+        anyhow::anyhow!("flushing container '{}' failed: {}", tmp.display(), e.error())
+    })?;
+    file.sync_all()?;
+    drop(file);
+    std::fs::rename(&tmp, path)?;
+    if let Some(parent) = path.parent() {
+        let dir = if parent.as_os_str().is_empty() { Path::new(".") } else { parent };
+        std::fs::File::open(dir)?.sync_all()?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Sketch-state payload codec.
 
 /// The sketch-kind byte of the on-disk payload (shared with the server
 /// snapshot codec so the two formats can never drift apart).
@@ -114,80 +370,49 @@ pub(crate) fn sketch_kind_from_code(c: u8) -> anyhow::Result<SketchKind> {
 }
 
 impl SketchState {
-    /// Snapshot to disk (v2 container, sketch-state payload).
+    /// Snapshot to disk (v3 container, sketch-state payload, crash-safe
+    /// atomic write).
     pub fn checkpoint(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        let mut w = BufWriter::new(std::fs::File::create(path)?);
-        write_header(&mut w, PayloadKind::SketchState)?;
-        w.write_all(&[sketch_kind_code(self.kind())])?;
-        w.write_all(&self.seed().to_le_bytes())?;
-        w.write_all(&(self.k() as u64).to_le_bytes())?;
-        w.write_all(&(self.d() as u64).to_le_bytes())?;
-        w.write_all(&(self.n() as u64).to_le_bytes())?;
-        w.write_all(&self.entries_seen().to_le_bytes())?;
-        for &v in self.acc_data() {
-            w.write_all(&v.to_le_bytes())?;
-        }
-        for &v in self.norms_sq() {
-            w.write_all(&v.to_le_bytes())?;
-        }
-        w.flush()?;
-        Ok(())
+        atomic_write(path.as_ref(), PayloadKind::SketchState, |w| {
+            w.write_all(&[sketch_kind_code(self.kind())])?;
+            w.write_all(&self.seed().to_le_bytes())?;
+            w.write_all(&(self.k() as u64).to_le_bytes())?;
+            w.write_all(&(self.d() as u64).to_le_bytes())?;
+            w.write_all(&(self.n() as u64).to_le_bytes())?;
+            w.write_all(&self.entries_seen().to_le_bytes())?;
+            write_f64s(w, self.acc_data())?;
+            write_f64s(w, self.norms_sq())?;
+            Ok(())
+        })
     }
 
-    /// Restore a snapshot (v2 or the legacy v1 layout).
+    /// Restore a snapshot (v3, or the legacy v1/v2 layouts). v3 files are
+    /// CRC-verified end to end; every version rejects truncation and
+    /// trailing garbage with an error naming the byte offset.
     pub fn restore(path: impl AsRef<Path>) -> anyhow::Result<SketchState> {
-        let mut r = BufReader::new(std::fs::File::open(path)?);
-        let payload = read_header(&mut r)?;
+        let mut t = Tracked::new(BufReader::new(std::fs::File::open(path.as_ref())?));
+        let (payload, version) = read_header(&mut t)?;
         anyhow::ensure!(
             payload == PayloadKind::SketchState,
             "this file holds a {payload:?} payload, not a sketch-state checkpoint"
         );
-        let mut kind_b = [0u8; 1];
-        r.read_exact(&mut kind_b)?;
-        let kind = sketch_kind_from_code(kind_b[0])?;
-        let seed = read_u64(&mut r)?;
-        let k = read_u64(&mut r)? as usize;
-        let d = read_u64(&mut r)? as usize;
-        let n = read_u64(&mut r)? as usize;
-        let entries_seen = read_u64(&mut r)?;
+        let kind = sketch_kind_from_code(t.u8()?)?;
+        let seed = t.u64()?;
+        let k = t.u64()? as usize;
+        let d = t.u64()? as usize;
+        let n = t.u64()? as usize;
+        let entries_seen = t.u64()?;
+        let cells = k
+            .checked_mul(n)
+            .filter(|&c| c <= 1usize << 28)
+            .ok_or_else(|| anyhow::anyhow!("implausible sketch dims k={k} n={n} — corrupt header?"))?;
         let mut st = SketchState::new(kind, seed, k, d, n);
-        let acc_len = k * n;
-        let mut buf = vec![0u8; 8];
-        for idx in 0..acc_len {
-            r.read_exact(&mut buf)?;
-            st.acc_data_mut()[idx] = f64::from_le_bytes(buf[..8].try_into().unwrap());
-        }
-        for idx in 0..n {
-            r.read_exact(&mut buf)?;
-            st.norms_sq_mut()[idx] = f64::from_le_bytes(buf[..8].try_into().unwrap());
-        }
+        t.fill_f64s(&mut st.acc_data_mut()[..cells])?;
+        t.fill_f64s(st.norms_sq_mut())?;
         st.set_entries_seen(entries_seen);
+        t.finish(version)?;
         Ok(st)
     }
-}
-
-fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-pub(crate) fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-/// Read `n` little-endian f64s (payload helper shared with the snapshot
-/// codec).
-pub(crate) fn read_f64s(r: &mut impl Read, n: usize) -> std::io::Result<Vec<f64>> {
-    let mut out = vec![0.0f64; n];
-    let mut buf = [0u8; 8];
-    for slot in &mut out {
-        r.read_exact(&mut buf)?;
-        *slot = f64::from_le_bytes(buf);
-    }
-    Ok(out)
 }
 
 #[cfg(test)]
@@ -200,9 +425,8 @@ mod tests {
         std::env::temp_dir().join(format!("smppca_ckpt_{}_{}", std::process::id(), name))
     }
 
-    #[test]
-    fn checkpoint_restore_roundtrip() {
-        let mut rng = Pcg64::new(1);
+    fn sample_state(seed: u64) -> SketchState {
+        let mut rng = Pcg64::new(seed);
         let x = Mat::gaussian(20, 6, &mut rng);
         let mut st = SketchState::new(SketchKind::Gaussian, 7, 8, 20, 6);
         for i in 0..20 {
@@ -210,6 +434,12 @@ mod tests {
                 st.update_entry(i, j, x[(i, j)]);
             }
         }
+        st
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip() {
+        let st = sample_state(1);
         let path = tmp("rt");
         st.checkpoint(&path).unwrap();
         let restored = SketchState::restore(&path).unwrap();
@@ -282,6 +512,83 @@ mod tests {
         std::fs::remove_file(&path).ok();
     }
 
+    #[test]
+    fn crc_catches_single_bit_flip() {
+        let st = sample_state(4);
+        let path = tmp("flip");
+        st.checkpoint(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SketchState::restore(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("CRC mismatch"), "unhelpful error: {err}");
+        assert!(err.contains("byte"), "error should name an offset: {err}");
+    }
+
+    #[test]
+    fn trailing_garbage_rejected_with_offset() {
+        // Regression: an over-long file used to restore silently.
+        let st = sample_state(5);
+        let path = tmp("overlong");
+        st.checkpoint(&path).unwrap();
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"EXTRA!");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SketchState::restore(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("trailing garbage"), "unhelpful error: {err}");
+        assert!(
+            err.contains(&clean_len.to_string()),
+            "error should name offset {clean_len}: {err}"
+        );
+    }
+
+    #[test]
+    fn truncation_rejected_with_offset() {
+        let st = sample_state(6);
+        let path = tmp("trunc");
+        st.checkpoint(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let err = SketchState::restore(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(
+            err.contains("truncated") || err.contains("CRC"),
+            "unhelpful error: {err}"
+        );
+        assert!(err.contains("byte offset"), "error should name an offset: {err}");
+    }
+
+    #[test]
+    fn checkpoint_write_is_atomic_under_injected_io_error() {
+        // A fault at the checkpoint/write point fires before the tmp file
+        // is created; a fault at checkpoint/sync fires before the rename.
+        // Either way the canonical path must keep its previous bytes.
+        let g = crate::runtime::fault::test_support::with_plan("checkpoint/sync:ioerr@nth=1");
+        let good = sample_state(7);
+        let path = tmp("atomic");
+        good.checkpoint(&path).unwrap_err(); // first write dies pre-rename
+        assert!(!path.exists(), "failed write must not surface at the canonical path");
+        good.checkpoint(&path).unwrap(); // plan exhausted (nth=1) — succeeds
+        let newer = sample_state(8);
+        // Fresh plan: now fail an overwrite of an existing good file.
+        g.install("checkpoint/sync:ioerr@nth=1");
+        newer.checkpoint(&path).unwrap_err();
+        let survived = SketchState::restore(&path).unwrap();
+        let tmp_side = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name().unwrap().to_string_lossy()
+        ));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&tmp_side).ok();
+        let s1 = good.finalize();
+        let s2 = survived.finalize();
+        assert_eq!(s1.sketch.data(), s2.sketch.data(), "old bytes must survive a failed overwrite");
+    }
+
     /// Byte-for-byte writer of the pre-server v1 layout (magic, version=1,
     /// payload with no payload-kind byte) — the format every pre-v2 file on
     /// disk has.
@@ -290,6 +597,23 @@ mod tests {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
         w.write_all(b"SMPC").unwrap();
         w.write_all(&1u32.to_le_bytes()).unwrap();
+        write_payload_raw(&mut w, st);
+        w.flush().unwrap();
+    }
+
+    /// Byte-for-byte writer of the v2 layout (kind byte, no CRC trailer) —
+    /// what PR 4/5 builds wrote.
+    fn write_legacy_v2(st: &SketchState, path: &std::path::Path) {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
+        w.write_all(b"SMPC").unwrap();
+        w.write_all(&2u32.to_le_bytes()).unwrap();
+        w.write_all(&[PayloadKind::SketchState.code()]).unwrap();
+        write_payload_raw(&mut w, st);
+        w.flush().unwrap();
+    }
+
+    fn write_payload_raw(w: &mut impl std::io::Write, st: &SketchState) {
         w.write_all(&[sketch_kind_code(st.kind())]).unwrap();
         w.write_all(&st.seed().to_le_bytes()).unwrap();
         w.write_all(&(st.k() as u64).to_le_bytes()).unwrap();
@@ -302,13 +626,12 @@ mod tests {
         for &v in st.norms_sq() {
             w.write_all(&v.to_le_bytes()).unwrap();
         }
-        w.flush().unwrap();
     }
 
     #[test]
-    fn legacy_v1_reads_via_fallback_bitwise() {
-        // Regression: v1 files (no payload-kind byte) must keep restoring
-        // exactly, through the legacy branch of read_header.
+    fn legacy_v1_and_v2_read_via_fallback_bitwise() {
+        // Regression: v1 (no payload-kind byte) and v2 (no CRC trailer)
+        // files must keep restoring exactly through the legacy branches.
         let mut rng = Pcg64::new(9);
         let x = Mat::gaussian(14, 4, &mut rng);
         let mut st = SketchState::new(SketchKind::Srht, 11, 8, 14, 4);
@@ -317,15 +640,20 @@ mod tests {
                 st.update_entry(i, j, x[(i, j)]);
             }
         }
-        let path = tmp("v1");
-        write_legacy_v1(&st, &path);
-        let restored = SketchState::restore(&path).unwrap();
-        std::fs::remove_file(&path).ok();
-        assert_eq!(restored.entries_seen(), st.entries_seen());
-        let s1 = st.finalize();
-        let s2 = restored.finalize();
-        assert_eq!(s1.sketch.data(), s2.sketch.data());
-        assert_eq!(s1.col_norms, s2.col_norms);
+        for (name, writer) in [
+            ("v1", write_legacy_v1 as fn(&SketchState, &std::path::Path)),
+            ("v2", write_legacy_v2 as fn(&SketchState, &std::path::Path)),
+        ] {
+            let path = tmp(name);
+            writer(&st, &path);
+            let restored = SketchState::restore(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(restored.entries_seen(), st.entries_seen(), "{name}");
+            let s1 = st.finalize();
+            let s2 = restored.finalize();
+            assert_eq!(s1.sketch.data(), s2.sketch.data(), "{name}");
+            assert_eq!(s1.col_norms, s2.col_norms, "{name}");
+        }
     }
 
     #[test]
@@ -342,7 +670,7 @@ mod tests {
 
     #[test]
     fn snapshot_payload_rejected_by_sketch_restore() {
-        // A v2 container holding a serve snapshot must be refused by the
+        // A container holding a serve snapshot must be refused by the
         // sketch-state reader before any payload bytes are interpreted.
         let path = tmp("kindmix");
         {

@@ -166,6 +166,10 @@ where
             let mut msgs: Vec<M> = Vec::with_capacity(RECV_CHUNK);
             while rx.recv_many(RECV_CHUNK, &mut msgs).is_ok() {
                 for msg in msgs.drain(..) {
+                    // Offline-pass workers have no supervisor: an injected
+                    // kill here must fail the whole pass cleanly (the
+                    // dead-channel wind-down that join_workers reports).
+                    crate::runtime::fault::point("ingest/worker/batch");
                     fold(&mut sa, &mut sb, msg);
                 }
             }

@@ -62,6 +62,25 @@ impl<T> Sender<T> {
             st = self.shared.not_full.wait(st).unwrap();
         }
     }
+
+    /// Non-blocking send: `Ok(true)` if enqueued, `Ok(false)` if the buffer
+    /// is full (item returned to the caller implicitly — it is simply not
+    /// sent), `Err` if all receivers dropped. Used where losing the message
+    /// is safe (e.g. a worker's periodic checkpoint offer: skipping one
+    /// just means the next replay window is a little longer).
+    pub fn try_send(&self, item: T) -> Result<bool, Disconnected> {
+        let mut st = self.shared.queue.lock().unwrap();
+        if st.receivers == 0 {
+            return Err(Disconnected);
+        }
+        if st.buf.len() < self.shared.capacity {
+            st.buf.push_back(item);
+            self.shared.not_empty.notify_one();
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
 }
 
 impl<T> Clone for Sender<T> {
@@ -125,6 +144,21 @@ impl<T> Receiver<T> {
             }
             st = self.shared.not_empty.wait(st).unwrap();
         }
+    }
+
+    /// Non-blocking receive: `Ok(Some(item))` if one was queued, `Ok(None)`
+    /// if the buffer is currently empty, `Err` once all senders dropped and
+    /// the buffer drained.
+    pub fn try_recv(&self) -> Result<Option<T>, Disconnected> {
+        let mut st = self.shared.queue.lock().unwrap();
+        if let Some(item) = st.buf.pop_front() {
+            self.shared.not_full.notify_one();
+            return Ok(Some(item));
+        }
+        if st.senders == 0 {
+            return Err(Disconnected);
+        }
+        Ok(None)
     }
 
     /// Drain into an iterator (consumes until disconnect).
@@ -240,6 +274,24 @@ mod tests {
         while rx.recv_many(8, &mut got).is_ok() {}
         producer.join().unwrap();
         assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_send_try_recv_nonblocking_semantics() {
+        let (tx, rx) = bounded::<u32>(2);
+        assert_eq!(rx.try_recv(), Ok(None)); // empty, senders alive
+        assert_eq!(tx.try_send(1), Ok(true));
+        assert_eq!(tx.try_send(2), Ok(true));
+        assert_eq!(tx.try_send(3), Ok(false)); // full — not sent, no block
+        assert_eq!(rx.try_recv(), Ok(Some(1)));
+        assert_eq!(tx.try_send(3), Ok(true)); // slot freed
+        assert_eq!(rx.try_recv(), Ok(Some(2)));
+        assert_eq!(rx.try_recv(), Ok(Some(3)));
+        drop(tx);
+        assert_eq!(rx.try_recv(), Err(Disconnected));
+        let (tx2, rx2) = bounded::<u32>(1);
+        drop(rx2);
+        assert_eq!(tx2.try_send(9), Err(Disconnected));
     }
 
     #[test]

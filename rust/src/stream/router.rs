@@ -8,6 +8,7 @@
 
 use super::{ColumnBlock, ColumnSource, Entry, EntrySource, MatrixId, Sender};
 use crate::rng::hash2;
+use crate::runtime::fault;
 
 /// Stable shard assignment for an entry.
 #[inline]
@@ -55,6 +56,9 @@ pub fn route_entries(
         let buf = &mut buffers[shard];
         buf.push(e);
         if buf.len() >= batch {
+            // Injected reader death: the pass winds down like a real driver
+            // crash — workers drain, the caller's join reports it.
+            fault::point("stream/route/batch");
             let full = std::mem::replace(buf, Vec::with_capacity(batch));
             if !send_or_stop(&senders[shard], full) {
                 dead = true;
@@ -107,6 +111,7 @@ pub fn route_columns(
         cols += 1;
         values += data.len() as u64;
         if blk.cols() >= batch_cols {
+            fault::point("stream/route/batch");
             let full = std::mem::replace(blk, ColumnBlock::empty(matrix));
             if !send_or_stop(&senders[shard], full) {
                 dead = true;

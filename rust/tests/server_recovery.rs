@@ -1,0 +1,289 @@
+//! Self-healing serving under deterministic fault injection (ISSUE 6).
+//!
+//! The contract: with a worker-kill fault plan armed, a serve session
+//! transparently restarts dead ingest workers from their in-memory
+//! checkpoints, replays the journaled batches, and publishes snapshots
+//! whose factors are **bitwise identical** to a fault-free run — at 1, 2
+//! and 8 workers. When recovery is impossible (a kill-every-batch plan),
+//! the session degrades to read-only serving of its last published
+//! snapshot instead of wedging or corrupting.
+//!
+//! Fault plans installed here are process-global (`fault::install`, the
+//! same path the `--fault-plan` flag and `SMPPCA_FAULT_PLAN` env use), so
+//! every test serializes on one mutex and re-installs its own plan state.
+
+use smppca::algo::SmpPcaConfig;
+use smppca::linalg::Mat;
+use smppca::rng::Pcg64;
+use smppca::runtime::fault;
+use smppca::server::{ServeProtocol, StreamSession, StreamSpec};
+use smppca::stream::{Entry, EntrySource, ShuffledMatrixSource, StreamMeta};
+use std::sync::{Mutex, MutexGuard};
+
+const D: usize = 40;
+const N1: usize = 14;
+const N2: usize = 12;
+
+static PLAN_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize fault-plan state across the binary's parallel test threads.
+/// The warmup point forces the one-time `SMPPCA_FAULT_PLAN` env read to
+/// happen *before* the test installs its own plan, so the env can never
+/// clobber it mid-test.
+fn lock() -> MutexGuard<'static, ()> {
+    let guard = PLAN_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    fault::point("test/env-warmup");
+    fault::clear();
+    guard
+}
+
+fn algo() -> SmpPcaConfig {
+    SmpPcaConfig {
+        rank: 3,
+        sketch_size: 24,
+        samples: 500.0,
+        iters: 5,
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+fn spec(workers: usize) -> StreamSpec {
+    StreamSpec {
+        meta: StreamMeta { d: D, n1: N1, n2: N2 },
+        algo: algo(),
+        workers,
+        channel_capacity: 16,
+    }
+}
+
+fn stream_entries() -> Vec<Entry> {
+    let mut rng = Pcg64::new(42);
+    let a = Mat::gaussian(D, N1, &mut rng);
+    let b = Mat::gaussian(D, N2, &mut rng);
+    let mut out = Vec::new();
+    Box::new(ShuffledMatrixSource { a, b, seed: 77 }).for_each(&mut |e| out.push(e));
+    out
+}
+
+/// One full serve run: ingest in odd-sized chunks, refresh, return the
+/// published snapshot and final stats.
+fn run_session(
+    name: &str,
+    workers: usize,
+    entries: &[Entry],
+) -> (std::sync::Arc<smppca::server::Snapshot>, smppca::server::StreamStats) {
+    let s = StreamSession::open(name, spec(workers)).unwrap();
+    for chunk in entries.chunks(9) {
+        s.ingest(chunk).unwrap();
+    }
+    let snap = s.refresh().unwrap();
+    let stats = s.stats();
+    s.close().unwrap();
+    (snap, stats)
+}
+
+#[test]
+fn worker_kills_recover_bitwise_at_1_2_8_workers() {
+    let guard = lock();
+    let entries = stream_entries();
+    for workers in [1usize, 2, 8] {
+        fault::clear();
+        let (clean, clean_stats) = run_session("clean", workers, &entries);
+        assert_eq!(clean_stats.recoveries, 0, "workers={workers}: clean run must not recover");
+        // every=101 keeps the kill cadence above the replay window
+        // (checkpoint interval + queue depth), so each episode converges
+        // within its restart budget instead of degrading by design.
+        fault::install("serve/worker/batch:panic@every=101").unwrap();
+        let (healed, stats) = run_session("healed", workers, &entries);
+        fault::clear();
+        assert!(stats.recoveries >= 1, "workers={workers}: no worker was ever killed");
+        assert!(stats.replayed_batches >= 1, "workers={workers}: recovery must replay");
+        assert!(!stats.degraded, "workers={workers}: must heal, not degrade");
+        assert_eq!(healed.epoch, clean.epoch);
+        assert_eq!(healed.entries_ingested, clean.entries_ingested);
+        assert_eq!(
+            healed.factors.u.data(),
+            clean.factors.u.data(),
+            "workers={workers}: U diverged after recovery"
+        );
+        assert_eq!(
+            healed.factors.v.data(),
+            clean.factors.v.data(),
+            "workers={workers}: V diverged after recovery"
+        );
+        assert_eq!(healed.a_norms, clean.a_norms, "workers={workers}");
+        assert_eq!(healed.b_norms, clean.b_norms, "workers={workers}");
+    }
+    drop(guard);
+}
+
+#[test]
+fn single_kill_heals_through_a_single_shard_session() {
+    let guard = lock();
+    let entries = stream_entries();
+    fault::clear();
+    let (clean, _) = run_session("clean1", 1, &entries);
+    fault::install("serve/worker/batch:panic@nth=40").unwrap();
+    let (healed, stats) = run_session("healed1", 1, &entries);
+    fault::clear();
+    assert_eq!(stats.recoveries, 1, "nth trigger fires exactly once: {stats:?}");
+    assert_eq!(healed.factors.u.data(), clean.factors.u.data());
+    assert_eq!(healed.factors.v.data(), clean.factors.v.data());
+    drop(guard);
+}
+
+#[test]
+fn unrecoverable_shard_degrades_and_last_snapshot_survives() {
+    let guard = lock();
+    let entries = stream_entries();
+    fault::clear();
+    let s = StreamSession::open("degrade-e2e", spec(2)).unwrap();
+    for chunk in entries.chunks(9) {
+        s.ingest(chunk).unwrap();
+    }
+    let published = s.refresh().unwrap();
+    // A kill on every batch outruns any restart budget.
+    fault::install("serve/worker/batch:panic@every=1").unwrap();
+    let mut failed = None;
+    for _ in 0..300 {
+        if let Err(e) = s.ingest(&entries[..5]) {
+            failed = Some(e.to_string());
+            break;
+        }
+    }
+    fault::clear();
+    let err = failed.expect("session never degraded under a kill-every-batch plan");
+    assert!(err.contains("irrecoverable"), "unexpected degradation error: {err}");
+    let stats = s.stats();
+    assert!(stats.degraded);
+    assert!(stats.recoveries >= 1);
+    // Read-only serving survives; mutations are refused with the real story.
+    let snap = s.snapshot().expect("published snapshot must outlive degradation");
+    assert_eq!(snap.epoch, published.epoch);
+    assert_eq!(snap.factors.u.data(), published.factors.u.data());
+    assert!(s.ingest(&entries[..1]).unwrap_err().to_string().contains("degraded"));
+    assert!(s.refresh().unwrap_err().to_string().contains("degraded"));
+    s.close().unwrap();
+    drop(guard);
+}
+
+#[test]
+fn recovery_counters_surface_through_the_line_protocol() {
+    let guard = lock();
+    let entries = stream_entries();
+    fault::install("serve/worker/batch:panic@nth=30").unwrap();
+    let p = ServeProtocol::new();
+    let a = algo();
+    let r = p.handle(&format!(
+        "open s d={D} n1={N1} n2={N2} k={} rank={} seed={} samples={} iters={} workers=2",
+        a.sketch_size, a.rank, a.seed, a.samples, a.iters
+    ));
+    assert!(r.starts_with("ok open s "), "{r}");
+    for chunk in entries.chunks(9) {
+        let records: Vec<String> = chunk
+            .iter()
+            .map(|e| {
+                let m = match e.matrix {
+                    smppca::stream::MatrixId::A => "A",
+                    smppca::stream::MatrixId::B => "B",
+                };
+                format!("{m}:{}:{}:{:.17e}", e.row, e.col, e.value)
+            })
+            .collect();
+        let resp = p.handle(&format!("ingest s {}", records.join(" ")));
+        assert!(resp.starts_with("ok ingest s "), "{resp}");
+    }
+    let r = p.handle("refresh s");
+    assert!(r.starts_with("ok refresh s epoch=1 "), "{r}");
+    fault::clear();
+    let r = p.handle("stats s");
+    let head = r.lines().next().unwrap();
+    assert!(head.contains(" recoveries=1 "), "stats must count the recovery: {head}");
+    assert!(head.contains(" replayed="), "{head}");
+    assert!(head.contains(" faults_injected="), "{head}");
+    assert!(head.contains(" degraded=false"), "{head}");
+    assert!(r.contains("serve/recovery"), "stage metrics must show recovery time: {r}");
+    assert_eq!(p.handle("streams"), "streams: s", "healthy stream must not be tagged");
+    assert_eq!(p.handle("close s"), "ok close s");
+    drop(guard);
+}
+
+/// CI's checkpoint-ioerr fault-matrix leg sets
+/// `SMPPCA_FAULT_PLAN=checkpoint/write:ioerr@nth=1` and runs exactly this
+/// test: the injected failure must surface as an error, leave nothing
+/// loadable-but-wrong behind, and the immediate retry must produce a
+/// checkpoint that resumes bitwise. Without that env the test exercises
+/// the same flow by installing the plan itself.
+#[test]
+fn env_plan_checkpoint_ioerr_is_atomic_and_retryable() {
+    let guard = lock();
+    let entries = stream_entries();
+    fault::clear();
+    let dir = std::env::temp_dir().join(format!("smppca_recovery_ckpt_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let s = StreamSession::open("ckpt-ioerr", spec(2)).unwrap();
+    for chunk in entries.chunks(9) {
+        s.ingest(chunk).unwrap();
+    }
+    let reference = s.refresh().unwrap();
+    // Mirror the CI env plan (re-installing resets its hit counters, so the
+    // run is identical whether or not CI exported the env).
+    fault::install("checkpoint/write:ioerr@nth=1").unwrap();
+    let err = s.checkpoint(&dir).expect_err("first shard write must fail by plan");
+    assert!(err.to_string().contains("fault injected"), "{err}");
+    assert!(
+        !dir.join("shard0.a").exists(),
+        "failed write must not leave a canonical shard file"
+    );
+    // Retry with the fault exhausted: full checkpoint lands.
+    let shards = s.checkpoint(&dir).unwrap();
+    assert_eq!(shards, s.workers());
+    s.close().unwrap();
+    fault::clear();
+    // Resume from the retried checkpoint: bitwise the same published state.
+    let states = StreamSession::restore_states(&dir).unwrap();
+    let resumed = StreamSession::open_with_states("ckpt-resume", spec(2), states).unwrap();
+    let snap = resumed.refresh().unwrap();
+    assert_eq!(snap.factors.u.data(), reference.factors.u.data());
+    assert_eq!(snap.factors.v.data(), reference.factors.v.data());
+    resumed.close().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    drop(guard);
+}
+
+#[test]
+fn simulated_kill9_mid_checkpoint_leaves_stale_tmp_but_good_file() {
+    // A kill -9 between tmp-write and rename leaves a stale `.tmp` sibling
+    // and (at worst) the previous canonical file. Simulate with an injected
+    // sync failure, then verify the stale tmp is inert: restore reads only
+    // canonical names, and a later successful checkpoint replaces the tmp.
+    let guard = lock();
+    let entries = stream_entries();
+    fault::clear();
+    let dir = std::env::temp_dir().join(format!("smppca_recovery_kill9_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let s = StreamSession::open("kill9", spec(1)).unwrap();
+    s.ingest(&entries[..200]).unwrap();
+    s.checkpoint(&dir).unwrap(); // generation 1, good
+    let gen1 = std::fs::read(dir.join("shard0.a")).unwrap();
+    s.ingest(&entries[200..]).unwrap();
+    fault::install("checkpoint/sync:ioerr@nth=1").unwrap();
+    s.checkpoint(&dir).expect_err("overwrite must fail mid-write");
+    fault::clear();
+    // The interrupted overwrite left gen-1 bytes untouched (and possibly a
+    // stale shard0.a.tmp — crash debris that must be ignored).
+    assert_eq!(
+        std::fs::read(dir.join("shard0.a")).unwrap(),
+        gen1,
+        "failed overwrite must leave the previous checkpoint bitwise intact"
+    );
+    let states = StreamSession::restore_states(&dir).unwrap();
+    assert_eq!(states.len(), 1, "stale tmp files must not be mistaken for shards");
+    // A clean retry supersedes the debris.
+    s.checkpoint(&dir).unwrap();
+    assert_ne!(std::fs::read(dir.join("shard0.a")).unwrap(), gen1, "gen 2 must land");
+    s.close().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    drop(guard);
+}
