@@ -433,8 +433,11 @@ fn main() {
         let am = Mat::gaussian(ds, ns, &mut r);
         let bm = Mat::gaussian(ds, ns, &mut r);
         let mut entries: Vec<Entry> = Vec::new();
-        Box::new(ShuffledMatrixSource { a: am, b: bm, seed: 5 })
-            .for_each(&mut |e| entries.push(e));
+        let _ = Box::new(ShuffledMatrixSource { a: am, b: bm, seed: 5 })
+            .for_each(&mut |e| {
+        entries.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
         let spec = |w: usize| StreamSpec {
             meta: StreamMeta { d: ds, n1: ns, n2: ns },
             algo: smppca::algo::SmpPcaConfig {
@@ -471,6 +474,68 @@ fn main() {
             black_box(s.refresh().unwrap());
         });
         s.close().unwrap();
+
+        // ------------------------------------------ query serving (QPS)
+        // Sustained point-query throughput against a published epoch
+        // *while ingestion keeps running* (a background thread pumps the
+        // entry stream into the same session for the whole group): the
+        // per-line dispatch the stdin loop uses vs the TCP front-end's
+        // burst coalescing (`handle_batch`, dense runs → one
+        // `estimate_block` GEMM per burst). Per-burst latency is recorded
+        // as its own sample series, so the JSON carries burst p95/p99
+        // tail latency next to the QPS numbers.
+        {
+            use smppca::server::ServeProtocol;
+            use std::sync::atomic::{AtomicBool, Ordering};
+            use std::sync::Arc;
+            let proto = Arc::new(ServeProtocol::new());
+            let qs = proto.service().open("benchq", spec(2)).unwrap();
+            for chunk in entries.chunks(1024) {
+                qs.ingest(chunk).unwrap();
+            }
+            qs.refresh().unwrap();
+            let stop = Arc::new(AtomicBool::new(false));
+            let pump = {
+                let qs = qs.clone();
+                let entries = entries.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    'outer: while !stop.load(Ordering::Acquire) {
+                        for chunk in entries.chunks(1024) {
+                            if stop.load(Ordering::Acquire) || qs.ingest(chunk).is_err() {
+                                break 'outer;
+                            }
+                        }
+                    }
+                })
+            };
+            const ROUNDS: usize = 20;
+            // 64 queries over a 16×4 tile: dense, so the coalescer takes
+            // the block path every burst
+            let burst: Vec<String> =
+                (0..64).map(|q| format!("estimate benchq {} {}", q / 4, q % 4)).collect();
+            let total_q = (burst.len() * ROUNDS) as u64;
+            suite.bench_items("server/query_qps/line_w2", total_q, || {
+                for _ in 0..ROUNDS {
+                    for q in &burst {
+                        black_box(proto.handle(q));
+                    }
+                }
+            });
+            let mut lat: Vec<std::time::Duration> = Vec::new();
+            suite.bench_items("server/query_qps/coalesced_w2", total_q, || {
+                let refs: Vec<&str> = burst.iter().map(|s| s.as_str()).collect();
+                for _ in 0..ROUNDS {
+                    let t = std::time::Instant::now();
+                    black_box(proto.handle_batch(&refs));
+                    lat.push(t.elapsed());
+                }
+            });
+            suite.record("server/query_qps/burst64_latency", lat, Some(64));
+            stop.store(true, Ordering::Release);
+            pump.join().unwrap();
+            proto.service().close("benchq").unwrap();
+        }
     }
 
     // --------------------------------------------- recovery replay cost
@@ -492,8 +557,11 @@ fn main() {
         let ar = Mat::gaussian(dr, nr, &mut r);
         let br = Mat::gaussian(dr, nr, &mut r);
         let mut entries: Vec<Entry> = Vec::new();
-        Box::new(ShuffledMatrixSource { a: ar, b: br, seed: 6 })
-            .for_each(&mut |e| entries.push(e));
+        let _ = Box::new(ShuffledMatrixSource { a: ar, b: br, seed: 6 })
+            .for_each(&mut |e| {
+        entries.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
         let spec = StreamSpec {
             meta: StreamMeta { d: dr, n1: nr, n2: nr },
             algo: smppca::algo::SmpPcaConfig {

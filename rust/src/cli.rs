@@ -131,6 +131,22 @@ RUN OPTIONS:
 SERVE OPTIONS:
   --script PATH      read protocol commands from PATH instead of stdin
                      (scripted sessions; the session still prints to stdout)
+  --listen ADDR      also serve the protocol over TCP (e.g. 127.0.0.1:7070;
+                     port 0 picks an ephemeral port, printed at startup).
+                     Same line protocol, one response per command; commands
+                     split across writes reassemble, and bursts of pipelined
+                     `estimate` queries coalesce into one block GEMM with
+                     byte-identical responses. `quit` closes only that
+                     client's connection; stdin quit/EOF shuts the server
+                     down (drain + close). A net-layer `metrics` command
+                     scrapes listener counters + per-stream stats one-shot.
+  --net-workers N    connection handler threads (default 4)
+  --net-backlog N    accepted-connection queue; beyond it new connections
+                     are shed with `err shed ...` (default 64)
+  --net-queue-budget N  per-burst command budget in lines; overflow commands
+                     answered `err shed ...` (default 256)
+  --net-mem-budget N per-burst command budget in bytes (default 1048576)
+  --net-max-line N   longest accepted protocol line in bytes (default 65536)
   --fault-plan PLAN  arm deterministic fault injection (testing/chaos runs):
                      `point:action@trigger[;...]` with actions panic|ioerr|
                      delay=MS and triggers every=N|nth=N|once|prob=P[,seed=S],
@@ -207,6 +223,17 @@ mod tests {
         let a = parse("serve --script cmds.txt");
         assert_eq!(a.subcommand, "serve");
         assert_eq!(a.get("script"), Some("cmds.txt"));
+    }
+
+    #[test]
+    fn listen_option_documented_and_parses() {
+        assert!(HELP.contains("--listen"), "HELP must document the TCP front-end");
+        assert!(HELP.contains("--net-workers"), "HELP must document handler threads");
+        assert!(HELP.contains("err shed"), "HELP must document shed-load responses");
+        let a = parse("serve --listen 127.0.0.1:0 --net-workers 8 --net-queue-budget 16");
+        assert_eq!(a.get("listen"), Some("127.0.0.1:0"));
+        assert_eq!(a.get_parse("net-workers", 4usize).unwrap(), 8);
+        assert_eq!(a.get_parse("net-queue-budget", 256usize).unwrap(), 16);
     }
 
     #[test]

@@ -41,6 +41,33 @@ pub mod stage {
     /// Self-healing supervisor: time spent restarting a dead ingest worker
     /// from its in-memory checkpoint and replaying its journaled batches.
     pub const SERVE_RECOVERY: &str = "serve/recovery";
+
+    // --- network front-end (`crate::server::net`) ---------------------
+    // Connection and query-batching traffic of the TCP serve loop. The
+    // per-stream counters ride on the owning session's metrics (so
+    // `stats NAME` shows them); the per-server counters live on the
+    // listener and come back from its one-shot `metrics` scrape.
+
+    /// Point queries answered from a shared snapshot fetch by the burst
+    /// coalescer (counts every query in a coalesced run, so
+    /// `queries - coalesced` is the uncoalesced remainder).
+    pub const SERVE_QUERY_COALESCED: &str = "serve/query_coalesced";
+    /// Coalesced runs dense enough to be answered by one
+    /// `estimate_block` GEMM instead of per-entry dot products.
+    pub const SERVE_QUERY_BLOCKS: &str = "serve/query_blocks";
+    /// Time spent handling command bursts on network connections.
+    pub const SERVE_NET_BURST: &str = "serve/net/burst";
+    /// Connections accepted by the TCP listener.
+    pub const NET_CONNECTIONS: &str = "serve/net/connections";
+    /// Connections refused because the accept queue was at capacity.
+    pub const NET_SHED_CONNECTIONS: &str = "serve/net/shed_connections";
+    /// Commands refused with `err shed ...` because a connection burst
+    /// overran its queue/memory budget.
+    pub const NET_SHED_COMMANDS: &str = "serve/net/shed_commands";
+    /// Protocol lines handled across all connections.
+    pub const NET_LINES: &str = "serve/net/lines";
+    /// Lines dropped for exceeding the maximum framed line length.
+    pub const NET_OVERSIZED_LINES: &str = "serve/net/oversized_lines";
 }
 
 #[derive(Debug, Default, Clone)]

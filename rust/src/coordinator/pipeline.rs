@@ -127,12 +127,13 @@ pub fn lela_pipeline(
     let meta = src1.meta();
     let mut a_sq = vec![0.0f64; meta.n1];
     let mut b_sq = vec![0.0f64; meta.n2];
-    src1.for_each(&mut |e| {
+    let _ = src1.for_each(&mut |e| {
         let v2 = e.value * e.value;
         match e.matrix {
             MatrixId::A => a_sq[e.col as usize] += v2,
             MatrixId::B => b_sq[e.col as usize] += v2,
         }
+        std::ops::ControlFlow::Continue(())
     });
     metrics.record_stage("lela/pass1_norms", t1.stop());
 
@@ -163,9 +164,12 @@ pub fn lela_pipeline(
     // the paper's LELA pays per partition).
     let mut a_rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); meta.d];
     let mut b_rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); meta.d];
-    src2.for_each(&mut |e| match e.matrix {
-        MatrixId::A => a_rows[e.row as usize].push((e.col, e.value)),
-        MatrixId::B => b_rows[e.row as usize].push((e.col, e.value)),
+    let _ = src2.for_each(&mut |e| {
+        match e.matrix {
+            MatrixId::A => a_rows[e.row as usize].push((e.col, e.value)),
+            MatrixId::B => b_rows[e.row as usize].push((e.col, e.value)),
+        }
+        std::ops::ControlFlow::Continue(())
     });
     // Row-by-row accumulation over sampled pairs — the treeAggregate inner
     // loop: each ambient row contributes A[row,i]·B[row,j] to sample t.

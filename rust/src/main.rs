@@ -171,7 +171,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         smppca::runtime::fault::install(plan)?;
         eprintln!("[smppca] fault plan armed: {plan}");
     }
-    let proto = smppca::server::ServeProtocol::new();
+    let proto = std::sync::Arc::new(smppca::server::ServeProtocol::new());
+    // `--listen ADDR` puts the TCP front-end up alongside the stdin loop;
+    // stdin `quit`/EOF then shuts the whole server down gracefully
+    // (stop accepting, drain queued connections, close streams).
+    let net = match args.get("listen") {
+        Some(addr) => {
+            let cfg = smppca::server::NetConfig {
+                addr: addr.to_string(),
+                workers: args.get_parse("net-workers", 4usize)?,
+                backlog: args.get_parse("net-backlog", 64usize)?,
+                queue_budget: args.get_parse("net-queue-budget", 256usize)?,
+                mem_budget: args.get_parse("net-mem-budget", 1usize << 20)?,
+                max_line: args.get_parse("net-max-line", 64usize << 10)?,
+            };
+            let srv = smppca::server::NetServer::start(proto.clone(), cfg)?;
+            println!("smppca serve — listening on {}", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
     let reader: Box<dyn BufRead> = match args.get("script") {
         Some(path) => Box::new(std::io::BufReader::new(std::fs::File::open(path)?)),
         None => {
@@ -189,6 +208,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             break;
         }
         println!("{}", proto.handle(trimmed));
+    }
+    if let Some(srv) = net {
+        srv.shutdown();
     }
     for (name, e) in proto.service().close_all() {
         eprintln!("[smppca] stream '{name}' closed with an error: {e:#}");

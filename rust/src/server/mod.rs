@@ -28,7 +28,15 @@
 //! * [`SketchService`] — the session registry the protocol and embedders
 //!   talk to.
 //! * [`ServeProtocol`] — a line protocol over the whole thing (the `serve`
-//!   CLI mode drives it from stdin), scriptable and testable.
+//!   CLI mode drives it from stdin), scriptable and testable. Bursts of
+//!   pipelined point queries coalesce through `handle_batch`: one snapshot
+//!   fetch per run and, when dense enough, one `estimate_block` GEMM —
+//!   with responses byte-identical to per-line handling.
+//! * [`NetServer`] — a real TCP front-end over the protocol
+//!   (`serve --listen ADDR`): nonblocking acceptor + bounded accept queue
+//!   + N connection handlers, line framing tolerant of split writes,
+//!   per-burst queue/memory budgets with explicit `err shed ...`
+//!   responses, per-connection quit, and a one-shot `metrics` scrape.
 //! * Persistence — epoch snapshots and per-worker sketch states both
 //!   serialize in the shared versioned SMPC container format
 //!   (`sketch::checkpoint`: atomic tmp-file + rename writes, CRC-sealed v3
@@ -52,11 +60,13 @@
 //! invariant to its own thread count (PRs 1–3 + the sharded sampler).
 //! `tests/server_serve.rs` pins all of it.
 
+mod net;
 mod protocol;
 mod service;
 mod session;
 mod snapshot;
 
+pub use net::{NetConfig, NetServer};
 pub use protocol::{ServeProtocol, PROTOCOL_HELP};
 pub use service::SketchService;
 pub use session::{StreamSession, StreamSpec, StreamStats};

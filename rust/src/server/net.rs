@@ -1,0 +1,479 @@
+//! TCP front-end for the serve protocol: a real socket listener over
+//! [`ServeProtocol`], so sessions are driven by network clients instead of
+//! (or in addition to) the stdin loop.
+//!
+//! Design:
+//!
+//! * **Line framing** — the wire format is exactly the stdin protocol: one
+//!   command per `\n`-terminated line, one response per command, every
+//!   response line-terminated. The framer carries partial lines across
+//!   reads, so commands split over several TCP segments (or several
+//!   `write` calls) reassemble; a line longer than the configured cap is
+//!   answered with `err` and discarded up to its newline instead of
+//!   growing the buffer without bound.
+//! * **Accept/worker threads** — one nonblocking acceptor feeds accepted
+//!   connections through a bounded queue to N handler threads (all spawned
+//!   via [`pool::spawn_thread`], so fault domains follow lineage). When
+//!   the queue is full the listener *sheds* the connection — an explicit
+//!   `err shed ...` line and a close — rather than queueing unboundedly.
+//! * **Burst coalescing** — all bytes already pending on a connection are
+//!   drained before dispatch, and the resulting burst goes through
+//!   [`ServeProtocol::handle_batch`]: runs of consecutive point queries
+//!   share one snapshot fetch and, when dense, one `estimate_block` GEMM.
+//!   Responses stay byte-identical to per-line handling.
+//! * **Budgets** — each burst is capped by a line-count and byte budget;
+//!   commands beyond the budget are refused with `err shed ...` (the
+//!   client sees exactly which commands were dropped) instead of buffering
+//!   without limit under backpressure.
+//! * **Per-connection quit** — `quit`/`exit` (or EOF / disconnecting
+//!   mid-line) closes *that* connection only; the listener and every other
+//!   client keep serving. Shutting the server down is the owner's call
+//!   ([`NetServer::shutdown`]), which stops accepting, drains queued
+//!   connections, and joins every thread before the service's streams are
+//!   closed.
+//! * **`metrics` scrape** — a net-layer one-shot command (not part of the
+//!   stream protocol) answering with the listener's counters plus the head
+//!   `stats` line of every open stream, for scraping.
+
+use super::protocol::ServeProtocol;
+use crate::coordinator::metrics::{stage, Metrics, StageTimer};
+use crate::runtime::pool;
+use crate::stream::channel;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How long a connection handler blocks in `read` before re-checking the
+/// shutdown flag. Bounds both shutdown latency and idle-poll overhead.
+const READ_POLL: Duration = Duration::from_millis(25);
+
+/// How long the acceptor sleeps when `accept` has nothing pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address; port 0 picks an ephemeral port (read it back from
+    /// [`NetServer::local_addr`]).
+    pub addr: String,
+    /// Connection handler threads (concurrent connections being served).
+    pub workers: usize,
+    /// Accepted connections queued for a free handler; beyond this the
+    /// listener sheds new connections.
+    pub backlog: usize,
+    /// Per-burst command budget (lines); overflow commands get
+    /// `err shed ...` responses.
+    pub queue_budget: usize,
+    /// Per-burst memory budget (bytes of command text).
+    pub mem_budget: usize,
+    /// Longest accepted framed line, in bytes.
+    pub max_line: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            backlog: 64,
+            queue_budget: 256,
+            mem_budget: 1 << 20,
+            max_line: 64 << 10,
+        }
+    }
+}
+
+/// A running TCP serve front-end. Dropping it (or calling
+/// [`NetServer::shutdown`]) stops the acceptor, drains queued connections,
+/// and joins all threads.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+impl NetServer {
+    pub fn start(proto: Arc<ServeProtocol>, cfg: NetConfig) -> anyhow::Result<Self> {
+        let cfg = Arc::new(NetConfig {
+            workers: cfg.workers.max(1),
+            backlog: cfg.backlog.max(1),
+            queue_budget: cfg.queue_budget.max(1),
+            mem_budget: cfg.mem_budget.max(64),
+            max_line: cfg.max_line.max(64),
+            ..cfg
+        });
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (tx, rx) = channel::bounded::<TcpStream>(cfg.backlog);
+
+        let mut threads = Vec::with_capacity(cfg.workers + 1);
+        {
+            let shutdown = shutdown.clone();
+            let metrics = metrics.clone();
+            threads.push(pool::spawn_thread("net-accept", move || {
+                accept_loop(&listener, &tx, &shutdown, &metrics);
+            }));
+        }
+        for i in 0..cfg.workers {
+            let rx = rx.clone();
+            let proto = proto.clone();
+            let metrics = metrics.clone();
+            let cfg = cfg.clone();
+            let shutdown = shutdown.clone();
+            threads.push(pool::spawn_thread(&format!("net-conn-{i}"), move || {
+                // The acceptor owns the only Sender: once it exits the
+                // channel disconnects and handlers finish the queued
+                // backlog, then return — that's the drain.
+                while let Ok(stream) = rx.recv() {
+                    handle_connection(stream, &proto, &metrics, &cfg, &shutdown);
+                }
+            }));
+        }
+        Ok(Self { local_addr, shutdown, threads, metrics })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// A snapshot of the listener-side counters (the same numbers the
+    /// net-layer `metrics` command scrapes).
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Graceful stop: no new connections, queued connections are served to
+    /// completion of their pending bursts, every thread joined.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    tx: &channel::Sender<TcpStream>,
+    shutdown: &AtomicBool,
+    metrics: &Mutex<Metrics>,
+) {
+    while !shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                metrics.lock().unwrap().add(stage::NET_CONNECTIONS, 1);
+                // try_send consumes the stream, so keep a dup of the fd to
+                // deliver the shed response if the queue is full.
+                let dup = stream.try_clone().ok();
+                match tx.try_send(stream) {
+                    Ok(true) => {}
+                    Ok(false) => {
+                        metrics.lock().unwrap().add(stage::NET_SHED_CONNECTIONS, 1);
+                        if let Some(mut s) = dup {
+                            let _ = s.write_all(b"err shed accept queue full\n");
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Reassembles `\n`-framed lines from arbitrary read chunks. `None`
+/// entries mark lines that overflowed `max_line` and were discarded (the
+/// caller answers them with `err`).
+struct LineFramer {
+    max_line: usize,
+    partial: Vec<u8>,
+    /// Currently inside an overlong line: swallow bytes until its newline.
+    discarding: bool,
+    lines: Vec<Option<String>>,
+}
+
+impl LineFramer {
+    fn new(max_line: usize) -> Self {
+        Self { max_line, partial: Vec::new(), discarding: false, lines: Vec::new() }
+    }
+
+    fn push(&mut self, mut bytes: &[u8]) {
+        while let Some(pos) = bytes.iter().position(|&b| b == b'\n') {
+            let (head, rest) = bytes.split_at(pos);
+            bytes = &rest[1..];
+            if self.discarding {
+                // Tail of a line already reported oversized.
+                self.discarding = false;
+                continue;
+            }
+            self.partial.extend_from_slice(head);
+            if self.partial.len() > self.max_line {
+                self.lines.push(None);
+            } else {
+                let line = String::from_utf8_lossy(&self.partial);
+                self.lines.push(Some(line.trim_end_matches('\r').to_string()));
+            }
+            self.partial.clear();
+        }
+        if self.discarding {
+            return;
+        }
+        self.partial.extend_from_slice(bytes);
+        if self.partial.len() > self.max_line {
+            self.lines.push(None);
+            self.partial.clear();
+            self.discarding = true;
+        }
+    }
+
+    fn take_lines(&mut self) -> Vec<Option<String>> {
+        std::mem::take(&mut self.lines)
+    }
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    proto: &ServeProtocol,
+    metrics: &Mutex<Metrics>,
+    cfg: &NetConfig,
+    shutdown: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    let mut framer = LineFramer::new(cfg.max_line);
+    let mut chunk = [0u8; 4096];
+    let mut eof = false;
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => eof = true, // disconnect; a partial line dies with it
+            Ok(n) => {
+                framer.push(&chunk[..n]);
+                // Drain everything already pending so the budgets and the
+                // coalescer see the whole pipelined burst, not a 4 KiB
+                // window of it.
+                if stream.set_nonblocking(true).is_ok() {
+                    loop {
+                        match stream.read(&mut chunk) {
+                            Ok(0) => {
+                                eof = true;
+                                break;
+                            }
+                            Ok(n) => framer.push(&chunk[..n]),
+                            // WouldBlock ends the drain; real errors
+                            // resurface on the next blocking read.
+                            Err(_) => break,
+                        }
+                    }
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_read_timeout(Some(READ_POLL));
+                }
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+        let lines = framer.take_lines();
+        if !process_burst(&lines, &mut stream, proto, metrics, cfg) || eof {
+            return;
+        }
+    }
+}
+
+/// Dispatch one burst of framed lines; returns `false` when the
+/// connection should close (quit or write failure).
+fn process_burst(
+    lines: &[Option<String>],
+    stream: &mut TcpStream,
+    proto: &ServeProtocol,
+    metrics: &Mutex<Metrics>,
+    cfg: &NetConfig,
+) -> bool {
+    if lines.is_empty() {
+        return true;
+    }
+    let t = StageTimer::start();
+    let mut responses: Vec<String> = Vec::new();
+    let mut batch: Vec<&str> = Vec::new();
+    let mut keep_open = true;
+    let (mut used_lines, mut used_bytes) = (0usize, 0usize);
+    fn flush(proto: &ServeProtocol, batch: &mut Vec<&str>, responses: &mut Vec<String>) {
+        if !batch.is_empty() {
+            responses.extend(proto.handle_batch(batch));
+            batch.clear();
+        }
+    }
+    for line in lines {
+        let Some(line) = line else {
+            metrics.lock().unwrap().add(stage::NET_OVERSIZED_LINES, 1);
+            flush(proto, &mut batch, &mut responses);
+            responses.push(format!("err line exceeds {} bytes (dropped)", cfg.max_line));
+            continue;
+        };
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue; // same as the stdin loop: no response
+        }
+        metrics.lock().unwrap().add(stage::NET_LINES, 1);
+        if ServeProtocol::is_quit(trimmed) {
+            // Per-connection semantics: close this connection only; any
+            // lines pipelined after the quit are discarded, like a script
+            // ending at `quit`.
+            keep_open = false;
+            break;
+        }
+        if trimmed == "metrics" {
+            flush(proto, &mut batch, &mut responses);
+            responses.push(scrape(metrics, proto));
+            continue;
+        }
+        used_lines += 1;
+        used_bytes += trimmed.len();
+        if used_lines > cfg.queue_budget || used_bytes > cfg.mem_budget {
+            metrics.lock().unwrap().add(stage::NET_SHED_COMMANDS, 1);
+            flush(proto, &mut batch, &mut responses);
+            responses.push(format!(
+                "err shed burst over budget (queue={} mem={})",
+                cfg.queue_budget, cfg.mem_budget
+            ));
+            continue;
+        }
+        batch.push(trimmed);
+    }
+    flush(proto, &mut batch, &mut responses);
+    let mut out = String::new();
+    for r in &responses {
+        out.push_str(r);
+        out.push('\n');
+    }
+    let wrote = stream.write_all(out.as_bytes()).is_ok() && stream.flush().is_ok();
+    metrics.lock().unwrap().record_stage(stage::SERVE_NET_BURST, t.stop());
+    keep_open && wrote
+}
+
+/// The net-layer `metrics` command: listener counters plus the head
+/// `stats` line of every open stream, as one multi-line response.
+fn scrape(metrics: &Mutex<Metrics>, proto: &ServeProtocol) -> String {
+    let m = metrics.lock().unwrap().clone();
+    let mut s = String::from("metrics");
+    for line in m.report().lines() {
+        s.push('\n');
+        s.push_str(line);
+    }
+    for name in proto.service().names() {
+        let r = proto.handle(&format!("stats {name}"));
+        if let Some(head) = r.lines().next() {
+            s.push('\n');
+            s.push_str(head);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+
+    fn framed(max_line: usize, chunks: &[&[u8]]) -> Vec<Option<String>> {
+        let mut f = LineFramer::new(max_line);
+        for c in chunks {
+            f.push(c);
+        }
+        f.take_lines()
+    }
+
+    #[test]
+    fn framer_reassembles_split_writes() {
+        let got = framed(100, &[b"esti", b"mate s 1", b" 2\ntop", b" s 3\n"]);
+        assert_eq!(
+            got,
+            vec![Some("estimate s 1 2".to_string()), Some("top s 3".to_string())]
+        );
+    }
+
+    #[test]
+    fn framer_strips_carriage_returns() {
+        let got = framed(100, &[b"streams\r\nhelp\r\n"]);
+        assert_eq!(got, vec![Some("streams".to_string()), Some("help".to_string())]);
+    }
+
+    #[test]
+    fn framer_drops_oversized_lines_and_recovers() {
+        let long = vec![b'x'; 300];
+        let mut f = LineFramer::new(16);
+        f.push(&long); // no newline yet: reported oversized immediately
+        assert_eq!(f.take_lines(), vec![None]);
+        f.push(b"yyy\nstreams\n"); // tail of the long line, then a good one
+        assert_eq!(f.take_lines(), vec![Some("streams".to_string())]);
+    }
+
+    #[test]
+    fn framer_keeps_partial_line_pending() {
+        let mut f = LineFramer::new(100);
+        f.push(b"estimate s 0");
+        assert!(f.take_lines().is_empty(), "no newline, no line");
+        f.push(b" 0\n");
+        assert_eq!(f.take_lines(), vec![Some("estimate s 0 0".to_string())]);
+    }
+
+    /// End-to-end smoke over a real socket: one client, protocol parity
+    /// with direct `handle` calls. The multi-client/bitwise matrix lives
+    /// in `tests/server_net.rs`.
+    #[test]
+    fn tcp_round_trip_matches_direct_handle() {
+        let proto = Arc::new(ServeProtocol::new());
+        let srv = NetServer::start(
+            proto.clone(),
+            NetConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(srv.local_addr()).unwrap();
+        c.write_all(b"open t d=4 n1=3 n2=3 k=6 rank=2 seed=3 samples=40 iters=2 workers=1\n")
+            .unwrap();
+        let mut r = std::io::BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ok open t "), "{line}");
+        c.write_all(b"streams\nquit\n").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line, "streams: t\n");
+        // quit closed only this connection; the server still accepts.
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "quit must close the connection");
+        let mut c2 = TcpStream::connect(srv.local_addr()).unwrap();
+        c2.write_all(b"streams\n").unwrap();
+        let mut r2 = std::io::BufReader::new(c2.try_clone().unwrap());
+        line.clear();
+        r2.read_line(&mut line).unwrap();
+        assert_eq!(line, "streams: t\n", "server must survive a client quit");
+        drop((c2, r2));
+        srv.shutdown();
+        assert!(proto.service().close_all().is_empty());
+    }
+}

@@ -41,6 +41,13 @@ serve protocol — one command per line:
   help                            this text
   quit                            exit the server loop";
 
+/// Burst-coalescing density bound: a run of N consecutive point queries
+/// is answered from one `estimate_block` GEMM only while the bounding-box
+/// area stays within this factor of N; sparser runs still share one
+/// snapshot fetch but fall back to per-entry dot products (materializing
+/// a huge mostly-unqueried block would trade query latency for memory).
+pub const COALESCE_MAX_BLOWUP: usize = 4;
+
 /// Stateful protocol handler: a [`SketchService`] plus the line dispatch.
 pub struct ServeProtocol {
     service: SketchService,
@@ -55,8 +62,11 @@ impl ServeProtocol {
         &self.service
     }
 
-    /// Does this line end the serve loop? (The loop owner decides what to
-    /// do; `handle` never sees quit lines in practice.)
+    /// Does this line end the *caller's* session? Quit semantics are
+    /// per-connection: the stdin loop owner exits its loop, a TCP
+    /// connection handler closes that one connection — never the listener
+    /// or other clients' sessions. (`handle` never sees quit lines in
+    /// practice; the loop owner intercepts them.)
     pub fn is_quit(line: &str) -> bool {
         matches!(line.trim(), "quit" | "exit")
     }
@@ -68,6 +78,105 @@ impl ServeProtocol {
             Ok(resp) => resp,
             Err(e) => format!("err {e}"),
         }
+    }
+
+    /// Handle a burst of pipelined lines, coalescing runs of consecutive
+    /// `estimate NAME I J` point queries on the same stream: the run
+    /// shares one snapshot fetch (so every query in it answers at the
+    /// same epoch), and when the queried entries are dense enough —
+    /// bounding-box area at most [`COALESCE_MAX_BLOWUP`]× the run length
+    /// — the whole run is served from a single `estimate_block` GEMM
+    /// call instead of per-entry dot products. Responses are returned in
+    /// input order and are **byte-identical** to handling each line
+    /// individually (`estimate_block` accumulates components in the same
+    /// order as `estimate_entry`, so the coalesced values round-trip
+    /// bitwise; out-of-range and no-epoch errors keep their per-line
+    /// text).
+    pub fn handle_batch(&self, lines: &[&str]) -> Vec<String> {
+        let mut out = Vec::with_capacity(lines.len());
+        let mut idx = 0;
+        while idx < lines.len() {
+            let Some((name, i, j)) = parse_estimate(lines[idx]) else {
+                out.push(self.handle(lines[idx]));
+                idx += 1;
+                continue;
+            };
+            let mut run = vec![(i, j)];
+            let mut end = idx + 1;
+            while end < lines.len() {
+                match parse_estimate(lines[end]) {
+                    Some((n, i, j)) if n == name => {
+                        run.push((i, j));
+                        end += 1;
+                    }
+                    _ => break,
+                }
+            }
+            if run.len() == 1 {
+                out.push(self.handle(lines[idx]));
+            } else {
+                out.extend(self.estimate_run(name, &run));
+            }
+            idx = end;
+        }
+        out
+    }
+
+    /// Answer a coalesced run of point queries on one stream (all from
+    /// one snapshot fetch; see [`ServeProtocol::handle_batch`]).
+    fn estimate_run(&self, name: &str, queries: &[(usize, usize)]) -> Vec<String> {
+        let snap = match self.snapshot_of(name) {
+            // The per-line path fails each query with the same message.
+            Err(e) => {
+                if let Ok(session) = self.service.get(name) {
+                    session.note_coalesced_queries(queries.len() as u64, false);
+                }
+                return queries.iter().map(|_| format!("err {e}")).collect();
+            }
+            Ok(s) => s,
+        };
+        // Bounding box over the in-range queries; out-of-range ones keep
+        // their individual error responses below.
+        let mut bbox: Option<(usize, usize, usize, usize)> = None;
+        let mut in_range = 0usize;
+        for &(i, j) in queries {
+            if i < snap.n1() && j < snap.n2() {
+                in_range += 1;
+                bbox = Some(match bbox {
+                    None => (i, i, j, j),
+                    Some((i0, i1, j0, j1)) => (i0.min(i), i1.max(i), j0.min(j), j1.max(j)),
+                });
+            }
+        }
+        let block = bbox.and_then(|(i0, i1, j0, j1)| {
+            let area = (i1 - i0 + 1) * (j1 - j0 + 1);
+            if area <= COALESCE_MAX_BLOWUP * in_range {
+                snap.estimate_block(i0, i1 + 1, j0, j1 + 1).ok().map(|m| (i0, j0, m))
+            } else {
+                None
+            }
+        });
+        if let Ok(session) = self.service.get(name) {
+            session.note_coalesced_queries(queries.len() as u64, block.is_some());
+        }
+        queries
+            .iter()
+            .map(|&(i, j)| {
+                let v = match &block {
+                    Some((i0, j0, m)) if i < snap.n1() && j < snap.n2() => {
+                        Ok(m[(i - i0, j - j0)])
+                    }
+                    _ => snap.estimate_entry(i, j),
+                };
+                match v {
+                    Ok(v) => format!(
+                        "estimate {name} epoch={} i={i} j={j} value={v:.17e}",
+                        snap.epoch
+                    ),
+                    Err(e) => format!("err {e}"),
+                }
+            })
+            .collect()
     }
 
     fn dispatch(&self, line: &str) -> anyhow::Result<String> {
@@ -179,23 +288,24 @@ impl ServeProtocol {
             session.spec().meta
         );
         // Stream in 4096-entry batches — O(batch) memory, not O(file).
-        // for_each cannot early-exit, so on an ingest error the remaining
-        // records are skipped and the error surfaces afterwards.
+        // An ingest error breaks the replay at the failed batch: the rest
+        // of the file is never read and the error surfaces immediately.
         let mut buf: Vec<Entry> = Vec::with_capacity(4096);
         let mut total = 0u64;
         let mut failed: Option<anyhow::Error> = None;
-        Box::new(source).for_each(&mut |e| {
-            if failed.is_some() {
-                return;
-            }
+        let _ = Box::new(source).for_each(&mut |e| {
             buf.push(e);
             if buf.len() == 4096 {
                 match session.ingest(&buf) {
                     Ok(n) => total += n,
-                    Err(err) => failed = Some(err),
+                    Err(err) => {
+                        failed = Some(err);
+                        return std::ops::ControlFlow::Break(());
+                    }
                 }
                 buf.clear();
             }
+            std::ops::ControlFlow::Continue(())
         });
         if let Some(err) = failed {
             return Err(err);
@@ -391,6 +501,23 @@ fn three<'a>(rest: &[&'a str], usage: &str) -> anyhow::Result<[&'a str; 3]> {
     Ok([rest[0], rest[1], rest[2]])
 }
 
+/// Parse `estimate NAME I J` into a coalescable point query; anything
+/// else (including malformed estimates, which must keep their per-line
+/// error text) answers `None` and goes through the ordinary dispatch.
+fn parse_estimate(line: &str) -> Option<(&str, usize, usize)> {
+    let mut toks = line.split_whitespace();
+    if toks.next() != Some("estimate") {
+        return None;
+    }
+    let name = toks.next()?;
+    let i = toks.next()?.parse().ok()?;
+    let j = toks.next()?.parse().ok()?;
+    if toks.next().is_some() {
+        return None;
+    }
+    Some((name, i, j))
+}
+
 /// Parse one `M:row:col:value` ingest record.
 fn parse_record(tok: &str) -> anyhow::Result<Entry> {
     let parts: Vec<&str> = tok.split(':').collect();
@@ -444,6 +571,48 @@ mod tests {
         assert_eq!(p.handle("streams"), "streams: (none)");
         assert!(ServeProtocol::is_quit(" quit "));
         assert!(!ServeProtocol::is_quit("quits"));
+    }
+
+    #[test]
+    fn coalesced_bursts_answer_byte_identical_to_per_line() {
+        let p = ServeProtocol::new();
+        assert!(p.handle("open c d=6 n1=4 n2=4 k=8 rank=2 seed=7 workers=2 samples=80 iters=3")
+            .starts_with("ok open"));
+        let mut records = Vec::new();
+        for i in 0..6u32 {
+            for j in 0..4u32 {
+                records.push(format!("A:{i}:{j}:{}", 0.4 + i as f64 - 0.3 * j as f64));
+                records.push(format!("B:{i}:{j}:{}", 0.9 - 0.1 * i as f64 + 0.2 * j as f64));
+            }
+        }
+        assert!(p.handle(&format!("ingest c {}", records.join(" "))).starts_with("ok"));
+        assert!(p.handle("refresh c").starts_with("ok refresh"));
+        // Dense run (block path), sparse pair (fallback path), an
+        // out-of-range query, a no-such-stream query, and non-estimate
+        // commands interleaved — every response must match the per-line
+        // path byte for byte, in order.
+        let burst: Vec<&str> = vec![
+            "estimate c 0 0",
+            "estimate c 0 1",
+            "estimate c 1 0",
+            "estimate c 1 1",
+            "estimate c 2 3",
+            "top c 2",
+            "estimate c 0 0",
+            "estimate c 3 3",
+            "estimate c 99 0",
+            "estimate ghost 0 0",
+            "estimate c 2 2",
+            "streams",
+        ];
+        let batched = p.handle_batch(&burst);
+        let individual: Vec<String> = burst.iter().map(|l| p.handle(l)).collect();
+        assert_eq!(batched, individual);
+        // The dense run really went through the block path.
+        let stats = p.handle("stats c");
+        assert!(stats.contains("serve/query_blocks"), "{stats}");
+        assert!(stats.contains("serve/query_coalesced"), "{stats}");
+        assert!(p.handle("close c").starts_with("ok"));
     }
 
     #[test]

@@ -770,29 +770,81 @@ impl StreamSession {
         self.published.read().unwrap().clone()
     }
 
+    /// Bookkeeping for front-ends that answer a burst of point queries
+    /// from one [`StreamSession::snapshot`] fetch: tops the `queries`
+    /// counter up to the number of queries actually answered (the shared
+    /// fetch counted one) and records the query-batching counters the
+    /// `stats` panel reports. `via_block` marks runs dense enough to have
+    /// been answered by a single `estimate_block` GEMM.
+    pub fn note_coalesced_queries(&self, queries: u64, via_block: bool) {
+        self.queries.fetch_add(queries.saturating_sub(1), Ordering::Relaxed);
+        let mut m = self.metrics.lock().unwrap();
+        m.add(stage::SERVE_QUERY_COALESCED, queries);
+        if via_block {
+            m.add(stage::SERVE_QUERY_BLOCKS, 1);
+        }
+    }
+
     /// Persist the frozen per-worker states (`shardN.a` / `shardN.b`, v3
     /// container format, written atomically) for bitwise resume via
     /// [`StreamSession::restore_states`]. Ingestion continues immediately
     /// after the freeze; the written prefix is everything routed before
     /// this call.
+    ///
+    /// Multi-shard checkpoints are **generation-sealed**: each call writes
+    /// its shard files into a fresh `gen-N/` staging subdirectory and then
+    /// commits the whole set with one atomic rename of the `MANIFEST`
+    /// file. Each shard file is individually atomic already, but a crash
+    /// *between* shard files used to leave the directory with shards from
+    /// two different freezes — every file valid, the set inconsistent.
+    /// With the manifest, an interrupted checkpoint leaves the previous
+    /// generation committed and the torn staging directory unreferenced;
+    /// the next successful call reuses (and first clears) that staging
+    /// generation. Superseded generations are pruned after commit.
     pub fn checkpoint(&self, dir: impl AsRef<Path>) -> anyhow::Result<usize> {
         let dir = dir.as_ref();
         std::fs::create_dir_all(dir)?;
+        let committed = read_manifest(dir)?;
+        let generation = committed.map(|(g, _)| g).unwrap_or(0) + 1;
+        let stage = generation_dir(dir, generation);
+        if stage.exists() {
+            // Leftover staging from an interrupted attempt at this same
+            // generation: clear it so the new set cannot mix with it.
+            std::fs::remove_dir_all(&stage)?;
+        }
+        std::fs::create_dir_all(&stage)?;
         let (_, _, states) = self.freeze(false)?;
         for (i, (sa, sb)) in states.iter().enumerate() {
-            sa.checkpoint(dir.join(format!("shard{i}.a")))?;
-            sb.checkpoint(dir.join(format!("shard{i}.b")))?;
+            sa.checkpoint(stage.join(format!("shard{i}.a")))?;
+            sb.checkpoint(stage.join(format!("shard{i}.b")))?;
         }
+        commit_manifest(dir, generation, states.len())?;
+        prune_generations(dir, generation);
         Ok(states.len())
     }
 
-    /// Read back a [`StreamSession::checkpoint`] directory. The shard count
-    /// (= worker count to resume with) is however many `shardN.*` pairs are
-    /// present.
+    /// Read back a [`StreamSession::checkpoint`] directory. The committed
+    /// `MANIFEST` names exactly one generation and its shard count (= the
+    /// worker count to resume with); only that generation's files are
+    /// read, so a restore can observe the latest committed set or — after
+    /// an interrupted checkpoint — the previous one, but never a mix.
+    /// Pre-manifest directories (flat `shardN.*` files) still restore.
     pub fn restore_states(
         dir: impl AsRef<Path>,
     ) -> anyhow::Result<Vec<(SketchState, SketchState)>> {
         let dir = dir.as_ref();
+        if let Some((generation, shards)) = read_manifest(dir)? {
+            let gdir = generation_dir(dir, generation);
+            anyhow::ensure!(shards > 0, "manifest in {} names zero shards", dir.display());
+            let mut out = Vec::with_capacity(shards);
+            for i in 0..shards {
+                let pa = gdir.join(format!("shard{i}.a"));
+                let pb = gdir.join(format!("shard{i}.b"));
+                out.push((SketchState::restore(&pa)?, SketchState::restore(&pb)?));
+            }
+            return Ok(out);
+        }
+        // Legacy layout (pre-manifest): shardN.* directly in DIR.
         let mut out = Vec::new();
         loop {
             let pa = dir.join(format!("shard{}.a", out.len()));
@@ -946,6 +998,103 @@ fn next_refresh_delay(cur: Duration, interval: Duration) -> Duration {
     cur.saturating_mul(2).min(interval.saturating_mul(REFRESH_BACKOFF_CAP_MULT))
 }
 
+// ---- checkpoint-directory manifest ------------------------------------
+//
+// The manifest is the commit record of a multi-shard checkpoint: a tiny
+// text file naming one generation and its shard count, CRC-guarded, and
+// swapped into place with the same tmp-sibling → fsync → rename → parent
+// fsync dance as the shard containers themselves. The shard files it
+// names live in `gen-N/`; everything else in the directory is either a
+// superseded generation awaiting pruning or a torn staging attempt —
+// both invisible to `restore_states`.
+
+const MANIFEST_NAME: &str = "MANIFEST";
+const MANIFEST_MAGIC: &str = "smppca-checkpoint-manifest v1";
+
+fn generation_dir(dir: &Path, generation: u64) -> std::path::PathBuf {
+    dir.join(format!("gen-{generation:06}"))
+}
+
+fn manifest_body(generation: u64, shards: usize) -> String {
+    format!("generation={generation}\nshards={shards}\n")
+}
+
+fn manifest_crc(body: &str) -> u32 {
+    crate::sketch::checkpoint::crc32_update(0, body.as_bytes())
+}
+
+/// Parse the committed manifest: `Ok(None)` when the directory has none
+/// (fresh or legacy layout), `Err` when one exists but is unreadable —
+/// a damaged commit record must fail loudly, not degrade into guessing.
+fn read_manifest(dir: &Path) -> anyhow::Result<Option<(u64, usize)>> {
+    let path = dir.join(MANIFEST_NAME);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let mut lines = text.lines();
+    anyhow::ensure!(
+        lines.next() == Some(MANIFEST_MAGIC),
+        "{} is not a checkpoint manifest",
+        path.display()
+    );
+    let field = |line: Option<&str>, key: &str| -> anyhow::Result<u64> {
+        line.and_then(|l| l.strip_prefix(key))
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("manifest {} missing '{key}N'", path.display()))
+    };
+    let generation = field(lines.next(), "generation=")?;
+    let shards = field(lines.next(), "shards=")? as usize;
+    let crc = field(lines.next(), "crc=")? as u32;
+    let want = manifest_crc(&manifest_body(generation, shards));
+    anyhow::ensure!(
+        crc == want,
+        "manifest {} failed its CRC check (stored {crc:08x}, computed {want:08x})",
+        path.display()
+    );
+    Ok(Some((generation, shards)))
+}
+
+/// Atomically commit `generation` as the directory's current checkpoint:
+/// the rename is the single commit point, after which every reader sees
+/// the new complete set and before which every reader sees the old one.
+fn commit_manifest(dir: &Path, generation: u64, shards: usize) -> anyhow::Result<()> {
+    use std::io::Write;
+    let body = manifest_body(generation, shards);
+    let text = format!("{MANIFEST_MAGIC}\n{body}crc={}\n", manifest_crc(&body));
+    let tmp = dir.join(format!("{MANIFEST_NAME}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all()?;
+    }
+    let path = dir.join(MANIFEST_NAME);
+    if let Err(e) = std::fs::rename(&tmp, &path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e.into());
+    }
+    // Make the rename itself durable (same policy as `atomic_write`).
+    if let Ok(d) = std::fs::File::open(dir) {
+        d.sync_all().ok();
+    }
+    Ok(())
+}
+
+/// Best-effort removal of every generation directory except the one just
+/// committed. Failure is ignored: stale generations waste space but are
+/// unreachable from the manifest, so they can never mix into a restore.
+fn prune_generations(dir: &Path, keep: u64) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(gen) = name.to_str().and_then(|n| n.strip_prefix("gen-")) else { continue };
+        if gen.parse::<u64>() != Ok(keep) {
+            std::fs::remove_dir_all(entry.path()).ok();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -975,7 +1124,10 @@ mod tests {
         let a = Mat::gaussian(18, 7, &mut rng);
         let b = Mat::gaussian(18, 6, &mut rng);
         let mut out = Vec::new();
-        Box::new(ShuffledMatrixSource { a, b, seed: 4 }).for_each(&mut |e| out.push(e));
+        let _ = Box::new(ShuffledMatrixSource { a, b, seed: 4 }).for_each(&mut |e| {
+        out.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
         out
     }
 

@@ -531,8 +531,11 @@ mod tests {
         let (a, b) = pair(3, 20, 6, 5);
         let meta = crate::stream::StreamMeta { d: 20, n1: 6, n2: 5 };
         let mut entries = Vec::new();
-        Box::new(ShuffledMatrixSource { a, b, seed: 9 })
-            .for_each(&mut |e| entries.push(e));
+        let _ = Box::new(ShuffledMatrixSource { a, b, seed: 9 })
+            .for_each(&mut |e| {
+        entries.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
         let cfg = IngestConfig { workers: 4, channel_capacity: 32, batch: 8 };
         let split = entries.len() / 3;
         let states = worker_states(SketchKind::CountSketch, 2, 6, meta, 4);
@@ -570,7 +573,10 @@ mod tests {
         let (a, b) = pair(9, 16, 5, 4);
         let meta = crate::stream::StreamMeta { d: 16, n1: 5, n2: 4 };
         let mut entries = Vec::new();
-        Box::new(ShuffledMatrixSource { a, b, seed: 11 }).for_each(&mut |e| entries.push(e));
+        let _ = Box::new(ShuffledMatrixSource { a, b, seed: 11 }).for_each(&mut |e| {
+        entries.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
         // Poison early so routing keeps running after the worker dies.
         entries.insert(1, Entry::a(0, 99, 1.0));
         let result = ingest_entries(

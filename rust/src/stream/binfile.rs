@@ -13,6 +13,7 @@
 use super::{Entry, EntrySource, MatrixId, StreamMeta};
 use crate::linalg::Mat;
 use std::io::{BufReader, BufWriter, Read, Write};
+use std::ops::ControlFlow;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SMPB";
@@ -124,7 +125,7 @@ impl EntrySource for BinFileSource {
         self.meta
     }
 
-    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry) -> ControlFlow<()>) -> ControlFlow<()> {
         // Records are parsed from a large reusable buffer in ~68 KiB blocks
         // rather than one 17-byte read per record: the per-record read_exact
         // call (bounds checks + BufReader state) was measurable against the
@@ -156,12 +157,15 @@ impl EntrySource for BinFileSource {
                 let row = u32::from_le_bytes(rec[1..5].try_into().unwrap());
                 let col = u32::from_le_bytes(rec[5..9].try_into().unwrap());
                 let value = f64::from_le_bytes(rec[9..17].try_into().unwrap());
-                f(Entry { matrix, row, col, value });
+                // A Break here abandons the file mid-read by design: the
+                // trailing-truncation check only applies to full reads.
+                f(Entry { matrix, row, col, value })?;
             }
             buf.copy_within(whole..filled, 0);
             filled %= REC;
         }
         assert!(filled == 0, "truncated trailing record ({filled} bytes)");
+        ControlFlow::Continue(())
     }
 }
 
@@ -185,9 +189,12 @@ mod tests {
         assert_eq!(src.meta(), StreamMeta { d: 7, n1: 5, n2: 4 });
         let mut ra = Mat::zeros(7, 5);
         let mut rb = Mat::zeros(7, 4);
-        src.for_each(&mut |e| match e.matrix {
-            MatrixId::A => ra[(e.row as usize, e.col as usize)] = e.value,
-            MatrixId::B => rb[(e.row as usize, e.col as usize)] = e.value,
+        let _ = src.for_each(&mut |e| {
+            match e.matrix {
+                MatrixId::A => ra[(e.row as usize, e.col as usize)] = e.value,
+                MatrixId::B => rb[(e.row as usize, e.col as usize)] = e.value,
+            }
+            ControlFlow::Continue(())
         });
         std::fs::remove_file(&path).ok();
         assert_eq!(ra.data(), a.data()); // bit-exact, unlike CSV
@@ -204,7 +211,10 @@ mod tests {
         w.finish().unwrap();
         let src = Box::new(BinFileSource::open(&path).unwrap());
         let mut got = Vec::new();
-        src.for_each(&mut |e| got.push(e));
+        let _ = src.for_each(&mut |e| {
+            got.push(e);
+            ControlFlow::Continue(())
+        });
         std::fs::remove_file(&path).ok();
         assert_eq!(got, vec![Entry::a(0, 1, 1.5), Entry::b(2, 0, -2.25)]);
     }
@@ -222,9 +232,10 @@ mod tests {
         w.finish().unwrap();
         let src = Box::new(BinFileSource::open(&path).unwrap());
         let mut count = 0u32;
-        src.for_each(&mut |e| {
+        let _ = src.for_each(&mut |e| {
             assert_eq!(e.value, count as f64 * 0.25);
             count += 1;
+            ControlFlow::Continue(())
         });
         std::fs::remove_file(&path).ok();
         assert_eq!(count, total);
@@ -242,7 +253,7 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
         let src = Box::new(BinFileSource::open(&path).unwrap());
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            src.for_each(&mut |_| {});
+            let _ = src.for_each(&mut |_| ControlFlow::Continue(()));
         }));
         std::fs::remove_file(&path).ok();
         assert!(result.is_err(), "truncated record must not be silently dropped");

@@ -9,6 +9,7 @@
 use super::{ColumnBlock, ColumnSource, Entry, EntrySource, MatrixId, Sender};
 use crate::rng::hash2;
 use crate::runtime::fault;
+use std::ops::ControlFlow;
 
 /// Stable shard assignment for an entry.
 #[inline]
@@ -36,8 +37,9 @@ fn send_or_stop<T>(sender: &Sender<T>, msg: T) -> bool {
 /// reach their owning worker in stream order, which is what keeps the
 /// sharded pass bitwise identical to the sequential one. Returns the number
 /// of entries routed. If a worker hangs up mid-pass (it panicked), routing
-/// stops — the remaining stream is drained unsent and the caller's join
-/// reports the worker's panic as an error.
+/// aborts at the point of failure — the source's `ControlFlow` contract
+/// stops the reader within one batch, the remaining stream is never read,
+/// and the caller's join reports the worker's panic as an error.
 pub fn route_entries(
     source: Box<dyn EntrySource>,
     senders: &[Sender<Vec<Entry>>],
@@ -46,12 +48,8 @@ pub fn route_entries(
     let w = senders.len();
     assert!(w > 0 && batch > 0);
     let mut routed = 0u64;
-    let mut dead = false;
     let mut buffers: Vec<Vec<Entry>> = (0..w).map(|_| Vec::with_capacity(batch)).collect();
-    source.for_each(&mut |e| {
-        if dead {
-            return; // for_each cannot early-exit; drain the source unsent
-        }
+    let flow = source.for_each(&mut |e| {
         let shard = shard_of(e.matrix, e.col, w);
         let buf = &mut buffers[shard];
         buf.push(e);
@@ -61,13 +59,13 @@ pub fn route_entries(
             fault::point("stream/route/batch");
             let full = std::mem::replace(buf, Vec::with_capacity(batch));
             if !send_or_stop(&senders[shard], full) {
-                dead = true;
-                return;
+                return ControlFlow::Break(());
             }
         }
         routed += 1;
+        ControlFlow::Continue(())
     });
-    if !dead {
+    if flow == ControlFlow::Continue(()) {
         for (shard, buf) in buffers.into_iter().enumerate() {
             if !buf.is_empty() && !send_or_stop(&senders[shard], buf) {
                 break;
@@ -82,7 +80,8 @@ pub fn route_entries(
 /// `(shard, matrix)` into flat [`ColumnBlock`]s of up to `batch_cols`
 /// columns — one allocation and one copy per *block*, not per column (the
 /// reader is the serial stage of the column pass). Returns
-/// `(columns, values)` routed.
+/// `(columns, values)` routed. A dead worker aborts the pass at the point
+/// of failure, same as [`route_entries`].
 pub fn route_columns(
     source: Box<dyn ColumnSource>,
     senders: &[Sender<ColumnBlock>],
@@ -92,14 +91,10 @@ pub fn route_columns(
     assert!(w > 0 && batch_cols > 0);
     let mut cols = 0u64;
     let mut values = 0u64;
-    let mut dead = false;
     let mut blocks: Vec<[ColumnBlock; 2]> = (0..w)
         .map(|_| [ColumnBlock::empty(MatrixId::A), ColumnBlock::empty(MatrixId::B)])
         .collect();
-    source.for_each_column(&mut |matrix, col, data| {
-        if dead {
-            return;
-        }
+    let flow = source.for_each_column(&mut |matrix, col, data| {
         let shard = shard_of(matrix, col, w);
         let slot = match matrix {
             MatrixId::A => 0,
@@ -114,11 +109,12 @@ pub fn route_columns(
             fault::point("stream/route/batch");
             let full = std::mem::replace(blk, ColumnBlock::empty(matrix));
             if !send_or_stop(&senders[shard], full) {
-                dead = true;
+                return ControlFlow::Break(());
             }
         }
+        ControlFlow::Continue(())
     });
-    if !dead {
+    if flow == ControlFlow::Continue(()) {
         'flush: for (shard, pair) in blocks.into_iter().enumerate() {
             for blk in pair {
                 if !blk.js.is_empty() && !send_or_stop(&senders[shard], blk) {
@@ -255,5 +251,80 @@ mod tests {
             }
         }
         assert_eq!(seen, 9);
+    }
+
+    /// A source that counts how many entries were actually pulled out of
+    /// it, so the tests below can prove the reader stopped early instead
+    /// of draining a dead stream.
+    struct CountingSource {
+        meta: crate::stream::StreamMeta,
+        entries: Vec<Entry>,
+        read: std::rc::Rc<std::cell::Cell<usize>>,
+    }
+
+    impl crate::stream::EntrySource for CountingSource {
+        fn meta(&self) -> crate::stream::StreamMeta {
+            self.meta
+        }
+
+        fn for_each(
+            self: Box<Self>,
+            f: &mut dyn FnMut(Entry) -> ControlFlow<()>,
+        ) -> ControlFlow<()> {
+            for e in self.entries {
+                self.read.set(self.read.get() + 1);
+                f(e)?;
+            }
+            ControlFlow::Continue(())
+        }
+    }
+
+    #[test]
+    fn poisoned_worker_stops_the_reader_within_one_batch() {
+        // Regression for the reader-drain bug: with a single worker whose
+        // receiver is already gone (the worker panicked), the old router
+        // kept pulling every remaining entry out of the source and threw
+        // it away — a multi-GB stream paid a full dead read. The
+        // ControlFlow contract must stop the source within one batch of
+        // the failed send.
+        use crate::stream::{bounded, StreamMeta};
+        let total = 10_000;
+        let batch = 16;
+        let entries: Vec<Entry> =
+            (0..total).map(|t| Entry::a((t % 7) as u32, (t % 5) as u32, t as f64)).collect();
+        let read = std::rc::Rc::new(std::cell::Cell::new(0usize));
+        let src = Box::new(CountingSource {
+            meta: StreamMeta { d: 7, n1: 5, n2: 1 },
+            entries,
+            read: read.clone(),
+        });
+        let (tx, rx) = bounded::<Vec<Entry>>(4);
+        drop(rx); // poisoned worker: receiver hung up before the pass
+        let routed = route_entries(src, &[tx], batch);
+        // The very first full batch fails to send; the reader must stop
+        // there — strictly less than one batch of slack past the failure.
+        assert!(routed < batch as u64, "router counted unsent entries: {routed}");
+        assert!(
+            read.get() <= batch,
+            "reader drained {} of {total} entries after the worker died",
+            read.get()
+        );
+    }
+
+    #[test]
+    fn dead_column_worker_stops_the_reader_within_one_block() {
+        use crate::linalg::Mat;
+        use crate::rng::Pcg64;
+        use crate::stream::{bounded, ColumnBlock, DenseColumnSource};
+        let mut rng = Pcg64::new(9);
+        // 64 columns total; the dead worker must stop the pass after the
+        // first full block, not after all 64 columns.
+        let a = Mat::gaussian(4, 40, &mut rng);
+        let b = Mat::gaussian(4, 24, &mut rng);
+        let src = Box::new(DenseColumnSource { a, b });
+        let (tx, rx) = bounded::<ColumnBlock>(4);
+        drop(rx);
+        let (cols, _values) = route_columns(src, &[tx], 2);
+        assert!(cols <= 2, "column reader drained {cols} columns after the worker died");
     }
 }

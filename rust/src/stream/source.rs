@@ -7,19 +7,28 @@
 //! * [`FileSource`] — CSV triplet files (`matrix,row,col,value`), the disk
 //!   format our examples write, so real workloads replay from disk like
 //!   the paper's `DISK_ONLY` RDDs.
+//!
+//! Both visitor contracts return [`ControlFlow`]: the callback decides
+//! after every item whether the replay continues. A consumer that loses
+//! its downstream (a routed worker died, a quota tripped) answers
+//! `Break(())` and the source must stop reading immediately — a multi-GB
+//! file must not be drained to feed a pipeline that is already dead.
 
 use super::{Entry, MatrixId, StreamMeta};
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 use std::io::{BufRead, BufReader, Write};
+use std::ops::ControlFlow;
 use std::path::Path;
 
 /// Anything that can replay a stream of entries plus declare its shape.
 pub trait EntrySource {
     fn meta(&self) -> StreamMeta;
-    /// Visit every entry exactly once. Must be callable once (single pass);
-    /// the trait object is consumed by the pipeline.
-    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry));
+    /// Visit entries in stream order until exhausted or the callback
+    /// answers `Break`. Must be callable once (single pass); the trait
+    /// object is consumed by the pipeline. Returns `Break(())` iff the
+    /// callback broke — i.e. the source was abandoned mid-stream.
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry) -> ControlFlow<()>) -> ControlFlow<()>;
 }
 
 /// Column-granular source: visits whole dense columns `(matrix, j, X[:, j])`
@@ -30,9 +39,14 @@ pub trait EntrySource {
 /// per-entry updates.
 pub trait ColumnSource {
     fn meta(&self) -> StreamMeta;
-    /// Visit every column once. The slice is only valid for the duration of
-    /// the callback (implementations may reuse one buffer).
-    fn for_each_column(self: Box<Self>, f: &mut dyn FnMut(MatrixId, u32, &[f64]));
+    /// Visit columns until exhausted or the callback answers `Break`. The
+    /// slice is only valid for the duration of the callback
+    /// (implementations may reuse one buffer). Returns `Break(())` iff
+    /// the callback broke.
+    fn for_each_column(
+        self: Box<Self>,
+        f: &mut dyn FnMut(MatrixId, u32, &[f64]) -> ControlFlow<()>,
+    ) -> ControlFlow<()>;
 }
 
 /// In-memory matrix pair emitted column-major, A's columns then B's.
@@ -46,7 +60,10 @@ impl ColumnSource for DenseColumnSource {
         StreamMeta { d: self.a.rows(), n1: self.a.cols(), n2: self.b.cols() }
     }
 
-    fn for_each_column(self: Box<Self>, f: &mut dyn FnMut(MatrixId, u32, &[f64])) {
+    fn for_each_column(
+        self: Box<Self>,
+        f: &mut dyn FnMut(MatrixId, u32, &[f64]) -> ControlFlow<()>,
+    ) -> ControlFlow<()> {
         assert_eq!(self.a.rows(), self.b.rows(), "A and B must share the ambient dimension");
         let mut buf = vec![0.0; self.a.rows()];
         for (m, id) in [(&self.a, MatrixId::A), (&self.b, MatrixId::B)] {
@@ -54,9 +71,10 @@ impl ColumnSource for DenseColumnSource {
                 for (i, slot) in buf.iter_mut().enumerate() {
                     *slot = m[(i, j)];
                 }
-                f(id, j as u32, &buf);
+                f(id, j as u32, &buf)?;
             }
         }
+        ControlFlow::Continue(())
     }
 }
 
@@ -72,10 +90,11 @@ impl EntrySource for VecSource {
         self.meta
     }
 
-    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry) -> ControlFlow<()>) -> ControlFlow<()> {
         for e in self.entries {
-            f(e);
+            f(e)?;
         }
+        ControlFlow::Continue(())
     }
 }
 
@@ -91,15 +110,16 @@ impl EntrySource for ShuffledMatrixSource {
         StreamMeta { d: self.a.rows(), n1: self.a.cols(), n2: self.b.cols() }
     }
 
-    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry) -> ControlFlow<()>) -> ControlFlow<()> {
         let mut entries: Vec<Entry> = Vec::new();
         collect_nonzeros(&self.a, MatrixId::A, &mut entries);
         collect_nonzeros(&self.b, MatrixId::B, &mut entries);
         let mut rng = Pcg64::new(self.seed);
         rng.shuffle(&mut entries);
         for e in entries {
-            f(e);
+            f(e)?;
         }
+        ControlFlow::Continue(())
     }
 }
 
@@ -114,7 +134,7 @@ impl EntrySource for InterleavedSource {
         StreamMeta { d: self.a.rows(), n1: self.a.cols(), n2: self.b.cols() }
     }
 
-    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry) -> ControlFlow<()>) -> ControlFlow<()> {
         let mut ea = Vec::new();
         let mut eb = Vec::new();
         collect_nonzeros(&self.a, MatrixId::A, &mut ea);
@@ -126,14 +146,15 @@ impl EntrySource for InterleavedSource {
                 (None, None) => break,
                 (x, y) => {
                     if let Some(e) = x {
-                        f(e);
+                        f(e)?;
                     }
                     if let Some(e) = y {
-                        f(e);
+                        f(e)?;
                     }
                 }
             }
         }
+        ControlFlow::Continue(())
     }
 }
 
@@ -194,7 +215,7 @@ impl EntrySource for FileSource {
         self.meta
     }
 
-    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry) -> ControlFlow<()>) -> ControlFlow<()> {
         let file = std::fs::File::open(&self.path).expect("source file vanished");
         let reader = BufReader::new(file);
         for (lineno, line) in reader.lines().enumerate().skip(1) {
@@ -218,8 +239,9 @@ impl EntrySource for FileSource {
                 "B" | "b" => MatrixId::B,
                 other => panic!("bad matrix tag '{other}' at line {lineno}"),
             };
-            f(Entry { matrix, row, col, value });
+            f(Entry { matrix, row, col, value })?;
         }
+        ControlFlow::Continue(())
     }
 }
 
@@ -241,10 +263,14 @@ mod tests {
         let src = Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 7 });
         let mut seen_a = Mat::zeros(6, 4);
         let mut seen_b = Mat::zeros(6, 3);
-        src.for_each(&mut |e| match e.matrix {
-            MatrixId::A => seen_a[(e.row as usize, e.col as usize)] = e.value,
-            MatrixId::B => seen_b[(e.row as usize, e.col as usize)] = e.value,
+        let flow = src.for_each(&mut |e| {
+            match e.matrix {
+                MatrixId::A => seen_a[(e.row as usize, e.col as usize)] = e.value,
+                MatrixId::B => seen_b[(e.row as usize, e.col as usize)] = e.value,
+            }
+            ControlFlow::Continue(())
         });
+        assert_eq!(flow, ControlFlow::Continue(()));
         assert_eq!(seen_a.data(), a.data());
         assert_eq!(seen_b.data(), b.data());
     }
@@ -255,7 +281,10 @@ mod tests {
         let collect = |seed| {
             let src = Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed });
             let mut v = Vec::new();
-            src.for_each(&mut |e| v.push((e.matrix, e.row, e.col)));
+            let _ = src.for_each(&mut |e| {
+                v.push((e.matrix, e.row, e.col));
+                ControlFlow::Continue(())
+            });
             v
         };
         assert_ne!(collect(1), collect(2));
@@ -266,8 +295,44 @@ mod tests {
         let (a, b) = small_pair();
         let src = Box::new(InterleavedSource { a: a.clone(), b: b.clone() });
         let mut count = 0;
-        src.for_each(&mut |_| count += 1);
+        let _ = src.for_each(&mut |_| {
+            count += 1;
+            ControlFlow::Continue(())
+        });
         assert_eq!(count, 6 * 4 + 6 * 3);
+    }
+
+    #[test]
+    fn entry_break_stops_the_replay_immediately() {
+        // The early-exit contract itself: a Break after the 5th entry must
+        // leave the rest of the stream unread and surface as Break.
+        let (a, b) = small_pair();
+        for src in [
+            Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: 7 })
+                as Box<dyn EntrySource>,
+            Box::new(InterleavedSource { a: a.clone(), b: b.clone() }),
+        ] {
+            let mut count = 0;
+            let flow = src.for_each(&mut |_| {
+                count += 1;
+                if count == 5 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+            });
+            assert_eq!(flow, ControlFlow::Break(()));
+            assert_eq!(count, 5, "visitor kept running after Break");
+        }
+    }
+
+    #[test]
+    fn column_break_stops_the_replay_immediately() {
+        let (a, b) = small_pair();
+        let src = Box::new(DenseColumnSource { a, b });
+        let mut count = 0;
+        let flow = src.for_each_column(&mut |_, _, _| {
+            count += 1;
+            if count == 2 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+        });
+        assert_eq!(flow, ControlFlow::Break(()));
+        assert_eq!(count, 2, "column visitor kept running after Break");
     }
 
     #[test]
@@ -277,7 +342,7 @@ mod tests {
         assert_eq!(src.meta(), StreamMeta { d: 6, n1: 4, n2: 3 });
         let mut seen_a = vec![0usize; 4];
         let mut seen_b = vec![0usize; 3];
-        src.for_each_column(&mut |id, j, col| {
+        let _ = src.for_each_column(&mut |id, j, col| {
             let m = match id {
                 MatrixId::A => {
                     seen_a[j as usize] += 1;
@@ -292,6 +357,7 @@ mod tests {
             for (i, &v) in col.iter().enumerate() {
                 assert_eq!(v, m[(i, j as usize)]);
             }
+            ControlFlow::Continue(())
         });
         assert!(seen_a.iter().all(|&c| c == 1));
         assert!(seen_b.iter().all(|&c| c == 1));
@@ -305,7 +371,10 @@ mod tests {
             entries: entries.clone(),
         });
         let mut got = Vec::new();
-        src.for_each(&mut |e| got.push(e));
+        let _ = src.for_each(&mut |e| {
+            got.push(e);
+            ControlFlow::Continue(())
+        });
         assert_eq!(got, entries);
     }
 
@@ -318,9 +387,12 @@ mod tests {
         assert_eq!(src.meta(), StreamMeta { d: 6, n1: 4, n2: 3 });
         let mut seen_a = Mat::zeros(6, 4);
         let mut seen_b = Mat::zeros(6, 3);
-        src.for_each(&mut |e| match e.matrix {
-            MatrixId::A => seen_a[(e.row as usize, e.col as usize)] = e.value,
-            MatrixId::B => seen_b[(e.row as usize, e.col as usize)] = e.value,
+        let _ = src.for_each(&mut |e| {
+            match e.matrix {
+                MatrixId::A => seen_a[(e.row as usize, e.col as usize)] = e.value,
+                MatrixId::B => seen_b[(e.row as usize, e.col as usize)] = e.value,
+            }
+            ControlFlow::Continue(())
         });
         std::fs::remove_file(&path).ok();
         crate::testing::assert_close(seen_a.data(), a.data(), 1e-12);

@@ -72,10 +72,13 @@ fn out_of_range_entry_panics_worker_and_is_reported() {
         fn meta(&self) -> StreamMeta {
             StreamMeta { d: 4, n1: 3, n2: 3 }
         }
-        fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
-            f(Entry::a(0, 0, 1.0));
-            f(Entry::a(0, 99, 1.0)); // col out of range
-            f(Entry::b(0, 0, 1.0));
+        fn for_each(
+            self: Box<Self>,
+            f: &mut dyn FnMut(Entry) -> std::ops::ControlFlow<()>,
+        ) -> std::ops::ControlFlow<()> {
+            f(Entry::a(0, 0, 1.0))?;
+            f(Entry::a(0, 99, 1.0))?; // col out of range
+            f(Entry::b(0, 0, 1.0))
         }
     }
     let algo = SmpPcaConfig { rank: 1, sketch_size: 4, iters: 2, seed: 1, ..Default::default() };

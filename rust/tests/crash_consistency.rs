@@ -143,7 +143,10 @@ fn serve_snapshot_container_is_covered_by_the_same_matrix() {
     let a = Mat::gaussian(20, 7, &mut rng);
     let b = Mat::gaussian(20, 6, &mut rng);
     let mut entries = Vec::new();
-    Box::new(ShuffledMatrixSource { a, b, seed: 4 }).for_each(&mut |e: Entry| entries.push(e));
+    let _ = Box::new(ShuffledMatrixSource { a, b, seed: 4 }).for_each(&mut |e: Entry| {
+        entries.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
     let s = StreamSession::open("crash-snap", spec).unwrap();
     s.ingest(&entries).unwrap();
     let snap = s.refresh().unwrap();

@@ -1,4 +1,5 @@
-//! Seeded fuzz over the serve line protocol (ISSUE 6).
+//! Seeded fuzz over the serve line protocol (ISSUE 6) and its TCP framing
+//! layer (ISSUE 7).
 //!
 //! [`ServeProtocol::handle`] is the server's entire untrusted input
 //! surface; its contract is "never panic, answer malformed input with an
@@ -9,9 +10,14 @@
 //! stream. A panic anywhere fails the whole binary; a malformed line
 //! answered with anything but `err `/`ok `/a known report shape fails
 //! the assertion that names the offending input.
+//!
+//! The socket fuzz drives the same contract through a live [`NetServer`]:
+//! commands split across arbitrary write boundaries, oversized lines, and
+//! abrupt disconnects mid-command — every answerable line gets exactly one
+//! well-formed response, in order, and the listener survives everything.
 
 use smppca::rng::Pcg64;
-use smppca::server::{ServeProtocol, PROTOCOL_HELP};
+use smppca::server::{NetConfig, NetServer, ServeProtocol, PROTOCOL_HELP};
 
 /// Is `resp` a well-formed protocol answer (as opposed to a panic escape
 /// hatch or an empty string)? `help` and `streams` have their own shapes;
@@ -166,6 +172,128 @@ fn mutated_valid_commands_never_panic_and_never_corrupt_the_stream() {
     assert!(p.handle("stats fz").starts_with("stats fz "), "{}", p.handle("stats fz"));
     assert!(p.handle("ingest fz A:0:0:1.0").starts_with("ok"), "stream wedged");
     assert!(p.handle("close fz").starts_with("ok"), "close failed after fuzz");
+}
+
+#[test]
+fn socket_framing_fuzz_split_writes_oversized_and_disconnects() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    const MAX_LINE: usize = 512;
+    let proto = Arc::new(ServeProtocol::new());
+    let srv = NetServer::start(
+        proto.clone(),
+        NetConfig { workers: 2, max_line: MAX_LINE, ..Default::default() },
+    )
+    .unwrap();
+    let addr = srv.local_addr();
+
+    // Single-line-response commands only (no `help`/`stats LIVE`), so one
+    // answer per answerable line is the exact framing contract. Every
+    // stream name is unopened — perfectly valid syntax still has no side
+    // effects.
+    let mut rng = Pcg64::new(0xF0C4);
+    for case in 0..60u32 {
+        let nlines = 1 + rng.next_below(7) as usize;
+        let mut script: Vec<String> = Vec::new();
+        let mut answerable = 0usize;
+        for _ in 0..nlines {
+            match rng.next_below(6) {
+                0 => {
+                    // oversized line: refused in order, framing recovers
+                    let len = MAX_LINE + 1 + rng.next_below(200) as usize;
+                    script.push(format!("zz{}", "a".repeat(len)));
+                    answerable += 1;
+                }
+                1 => script.push(String::new()),          // skipped, no response
+                2 => script.push("# comment".to_string()), // skipped, no response
+                3 => {
+                    // printable byte soup; the zz prefix keeps it from ever
+                    // trim()-matching quit/exit/metrics
+                    let len = rng.next_below(40) as usize;
+                    let soup: String =
+                        (0..len).map(|_| char::from(0x20 + rng.next_below(0x5f) as u8)).collect();
+                    script.push(format!("zz{soup}"));
+                    answerable += 1;
+                }
+                _ => {
+                    const CMDS: [&str; 5] = [
+                        "streams",
+                        "estimate ghost 0 0",
+                        "top ghost",
+                        "refresh ghost",
+                        "close ghost",
+                    ];
+                    script.push(CMDS[rng.next_below(CMDS.len() as u64) as usize].to_string());
+                    answerable += 1;
+                }
+            }
+        }
+        let mut wire: Vec<u8> = Vec::new();
+        for l in &script {
+            wire.extend_from_slice(l.as_bytes());
+            wire.push(b'\n');
+        }
+        let abrupt = wire.len() > 1 && rng.next_below(4) == 0;
+        if abrupt {
+            // cut the stream mid-command: everything after the last full
+            // newline must die with the connection, silently (responses to
+            // the already-complete lines go unread)
+            let cut = 1 + rng.next_below(wire.len() as u64 - 1) as usize;
+            wire.truncate(cut);
+        }
+        let c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        let mut c = c;
+        // split the wire bytes across random write boundaries
+        let mut off = 0usize;
+        while off < wire.len() {
+            let n = 1 + rng.next_below(wire.len() as u64) as usize;
+            let end = (off + n).min(wire.len());
+            c.write_all(&wire[off..end]).unwrap();
+            c.flush().unwrap();
+            off = end;
+        }
+        if abrupt {
+            drop((c, r)); // disconnect mid-command; server must shrug
+            continue;
+        }
+        // Exactly one well-formed response per answerable line, in order.
+        for i in 0..answerable {
+            let mut line = String::new();
+            let n = r.read_line(&mut line).unwrap_or_else(|e| {
+                panic!("case {case}: read {i}/{answerable} failed: {e} (script {script:?})")
+            });
+            assert!(n > 0, "case {case}: connection closed after {i}/{answerable} responses");
+            let resp = line.trim_end_matches('\n');
+            assert!(
+                well_formed(resp) || resp.starts_with("err "),
+                "case {case}: response {i} malformed: {resp:?} (script {script:?})"
+            );
+        }
+        drop((c, r));
+    }
+
+    // The listener survived all of it: a clean session still round-trips.
+    let c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut r = BufReader::new(c.try_clone().unwrap());
+    let mut c = c;
+    c.write_all(b"open fzn d=4 n1=3 n2=3 k=6 rank=2 seed=3 samples=40 iters=2 workers=1\n")
+        .unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ok open fzn "), "server wedged by fuzz: {line}");
+    c.write_all(b"close fzn\n").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "ok close fzn");
+    drop((c, r));
+    srv.shutdown();
+    assert!(proto.service().close_all().is_empty(), "socket fuzz left a stream behind");
 }
 
 #[test]

@@ -1,0 +1,323 @@
+//! TCP front-end integration (ISSUE 7 acceptance): a multi-client TCP
+//! session is **byte-identical** to the stdin protocol on the same script
+//! — at 1, 2 and 8 ingest workers, with burst coalescing on — and the
+//! shed-load paths (per-burst command budgets, accept-queue overflow)
+//! answer with explicit `err shed ...` lines instead of buffering without
+//! bound. Quit/disconnect semantics are per-connection: one client ending
+//! its session never touches the listener or the other clients.
+
+use smppca::algo::SmpPcaConfig;
+use smppca::coordinator::metrics::stage;
+use smppca::linalg::Mat;
+use smppca::rng::Pcg64;
+use smppca::server::{NetConfig, NetServer, ServeProtocol};
+use smppca::stream::{Entry, EntrySource, MatrixId, ShuffledMatrixSource};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const D: usize = 40;
+const N1: usize = 14;
+const N2: usize = 12;
+
+fn algo() -> SmpPcaConfig {
+    SmpPcaConfig {
+        rank: 3,
+        sketch_size: 24,
+        samples: 500.0,
+        iters: 5,
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+fn stream_entries() -> Vec<Entry> {
+    let mut rng = Pcg64::new(42);
+    let a = Mat::gaussian(D, N1, &mut rng);
+    let b = Mat::gaussian(D, N2, &mut rng);
+    let mut out = Vec::new();
+    let _ = Box::new(ShuffledMatrixSource { a, b, seed: 77 }).for_each(&mut |e| {
+        out.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
+    out
+}
+
+/// The session script: setup lines (applied once) + query lines (replayed
+/// by every client). Query responses are all single-line, so clients can
+/// read exactly one line per command.
+fn setup_lines(workers: usize, entries: &[Entry]) -> Vec<String> {
+    let a = algo();
+    let mut lines = vec![format!(
+        "open s d={D} n1={N1} n2={N2} k={} rank={} seed={} samples={} iters={} workers={workers}",
+        a.sketch_size, a.rank, a.seed, a.samples, a.iters
+    )];
+    for chunk in entries.chunks(25) {
+        let records: Vec<String> = chunk
+            .iter()
+            .map(|e| {
+                let m = match e.matrix {
+                    MatrixId::A => "A",
+                    MatrixId::B => "B",
+                };
+                format!("{m}:{}:{}:{:.17e}", e.row, e.col, e.value)
+            })
+            .collect();
+        lines.push(format!("ingest s {}", records.join(" ")));
+    }
+    lines.push("refresh s".to_string());
+    lines
+}
+
+fn query_lines() -> Vec<String> {
+    [
+        // dense 2×2 run: the TCP path answers this from one block GEMM
+        "estimate s 0 0",
+        "estimate s 0 1",
+        "estimate s 1 0",
+        "estimate s 1 1",
+        "top s",
+        // sparse run (bounding box too big to coalesce into a block)
+        "estimate s 2 3",
+        "estimate s 13 11",
+        // out-of-range + unknown stream keep their per-line error text
+        "estimate s 99 0",
+        "estimate ghost 0 0",
+        "streams",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+fn connect(srv: &NetServer) -> (TcpStream, BufReader<TcpStream>) {
+    let c = TcpStream::connect(srv.local_addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let r = BufReader::new(c.try_clone().unwrap());
+    (c, r)
+}
+
+fn read_lines(r: &mut BufReader<TcpStream>, n: usize) -> Vec<String> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut line = String::new();
+        assert!(r.read_line(&mut line).unwrap() > 0, "connection closed early");
+        out.push(line.trim_end_matches('\n').to_string());
+    }
+    out
+}
+
+#[test]
+fn concurrent_tcp_clients_match_stdin_protocol_bitwise_at_1_2_8_workers() {
+    let entries = stream_entries();
+    let split = entries.len() * 3 / 5;
+    let queries = query_lines();
+    for workers in [1usize, 2, 8] {
+        // Reference: the stdin protocol (per-line `handle`) on one script.
+        let reference = ServeProtocol::new();
+        for l in setup_lines(workers, &entries[..split]) {
+            let resp = reference.handle(&l);
+            assert!(resp.starts_with("ok "), "workers={workers}: {resp}");
+        }
+        let expected: Vec<String> = queries.iter().map(|l| reference.handle(l)).collect();
+        reference.service().close_all();
+
+        // The same session over TCP, queries from 3 concurrent clients
+        // (bursts coalesced server-side) while a 4th keeps ingesting.
+        let proto = Arc::new(ServeProtocol::new());
+        let srv = NetServer::start(
+            proto.clone(),
+            NetConfig { workers: 4, ..Default::default() },
+        )
+        .unwrap();
+        let (mut setup, mut setup_r) = connect(&srv);
+        for l in setup_lines(workers, &entries[..split]) {
+            setup.write_all(format!("{l}\n").as_bytes()).unwrap();
+            let resp = read_lines(&mut setup_r, 1).remove(0);
+            assert!(resp.starts_with("ok "), "workers={workers}: {resp}");
+        }
+        let burst = queries.join("\n") + "\n";
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let burst = burst.clone();
+                let addr = srv.local_addr();
+                let n = queries.len();
+                std::thread::spawn(move || {
+                    let c = TcpStream::connect(addr).unwrap();
+                    c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+                    let mut r = BufReader::new(c.try_clone().unwrap());
+                    let mut c = c;
+                    c.write_all(burst.as_bytes()).unwrap();
+                    read_lines(&mut r, n)
+                })
+            })
+            .collect();
+        // Concurrent ingest past the queried prefix: published epoch 1 is
+        // immutable, so the queries above stay bitwise stable under it.
+        for chunk in entries[split..].chunks(25) {
+            let records: Vec<String> = chunk
+                .iter()
+                .map(|e| {
+                    let m = match e.matrix {
+                        MatrixId::A => "A",
+                        MatrixId::B => "B",
+                    };
+                    format!("{m}:{}:{}:{:.17e}", e.row, e.col, e.value)
+                })
+                .collect();
+            setup.write_all(format!("ingest s {}\n", records.join(" ")).as_bytes()).unwrap();
+            let resp = read_lines(&mut setup_r, 1).remove(0);
+            assert!(resp.starts_with("ok ingest s "), "{resp}");
+        }
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(got, expected, "workers={workers}: TCP vs stdin protocol");
+        }
+        // The dense run really went through the block path.
+        let stats = proto.handle("stats s");
+        assert!(stats.contains("serve/query_blocks"), "no coalesced block GEMM ran: {stats}");
+        assert!(stats.contains("serve/query_coalesced"), "{stats}");
+        drop((setup, setup_r));
+        srv.shutdown();
+        for (name, e) in proto.service().close_all() {
+            panic!("stream {name} closed with error: {e:#}");
+        }
+    }
+}
+
+#[test]
+fn burst_over_budget_sheds_commands_with_explicit_errors() {
+    let proto = Arc::new(ServeProtocol::new());
+    let srv = NetServer::start(
+        proto.clone(),
+        NetConfig { workers: 1, queue_budget: 2, ..Default::default() },
+    )
+    .unwrap();
+    let (mut c, mut r) = connect(&srv);
+    // 6 pipelined commands in one write: at most 2 per burst are served,
+    // the rest come back `err shed ...`. (If the kernel delivers the burst
+    // in several reads, each window sheds past its own budget — either
+    // way every command is answered and at least one is shed.)
+    let burst = "streams\n".repeat(6);
+    c.write_all(burst.as_bytes()).unwrap();
+    let got = read_lines(&mut r, 6);
+    let served = got.iter().filter(|l| *l == "streams: (none)").count();
+    let shed = got.iter().filter(|l| l.starts_with("err shed burst over budget")).count();
+    assert_eq!(served + shed, 6, "every command answered: {got:?}");
+    assert!(served >= 2, "budget-sized prefix must be served: {got:?}");
+    assert!(shed >= 1, "over-budget commands must shed: {got:?}");
+    assert!(
+        srv.metrics().counter(stage::NET_SHED_COMMANDS) >= 1,
+        "shed counter must move"
+    );
+    drop((c, r));
+    srv.shutdown();
+}
+
+#[test]
+fn accept_queue_overflow_sheds_connections() {
+    let proto = Arc::new(ServeProtocol::new());
+    let srv = NetServer::start(
+        proto.clone(),
+        NetConfig { workers: 1, backlog: 1, ..Default::default() },
+    )
+    .unwrap();
+    // Pin the only handler to one connection (a served response proves
+    // it's bound), then pile on connections until the 1-deep accept queue
+    // overflows and one of them reads the shed line.
+    let (mut held, mut held_r) = connect(&srv);
+    held.write_all(b"streams\n").unwrap();
+    assert_eq!(read_lines(&mut held_r, 1), vec!["streams: (none)"]);
+    let mut saw_shed = false;
+    let mut spares = Vec::new();
+    for _ in 0..5 {
+        let c = TcpStream::connect(srv.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        match r.read_line(&mut line) {
+            Ok(n) if n > 0 && line.starts_with("err shed accept queue full") => {
+                saw_shed = true;
+                break;
+            }
+            // queued (no bytes until a handler frees) or closed — keep the
+            // socket alive so the queue stays full and try another
+            _ => spares.push((c, r)),
+        }
+    }
+    assert!(saw_shed, "accept-queue overflow must shed a connection");
+    assert!(srv.metrics().counter(stage::NET_SHED_CONNECTIONS) >= 1);
+    drop((held, held_r, spares));
+    srv.shutdown();
+}
+
+#[test]
+fn quit_and_mid_line_disconnect_close_only_their_own_connection() {
+    let proto = Arc::new(ServeProtocol::new());
+    let srv = NetServer::start(
+        proto.clone(),
+        NetConfig { workers: 3, ..Default::default() },
+    )
+    .unwrap();
+    let (mut a, mut a_r) = connect(&srv);
+    a.write_all(b"open q d=4 n1=3 n2=3 k=6 rank=2 seed=3 samples=40 iters=2 workers=1\n")
+        .unwrap();
+    assert!(read_lines(&mut a_r, 1)[0].starts_with("ok open q "));
+    let (mut b, mut b_r) = connect(&srv);
+
+    // Client A quits (with a pipelined command after the quit, which dies
+    // with the connection, like a script ending at `quit`).
+    a.write_all(b"streams\nquit\nstreams\n").unwrap();
+    assert_eq!(read_lines(&mut a_r, 1), vec!["streams: q"]);
+    let mut rest = String::new();
+    assert_eq!(a_r.read_to_string(&mut rest).unwrap(), 0, "quit must close A's connection");
+
+    // Client B is untouched — same session state, same server.
+    b.write_all(b"streams\n").unwrap();
+    assert_eq!(read_lines(&mut b_r, 1), vec!["streams: q"]);
+
+    // Client C disconnects mid-command (no newline): nothing executes, no
+    // response, and the server keeps serving everyone else.
+    let (mut c, c_r) = connect(&srv);
+    c.write_all(b"close q").unwrap(); // dangling partial line
+    drop((c, c_r));
+    std::thread::sleep(Duration::from_millis(100));
+    b.write_all(b"streams\n").unwrap();
+    assert_eq!(
+        read_lines(&mut b_r, 1),
+        vec!["streams: q"],
+        "a dangling partial command must not execute"
+    );
+    drop((a, a_r, b, b_r));
+    srv.shutdown();
+    proto.service().close_all();
+}
+
+#[test]
+fn metrics_command_scrapes_counters_and_stream_stats() {
+    let proto = Arc::new(ServeProtocol::new());
+    let srv = NetServer::start(proto.clone(), NetConfig::default()).unwrap();
+    let (mut c, mut c_r) = connect(&srv);
+    c.write_all(b"open m d=4 n1=3 n2=3 k=6 rank=2 seed=3 samples=40 iters=2 workers=1\n")
+        .unwrap();
+    assert!(read_lines(&mut c_r, 1)[0].starts_with("ok open m "));
+    c.write_all(b"metrics\n").unwrap();
+    // The scrape is one multi-line response; first line is the keyword,
+    // and somewhere in it are the net counters and the stream's stats head.
+    let mut got = read_lines(&mut c_r, 2).join("\n");
+    assert!(got.starts_with("metrics"), "{got}");
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while !(got.contains(stage::NET_CONNECTIONS) && got.contains("stats m ")) {
+        assert!(std::time::Instant::now() < deadline, "incomplete scrape: {got}");
+        let mut line = String::new();
+        if c_r.read_line(&mut line).unwrap_or(0) > 0 {
+            got.push('\n');
+            got.push_str(line.trim_end_matches('\n'));
+        }
+    }
+    assert!(got.contains(stage::NET_LINES), "{got}");
+    drop((c, c_r));
+    srv.shutdown();
+    proto.service().close_all();
+}

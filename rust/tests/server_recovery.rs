@@ -62,7 +62,10 @@ fn stream_entries() -> Vec<Entry> {
     let a = Mat::gaussian(D, N1, &mut rng);
     let b = Mat::gaussian(D, N2, &mut rng);
     let mut out = Vec::new();
-    Box::new(ShuffledMatrixSource { a, b, seed: 77 }).for_each(&mut |e| out.push(e));
+    let _ = Box::new(ShuffledMatrixSource { a, b, seed: 77 }).for_each(&mut |e| {
+        out.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
     out
 }
 
@@ -233,8 +236,12 @@ fn env_plan_checkpoint_ioerr_is_atomic_and_retryable() {
     let err = s.checkpoint(&dir).expect_err("first shard write must fail by plan");
     assert!(err.to_string().contains("fault injected"), "{err}");
     assert!(
-        !dir.join("shard0.a").exists(),
+        !dir.join("gen-000001").join("shard0.a").exists(),
         "failed write must not leave a canonical shard file"
+    );
+    assert!(
+        !dir.join("MANIFEST").exists(),
+        "failed first checkpoint must not commit a manifest"
     );
     // Retry with the fault exhausted: full checkpoint lands.
     let shards = s.checkpoint(&dir).unwrap();
@@ -266,24 +273,80 @@ fn simulated_kill9_mid_checkpoint_leaves_stale_tmp_but_good_file() {
     let s = StreamSession::open("kill9", spec(1)).unwrap();
     s.ingest(&entries[..200]).unwrap();
     s.checkpoint(&dir).unwrap(); // generation 1, good
-    let gen1 = std::fs::read(dir.join("shard0.a")).unwrap();
+    let gen1 = std::fs::read(dir.join("gen-000001").join("shard0.a")).unwrap();
     s.ingest(&entries[200..]).unwrap();
     fault::install("checkpoint/sync:ioerr@nth=1").unwrap();
     s.checkpoint(&dir).expect_err("overwrite must fail mid-write");
     fault::clear();
-    // The interrupted overwrite left gen-1 bytes untouched (and possibly a
-    // stale shard0.a.tmp — crash debris that must be ignored).
+    // The interrupted attempt staged into gen-000002 and never committed:
+    // generation 1's bytes are untouched and the manifest still names it.
     assert_eq!(
-        std::fs::read(dir.join("shard0.a")).unwrap(),
+        std::fs::read(dir.join("gen-000001").join("shard0.a")).unwrap(),
         gen1,
         "failed overwrite must leave the previous checkpoint bitwise intact"
     );
     let states = StreamSession::restore_states(&dir).unwrap();
-    assert_eq!(states.len(), 1, "stale tmp files must not be mistaken for shards");
-    // A clean retry supersedes the debris.
+    assert_eq!(states.len(), 1, "torn staging must not be mistaken for shards");
+    // A clean retry supersedes the debris and prunes generation 1.
     s.checkpoint(&dir).unwrap();
-    assert_ne!(std::fs::read(dir.join("shard0.a")).unwrap(), gen1, "gen 2 must land");
+    let gen2 = std::fs::read(dir.join("gen-000002").join("shard0.a")).unwrap();
+    assert_ne!(gen2, gen1, "gen 2 must land");
+    assert!(!dir.join("gen-000001").exists(), "superseded generation must be pruned");
     s.close().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    drop(guard);
+}
+
+#[test]
+fn interrupted_multi_shard_checkpoint_never_mixes_generations() {
+    // The mixed-generation bug: `checkpoint DIR` on a multi-shard session
+    // writes several files, each individually atomic — a crash *between*
+    // files used to leave shard0 from the new freeze next to shard1 from
+    // the old one, every file CRC-valid and the set silently inconsistent.
+    // With generation staging + manifest commit, an injected kill between
+    // shard writes must leave the previous generation the one that
+    // restores, bit for bit.
+    let guard = lock();
+    let entries = stream_entries();
+    fault::clear();
+    let dir = std::env::temp_dir().join(format!("smppca_recovery_mixgen_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let s = StreamSession::open("mixgen", spec(2)).unwrap();
+    s.ingest(&entries[..300]).unwrap();
+    let reference = s.refresh().unwrap();
+    assert_eq!(s.checkpoint(&dir).unwrap(), 2); // generation 1: 4 shard files
+    // More ingest, then die on the 3rd shard file of the next checkpoint —
+    // i.e. between shard 0 (written) and shard 1 (not) of generation 2.
+    s.ingest(&entries[300..]).unwrap();
+    fault::install("checkpoint/write:ioerr@nth=3").unwrap();
+    s.checkpoint(&dir).expect_err("third shard write must fail by plan");
+    fault::clear();
+    // The torn staging generation really does hold a partial new set…
+    assert!(
+        dir.join("gen-000002").join("shard0.a").exists(),
+        "test premise: the interrupted attempt wrote part of generation 2"
+    );
+    assert!(!dir.join("gen-000002").join("shard1.b").exists());
+    // …but restore sees only committed generation 1: resuming from it and
+    // refreshing reproduces the pre-interruption snapshot bitwise. Before
+    // the manifest, this restore read gen-2 shard0 + gen-1 shard1.
+    let states = StreamSession::restore_states(&dir).unwrap();
+    assert_eq!(states.len(), 2);
+    let resumed = StreamSession::open_with_states("mixgen-resume", spec(2), states).unwrap();
+    let snap = resumed.refresh().unwrap();
+    assert_eq!(snap.factors.u.data(), reference.factors.u.data());
+    assert_eq!(snap.factors.v.data(), reference.factors.v.data());
+    resumed.close().unwrap();
+    // A clean retry commits the full-prefix checkpoint as generation 2.
+    let want = s.refresh().unwrap();
+    s.checkpoint(&dir).unwrap();
+    s.close().unwrap();
+    let states = StreamSession::restore_states(&dir).unwrap();
+    let resumed = StreamSession::open_with_states("mixgen-resume2", spec(2), states).unwrap();
+    let snap = resumed.refresh().unwrap();
+    assert_eq!(snap.factors.u.data(), want.factors.u.data());
+    assert_eq!(snap.factors.v.data(), want.factors.v.data());
+    resumed.close().unwrap();
     std::fs::remove_dir_all(&dir).ok();
     drop(guard);
 }

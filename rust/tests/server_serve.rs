@@ -43,7 +43,10 @@ fn stream_entries() -> Vec<Entry> {
     let a = Mat::gaussian(D, N1, &mut rng);
     let b = Mat::gaussian(D, N2, &mut rng);
     let mut out = Vec::new();
-    Box::new(ShuffledMatrixSource { a, b, seed: 77 }).for_each(&mut |e| out.push(e));
+    let _ = Box::new(ShuffledMatrixSource { a, b, seed: 77 }).for_each(&mut |e| {
+        out.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
     out
 }
 

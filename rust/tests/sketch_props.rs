@@ -31,7 +31,10 @@ fn entries_of(a: &Mat, b: &Mat, order_seed: u64) -> (StreamMeta, Vec<Entry>) {
     let mut entries = Vec::new();
     let src: Box<dyn EntrySource> =
         Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: order_seed });
-    src.for_each(&mut |e| entries.push(e));
+    let _ = src.for_each(&mut |e| {
+        entries.push(e);
+        std::ops::ControlFlow::Continue(())
+    });
     (meta, entries)
 }
 

@@ -65,10 +65,14 @@ fn duplicate_aware_split_entries_accumulate() {
         fn meta(&self) -> StreamMeta {
             self.meta
         }
-        fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+        fn for_each(
+            self: Box<Self>,
+            f: &mut dyn FnMut(Entry) -> std::ops::ControlFlow<()>,
+        ) -> std::ops::ControlFlow<()> {
             for e in self.inner {
-                f(e);
+                f(e)?;
             }
+            std::ops::ControlFlow::Continue(())
         }
     }
     let (a, b) = dataset();
@@ -116,17 +120,21 @@ fn zero_entries_are_noops() {
         fn meta(&self) -> StreamMeta {
             StreamMeta { d: self.a.rows(), n1: self.a.cols(), n2: self.b.cols() }
         }
-        fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry)) {
+        fn for_each(
+            self: Box<Self>,
+            f: &mut dyn FnMut(Entry) -> std::ops::ControlFlow<()>,
+        ) -> std::ops::ControlFlow<()> {
             for i in 0..self.a.rows() {
                 for j in 0..self.a.cols() {
-                    f(Entry::a(i as u32, j as u32, self.a[(i, j)]));
-                    f(Entry::a(i as u32, j as u32, 0.0));
+                    f(Entry::a(i as u32, j as u32, self.a[(i, j)]))?;
+                    f(Entry::a(i as u32, j as u32, 0.0))?;
                 }
                 for j in 0..self.b.cols() {
-                    f(Entry::b(i as u32, j as u32, self.b[(i, j)]));
-                    f(Entry::b(i as u32, j as u32, 0.0));
+                    f(Entry::b(i as u32, j as u32, self.b[(i, j)]))?;
+                    f(Entry::b(i as u32, j as u32, 0.0))?;
                 }
             }
+            std::ops::ControlFlow::Continue(())
         }
     }
     let f1 = run(Box::new(WithZeros { a: a.clone(), b: b.clone() }), 2);
