@@ -11,7 +11,10 @@
 //! `server/recovery_replay/*` worker-kill recovery cost under an armed fault
 //! plan), the unified runtime (`pool/spawn_overhead/*` persistent-pool dispatch vs
 //! fresh scoped spawn/join, `gemm/small_par/*` small-GEMM parallel cost on
-//! the pool vs the scoped baseline), ALS solve, end-to-end leader finish.
+//! the pool vs the scoped baseline), ALS solve, end-to-end leader finish,
+//! and the SIMD kernel layer (`gemm/kernel=*`, `fwht/kernel=*`,
+//! `sketch_ingest/column_block/*/kernel=*` — the same work pinned to the
+//! scalar vs AVX2 kernel sets; avx2 rows appear only on capable hardware).
 //!
 //! ```bash
 //! cargo bench --bench hotpaths            # human-readable table
@@ -124,6 +127,25 @@ fn main() {
                     black_box(st_a.entries_seen() + st_b.entries_seen());
                 },
             );
+        }
+        // Kernel-dispatch variants of the batched column-block path: the
+        // identical ingest_dense pass pinned to each kernel set via
+        // new_with_kernel, so the JSON carries scalar vs avx2 side by side.
+        // avx2 rows appear only on hardware that has AVX2+FMA.
+        for kern in std::iter::once(smppca::linalg::kernels::scalar())
+            .chain(smppca::linalg::kernels::avx2())
+        {
+            for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+                suite.bench_items(
+                    &format!("sketch_ingest/column_block/{kind:?}/kernel={}", kern.name),
+                    total,
+                    || {
+                        let mut st = SketchState::new_with_kernel(kind, 7, k, di, ni, kern);
+                        st.ingest_dense(&ai);
+                        black_box(st.entries_seen());
+                    },
+                );
+            }
         }
         // Full column-sharded pipeline (router + channels + update_cols).
         for w in [1usize, 4] {
@@ -322,6 +344,26 @@ fn main() {
                     black_box(a.par_matmul(&b, t));
                 });
             }
+            // Kernel-dispatch variants: the same packed single-threaded
+            // product pinned to each kernel set via gemm_with (portable
+            // 4×4 tile vs 8×4 AVX2+FMA tile). avx2 rows appear only on
+            // hardware that has it; `gemm/packed/*` above stays on the
+            // process-wide auto selection.
+            for kern in std::iter::once(smppca::linalg::kernels::scalar())
+                .chain(smppca::linalg::kernels::avx2())
+            {
+                let mut c = vec![0.0; m * n2];
+                suite.bench_items(
+                    &format!("gemm/kernel={}/{m}x{kdim}x{n2}", kern.name),
+                    flops,
+                    || {
+                        gemm::gemm_with(
+                            kern, m, n2, kdim, a.data(), kdim, 1, b.data(), n2, 1, &mut c, 1,
+                        );
+                        black_box(c[0]);
+                    },
+                );
+            }
         }
         // Transposed-operand forms (the sketch-gram shapes): packing
         // absorbs the strides, so these should track `gemm/packed`.
@@ -336,6 +378,30 @@ fn main() {
         suite.bench_items("gemm/matmul_t/256x512x256", flops, || {
             black_box(p.matmul_t(&q));
         });
+    }
+
+    // ----------------------------------------------------- fwht kernels
+    // The butterfly under the SRHT batch path, pinned per kernel set. All
+    // FWHT kernels are bitwise identical (pure add/sub over fixed index
+    // pairs), so these rows price the cache-blocked pass order and the
+    // 4-lane butterfly alone. Sizes straddle the 4096-double cache block.
+    {
+        use smppca::linalg::{fwht, kernels};
+        let mut r = Pcg64::new(19);
+        for logn in [12usize, 16] {
+            let n = 1usize << logn;
+            let x: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+            for kern in std::iter::once(kernels::scalar()).chain(kernels::avx2()) {
+                let mut buf = x.clone();
+                suite.bench_items(&format!("fwht/kernel={}/n{n}", kern.name), n as u64, || {
+                    // Re-seed each iter: the unnormalized transform scales
+                    // by n per pass, so feeding it back would overflow.
+                    buf.copy_from_slice(&x);
+                    fwht::fwht_inplace_with(kern, &mut buf);
+                    black_box(buf[0]);
+                });
+            }
+        }
     }
 
     // --------------------------------------------- factorization subsystem

@@ -121,6 +121,16 @@ RUN OPTIONS:
   literally; 0 means auto = all cores capped by the SMPPCA_THREADS env var
   (the env caps auto sizing only — explicit counts keep their width on the
   persistent worker pool). See EXPERIMENTS.md §Runtime.
+
+  Kernel precedence (one policy, resolved once per process in
+  linalg::kernels for every stage): SMPPCA_KERNEL=auto|scalar|avx2 selects
+  the SIMD kernel set behind GEMM, the FWHT, and the CountSketch hash map.
+  auto (the default when unset) picks avx2 iff the CPU has AVX2+FMA;
+  scalar forces the portable kernels (bitwise-identical to pre-SIMD
+  releases — the reproducibility suites pin this); avx2 fails fast on CPUs
+  without AVX2+FMA, and any other value is an error naming the accepted
+  ones. Every kernel is deterministic run-to-run and thread-count-
+  invariant. See EXPERIMENTS.md §Perf.
   --sketch KIND      gaussian|srht|countsketch (default gaussian)
   --engine E         native|native-tiled|xla (default native; native-tiled
                      batches gram tiles through the GEMM worker pool; xla
@@ -252,6 +262,22 @@ mod tests {
         assert!(HELP.contains("precedence"), "HELP must document thread-count precedence");
         assert!(HELP.contains("SMPPCA_THREADS"), "HELP must name the env cap");
         assert!(HELP.contains("runtime::pool"), "HELP must point at the policy's one home");
+    }
+
+    #[test]
+    fn kernel_policy_precedence_documented() {
+        // The kernel override rides beside the thread policy in HELP: the
+        // env var, the accepted values, and the module that owns the
+        // resolution must all be named.
+        assert!(HELP.contains("SMPPCA_KERNEL"), "HELP must name the kernel override env var");
+        assert!(
+            HELP.contains("auto|scalar|avx2"),
+            "HELP must spell out the accepted kernel values"
+        );
+        assert!(HELP.contains("linalg::kernels"), "HELP must point at the policy's one home");
+        // And the parser itself fails fast with the accepted values named.
+        let err = crate::linalg::kernels::parse_choice("neon").unwrap_err();
+        assert!(err.contains("auto|scalar|avx2"), "{err}");
     }
 
     #[test]

@@ -5,26 +5,26 @@
 //! `H[s, i] ∈ {+1, −1}` in O(1) via popcount parity, which is what lets the
 //! SRHT sketch ingest *single streamed entries* without ever running a
 //! transform (see `sketch::srht`).
+//!
+//! The butterfly itself lives in the kernel layer
+//! ([`crate::linalg::kernels`]): scalar ascending-`h`, or a cache-blocked
+//! 4-lane AVX2 sweep. All kernels are **bitwise identical** — the transform
+//! is pure add/sub over fixed index pairs, so blocking and lane width only
+//! reorder independent pairs (EXPERIMENTS.md §Perf).
+
+use super::kernels::{self, Kernels};
 
 /// In-place unnormalized Walsh–Hadamard transform. `x.len()` must be a
-/// power of two. `H² = d·I`, so applying twice scales by `d`.
+/// power of two. `H² = d·I`, so applying twice scales by `d`. Routes
+/// through the process-wide kernel set.
 pub fn fwht_inplace(x: &mut [f64]) {
-    let n = x.len();
-    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
-    let mut h = 1;
-    while h < n {
-        let mut i = 0;
-        while i < n {
-            for j in i..i + h {
-                let a = x[j];
-                let b = x[j + h];
-                x[j] = a + b;
-                x[j + h] = a - b;
-            }
-            i += 2 * h;
-        }
-        h *= 2;
-    }
+    (kernels::active().fwht)(x);
+}
+
+/// [`fwht_inplace`] with an explicit kernel set (agreement tests, bench
+/// kernel variants).
+pub fn fwht_inplace_with(kern: &Kernels, x: &mut [f64]) {
+    (kern.fwht)(x);
 }
 
 /// Sign of the Hadamard entry `H[s, i]` for the Sylvester ordering:

@@ -1,38 +1,49 @@
 //! Packed, cache-blocked, register-tiled f64 GEMM — the dense kernel under
 //! every `Mat` product in the crate.
 //!
-//! Structure (the classic BLIS/GotoBLAS decomposition, scalar-Rust flavor):
+//! Structure (the classic BLIS/GotoBLAS decomposition):
 //! * the operand is walked in `KC × NC` B-panels and `MC × KC` A-blocks;
-//!   both are **packed** into contiguous micro-panel buffers so the inner
-//!   kernel only ever touches unit-stride memory, regardless of whether the
-//!   logical operand is `A`, `Aᵀ` or `Bᵀ` (transposition is absorbed by the
-//!   `(row-stride, col-stride)` packing view — nothing is materialized);
-//! * an `MR × NR` register-tiled microkernel accumulates into a fixed-size
-//!   local array with unrolled unit-stride loops that autovectorize;
+//!   both are **packed** into contiguous 64-byte-aligned micro-panel
+//!   buffers ([`kernels::AlignedBuf`]) so the inner kernel only ever
+//!   touches unit-stride (and, for SIMD kernels, aligned) memory,
+//!   regardless of whether the logical operand is `A`, `Aᵀ` or `Bᵀ`
+//!   (transposition is absorbed by the `(row-stride, col-stride)` packing
+//!   view — nothing is materialized);
+//! * an `mr × nr` register-tiled microkernel accumulates the packed
+//!   panels; the tile shape and implementation come from the process-wide
+//!   kernel set ([`kernels::active`]): 4×4 portable scalar, or 8×4
+//!   AVX2+FMA when the CPU has it (`SMPPCA_KERNEL` overrides);
 //! * `threads > 1` shards row-panels of C across the persistent runtime
 //!   pool ([`crate::runtime::pool::ExecCtx::run_chunks_mut`] — disjoint
 //!   chunks, shared read-only operands), so repeated small/medium GEMMs no
 //!   longer pay a thread spawn/join per call.
 //!
 //! Sharding by rows keeps the reduction order per C entry identical to the
-//! single-threaded kernel, so results are **bitwise independent of the
-//! thread count**. Blocking parameters are documented in EXPERIMENTS.md
-//! §Perf together with the measured speedups over [`matmul_naive`].
+//! single-threaded kernel (for every kernel the k-chain per element is
+//! fixed by the KC blocking, and the SIMD tile accumulates its full padded
+//! shape regardless of where it sits), so results are **bitwise independent
+//! of the thread count**. Blocking parameters are documented in
+//! EXPERIMENTS.md §Perf together with the measured speedups over
+//! [`matmul_naive`].
 
 use super::dense::Mat;
+use super::kernels::{self, AlignedBuf, Kernels};
 use crate::runtime::pool::{self, ExecCtx};
 
 // Thread-count policy lives in `runtime::pool`; re-exported here for the
 // historical `gemm::max_threads` / `gemm::pool_size` callers.
 pub use crate::runtime::pool::{max_threads, pool_size, resolve_threads};
 
-/// Microkernel rows (register tile height).
-pub const MR: usize = 4;
-/// Microkernel columns (register tile width — the vectorized direction).
-pub const NR: usize = 4;
-/// K blocking: one packed A micro-panel strip is `MR × KC`.
+/// Scalar-kernel register tile height (kept for callers that sized things
+/// off the historical 4×4 tile; the active kernel's shape is
+/// `kernels::active().mr/nr`).
+pub const MR: usize = kernels::scalar::MR;
+/// Scalar-kernel register tile width.
+pub const NR: usize = kernels::scalar::NR;
+/// K blocking: one packed A micro-panel strip is `mr × KC`.
 pub const KC: usize = 256;
 /// M blocking: the packed A block (`MC × KC` ≈ 128 KiB) targets L2.
+/// Divisible by both the scalar (4) and AVX2 (8) tile heights.
 pub const MC: usize = 64;
 /// N blocking: the packed B panel (`KC × NC` ≈ 1 MiB) targets L3.
 pub const NC: usize = 512;
@@ -63,6 +74,27 @@ pub fn gemm(
     c: &mut [f64],
     threads: usize,
 ) {
+    gemm_with(kernels::active(), m, n, k, a, a_rs, a_cs, b, b_rs, b_cs, c, threads);
+}
+
+/// [`gemm`] with an explicit kernel set — the entry point the agreement
+/// tests and the `kernel={scalar,avx2}` bench variants use to pit
+/// implementations against each other inside one process.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with(
+    kern: &'static Kernels,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    a_rs: usize,
+    a_cs: usize,
+    b: &[f64],
+    b_rs: usize,
+    b_cs: usize,
+    c: &mut [f64],
+    threads: usize,
+) {
     assert_eq!(c.len(), m * n, "C shape mismatch");
     for v in c.iter_mut() {
         *v = 0.0;
@@ -73,20 +105,21 @@ pub fn gemm(
     let flops = m.saturating_mul(n).saturating_mul(k);
     let t = pool::pool_size_grained(threads, m, flops, PAR_FLOP_GRAIN);
     if t <= 1 {
-        gemm_st(m, n, k, a, a_rs, a_cs, b, b_rs, b_cs, c, n);
+        gemm_st(kern, m, n, k, a, a_rs, a_cs, b, b_rs, b_cs, c, n);
         return;
     }
     let rows_per = m.div_ceil(t);
     ExecCtx::with_threads(t).run_chunks_mut(c, rows_per * n, |w, c_chunk| {
         let mw = c_chunk.len() / n;
         let a_w = &a[w * rows_per * a_rs..];
-        gemm_st(mw, n, k, a_w, a_rs, a_cs, b, b_rs, b_cs, c_chunk, n);
+        gemm_st(kern, mw, n, k, a_w, a_rs, a_cs, b, b_rs, b_cs, c_chunk, n);
     });
 }
 
 /// Single-threaded blocked driver. `c` rows are `c_stride` apart.
 #[allow(clippy::too_many_arguments)]
 fn gemm_st(
+    kern: &Kernels,
     m: usize,
     n: usize,
     k: usize,
@@ -99,26 +132,33 @@ fn gemm_st(
     c: &mut [f64],
     c_stride: usize,
 ) {
-    let mut apack = vec![0.0f64; MC * KC];
-    let mut bpack = vec![0.0f64; KC * NC];
+    let (mr, nr) = (kern.mr, kern.nr);
+    debug_assert_eq!(MC % mr, 0, "MC must be a multiple of the tile height");
+    debug_assert_eq!(NC % nr, 0, "NC must be a multiple of the tile width");
+    // 64-byte-aligned packing buffers: A panels start at `ip·kb·mr` doubles
+    // and B panels at `jp·kb·nr`, so with an aligned base every packed
+    // micro-panel row/column is a valid aligned vector-load target.
+    let mut apack = AlignedBuf::zeroed(MC * KC);
+    let mut bpack = AlignedBuf::zeroed(KC * NC);
+    let (apack, bpack) = (apack.as_mut_slice(), bpack.as_mut_slice());
     for j0 in (0..n).step_by(NC) {
         let nb = NC.min(n - j0);
-        let npanels = nb.div_ceil(NR);
+        let npanels = nb.div_ceil(nr);
         for k0 in (0..k).step_by(KC) {
             let kb = KC.min(k - k0);
-            pack_b(&mut bpack, b, b_rs, b_cs, k0, kb, j0, nb);
+            pack_b(nr, bpack, b, b_rs, b_cs, k0, kb, j0, nb);
             for i0 in (0..m).step_by(MC) {
                 let mb = MC.min(m - i0);
-                let mpanels = mb.div_ceil(MR);
-                pack_a(&mut apack, a, a_rs, a_cs, i0, mb, k0, kb);
+                let mpanels = mb.div_ceil(mr);
+                pack_a(mr, apack, a, a_rs, a_cs, i0, mb, k0, kb);
                 for jp in 0..npanels {
-                    let bp = &bpack[jp * kb * NR..(jp + 1) * kb * NR];
-                    let n_act = NR.min(nb - jp * NR);
+                    let bp = &bpack[jp * kb * nr..(jp + 1) * kb * nr];
+                    let n_act = nr.min(nb - jp * nr);
                     for ip in 0..mpanels {
-                        let ap = &apack[ip * kb * MR..(ip + 1) * kb * MR];
-                        let m_act = MR.min(mb - ip * MR);
-                        let c_off = (i0 + ip * MR) * c_stride + j0 + jp * NR;
-                        microkernel(ap, bp, kb, &mut c[c_off..], c_stride, m_act, n_act);
+                        let ap = &apack[ip * kb * mr..(ip + 1) * kb * mr];
+                        let m_act = mr.min(mb - ip * mr);
+                        let c_off = (i0 + ip * mr) * c_stride + j0 + jp * nr;
+                        (kern.gemm_microkernel)(ap, bp, kb, &mut c[c_off..], c_stride, m_act, n_act);
                     }
                 }
             }
@@ -126,10 +166,12 @@ fn gemm_st(
     }
 }
 
-/// Pack `A_eff[i0..i0+mb, k0..k0+kb]` into MR-row micro-panels, k-major
-/// inside each panel, zero-padded to a full MR so the microkernel never
+/// Pack `A_eff[i0..i0+mb, k0..k0+kb]` into `mr`-row micro-panels, k-major
+/// inside each panel, zero-padded to a full `mr` so the microkernel never
 /// branches on ragged edges.
+#[allow(clippy::too_many_arguments)]
 fn pack_a(
+    mr: usize,
     dst: &mut [f64],
     a: &[f64],
     a_rs: usize,
@@ -139,22 +181,24 @@ fn pack_a(
     k0: usize,
     kb: usize,
 ) {
-    for ip in 0..mb.div_ceil(MR) {
-        let base = ip * kb * MR;
-        let rows = MR.min(mb - ip * MR);
+    for ip in 0..mb.div_ceil(mr) {
+        let base = ip * kb * mr;
+        let rows = mr.min(mb - ip * mr);
         for kk in 0..kb {
             let col = (k0 + kk) * a_cs;
-            let out = &mut dst[base + kk * MR..base + kk * MR + MR];
+            let out = &mut dst[base + kk * mr..base + kk * mr + mr];
             for (r, o) in out.iter_mut().enumerate() {
-                *o = if r < rows { a[(i0 + ip * MR + r) * a_rs + col] } else { 0.0 };
+                *o = if r < rows { a[(i0 + ip * mr + r) * a_rs + col] } else { 0.0 };
             }
         }
     }
 }
 
-/// Pack `B_eff[k0..k0+kb, j0..j0+nb]` into NR-column micro-panels, k-major,
-/// zero-padded to a full NR.
+/// Pack `B_eff[k0..k0+kb, j0..j0+nb]` into `nr`-column micro-panels,
+/// k-major, zero-padded to a full `nr`.
+#[allow(clippy::too_many_arguments)]
 fn pack_b(
+    nr: usize,
     dst: &mut [f64],
     b: &[f64],
     b_rs: usize,
@@ -164,50 +208,15 @@ fn pack_b(
     j0: usize,
     nb: usize,
 ) {
-    for jp in 0..nb.div_ceil(NR) {
-        let base = jp * kb * NR;
-        let cols = NR.min(nb - jp * NR);
+    for jp in 0..nb.div_ceil(nr) {
+        let base = jp * kb * nr;
+        let cols = nr.min(nb - jp * nr);
         for kk in 0..kb {
             let row = (k0 + kk) * b_rs;
-            let out = &mut dst[base + kk * NR..base + kk * NR + NR];
+            let out = &mut dst[base + kk * nr..base + kk * nr + nr];
             for (q, o) in out.iter_mut().enumerate() {
-                *o = if q < cols { b[row + (j0 + jp * NR + q) * b_cs] } else { 0.0 };
+                *o = if q < cols { b[row + (j0 + jp * nr + q) * b_cs] } else { 0.0 };
             }
-        }
-    }
-}
-
-/// `MR × NR` register tile: accumulate `ap · bp` over `kb` and add the
-/// live `m_act × n_act` corner into C. The fixed-size `acc` array and the
-/// exact-length panel slices give LLVM straight-line unrolled code.
-#[inline(always)]
-fn microkernel(
-    ap: &[f64],
-    bp: &[f64],
-    kb: usize,
-    c: &mut [f64],
-    c_stride: usize,
-    m_act: usize,
-    n_act: usize,
-) {
-    debug_assert_eq!(ap.len(), kb * MR);
-    debug_assert_eq!(bp.len(), kb * NR);
-    let mut acc = [[0.0f64; NR]; MR];
-    for kk in 0..kb {
-        let av: &[f64; MR] = ap[kk * MR..kk * MR + MR].try_into().unwrap();
-        let bv: &[f64; NR] = bp[kk * NR..kk * NR + NR].try_into().unwrap();
-        for r in 0..MR {
-            let ar = av[r];
-            let accr = &mut acc[r];
-            for q in 0..NR {
-                accr[q] += ar * bv[q];
-            }
-        }
-    }
-    for (r, accr) in acc.iter().enumerate().take(m_act) {
-        let row = &mut c[r * c_stride..r * c_stride + n_act];
-        for (dst, s) in row.iter_mut().zip(&accr[..n_act]) {
-            *dst += *s;
         }
     }
 }

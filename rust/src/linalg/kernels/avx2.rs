@@ -1,0 +1,338 @@
+//! AVX2+FMA kernels (x86-64 `std::arch`).
+//!
+//! Safety/dispatch contract: the public fns here are plain safe `fn`s that
+//! immediately enter `#[target_feature(enable = "avx2,fma")]` inner fns.
+//! They are only ever reachable through [`super::avx2()`], which gates on
+//! `is_x86_feature_detected!("avx2") && ("fma")`, so the target-feature
+//! precondition always holds when these run.
+//!
+//! Determinism: every loop below uses a fixed lane order and a fixed
+//! reduction order, so each kernel is bitwise repeatable run-to-run and
+//! (because lane math is independent of how callers shard work) bitwise
+//! thread-count-invariant — the same argument the scalar kernels make.
+//!
+//! * GEMM — 8×4 register tile (vs scalar 4×4): 8 ymm accumulators, one
+//!   aligned 4-wide load of the packed B row and 8 broadcast+FMA per k-step.
+//!   The k-chain per C element is fixed by the KC blocking, so results are
+//!   deterministic; they differ from scalar by O(ε) only (FMA fuses the
+//!   rounding), which is why GEMM pins SIMD-vs-scalar at 1e-12 rather than
+//!   bitwise.
+//! * FWHT — **bitwise identical** to scalar: butterflies are pure a+b / a−b
+//!   over the same index pairs; vector width and the cache-blocked pass
+//!   order only reorder *independent* pairs.
+//! * CountSketch — **exactly** the scalar hash: the SplitMix64 finalizer is
+//!   emulated with 32×32→64 multiplies, `mod k` uses an exact Barrett
+//!   reduction, and the sign applies as an IEEE sign-bit XOR (`v · ±1.0`).
+
+#![allow(clippy::missing_safety_doc)]
+
+use std::arch::x86_64::*;
+
+use crate::rng::hash2;
+
+/// AVX2 register-tile rows (8 ymm accumulators).
+pub const MR: usize = 8;
+/// AVX2 register-tile columns (one 4-lane f64 ymm).
+pub const NR: usize = 4;
+
+// ------------------------------------------------------------------- GEMM
+
+/// `MR × NR` FMA register tile over packed micro-panels (see scalar twin
+/// for the contract). `bp` must be 32-byte aligned — guaranteed by the
+/// 64-byte `AlignedBuf` packing buffers and the `kb·nr`-double panel grid.
+pub fn gemm_microkernel(
+    ap: &[f64],
+    bp: &[f64],
+    kb: usize,
+    c: &mut [f64],
+    c_stride: usize,
+    m_act: usize,
+    n_act: usize,
+) {
+    unsafe { gemm_microkernel_inner(ap, bp, kb, c, c_stride, m_act, n_act) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemm_microkernel_inner(
+    ap: &[f64],
+    bp: &[f64],
+    kb: usize,
+    c: &mut [f64],
+    c_stride: usize,
+    m_act: usize,
+    n_act: usize,
+) {
+    debug_assert_eq!(ap.len(), kb * MR);
+    debug_assert_eq!(bp.len(), kb * NR);
+    debug_assert_eq!(bp.as_ptr() as usize % 32, 0, "packed B panel must be 32B-aligned");
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    // Always accumulate the full padded 8×4 tile (padding rows/cols are
+    // zero, and acc += 0·x is exact), gating only the writeback on
+    // m_act/n_act: the per-element FMA chain over k is then independent of
+    // where the tile sits, which is what keeps row-sharded GEMM bitwise
+    // thread-count-invariant.
+    let mut acc = [_mm256_setzero_pd(); MR];
+    for kk in 0..kb {
+        let bv = _mm256_load_pd(b.add(kk * NR));
+        let ak = a.add(kk * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            *accr = _mm256_fmadd_pd(_mm256_broadcast_sd(&*ak.add(r)), bv, *accr);
+        }
+    }
+    if n_act == NR {
+        for (r, accr) in acc.iter().enumerate().take(m_act) {
+            let cp = c.as_mut_ptr().add(r * c_stride);
+            _mm256_storeu_pd(cp, _mm256_add_pd(_mm256_loadu_pd(cp), *accr));
+        }
+    } else {
+        let mut tmp = [0.0f64; NR];
+        for (r, accr) in acc.iter().enumerate().take(m_act) {
+            _mm256_storeu_pd(tmp.as_mut_ptr(), *accr);
+            let row = &mut c[r * c_stride..r * c_stride + n_act];
+            for (dst, s) in row.iter_mut().zip(&tmp[..n_act]) {
+                *dst += *s;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- FWHT
+
+/// Doubles per cache block (32 KiB): small-`h` passes run chunk-resident,
+/// large-`h` passes become unit-stride row-pair sweeps.
+const FWHT_BLOCK: usize = 4096;
+
+/// In-place FWHT, cache-blocked and 4-lane vectorized. Bitwise identical
+/// to the scalar ascending-`h` butterfly (see module docs).
+pub fn fwht(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    unsafe { fwht_inner(x) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn fwht_inner(x: &mut [f64]) {
+    let n = x.len();
+    let block = FWHT_BLOCK.min(n);
+    // Passes h = 1 .. block/2, one cache-resident chunk at a time. Chunks
+    // are disjoint and pairs never cross a chunk (h < block | chunk size),
+    // so this ordering computes exactly the scalar values.
+    for chunk in x.chunks_mut(block) {
+        fwht_chunk(chunk);
+    }
+    // Passes h = block .. n/2: each butterfly group is two contiguous
+    // h-length halves — a unit-stride vector add/sub sweep.
+    let mut h = block;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            let p = x.as_mut_ptr();
+            butterfly_halves(p.add(i), p.add(i + h), h);
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// All passes within one power-of-two chunk (`h = 1 .. len/2`).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn fwht_chunk(x: &mut [f64]) {
+    let n = x.len();
+    let mut h = 1;
+    while h < n {
+        if h < NR {
+            // h ∈ {1, 2}: strides too short for a 4-lane butterfly.
+            let mut i = 0;
+            while i < n {
+                for j in i..i + h {
+                    let a = x[j];
+                    let b = x[j + h];
+                    x[j] = a + b;
+                    x[j + h] = a - b;
+                }
+                i += 2 * h;
+            }
+        } else {
+            let mut i = 0;
+            while i < n {
+                let p = x.as_mut_ptr();
+                butterfly_halves(p.add(i), p.add(i + h), h);
+                i += 2 * h;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// `(a[j], b[j]) ← (a[j]+b[j], a[j]−b[j])` for `j < len`; `len` is a
+/// multiple of [`NR`]. `a` and `b` are disjoint `len`-length runs.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn butterfly_halves(a: *mut f64, b: *mut f64, len: usize) {
+    debug_assert_eq!(len % NR, 0);
+    let mut j = 0;
+    while j < len {
+        let va = _mm256_loadu_pd(a.add(j));
+        let vb = _mm256_loadu_pd(b.add(j));
+        _mm256_storeu_pd(a.add(j), _mm256_add_pd(va, vb));
+        _mm256_storeu_pd(b.add(j), _mm256_sub_pd(va, vb));
+        j += NR;
+    }
+}
+
+// ------------------------------------------------------------- CountSketch
+
+/// Vectorized CountSketch hash/sign map. Bit-exact vs the scalar oracle:
+/// buckets are discrete, so "close" is not an option here. Falls back to
+/// the scalar loop when `k < 2` (Barrett constant ⌊2⁶⁴/k⌋ needs k ≥ 2) or
+/// `k ≥ 2³²` (bucket must fit the u32 output; also keeps `r < 2k` inside
+/// the signed-compare range).
+pub fn bucket_signs(seed: u64, k: usize, idx: &[u64], vals: &[f64], out: &mut Vec<(u32, f64)>) {
+    debug_assert_eq!(idx.len(), vals.len());
+    out.clear();
+    out.reserve(idx.len());
+    if k < 2 || k >= (1usize << 32) {
+        super::scalar::bucket_signs(seed, k, idx, vals, out);
+        return;
+    }
+    unsafe { bucket_signs_inner(seed, k, idx, vals, out) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn bucket_signs_inner(
+    seed: u64,
+    k: usize,
+    idx: &[u64],
+    vals: &[f64],
+    out: &mut Vec<(u32, f64)>,
+) {
+    let n = idx.len();
+    let seedx = _mm256_set1_epi64x((seed ^ 0xC0C0) as i64);
+    let weyl = _mm256_set1_epi64x(0x9E37_79B9_7F4A_7C15u64 as i64);
+    let weyl_add = _mm256_set1_epi64x(0x2545_F491_4F6C_DD1Du64 as i64);
+    let mix_c1 = _mm256_set1_epi64x(0xBF58_476D_1CE4_E5B9u64 as i64);
+    let mix_c2 = _mm256_set1_epi64x(0x94D0_49BB_1331_11EBu64 as i64);
+    // Barrett constant M = ⌊2⁶⁴ / k⌋ (fits u64 for k ≥ 2): for
+    // q̂ = ⌊h·M / 2⁶⁴⌋ the bound q̂ ∈ {⌊h/k⌋ − 1, ⌊h/k⌋} holds, so
+    // r̂ = h − q̂·k ∈ [0, 2k) and one conditional subtract yields h mod k.
+    let m_barrett = ((1u128 << 64) / k as u128) as u64;
+    let mvec = _mm256_set1_epi64x(m_barrett as i64);
+    let kvec = _mm256_set1_epi64x(k as i64);
+    let sign_bit = _mm256_set1_epi64x(i64::MIN);
+
+    let mut buckets = [0u64; 4];
+    let mut signed = [0.0f64; 4];
+    let mut t = 0;
+    while t + 4 <= n {
+        let c = _mm256_loadu_si256(idx.as_ptr().add(t) as *const __m256i);
+        // hash2: mix64(seed' ^ (counter·weyl + weyl_add))
+        let mut z = _mm256_xor_si256(
+            seedx,
+            _mm256_add_epi64(mul_lo64(c, weyl), weyl_add),
+        );
+        z = mul_lo64(_mm256_xor_si256(z, _mm256_srli_epi64(z, 30)), mix_c1);
+        z = mul_lo64(_mm256_xor_si256(z, _mm256_srli_epi64(z, 27)), mix_c2);
+        let h = _mm256_xor_si256(z, _mm256_srli_epi64(z, 31));
+        // h mod k via Barrett.
+        let q = mul_hi64(h, mvec);
+        let mut r = _mm256_sub_epi64(h, mul_lo64(q, kvec));
+        // r, k < 2³³ so the signed 64-bit compare is an unsigned compare.
+        let lt = _mm256_cmpgt_epi64(kvec, r);
+        r = _mm256_sub_epi64(r, _mm256_andnot_si256(lt, kvec));
+        // sign(h) · v as an IEEE sign-bit XOR (exactly v·±1.0).
+        let v = _mm256_loadu_pd(vals.as_ptr().add(t));
+        let sv = _mm256_xor_pd(v, _mm256_castsi256_pd(_mm256_and_si256(h, sign_bit)));
+        _mm256_storeu_si256(buckets.as_mut_ptr() as *mut __m256i, r);
+        _mm256_storeu_pd(signed.as_mut_ptr(), sv);
+        for lane in 0..4 {
+            out.push((buckets[lane] as u32, signed[lane]));
+        }
+        t += 4;
+    }
+    // Remainder: the scalar math verbatim.
+    while t < n {
+        let h = hash2(seed ^ 0xC0C0, idx[t]);
+        let bucket = (h % k as u64) as u32;
+        let sign = if (h >> 63) == 0 { 1.0 } else { -1.0 };
+        out.push((bucket, vals[t] * sign));
+        t += 1;
+    }
+}
+
+/// Per-lane `a·b mod 2⁶⁴` from 32×32→64 multiplies:
+/// `lo(a)·lo(b) + ((lo(a)·hi(b) + hi(a)·lo(b)) << 32)`.
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn mul_lo64(a: __m256i, b: __m256i) -> __m256i {
+    let a_hi = _mm256_srli_epi64(a, 32);
+    let b_hi = _mm256_srli_epi64(b, 32);
+    let ll = _mm256_mul_epu32(a, b);
+    let cross = _mm256_add_epi64(_mm256_mul_epu32(a, b_hi), _mm256_mul_epu32(a_hi, b));
+    _mm256_add_epi64(ll, _mm256_slli_epi64(cross, 32))
+}
+
+/// Per-lane `⌊a·b / 2⁶⁴⌋` (exact 64×64→high-64), with the carry out of the
+/// low half propagated: `hi = hh + (lh≫32) + (hl≫32) + carry`, where
+/// `carry = ((ll≫32) + (lh&2³²−1) + (hl&2³²−1)) ≫ 32`.
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn mul_hi64(a: __m256i, b: __m256i) -> __m256i {
+    let a_hi = _mm256_srli_epi64(a, 32);
+    let b_hi = _mm256_srli_epi64(b, 32);
+    let mask32 = _mm256_set1_epi64x(0xFFFF_FFFFu64 as i64);
+    let ll = _mm256_mul_epu32(a, b);
+    let lh = _mm256_mul_epu32(a, b_hi);
+    let hl = _mm256_mul_epu32(a_hi, b);
+    let hh = _mm256_mul_epu32(a_hi, b_hi);
+    let carry = _mm256_srli_epi64(
+        _mm256_add_epi64(
+            _mm256_srli_epi64(ll, 32),
+            _mm256_add_epi64(_mm256_and_si256(lh, mask32), _mm256_and_si256(hl, mask32)),
+        ),
+        32,
+    );
+    _mm256_add_epi64(
+        hh,
+        _mm256_add_epi64(
+            _mm256_add_epi64(_mm256_srli_epi64(lh, 32), _mm256_srli_epi64(hl, 32)),
+            carry,
+        ),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The 64-bit helper emulations are the foundation the hash exactness
+    /// rests on — pin them against native u64/u128 arithmetic directly.
+    #[test]
+    fn mul64_emulation_matches_native() {
+        if super::super::avx2().is_none() {
+            return;
+        }
+        let cases: Vec<(u64, u64)> = vec![
+            (0, 0),
+            (1, u64::MAX),
+            (u64::MAX, u64::MAX),
+            (0xDEAD_BEEF_CAFE_F00D, 0x9E37_79B9_7F4A_7C15),
+            (1 << 63, 3),
+            (0xFFFF_FFFF, 0x1_0000_0001),
+        ];
+        unsafe {
+            for &(x, y) in &cases {
+                let a = _mm256_set1_epi64x(x as i64);
+                let b = _mm256_set1_epi64x(y as i64);
+                let mut lo = [0u64; 4];
+                let mut hi = [0u64; 4];
+                _mm256_storeu_si256(lo.as_mut_ptr() as *mut __m256i, mul_lo64(a, b));
+                _mm256_storeu_si256(hi.as_mut_ptr() as *mut __m256i, mul_hi64(a, b));
+                let full = (x as u128) * (y as u128);
+                for lane in 0..4 {
+                    assert_eq!(lo[lane], full as u64, "lo64({x:#x}, {y:#x})");
+                    assert_eq!(hi[lane], (full >> 64) as u64, "hi64({x:#x}, {y:#x})");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! SIMD kernel layer: runtime-dispatched implementations of the three
+//! innermost loops everything in the crate bottoms out in — the GEMM
+//! microkernel, the FWHT butterfly, and the CountSketch hash/sign map.
+//!
+//! Dispatch is resolved **once per process** (first use of [`active`]) from
+//! `SMPPCA_KERNEL=auto|scalar|avx2`:
+//! * `auto` (default) — AVX2+FMA when the CPU has it, scalar otherwise;
+//! * `scalar` — force the portable kernels (the bitwise-reproducibility
+//!   suites pin this so historical bit-for-bit results keep reproducing);
+//! * `avx2` — force the SIMD kernels; **fails fast** on CPUs without
+//!   AVX2+FMA rather than silently falling back.
+//!
+//! The scalar kernels are byte-for-byte the pre-SIMD implementations and
+//! double as the correctness oracle: every SIMD kernel is property-tested
+//! against them (≤1e-12 for GEMM, bitwise for FWHT and CountSketch — see
+//! `tests/kernel_props.rs` and EXPERIMENTS.md §Perf). Each SIMD path uses a
+//! fixed lane order, so it is deterministic run-to-run and (like the scalar
+//! path) bitwise thread-count-invariant: the thread-matrix guarantees are
+//! about scheduling, which this layer does not touch.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+/// One `mr × nr` register tile: accumulate `ap · bp` over `kb` packed
+/// k-steps and add the live `m_act × n_act` corner into C (rows `c_stride`
+/// apart). Panels are zero-padded to full `mr`/`nr` by the packers.
+pub type GemmMicrokernelFn =
+    fn(ap: &[f64], bp: &[f64], kb: usize, c: &mut [f64], c_stride: usize, m_act: usize, n_act: usize);
+
+/// In-place unnormalized Walsh–Hadamard transform (length must be a power
+/// of two). All implementations produce **identical bits**: the butterfly is
+/// pure add/sub over fixed index pairs, so pass blocking and lane width
+/// change only the evaluation order of independent pairs, never the value
+/// computed for any element.
+pub type FwhtFn = fn(&mut [f64]);
+
+/// CountSketch hash/sign map: for each `(idx[t], vals[t])` append
+/// `(bucket(idx[t]), vals[t] · sign(idx[t]))` to `out` **in input order**
+/// (clearing `out` first). Buckets and signs are discrete, and
+/// `v · ±1.0` is a sign-bit flip, so every implementation must agree
+/// **exactly** with `sketch::countsketch::bucket_sign` — not approximately.
+pub type BucketSignsFn = fn(seed: u64, k: usize, idx: &[u64], vals: &[f64], out: &mut Vec<(u32, f64)>);
+
+/// A full kernel set. Selected once at startup; threaded by reference
+/// through `gemm`, `fwht`, `srht`, and `SketchState` so tests and benches
+/// can also pit implementations against each other in one process.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    /// `"scalar"` or `"avx2"` — also the `SMPPCA_KERNEL` spelling.
+    pub name: &'static str,
+    /// GEMM register-tile rows this kernel expects packed A panels in.
+    pub mr: usize,
+    /// GEMM register-tile columns this kernel expects packed B panels in.
+    pub nr: usize,
+    pub gemm_microkernel: GemmMicrokernelFn,
+    pub fwht: FwhtFn,
+    pub bucket_signs: BucketSignsFn,
+}
+
+impl fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Kernels")
+            .field("name", &self.name)
+            .field("mr", &self.mr)
+            .field("nr", &self.nr)
+            .finish()
+    }
+}
+
+/// The portable scalar kernel set — fallback and oracle.
+pub static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    mr: scalar::MR,
+    nr: scalar::NR,
+    gemm_microkernel: scalar::gemm_microkernel,
+    fwht: scalar::fwht,
+    bucket_signs: scalar::bucket_signs,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    name: "avx2",
+    mr: avx2::MR,
+    nr: avx2::NR,
+    gemm_microkernel: avx2::gemm_microkernel,
+    fwht: avx2::fwht,
+    bucket_signs: avx2::bucket_signs,
+};
+
+/// The scalar kernel set (always available).
+pub fn scalar() -> &'static Kernels {
+    &SCALAR
+}
+
+/// The AVX2+FMA kernel set, if this CPU supports it.
+pub fn avx2() -> Option<&'static Kernels> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Some(&AVX2);
+        }
+    }
+    None
+}
+
+/// Parsed `SMPPCA_KERNEL` value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelChoice {
+    Auto,
+    Scalar,
+    Avx2,
+}
+
+/// Parse an `SMPPCA_KERNEL` value. Unknown values are an error naming the
+/// accepted spellings — callers fail fast instead of silently falling back.
+pub fn parse_choice(s: &str) -> Result<KernelChoice, String> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => Ok(KernelChoice::Auto),
+        "scalar" => Ok(KernelChoice::Scalar),
+        "avx2" => Ok(KernelChoice::Avx2),
+        other => Err(format!(
+            "invalid SMPPCA_KERNEL value '{other}': accepted values are auto|scalar|avx2"
+        )),
+    }
+}
+
+/// Resolve a parsed choice against what the CPU offers. An explicit `avx2`
+/// request on a CPU without AVX2+FMA is an error, not a fallback.
+pub fn resolve(choice: KernelChoice) -> Result<&'static Kernels, String> {
+    match choice {
+        KernelChoice::Auto => Ok(avx2().unwrap_or(&SCALAR)),
+        KernelChoice::Scalar => Ok(&SCALAR),
+        KernelChoice::Avx2 => avx2().ok_or_else(|| {
+            "SMPPCA_KERNEL=avx2 requested but this CPU lacks AVX2+FMA \
+             (accepted values are auto|scalar|avx2; use auto or scalar here)"
+            .to_string()
+        }),
+    }
+}
+
+/// Read `SMPPCA_KERNEL` and resolve it (`auto` when unset).
+pub fn from_env() -> Result<&'static Kernels, String> {
+    let choice = match std::env::var("SMPPCA_KERNEL") {
+        Ok(v) => parse_choice(&v)?,
+        Err(_) => KernelChoice::Auto,
+    };
+    resolve(choice)
+}
+
+static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// The process-wide kernel set, selected once from `SMPPCA_KERNEL` (same
+/// once-resolved pattern as `runtime::pool::max_threads`). The CLI entry
+/// points validate the variable up front for a clean error message; library
+/// callers hitting an invalid value panic with the same text.
+pub fn active() -> &'static Kernels {
+    ACTIVE.get_or_init(|| from_env().unwrap_or_else(|e| panic!("{e}")))
+}
+
+/// Heap buffer of `f64` aligned to 64 bytes, for the GEMM packing panels:
+/// with the panel geometry used by `gemm` (A panels start at multiples of
+/// `kb·mr` doubles, B panels at multiples of `kb·nr`), a 64-byte base makes
+/// every micro-panel row/column a valid target for aligned 32-byte vector
+/// loads. Contents start zeroed.
+pub struct AlignedBuf {
+    ptr: std::ptr::NonNull<f64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    const ALIGN: usize = 64;
+
+    pub fn zeroed(len: usize) -> Self {
+        assert!(len > 0, "AlignedBuf must be non-empty");
+        let layout = std::alloc::Layout::from_size_align(len * std::mem::size_of::<f64>(), Self::ALIGN)
+            .expect("packing buffer layout");
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) } as *mut f64;
+        let ptr = match std::ptr::NonNull::new(raw) {
+            Some(p) => p,
+            None => std::alloc::handle_alloc_error(layout),
+        };
+        Self { ptr, len }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        let layout =
+            std::alloc::Layout::from_size_align(self.len * std::mem::size_of::<f64>(), Self::ALIGN)
+                .expect("packing buffer layout");
+        unsafe { std::alloc::dealloc(self.ptr.as_ptr() as *mut u8, layout) };
+    }
+}
+
+// The buffer owns its allocation exclusively; &mut access follows normal
+// borrow rules, so moving it across threads is sound.
+unsafe impl Send for AlignedBuf {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::sketch::countsketch::bucket_sign;
+
+    #[test]
+    fn parse_choice_accepts_documented_values() {
+        assert_eq!(parse_choice("auto").unwrap(), KernelChoice::Auto);
+        assert_eq!(parse_choice("").unwrap(), KernelChoice::Auto);
+        assert_eq!(parse_choice("scalar").unwrap(), KernelChoice::Scalar);
+        assert_eq!(parse_choice("AVX2").unwrap(), KernelChoice::Avx2);
+        assert_eq!(parse_choice(" Scalar ").unwrap(), KernelChoice::Scalar);
+    }
+
+    #[test]
+    fn parse_choice_rejects_unknown_with_accepted_values_named() {
+        let err = parse_choice("sse9").unwrap_err();
+        assert!(err.contains("sse9"), "{err}");
+        assert!(err.contains("auto|scalar|avx2"), "{err}");
+    }
+
+    #[test]
+    fn resolve_scalar_always_succeeds() {
+        assert_eq!(resolve(KernelChoice::Scalar).unwrap().name, "scalar");
+    }
+
+    #[test]
+    fn resolve_auto_matches_cpu_detection() {
+        let k = resolve(KernelChoice::Auto).unwrap();
+        match avx2() {
+            Some(_) => assert_eq!(k.name, "avx2"),
+            None => assert_eq!(k.name, "scalar"),
+        }
+    }
+
+    #[test]
+    fn resolve_avx2_errors_cleanly_when_unsupported() {
+        match resolve(KernelChoice::Avx2) {
+            Ok(k) => assert_eq!(k.name, "avx2"),
+            Err(e) => assert!(e.contains("auto|scalar|avx2"), "{e}"),
+        }
+    }
+
+    #[test]
+    fn aligned_buf_is_64_byte_aligned_and_zeroed() {
+        for len in [1usize, 7, 64, 4096] {
+            let mut buf = AlignedBuf::zeroed(len);
+            assert_eq!(buf.as_slice().as_ptr() as usize % 64, 0);
+            assert_eq!(buf.as_slice().len(), len);
+            assert!(buf.as_slice().iter().all(|&v| v == 0.0));
+            buf.as_mut_slice()[len - 1] = 3.0;
+            assert_eq!(buf.as_slice()[len - 1], 3.0);
+        }
+    }
+
+    /// Random packed panels for microkernel-level comparisons.
+    fn rand_panels(kern: &Kernels, kb: usize, rng: &mut Pcg64) -> (Vec<f64>, Vec<f64>) {
+        let ap: Vec<f64> = (0..kb * kern.mr).map(|_| rng.next_gaussian()).collect();
+        let bp: Vec<f64> = (0..kb * kern.nr).map(|_| rng.next_gaussian()).collect();
+        (ap, bp)
+    }
+
+    #[test]
+    fn scalar_microkernel_matches_direct_accumulation() {
+        let kern = scalar();
+        let mut rng = Pcg64::new(11);
+        for kb in [1usize, 2, 7, 64] {
+            let (ap, bp) = rand_panels(kern, kb, &mut rng);
+            for (m_act, n_act) in [(kern.mr, kern.nr), (1, 1), (3, 2)] {
+                let c_stride = kern.nr + 1;
+                let mut c = vec![0.5f64; kern.mr * c_stride];
+                let mut want = c.clone();
+                (kern.gemm_microkernel)(&ap, &bp, kb, &mut c, c_stride, m_act, n_act);
+                for r in 0..m_act {
+                    for q in 0..n_act {
+                        let mut acc = 0.0;
+                        for kk in 0..kb {
+                            acc += ap[kk * kern.mr + r] * bp[kk * kern.nr + q];
+                        }
+                        want[r * c_stride + q] += acc;
+                    }
+                }
+                for (g, w) in c.iter().zip(&want) {
+                    assert!((g - w).abs() <= 1e-12 * (1.0 + w.abs()), "{g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_fwht_is_bitwise_scalar() {
+        let Some(simd) = avx2() else { return };
+        let mut rng = Pcg64::new(21);
+        for logn in 0..15 {
+            let n = 1usize << logn;
+            let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let mut a = x.clone();
+            let mut b = x;
+            (scalar().fwht)(&mut a);
+            (simd.fwht)(&mut b);
+            assert_eq!(a, b, "FWHT bits diverged at n={n}");
+        }
+    }
+
+    #[test]
+    fn avx2_bucket_signs_is_exact() {
+        let Some(simd) = avx2() else { return };
+        let mut rng = Pcg64::new(22);
+        for &k in &[1usize, 2, 3, 7, 16, 100, 1 << 20, (1 << 31) + 3] {
+            let n = 257; // not a multiple of the lane width
+            let idx: Vec<u64> = (0..n).map(|_| rng.next_u64() >> 12).collect();
+            let vals: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let mut out = vec![(9u32, 9.0)];
+            (simd.bucket_signs)(77, k, &idx, &vals, &mut out);
+            assert_eq!(out.len(), n);
+            for (t, &(b, sv)) in out.iter().enumerate() {
+                let (bucket, sign) = bucket_sign(77, idx[t], k);
+                assert_eq!(b as usize, bucket, "bucket diverged at t={t} k={k}");
+                assert_eq!(sv.to_bits(), (vals[t] * sign).to_bits(), "sign bits diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_microkernel_matches_scalar_within_1e12() {
+        let Some(simd) = avx2() else { return };
+        let sc = scalar();
+        let mut rng = Pcg64::new(23);
+        for kb in [1usize, 3, 17, 256] {
+            // Same logical (mr_max × k) A and (k × nr) B, packed per-kernel.
+            let rows = simd.mr.max(sc.mr);
+            let a: Vec<f64> = (0..rows * kb).map(|_| rng.next_gaussian()).collect();
+            let b: Vec<f64> = (0..kb * simd.nr).map(|_| rng.next_gaussian()).collect();
+            assert_eq!(sc.nr, simd.nr, "test assumes matching nr");
+            // Panels go through AlignedBuf exactly as gemm's packers do —
+            // the AVX2 kernel is entitled to aligned loads of packed B.
+            let pack = |mr: usize| -> AlignedBuf {
+                let mut p = AlignedBuf::zeroed(kb * mr);
+                for kk in 0..kb {
+                    for r in 0..mr {
+                        p.as_mut_slice()[kk * mr + r] = a[r * kb + kk];
+                    }
+                }
+                p
+            };
+            let mut bp = AlignedBuf::zeroed(kb * simd.nr);
+            bp.as_mut_slice().copy_from_slice(&b);
+            let bp = bp.as_slice();
+            // Compare the overlapping sc.mr × nr corner.
+            let c_stride = simd.nr;
+            let mut c_sc = vec![0.0f64; sc.mr * c_stride];
+            let mut c_simd = vec![0.0f64; simd.mr * c_stride];
+            (sc.gemm_microkernel)(pack(sc.mr).as_slice(), bp, kb, &mut c_sc, c_stride, sc.mr, sc.nr);
+            (simd.gemm_microkernel)(pack(simd.mr).as_slice(), bp, kb, &mut c_simd, c_stride, simd.mr, simd.nr);
+            for r in 0..sc.mr {
+                for q in 0..sc.nr {
+                    let (g, w) = (c_simd[r * c_stride + q], c_sc[r * c_stride + q]);
+                    assert!((g - w).abs() <= 1e-12 * (1.0 + w.abs()), "kb={kb} ({g} vs {w})");
+                }
+            }
+        }
+    }
+}

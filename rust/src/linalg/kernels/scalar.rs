@@ -1,0 +1,83 @@
+//! Portable scalar kernels — byte-for-byte the pre-SIMD implementations.
+//!
+//! These are both the fallback for CPUs without AVX2+FMA and the oracle the
+//! SIMD kernels are property-tested against. `SMPPCA_KERNEL=scalar`
+//! reproduces every pre-kernel-layer result bitwise, so **do not** "improve"
+//! the arithmetic here: any change to the accumulation order invalidates the
+//! recorded bitwise trajectories the reproducibility suites pin.
+
+use crate::rng::hash2;
+
+/// Scalar register-tile rows.
+pub const MR: usize = 4;
+/// Scalar register-tile columns (the autovectorized direction).
+pub const NR: usize = 4;
+
+/// `MR × NR` register tile: accumulate `ap · bp` over `kb` and add the
+/// live `m_act × n_act` corner into C. The fixed-size `acc` array and the
+/// exact-length panel slices give LLVM straight-line unrolled code.
+pub fn gemm_microkernel(
+    ap: &[f64],
+    bp: &[f64],
+    kb: usize,
+    c: &mut [f64],
+    c_stride: usize,
+    m_act: usize,
+    n_act: usize,
+) {
+    debug_assert_eq!(ap.len(), kb * MR);
+    debug_assert_eq!(bp.len(), kb * NR);
+    let mut acc = [[0.0f64; NR]; MR];
+    for kk in 0..kb {
+        let av: &[f64; MR] = ap[kk * MR..kk * MR + MR].try_into().unwrap();
+        let bv: &[f64; NR] = bp[kk * NR..kk * NR + NR].try_into().unwrap();
+        for r in 0..MR {
+            let ar = av[r];
+            let accr = &mut acc[r];
+            for q in 0..NR {
+                accr[q] += ar * bv[q];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(m_act) {
+        let row = &mut c[r * c_stride..r * c_stride + n_act];
+        for (dst, s) in row.iter_mut().zip(&accr[..n_act]) {
+            *dst += *s;
+        }
+    }
+}
+
+/// In-place unnormalized Walsh–Hadamard transform, ascending-`h` butterfly.
+pub fn fwht(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// CountSketch hash/sign map over parallel `idx`/`vals` slices. Same math
+/// as `sketch::countsketch::bucket_sign` (the per-entry oracle): bucket is
+/// `hash2(seed ⊕ 0xC0C0, i) mod k`, sign is the hash's top bit.
+pub fn bucket_signs(seed: u64, k: usize, idx: &[u64], vals: &[f64], out: &mut Vec<(u32, f64)>) {
+    debug_assert_eq!(idx.len(), vals.len());
+    out.clear();
+    out.reserve(idx.len());
+    for (&i, &v) in idx.iter().zip(vals) {
+        let h = hash2(seed ^ 0xC0C0, i);
+        let bucket = (h % k as u64) as u32;
+        let sign = if (h >> 63) == 0 { 1.0 } else { -1.0 };
+        out.push((bucket, v * sign));
+    }
+}

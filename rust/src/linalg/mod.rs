@@ -10,13 +10,16 @@
 //! QR ([`qr_thin`]) and one-sided Jacobi ([`svd_jacobi`]) retained as the
 //! property-test oracles; SPD Cholesky for the r×r ALS normal equations; a
 //! CSR sparse matrix; and the fast Walsh–Hadamard transform backing the
-//! SRHT sketch.
+//! SRHT sketch. The innermost loops (GEMM microkernel, FWHT butterfly,
+//! CountSketch hash map) live in the runtime-dispatched SIMD kernel layer
+//! [`kernels`] (`SMPPCA_KERNEL=auto|scalar|avx2`).
 
 pub mod cholesky;
 pub mod dense;
 pub mod factor;
 pub mod fwht;
 pub mod gemm;
+pub mod kernels;
 pub mod ops;
 pub mod qr;
 pub mod sparse;

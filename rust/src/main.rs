@@ -31,10 +31,22 @@ fn real_main() -> anyhow::Result<()> {
         }
     };
     match args.subcommand.as_str() {
-        "run" => cmd_run(&args),
-        "serve" => cmd_serve(&args),
-        "exp" => cmd_exp(&args),
-        "gen" => cmd_gen(&args),
+        "run" | "serve" | "exp" | "gen" => {
+            // Validate the kernel override up front: a typo'd SMPPCA_KERNEL
+            // (or avx2 forced on a CPU without it) should be one clean error
+            // before any work starts, not a mid-pipeline panic.
+            let kern = smppca::linalg::kernels::from_env()
+                .map_err(|e| anyhow::anyhow!(e))?;
+            if std::env::var("SMPPCA_KERNEL").is_ok() {
+                eprintln!("[smppca] kernel set: {}", kern.name);
+            }
+            match args.subcommand.as_str() {
+                "run" => cmd_run(&args),
+                "serve" => cmd_serve(&args),
+                "exp" => cmd_exp(&args),
+                _ => cmd_gen(&args),
+            }
+        }
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())

@@ -2,6 +2,12 @@
 //! entry. Weaker per-dot-product accuracy at equal k than Gaussian/SRHT but
 //! the cheapest ingest; included as the ablation axis for the paper's
 //! "any oblivious subspace embedding can be considered here" remark.
+//!
+//! The batched ingest hash/sign loop is kernel-dispatched
+//! (`linalg::kernels::Kernels::bucket_signs`, SoA slices); [`bucket_sign`]
+//! and [`bucket_signs_into`] here are the per-entry definition every kernel
+//! — scalar and SIMD — must match **exactly** (buckets and signs are
+//! discrete; the sign applies as `v · ±1.0`, a pure sign-bit flip).
 
 use crate::rng::hash2;
 
@@ -69,6 +75,22 @@ mod tests {
             let (bucket, sign) = bucket_sign(3, i, k);
             assert_eq!(b as usize, bucket);
             assert_eq!(sv, v * sign);
+        }
+    }
+
+    #[test]
+    fn scalar_kernel_matches_per_entry_oracle_bitwise() {
+        use crate::linalg::kernels;
+        let k = 23;
+        let idx: Vec<u64> = (0..300).map(|i| i * 7 + 3).collect();
+        let vals: Vec<f64> = (0..300).map(|i| (i as f64) * 0.25 - 40.0).collect();
+        let mut out = vec![(1u32, 1.0)]; // stale contents must be cleared
+        (kernels::scalar().bucket_signs)(5, k, &idx, &vals, &mut out);
+        assert_eq!(out.len(), idx.len());
+        for (t, &(b, sv)) in out.iter().enumerate() {
+            let (bucket, sign) = bucket_sign(5, idx[t], k);
+            assert_eq!(b as usize, bucket);
+            assert_eq!(sv.to_bits(), (vals[t] * sign).to_bits());
         }
     }
 

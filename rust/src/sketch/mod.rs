@@ -61,6 +61,7 @@ pub mod gaussian;
 pub mod ingest;
 pub mod srht;
 
+use crate::linalg::kernels::{self, Kernels};
 use crate::linalg::Mat;
 
 /// Ambient-chunk width of the Gaussian GEMM ingest. Must stay ≤ `gemm::KC`
@@ -157,6 +158,12 @@ pub struct SketchState {
     gaussian_col_cache: gaussian::ColumnCache,
     srht: Option<srht::SrhtPlan>,
     scratch: Scratch,
+    /// Kernel set the batched paths route through (GEMM tile, FWHT,
+    /// CountSketch hash map). Not serialized — checkpoints rebuild the
+    /// state via [`SketchState::new`], which re-resolves the process-wide
+    /// selection; [`SketchState::new_with_kernel`] lets tests and benches
+    /// pit kernels against each other in one process.
+    kern: &'static Kernels,
 }
 
 /// Reusable scratch for the batched kernels. Never serialized (checkpoints
@@ -174,12 +181,31 @@ struct Scratch {
     kvec: Vec<f64>,
     /// `(bucket, signed value)` pairs for the CountSketch scatter.
     count: Vec<(u32, f64)>,
+    /// CountSketch SoA staging (ambient indices / nonzero values) — the
+    /// slice form the kernel-dispatched hash loop consumes.
+    cs_idx: Vec<u64>,
+    /// Parallel values for `cs_idx`.
+    cs_vals: Vec<f64>,
 }
 
 impl SketchState {
     /// `d` = ambient (row) dimension of the streamed matrix, `n` = columns,
     /// `k` = sketch size. All workers must pass identical parameters.
     pub fn new(kind: SketchKind, seed: u64, k: usize, d: usize, n: usize) -> Self {
+        Self::new_with_kernel(kind, seed, k, d, n, kernels::active())
+    }
+
+    /// [`SketchState::new`] with an explicit kernel set. States that only
+    /// differ in the kernel are still mergeable: the kernel affects how the
+    /// accumulation is computed, never the parameters of the implicit Π.
+    pub fn new_with_kernel(
+        kind: SketchKind,
+        seed: u64,
+        k: usize,
+        d: usize,
+        n: usize,
+        kern: &'static Kernels,
+    ) -> Self {
         assert!(k > 0 && d > 0 && n > 0, "degenerate sketch shape k={k} d={d} n={n}");
         let srht = match kind {
             SketchKind::Srht => Some(srht::SrhtPlan::new(seed, k, d)),
@@ -196,6 +222,7 @@ impl SketchState {
             gaussian_col_cache: gaussian::ColumnCache::new(k),
             srht,
             scratch: Scratch::default(),
+            kern,
         }
     }
 
@@ -325,6 +352,12 @@ impl SketchState {
                 }
             }
             SketchKind::CountSketch => {
+                // Stage the nonzeros into SoA slices during the norms pass,
+                // then one kernel-dispatched hash loop, then the ordered
+                // scatter — same filtered order as per-entry updates, so
+                // the accumulated bits are identical.
+                self.scratch.cs_idx.clear();
+                self.scratch.cs_vals.clear();
                 for &(i, v) in entries {
                     if v == 0.0 {
                         continue;
@@ -332,11 +365,14 @@ impl SketchState {
                     debug_assert!((i as usize) < self.d, "row {i} out of range d={}", self.d);
                     self.entries_seen += 1;
                     self.norms_sq[j] += v * v;
+                    self.scratch.cs_idx.push(i as u64);
+                    self.scratch.cs_vals.push(v);
                 }
-                countsketch::bucket_signs_into(
+                (self.kern.bucket_signs)(
                     self.seed,
                     self.k,
-                    entries.iter().filter(|&&(_, v)| v != 0.0).map(|&(i, v)| (i as u64, v)),
+                    &self.scratch.cs_idx,
+                    &self.scratch.cs_vals,
                     &mut self.scratch.count,
                 );
                 let row = self.acc.row_mut(j);
@@ -361,7 +397,7 @@ impl SketchState {
                 let plan = self.srht.as_ref().unwrap();
                 self.scratch.pad.resize(plan.d_pad(), 0.0);
                 self.scratch.kvec.resize(self.k, 0.0);
-                plan.apply_into(col, &mut self.scratch.pad, &mut self.scratch.kvec);
+                plan.apply_into_with(self.kern, col, &mut self.scratch.pad, &mut self.scratch.kvec);
                 let row = self.acc.row_mut(j);
                 for (a, o) in row.iter_mut().zip(&self.scratch.kvec) {
                     *a += *o;
@@ -431,7 +467,8 @@ impl SketchState {
                     // temp = Π[:, i0..i0+dc] · X[i0..i0+dc, :] (k×m), single
                     // K-block (dc ≤ KC) so the reduction order per element
                     // is fixed regardless of m.
-                    crate::linalg::gemm::gemm(
+                    crate::linalg::gemm::gemm_with(
+                        self.kern,
                         k,
                         m,
                         dc,
@@ -464,13 +501,19 @@ impl SketchState {
                     let j = col_of(c);
                     self.entries_seen += col.iter().filter(|v| **v != 0.0).count() as u64;
                     self.norms_sq[j] += col.iter().map(|v| v * v).sum::<f64>();
-                    countsketch::bucket_signs_into(
+                    self.scratch.cs_idx.clear();
+                    self.scratch.cs_vals.clear();
+                    for (i, &v) in col.iter().enumerate() {
+                        if v != 0.0 {
+                            self.scratch.cs_idx.push(i as u64);
+                            self.scratch.cs_vals.push(v);
+                        }
+                    }
+                    (self.kern.bucket_signs)(
                         self.seed,
                         k,
-                        col.iter()
-                            .enumerate()
-                            .filter(|(_, v)| **v != 0.0)
-                            .map(|(i, &v)| (i as u64, v)),
+                        &self.scratch.cs_idx,
+                        &self.scratch.cs_vals,
                         &mut self.scratch.count,
                     );
                     let row = self.acc.row_mut(j);

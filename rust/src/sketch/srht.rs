@@ -8,7 +8,8 @@
 //!   — O(1) per (t, i) via popcount, O(k) per streamed entry;
 //! * **per-column** (batch): sign-flip, FWHT in O(d̂ log d̂), subsample.
 
-use crate::linalg::fwht::{fwht_inplace, hadamard_entry_sign, next_pow2};
+use crate::linalg::fwht::{fwht_inplace_with, hadamard_entry_sign, next_pow2};
+use crate::linalg::kernels::{self, Kernels};
 use crate::rng::{hash2, Pcg64};
 
 #[derive(Debug, Clone)]
@@ -79,6 +80,14 @@ impl SrhtPlan {
     /// Allocation-free — this is the kernel the batched column ingest loops
     /// over, so per-call `Vec`s would dominate small-d workloads.
     pub fn apply_into(&self, col: &[f64], pad: &mut [f64], out: &mut [f64]) {
+        self.apply_into_with(kernels::active(), col, pad, out);
+    }
+
+    /// [`SrhtPlan::apply_into`] with an explicit kernel set for the FWHT
+    /// (agreement tests, bench kernel variants). All FWHT kernels are
+    /// bitwise identical, so this only matters for pitting them against
+    /// each other.
+    pub fn apply_into_with(&self, kern: &Kernels, col: &[f64], pad: &mut [f64], out: &mut [f64]) {
         assert!(col.len() <= self.d_pad, "column longer than the SRHT padding");
         assert_eq!(out.len(), self.k, "output must have length k");
         let pad = &mut pad[..self.d_pad];
@@ -88,7 +97,7 @@ impl SrhtPlan {
         for p in pad[col.len()..].iter_mut() {
             *p = 0.0;
         }
-        fwht_inplace(pad);
+        fwht_inplace_with(kern, pad);
         for (o, &s) in out.iter_mut().zip(&self.rows) {
             *o = pad[s] * self.scale;
         }

@@ -1,0 +1,295 @@
+//! Kernel-layer property tests: every SIMD kernel against its scalar
+//! oracle, on ragged shapes, plus bitwise run-to-run repeatability and
+//! thread-count invariance.
+//!
+//! Agreement contracts (EXPERIMENTS.md §Perf):
+//! * GEMM — SIMD vs scalar ≤ 1e-12 (FMA fuses a rounding, so bits differ
+//!   by O(ε)); each kernel individually bitwise-repeatable and bitwise
+//!   thread-count-invariant.
+//! * FWHT — **bitwise identical** across kernels (pure add/sub over fixed
+//!   pairs; lane width and pass blocking only reorder independent pairs).
+//! * CountSketch — **bitwise identical** across kernels (buckets and signs
+//!   are discrete; the sign applies as `v·±1.0`, a sign-bit flip).
+//!
+//! Every avx2-specific test skips cleanly (and loudly) when the runner has
+//! no AVX2+FMA, so the suite is green on any hardware; the CI kernel-matrix
+//! leg re-runs it with `SMPPCA_KERNEL=avx2` on runners that do.
+
+use smppca::linalg::gemm::{self, matmul_naive};
+use smppca::linalg::kernels::{self, Kernels};
+use smppca::linalg::Mat;
+use smppca::rng::Pcg64;
+use smppca::sketch::{SketchKind, SketchState, Summary};
+use smppca::testing::{assert_close, prop};
+
+fn simd_or_skip(test: &str) -> Option<&'static Kernels> {
+    match kernels::avx2() {
+        Some(k) => Some(k),
+        None => {
+            eprintln!("[{test}] skipping: this CPU has no AVX2+FMA");
+            None
+        }
+    }
+}
+
+fn rand_mat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.next_gaussian())
+}
+
+/// The active kernel must be exactly what the env policy resolves to — this
+/// is what the CI kernel-matrix legs pin under SMPPCA_KERNEL=scalar/avx2.
+#[test]
+fn active_kernel_obeys_env_policy() {
+    let want = kernels::from_env().expect("SMPPCA_KERNEL must be valid in the test environment");
+    assert_eq!(kernels::active().name, want.name);
+}
+
+// ----------------------------------------------------------------- GEMM
+
+#[test]
+fn gemm_simd_matches_scalar_oracle_on_ragged_shapes() {
+    let Some(simd) = simd_or_skip("gemm_simd_matches_scalar_oracle_on_ragged_shapes") else {
+        return;
+    };
+    // Every ragged edge of the blocking: single tiles, partial tiles in m
+    // (vs the 8-row AVX2 panel), partial tiles in n, multi-KC k, multi-NC n.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (1, 7, 1),
+        (5, 3, 2),
+        (7, 9, 4),       // m between scalar (4) and avx2 (8) tile heights
+        (8, 16, 4),
+        (9, 300, 11),    // k spans two KC blocks
+        (67, 129, 35),
+        (65, 64, 63),
+        (3, 300, 520),   // n spans two NC panels
+        (130, 40, 70),
+    ];
+    let mut rng = Pcg64::new(2024);
+    for &(m, k, n) in &shapes {
+        let a = rand_mat(m, k, &mut rng);
+        let b = rand_mat(k, n, &mut rng);
+        let naive = matmul_naive(&a, &b);
+        let mut c_sc = vec![0.0; m * n];
+        let mut c_simd = vec![0.0; m * n];
+        gemm::gemm_with(kernels::scalar(), m, n, k, a.data(), k, 1, b.data(), n, 1, &mut c_sc, 1);
+        gemm::gemm_with(simd, m, n, k, a.data(), k, 1, b.data(), n, 1, &mut c_simd, 1);
+        assert_close(&c_simd, &c_sc, 1e-12);
+        assert_close(&c_simd, naive.data(), 1e-12);
+    }
+}
+
+#[test]
+fn gemm_simd_property_ragged_and_strided() {
+    let Some(simd) = simd_or_skip("gemm_simd_property_ragged_and_strided") else { return };
+    prop(71, 10, |rng| {
+        let m = 1 + rng.next_below(90) as usize;
+        let k = rng.next_below(70) as usize; // includes k = 0
+        let n = 1 + rng.next_below(90) as usize;
+        let a = rand_mat(m, k, rng);
+        let b = rand_mat(k, n, rng);
+        let mut c_sc = vec![0.0; m * n];
+        let mut c_simd = vec![0.0; m * n];
+        gemm::gemm_with(kernels::scalar(), m, n, k, a.data(), k, 1, b.data(), n, 1, &mut c_sc, 1);
+        gemm::gemm_with(simd, m, n, k, a.data(), k, 1, b.data(), n, 1, &mut c_simd, 1);
+        assert_close(&c_simd, &c_sc, 1e-12);
+        // Aᵀ·B through the strided packing view (packing absorbs the
+        // transpose — the panel layout the microkernel sees is identical).
+        if k > 0 {
+            let mut t_sc = vec![0.0; k * n];
+            let mut t_simd = vec![0.0; k * n];
+            let at = rand_mat(m, k, rng);
+            let bt = rand_mat(m, n, rng);
+            gemm::gemm_with(
+                kernels::scalar(), k, n, m, at.data(), 1, k, bt.data(), n, 1, &mut t_sc, 1,
+            );
+            gemm::gemm_with(simd, k, n, m, at.data(), 1, k, bt.data(), n, 1, &mut t_simd, 1);
+            assert_close(&t_simd, &t_sc, 1e-12);
+        }
+    });
+}
+
+#[test]
+fn gemm_simd_bitwise_repeatable_and_thread_invariant() {
+    let Some(simd) = simd_or_skip("gemm_simd_bitwise_repeatable_and_thread_invariant") else {
+        return;
+    };
+    let mut rng = Pcg64::new(77);
+    for &(m, k, n) in &[(67usize, 35usize, 129usize), (130, 70, 41)] {
+        let a = rand_mat(m, k, &mut rng);
+        let b = rand_mat(k, n, &mut rng);
+        let mut base = vec![0.0; m * n];
+        gemm::gemm_with(simd, m, n, k, a.data(), k, 1, b.data(), n, 1, &mut base, 1);
+        // Run-to-run: identical bits on every repeat.
+        for _ in 0..3 {
+            let mut again = vec![0.0; m * n];
+            gemm::gemm_with(simd, m, n, k, a.data(), k, 1, b.data(), n, 1, &mut again, 1);
+            assert_eq!(base, again, "SIMD GEMM not repeatable");
+        }
+        // Thread-count invariance: row sharding never changes an element's
+        // k-chain, and the full-padded-tile accumulation makes the chain
+        // independent of where a tile sits.
+        for threads in [2usize, 3, 4] {
+            let mut par = vec![0.0; m * n];
+            gemm::gemm_with(simd, m, n, k, a.data(), k, 1, b.data(), n, 1, &mut par, threads);
+            assert_eq!(base, par, "SIMD GEMM bits changed at threads={threads}");
+        }
+    }
+}
+
+// ----------------------------------------------------------------- FWHT
+
+#[test]
+fn fwht_simd_bitwise_matches_scalar_across_block_boundary() {
+    let Some(simd) = simd_or_skip("fwht_simd_bitwise_matches_scalar_across_block_boundary") else {
+        return;
+    };
+    let mut rng = Pcg64::new(31);
+    // Sizes straddling every regime: tiny (scalar-h passes only), one
+    // vector chunk, exactly the 4096-double cache block, and multi-block
+    // sizes that exercise the large-h contiguous-halves sweep.
+    for logn in [0usize, 1, 2, 3, 5, 9, 12, 13, 14] {
+        let n = 1usize << logn;
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut a = x.clone();
+        let mut b = x.clone();
+        smppca::linalg::fwht::fwht_inplace_with(kernels::scalar(), &mut a);
+        smppca::linalg::fwht::fwht_inplace_with(simd, &mut b);
+        assert_eq!(a, b, "FWHT bits diverged at n={n}");
+        // Run-to-run repeatability of the SIMD path.
+        let mut c = x.clone();
+        smppca::linalg::fwht::fwht_inplace_with(simd, &mut c);
+        assert_eq!(b, c, "SIMD FWHT not repeatable at n={n}");
+    }
+}
+
+#[test]
+#[should_panic(expected = "power of two")]
+fn fwht_dispatch_still_rejects_non_pow2() {
+    let mut x = vec![0.0; 12];
+    smppca::linalg::fwht::fwht_inplace(&mut x);
+}
+
+// ----------------------------------------------------------- CountSketch
+
+#[test]
+fn countsketch_kernels_bitwise_match_per_entry_oracle() {
+    let Some(simd) = simd_or_skip("countsketch_kernels_bitwise_match_per_entry_oracle") else {
+        return;
+    };
+    prop(83, 12, |rng| {
+        // Ragged lengths (not multiples of the 4-lane width) and awkward k,
+        // including the k<2 and giant-k scalar-fallback edges.
+        let n = 1 + rng.next_below(133) as usize;
+        let k = match rng.next_below(5) {
+            0 => 1,
+            1 => 2 + rng.next_below(30) as usize,
+            2 => 1 + rng.next_below(1 << 16) as usize,
+            3 => (1 << 20) + rng.next_below(1 << 20) as usize,
+            _ => (1usize << 31) + rng.next_below(1 << 10) as usize,
+        };
+        let seed = rng.next_u64();
+        let idx: Vec<u64> = (0..n).map(|_| rng.next_u64() >> 8).collect();
+        let vals: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut got_sc = Vec::new();
+        let mut got_simd = Vec::new();
+        (kernels::scalar().bucket_signs)(seed, k, &idx, &vals, &mut got_sc);
+        (simd.bucket_signs)(seed, k, &idx, &vals, &mut got_simd);
+        assert_eq!(got_sc.len(), n);
+        assert_eq!(got_simd.len(), n);
+        for t in 0..n {
+            let (bucket, sign) = smppca::sketch::countsketch::bucket_sign(seed, idx[t], k);
+            assert_eq!(got_sc[t].0 as usize, bucket, "scalar bucket k={k} t={t}");
+            assert_eq!(got_simd[t].0, got_sc[t].0, "SIMD bucket diverged k={k} t={t}");
+            assert_eq!(
+                got_simd[t].1.to_bits(),
+                (vals[t] * sign).to_bits(),
+                "SIMD signed value diverged k={k} t={t}"
+            );
+        }
+    });
+}
+
+#[test]
+fn countsketch_simd_bitwise_repeatable() {
+    let Some(simd) = simd_or_skip("countsketch_simd_bitwise_repeatable") else { return };
+    let idx: Vec<u64> = (0..1001).map(|i| i * 37 + 5).collect();
+    let vals: Vec<f64> = (0..1001).map(|i| (i as f64).sin()).collect();
+    let mut a = Vec::new();
+    (simd.bucket_signs)(9, 257, &idx, &vals, &mut a);
+    for _ in 0..3 {
+        let mut b = Vec::new();
+        (simd.bucket_signs)(9, 257, &idx, &vals, &mut b);
+        assert_eq!(a, b, "SIMD bucket_signs not repeatable");
+    }
+}
+
+// ------------------------------------------------- end-to-end ingest paths
+
+fn summaries_for(kind: SketchKind, kern: &'static Kernels) -> (Summary, Summary) {
+    let mut rng = Pcg64::new(4242);
+    let x = Mat::from_fn(301, 13, |_, _| rng.next_gaussian());
+    // Blocked column ingest.
+    let mut st = SketchState::new_with_kernel(kind, 17, 24, 301, 13, kern);
+    st.ingest_dense(&x);
+    // Per-entry streamed ingest (kernel-independent oracle path for
+    // Gaussian/CountSketch; SRHT per-entry uses popcount, no FWHT).
+    let mut pe = SketchState::new_with_kernel(kind, 17, 24, 301, 13, kern);
+    for i in 0..301 {
+        for j in 0..13 {
+            pe.update_entry(i, j, x[(i, j)]);
+        }
+    }
+    (st.finalize(), pe.finalize())
+}
+
+#[test]
+fn sketch_ingest_agrees_across_kernels() {
+    let Some(simd) = simd_or_skip("sketch_ingest_agrees_across_kernels") else { return };
+    for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+        let (blocked_sc, per_entry_sc) = summaries_for(kind, kernels::scalar());
+        let (blocked_simd, per_entry_simd) = summaries_for(kind, simd);
+        // Per-entry paths never touch the batched kernels → bitwise equal.
+        assert_eq!(
+            per_entry_sc.sketch.data(),
+            per_entry_simd.sketch.data(),
+            "{kind:?}: per-entry path must not depend on the kernel"
+        );
+        match kind {
+            // FWHT is bitwise-identical and CountSketch is discrete-exact,
+            // so the full blocked ingest must match bit-for-bit.
+            SketchKind::Srht | SketchKind::CountSketch => {
+                assert_eq!(
+                    blocked_sc.sketch.data(),
+                    blocked_simd.sketch.data(),
+                    "{kind:?}: blocked ingest bits diverged across kernels"
+                );
+            }
+            // Gaussian routes through GEMM (FMA ⇒ O(ε) differences).
+            SketchKind::Gaussian => {
+                assert_close(blocked_simd.sketch.data(), blocked_sc.sketch.data(), 1e-12);
+            }
+        }
+        assert_eq!(blocked_sc.col_norms, blocked_simd.col_norms, "{kind:?}: norms are exact");
+        // And each kernel's blocked path stays consistent with its own
+        // per-entry oracle (exact for CountSketch, fp-close for the rest).
+        assert_close(blocked_simd.sketch.data(), per_entry_simd.sketch.data(), 1e-10);
+    }
+}
+
+#[test]
+fn srht_apply_bitwise_identical_across_kernels() {
+    let Some(simd) = simd_or_skip("srht_apply_bitwise_identical_across_kernels") else { return };
+    prop(91, 8, |rng| {
+        let d = 3 + rng.next_below(5000) as usize;
+        let k = 1 + rng.next_below(d.min(64) as u64) as usize;
+        let plan = smppca::sketch::srht::SrhtPlan::new(rng.next_u64(), k, d);
+        let col: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let mut pad = vec![0.0; plan.d_pad()];
+        let mut out_sc = vec![0.0; k];
+        let mut out_simd = vec![0.0; k];
+        plan.apply_into_with(kernels::scalar(), &col, &mut pad, &mut out_sc);
+        plan.apply_into_with(simd, &col, &mut pad, &mut out_simd);
+        assert_eq!(out_sc, out_simd, "SRHT apply bits diverged (d={d} k={k})");
+    });
+}

@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Fold a measured BENCH_hotpaths.json run into the committed manifest.
+
+The committed manifest (BENCH_hotpaths.json at the repo root) records the
+bench suite's *schema* — which groups are tracked — with null timings when
+the authoring environment could not run `cargo bench`. The CI bench-smoke
+job produces the measured artifact and runs this script to:
+
+  1. merge measured rows into the manifest shape (manifest row order is
+     preserved; measured-only rows are appended; manifest rows missing from
+     the measured run keep their nulls, so a silently-vanished group is
+     visible as a null row next to measured neighbours);
+  2. emit a markdown table of the measured rows, ready to paste into
+     EXPERIMENTS.md §Perf / §Serve.
+
+Offline usage (what a maintainer does with a downloaded CI artifact):
+
+    python3 scripts/fold_bench.py \
+        --measured ~/Downloads/BENCH_hotpaths/BENCH_hotpaths.json \
+        --manifest BENCH_hotpaths.json \
+        --out-json BENCH_hotpaths.json \
+        --out-md /tmp/rows.md
+
+then commit the folded JSON and paste the rows the PR touched into
+EXPERIMENTS.md. Stdlib only — the CI runner and the authoring containers
+both lack third-party Python packages.
+"""
+
+import argparse
+import json
+import sys
+
+NUMERIC_FIELDS = (
+    "mean_ms",
+    "median_ms",
+    "p95_ms",
+    "p99_ms",
+    "items_per_iter",
+    "items_per_sec",
+)
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if "results" not in doc or not isinstance(doc["results"], list):
+        sys.exit(f"{path}: not a bench JSON (missing 'results' list)")
+    return doc
+
+
+def fold(manifest, measured):
+    """Merge measured rows into the manifest's row order."""
+    measured_by_name = {r["name"]: r for r in measured["results"]}
+    folded = []
+    for row in manifest["results"]:
+        m = measured_by_name.pop(row["name"], None)
+        folded.append(dict(m) if m is not None else dict(row))
+    # Measured groups the manifest does not track yet ride along at the end,
+    # in the measured run's order.
+    for r in measured["results"]:
+        if r["name"] in measured_by_name:
+            folded.append(dict(r))
+    out = dict(manifest)
+    out["results"] = folded
+    # Keep the manifest's provenance note (it explains where timings come
+    # from) but record that this copy carries measured numbers.
+    prov = manifest.get("provenance", "")
+    out["provenance"] = (
+        "Folded: measured rows from a CI bench-smoke artifact merged into "
+        "the committed manifest by scripts/fold_bench.py. " + prov
+    )
+    return out
+
+
+def fmt(v, unit=""):
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        if v >= 1000:
+            return f"{v:,.0f}{unit}"
+        if v >= 1:
+            return f"{v:.2f}{unit}"
+        return f"{v:.4f}{unit}"
+    return f"{v}{unit}"
+
+
+def to_markdown(doc):
+    lines = [
+        "| bench | mean ms | p95 ms | p99 ms | items/iter | items/s |",
+        "|---|---:|---:|---:|---:|---:|",
+    ]
+    for r in doc["results"]:
+        cells = [r["name"]] + [fmt(r.get(f)) for f in NUMERIC_FIELDS if f != "median_ms"]
+        lines.append("| " + " | ".join(cells) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--measured", required=True, help="bench JSON produced by cargo bench -- --json")
+    ap.add_argument("--manifest", required=True, help="committed manifest (schema + row order)")
+    ap.add_argument("--out-json", required=True, help="where to write the folded JSON")
+    ap.add_argument("--out-md", help="optional markdown table of the folded rows")
+    args = ap.parse_args()
+
+    manifest = load(args.manifest)
+    measured = load(args.measured)
+    folded = fold(manifest, measured)
+
+    with open(args.out_json, "w") as f:
+        json.dump(folded, f, indent=2)
+        f.write("\n")
+
+    n_measured = sum(1 for r in folded["results"] if r.get("mean_ms") is not None)
+    n_null = len(folded["results"]) - n_measured
+    print(
+        f"folded {len(folded['results'])} rows -> {args.out_json} "
+        f"({n_measured} measured, {n_null} still null)"
+    )
+    if n_null:
+        for r in folded["results"]:
+            if r.get("mean_ms") is None:
+                print(f"  null: {r['name']}")
+
+    if args.out_md:
+        with open(args.out_md, "w") as f:
+            f.write(to_markdown(folded))
+        print(f"wrote markdown rows -> {args.out_md}")
+
+
+if __name__ == "__main__":
+    main()
