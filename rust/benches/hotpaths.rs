@@ -12,9 +12,13 @@
 //! plan), the unified runtime (`pool/spawn_overhead/*` persistent-pool dispatch vs
 //! fresh scoped spawn/join, `gemm/small_par/*` small-GEMM parallel cost on
 //! the pool vs the scoped baseline), ALS solve, end-to-end leader finish,
-//! and the SIMD kernel layer (`gemm/kernel=*`, `fwht/kernel=*`,
+//! the SIMD kernel layer (`gemm/kernel=*`, `fwht/kernel=*`,
 //! `sketch_ingest/column_block/*/kernel=*` — the same work pinned to the
-//! scalar vs AVX2 kernel sets; avx2 rows appear only on capable hardware).
+//! scalar vs AVX2 kernel sets; avx2 rows appear only on capable hardware),
+//! and the observability layer (`obs/overhead/*` per-primitive
+//! instrumentation cost, disabled vs enabled, plus
+//! `server/query_qps/line_w2_traced` — the serve query path with span
+//! tracing armed).
 //!
 //! ```bash
 //! cargo bench --bench hotpaths            # human-readable table
@@ -484,6 +488,48 @@ fn main() {
         }
     }
 
+    // --------------------------------------------------- observability
+    // Price of one instrumentation point, per obs primitive — the numbers
+    // behind the EXPERIMENTS.md §Observability overhead table. The
+    // disabled-span row is the contract row: `span()` with tracing off is
+    // one relaxed atomic load plus an inert guard drop, so it must sit at
+    // the single-digit-ns floor with the counter, far from the
+    // enabled-span cost (two clock reads + a ring push).
+    {
+        use smppca::runtime::obs::{registry, trace};
+        const OPS: u64 = 100_000;
+        let c = registry::counter("bench/obs/counter");
+        suite.bench_items("obs/overhead/counter", OPS, || {
+            for _ in 0..OPS {
+                c.inc();
+            }
+            black_box(c.get());
+        });
+        let h = registry::hist("bench/obs/hist");
+        suite.bench_items("obs/overhead/hist", OPS, || {
+            for i in 0..OPS {
+                h.record_ns(i);
+            }
+            black_box(h.snapshot().count());
+        });
+        trace::set_enabled(false);
+        suite.bench_items("obs/overhead/span/disabled", OPS, || {
+            for _ in 0..OPS {
+                let _s = trace::span("bench/obs/span");
+            }
+        });
+        // Enabled spans push into the drop-oldest ring, so sustained load
+        // stays memory-bounded; displaced events land on obs/trace/dropped.
+        trace::set_enabled(true);
+        suite.bench_items("obs/overhead/span/enabled", OPS, || {
+            for _ in 0..OPS {
+                let _s = trace::span("bench/obs/span");
+            }
+        });
+        trace::set_enabled(false);
+        let _ = trace::drain();
+    }
+
     // ------------------------------------------------- serving subsystem
     // Long-lived session ingest throughput vs worker count (route →
     // bounded queues → grouped batch kernels; `flush` is the fold barrier
@@ -598,6 +644,24 @@ fn main() {
                 }
             });
             suite.record("server/query_qps/burst64_latency", lat, Some(64));
+            // The same line-dispatch loop with span tracing armed: this
+            // row prices full instrumentation (route/query spans + ring
+            // pushes on the serve path) against line_w2 above — the
+            // "tracing on" cost EXPERIMENTS.md §Observability quotes.
+            // Rings are drop-oldest, so the sustained load stays bounded.
+            {
+                use smppca::runtime::obs::trace;
+                trace::set_enabled(true);
+                suite.bench_items("server/query_qps/line_w2_traced", total_q, || {
+                    for _ in 0..ROUNDS {
+                        for q in &burst {
+                            black_box(proto.handle(q));
+                        }
+                    }
+                });
+                trace::set_enabled(false);
+                let _ = trace::drain();
+            }
             stop.store(true, Ordering::Release);
             pump.join().unwrap();
             proto.service().close("benchq").unwrap();

@@ -32,6 +32,16 @@ impl BenchResult {
         self.percentile(95)
     }
 
+    /// Median estimate from the obs histogram type (log buckets, ~2 per
+    /// octave, interpolated) rather than a sorted-sample scan — the same
+    /// estimator the serve `stats` percentiles use, so bench rows and
+    /// scrape output are comparable apples-to-apples. Bucket-quantized:
+    /// within a factor of √2 of the exact median.
+    pub fn p50(&self) -> Duration {
+        let h = crate::runtime::obs::hist::HistSnapshot::from_durations(&self.samples);
+        Duration::from_nanos(h.quantile_ns(0.5) as u64)
+    }
+
     /// Tail latency for sample series dense enough to resolve it (e.g. the
     /// per-burst query-latency series recorded by `server/query_qps`); on
     /// the default 7-sample runs it degenerates to the max, which is still
@@ -157,12 +167,14 @@ impl BenchSuite {
             };
             s.push_str(&format!(
                 "    {{\"name\": \"{}\", \"samples\": {}, \"mean_ms\": {:.6}, \
-                 \"median_ms\": {:.6}, \"p95_ms\": {:.6}, \"p99_ms\": {:.6}, \
+                 \"median_ms\": {:.6}, \"p50_ms\": {:.6}, \"p95_ms\": {:.6}, \
+                 \"p99_ms\": {:.6}, \
                  \"items_per_iter\": {}, \"items_per_sec\": {}}}{}\n",
                 json_escape(&r.name),
                 r.samples.len(),
                 mean_s * 1e3,
                 r.median().as_secs_f64() * 1e3,
+                r.p50().as_secs_f64() * 1e3,
                 r.p95().as_secs_f64() * 1e3,
                 r.p99().as_secs_f64() * 1e3,
                 items,
@@ -256,6 +268,7 @@ mod tests {
         assert!(body.contains("\"name\": \"group/alpha\""), "{body}");
         assert!(body.contains("\"items_per_iter\": 100"), "{body}");
         assert!(body.contains("\"p99_ms\""), "{body}");
+        assert!(body.contains("\"p50_ms\""), "{body}");
         assert!(body.contains("\"items_per_iter\": null"), "{body}");
         assert_eq!(body.matches('{').count(), body.matches('}').count(), "{body}");
     }
@@ -274,5 +287,9 @@ mod tests {
         assert!(r.median() <= r.p95());
         assert!(r.p95() <= r.p99());
         assert_eq!(r.median(), Duration::from_millis(2));
+        // Histogram-derived p50 is bucket-quantized: within √2 of the
+        // exact 2 ms median.
+        let p50 = r.p50().as_secs_f64() * 1e3;
+        assert!(p50 >= 2.0 / 1.5 && p50 <= 2.0 * 1.5, "p50 {p50}");
     }
 }

@@ -157,6 +157,16 @@ SERVE OPTIONS:
                      answered `err shed ...` (default 256)
   --net-mem-budget N per-burst command budget in bytes (default 1048576)
   --net-max-line N   longest accepted protocol line in bytes (default 65536)
+  --trace-out PATH   record pipeline/serve span traces and write them to
+                     PATH on exit as Chrome/Perfetto trace_event JSON
+                     (open in chrome://tracing or ui.perfetto.dev). Also
+                     settable as SMPPCA_TRACE=PATH on any command; the
+                     flag wins when both are set. Tracing never touches
+                     numerics: results stay bitwise identical with it on,
+                     and when off each span site costs one relaxed atomic
+                     load. Spans land in per-thread drop-oldest ring
+                     buffers; overflow is counted in the
+                     `obs/trace/dropped` metric, never blocked on.
   --fault-plan PLAN  arm deterministic fault injection (testing/chaos runs):
                      `point:action@trigger[;...]` with actions panic|ioerr|
                      delay=MS and triggers every=N|nth=N|once|prob=P[,seed=S],
@@ -170,6 +180,13 @@ SERVE OPTIONS:
   `refresh` (or `auto-refresh`), and answers `estimate`/`block`/`top`
   queries from the published epoch while ingestion continues. Snapshots and
   shard states persist via `save`/`load`/`checkpoint` (versioned format).
+
+  Observability: the protocol's `metrics` command scrapes the process
+  metric registry as a human report, `metrics prom` as Prometheus text
+  exposition (histograms with cumulative _bucket/_sum/_count); `stats
+  NAME` reports per-stream query/route latency percentiles. Stderr
+  logging is leveled via SMPPCA_LOG=error|warn|info|debug (default warn)
+  with per-callsite rate limiting. See EXPERIMENTS.md §Observability.
 
 EXP OPTIONS:
   --scale F          shrink experiment sizes by F (default 1.0 = paper-scaled
@@ -278,6 +295,18 @@ mod tests {
         // And the parser itself fails fast with the accepted values named.
         let err = crate::linalg::kernels::parse_choice("neon").unwrap_err();
         assert!(err.contains("auto|scalar|avx2"), "{err}");
+    }
+
+    #[test]
+    fn observability_documented_and_parses() {
+        assert!(HELP.contains("--trace-out"), "HELP must document trace export");
+        assert!(HELP.contains("SMPPCA_TRACE"), "HELP must name the trace env twin");
+        assert!(HELP.contains("SMPPCA_LOG"), "HELP must document the log-level env var");
+        assert!(HELP.contains("metrics prom"), "HELP must document the prom scrape");
+        let a = parse("serve --trace-out /tmp/trace.json");
+        assert_eq!(a.get("trace-out"), Some("/tmp/trace.json"));
+        let b = parse("run --trace-out=t.json");
+        assert_eq!(b.get("trace-out"), Some("t.json"));
     }
 
     #[test]

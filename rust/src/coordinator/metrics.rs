@@ -68,6 +68,30 @@ pub mod stage {
     pub const NET_LINES: &str = "serve/net/lines";
     /// Lines dropped for exceeding the maximum framed line length.
     pub const NET_OVERSIZED_LINES: &str = "serve/net/oversized_lines";
+
+    /// Stages whose recorded time is already contained in another
+    /// recorded stage's wall time. `serve/refresh` spans its own freeze +
+    /// merge + leader finish, the offline leader finish spans its three
+    /// sub-stages, and `pass/total` is the wall time the per-worker busy
+    /// time and merge happen inside — so a flat sum over stages counts
+    /// those intervals twice. [`super::Metrics::total`] and the report
+    /// roll a stage under the *first* of these parents that is actually
+    /// recorded. (`serve/freeze` is rolled under `serve/refresh` even
+    /// though save/checkpoint can freeze outside a refresh: with only
+    /// aggregate stage times the split is unknowable, and under-counting
+    /// the total is the conservative direction — the bug was
+    /// over-counting.)
+    pub fn rollup_parents(name: &str) -> &'static [&'static str] {
+        match name {
+            LEADER_SAMPLE | LEADER_ESTIMATE | LEADER_COMPLETE => {
+                &[LEADER_FINISH, SERVE_REFRESH]
+            }
+            "worker/sketch" | "merge" => &[PASS_TOTAL],
+            SERVE_FREEZE => &[SERVE_REFRESH],
+            SERVE_RECOVERY => &[SERVE_ROUTE, SERVE_FREEZE, SERVE_REFRESH],
+            _ => &[],
+        }
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -97,8 +121,26 @@ impl Metrics {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// The stage a name rolls under in *this* metrics instance: the first
+    /// of its [`stage::rollup_parents`] that was actually recorded.
+    fn recorded_parent(&self, name: &str) -> Option<&str> {
+        stage::rollup_parents(name)
+            .iter()
+            .copied()
+            .find(|p| self.stages.contains_key(*p))
+    }
+
+    /// Total wall time across *top-level* stages only. Stages nested
+    /// inside a recorded parent (see [`stage::rollup_parents`]) are
+    /// already counted by that parent's wall time, so summing them too
+    /// would over-state the total — `serve/refresh` alone contains the
+    /// three `leader/*` stage times.
     pub fn total(&self) -> Duration {
-        self.stages.values().sum()
+        self.stages
+            .iter()
+            .filter(|(k, _)| self.recorded_parent(k).is_none())
+            .map(|(_, v)| *v)
+            .sum()
     }
 
     /// Merge metrics from a worker.
@@ -111,15 +153,37 @@ impl Metrics {
         }
     }
 
+    /// Hierarchy-aware stage report: nested stages are indented under
+    /// the recorded parent whose wall time already contains them, so the
+    /// reader can tell which rows add up to wall clock (the top-level
+    /// ones — exactly what [`Metrics::total`] sums) and which decompose
+    /// a parent.
     pub fn report(&self) -> String {
         let mut s = String::new();
         for (k, v) in &self.stages {
-            s.push_str(&format!("  {k:<28} {:>10.3} ms\n", v.as_secs_f64() * 1e3));
+            if self.recorded_parent(k).is_none() {
+                self.report_stage(&mut s, k, *v, 0);
+            }
         }
         for (k, v) in &self.counters {
             s.push_str(&format!("  {k:<28} {v:>10}\n"));
         }
         s
+    }
+
+    fn report_stage(&self, s: &mut String, name: &str, v: Duration, depth: usize) {
+        let indent = 2 + 2 * depth;
+        let width = 28usize.saturating_sub(2 * depth);
+        s.push_str(&format!(
+            "{:indent$}{name:<width$} {:>10.3} ms\n",
+            "",
+            v.as_secs_f64() * 1e3,
+        ));
+        for (ck, cv) in &self.stages {
+            if self.recorded_parent(ck) == Some(name) {
+                self.report_stage(s, ck, *cv, depth + 1);
+            }
+        }
     }
 }
 
@@ -162,6 +226,54 @@ mod tests {
         let r = m.report();
         assert!(r.contains("sample"));
         assert!(r.contains("42"));
+    }
+
+    #[test]
+    fn total_rolls_nested_serve_stages_under_refresh() {
+        // The serve shape: one refresh records its own wall time AND the
+        // three leader stages inside it; route and recovery ride along.
+        let mut m = Metrics::new();
+        m.record_stage(stage::SERVE_REFRESH, Duration::from_millis(10));
+        m.record_stage(stage::LEADER_SAMPLE, Duration::from_millis(3));
+        m.record_stage(stage::LEADER_ESTIMATE, Duration::from_millis(2));
+        m.record_stage(stage::LEADER_COMPLETE, Duration::from_millis(4));
+        m.record_stage(stage::SERVE_FREEZE, Duration::from_millis(1));
+        m.record_stage(stage::SERVE_ROUTE, Duration::from_millis(5));
+        m.record_stage(stage::SERVE_RECOVERY, Duration::from_millis(2));
+        // Only refresh + route are top-level: 10 + 5. The flat sum would
+        // be 27 ms — the double-count this pins against.
+        assert_eq!(m.total(), Duration::from_millis(15));
+    }
+
+    #[test]
+    fn total_rolls_offline_stages_under_their_parents() {
+        let mut m = Metrics::new();
+        m.record_stage(stage::PASS_TOTAL, Duration::from_millis(5));
+        m.record_stage("worker/sketch", Duration::from_millis(9)); // busy > wall
+        m.record_stage("merge", Duration::from_millis(1));
+        m.record_stage(stage::LEADER_FINISH, Duration::from_millis(10));
+        m.record_stage(stage::LEADER_SAMPLE, Duration::from_millis(4));
+        assert_eq!(m.total(), Duration::from_millis(15));
+    }
+
+    #[test]
+    fn total_without_parents_is_the_flat_sum() {
+        // Nested stages with no recorded parent stay top-level: a lone
+        // leader/sample (unit-style use) must still count.
+        let mut m = Metrics::new();
+        m.record_stage(stage::LEADER_SAMPLE, Duration::from_millis(3));
+        m.record_stage("custom/stage", Duration::from_millis(2));
+        assert_eq!(m.total(), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn report_indents_children_under_parent() {
+        let mut m = Metrics::new();
+        m.record_stage(stage::SERVE_REFRESH, Duration::from_millis(10));
+        m.record_stage(stage::LEADER_SAMPLE, Duration::from_millis(3));
+        let r = m.report();
+        assert!(r.contains("\n    leader/sample"), "{r}");
+        assert!(r.starts_with("  serve/refresh"), "{r}");
     }
 
     #[test]

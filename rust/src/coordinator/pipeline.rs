@@ -4,6 +4,7 @@
 
 use crate::algo::{complete_stage, estimate_stage, sample_stage, SmpPcaConfig, SmpPcaOutput};
 use crate::coordinator::metrics::{stage, Metrics, StageTimer};
+use crate::runtime::obs::trace;
 use crate::runtime::TileEngine;
 use crate::sketch::ingest::{self, IngestConfig};
 use crate::sketch::Summary;
@@ -61,15 +62,25 @@ impl Pipeline {
     pub fn run(&self, source: Box<dyn EntrySource>) -> anyhow::Result<PipelineOutput> {
         let mut metrics = Metrics::new();
         let (sa, sb) = self.sketch_pass(source, &mut metrics)?;
+        let _finish_span = trace::span(stage::LEADER_FINISH);
         let t_total = StageTimer::start();
         let t = StageTimer::start();
-        let omega = sample_stage(&sa, &sb, &self.cfg.algo)?;
+        let omega = {
+            let _s = trace::span(stage::LEADER_SAMPLE);
+            sample_stage(&sa, &sb, &self.cfg.algo)?
+        };
         metrics.record_stage(stage::LEADER_SAMPLE, t.stop());
         let t = StageTimer::start();
-        let values = estimate_stage(&sa, &sb, &self.cfg.algo, self.engine.as_ref(), &omega);
+        let values = {
+            let _s = trace::span(stage::LEADER_ESTIMATE);
+            estimate_stage(&sa, &sb, &self.cfg.algo, self.engine.as_ref(), &omega)
+        };
         metrics.record_stage(stage::LEADER_ESTIMATE, t.stop());
         let t = StageTimer::start();
-        let result = complete_stage(&sa, &sb, &self.cfg.algo, &omega, &values)?;
+        let result = {
+            let _s = trace::span(stage::LEADER_COMPLETE);
+            complete_stage(&sa, &sb, &self.cfg.algo, &omega, &values)?
+        };
         metrics.record_stage(stage::LEADER_COMPLETE, t.stop());
         metrics.record_stage(stage::LEADER_FINISH, t_total.stop());
         metrics.add("omega_samples", result.samples_drawn as u64);
@@ -87,6 +98,7 @@ impl Pipeline {
         source: Box<dyn EntrySource>,
         metrics: &mut Metrics,
     ) -> anyhow::Result<(Summary, Summary)> {
+        let _span = trace::span(stage::PASS_TOTAL);
         let icfg = IngestConfig {
             workers: self.cfg.workers,
             channel_capacity: self.cfg.channel_capacity,

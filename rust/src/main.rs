@@ -55,6 +55,28 @@ fn real_main() -> anyhow::Result<()> {
     }
 }
 
+/// Where span traces go, if anywhere: `--trace-out PATH` wins over the
+/// `SMPPCA_TRACE=PATH` env var. Arming tracing is a process-global switch
+/// (one relaxed atomic), flipped before any instrumented work starts.
+fn arm_tracing(args: &Args) -> Option<String> {
+    let dest = args
+        .get("trace-out")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SMPPCA_TRACE").ok().filter(|s| !s.is_empty()));
+    if dest.is_some() {
+        smppca::runtime::obs::trace::set_enabled(true);
+    }
+    dest
+}
+
+/// Drain the span rings to Chrome/Perfetto trace_event JSON at `path`.
+fn write_trace(path: &str) {
+    match smppca::runtime::obs::trace::write_chrome_trace(std::path::Path::new(path)) {
+        Ok(n) => eprintln!("[smppca] wrote trace ({n} events) to {path}"),
+        Err(e) => eprintln!("[smppca] failed to write trace to {path}: {e}"),
+    }
+}
+
 fn load_dataset(args: &Args) -> anyhow::Result<(Mat, Mat)> {
     let d = args.get_parse("d", 512usize)?;
     let n1 = args.get_parse("n1", 256usize)?;
@@ -81,6 +103,7 @@ fn load_dataset(args: &Args) -> anyhow::Result<(Mat, Mat)> {
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let trace_out = arm_tracing(args);
     let rank = args.get_parse("rank", 5usize)?;
     let k = args.get_parse("k", 100usize)?;
     let samples = args.get_parse("samples", 0.0f64)?;
@@ -170,6 +193,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             println!("baselines: optimal={e_opt:.5}  lela={e_lela:.5}  svd(sketch)={e_svd:.5}");
         }
     }
+    if let Some(path) = &trace_out {
+        write_trace(path);
+    }
     Ok(())
 }
 
@@ -179,6 +205,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// [`smppca::server::ServeProtocol`]; this is only the I/O shell.
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use std::io::BufRead;
+    let trace_out = arm_tracing(args);
     if let Some(plan) = args.get("fault-plan") {
         smppca::runtime::fault::install(plan)?;
         eprintln!("[smppca] fault plan armed: {plan}");
@@ -226,6 +253,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     for (name, e) in proto.service().close_all() {
         eprintln!("[smppca] stream '{name}' closed with an error: {e:#}");
+    }
+    if let Some(path) = &trace_out {
+        write_trace(path);
     }
     Ok(())
 }

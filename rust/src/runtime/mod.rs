@@ -21,6 +21,7 @@
 
 pub mod engine;
 pub mod fault;
+pub mod obs;
 pub mod pool;
 pub mod xla_engine;
 

@@ -1,0 +1,343 @@
+//! Log-bucketed latency histograms: fixed geometric buckets (~2 per
+//! octave, boundaries at powers of √2) spanning 1 ns to ~2.3 minutes,
+//! with one overflow bucket above.
+//!
+//! The bucket layout is a compile-time constant, so recording is a pure
+//! bit computation (leading-zeros + one 128-bit square compare) followed
+//! by two relaxed `fetch_add`s (bucket count + running sum) — no locks,
+//! no floating point, no allocation. Snapshots are plain arrays and merge
+//! by element-wise addition, which is associative and commutative by
+//! construction — the same discipline `SketchState::merge` relies on, so
+//! per-worker histograms can be folded in any order with identical
+//! results.
+//!
+//! Quantiles come from the snapshot: nearest-rank walk over the buckets
+//! with linear interpolation inside the landing bucket. The error is
+//! bounded by the bucket width (a factor of √2), which is the usual
+//! trade for O(1) lock-free recording.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Total bucket count: indices `0..=FINITE-1` have finite upper bounds,
+/// index `BUCKETS-1` is the overflow (+Inf) bucket.
+pub const BUCKETS: usize = 74;
+/// Number of finite buckets (the last finite upper bound is 2^37 − 1 ns
+/// ≈ 137 s, comfortably into the "minutes" range the serve stack needs).
+pub const FINITE: usize = BUCKETS - 1;
+
+/// Bucket index for a duration in nanoseconds. Buckets follow the
+/// half-octave grid: value `v ≥ 2` lands in `2·⌊log₂v⌋ + [v² ≥ 2^(2⌊log₂v⌋+1)] − 1`
+/// (the square compare is the exact integer form of `v ≥ √2·2^⌊log₂v⌋`),
+/// clamped into the overflow bucket. `0` and `1` share bucket 0 so every
+/// boundary in [`bucket_upper_ns`] is strictly increasing.
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns <= 1 {
+        return 0;
+    }
+    let l = (63 - ns.leading_zeros()) as usize; // ⌊log₂ ns⌋, ≥ 1 here
+    let hi = (ns as u128) * (ns as u128) >= (1u128 << (2 * l + 1));
+    (2 * l + hi as usize - 1).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound (ns) of bucket `i` for `i < FINITE`;
+/// `u64::MAX` for the overflow bucket. Strictly increasing over the
+/// finite range: 1, 2, 3, 5, 7, 11, 15, 22, 31, 45, 63, …
+pub fn bucket_upper_ns(i: usize) -> u64 {
+    if i >= FINITE {
+        return u64::MAX;
+    }
+    match i {
+        0 => 1,
+        // Odd index ⇔ bucket [2^l, √2·2^l) with l = (i+1)/2: the top is
+        // ⌊√(2^(i+2))⌋ (an odd power of two is never a perfect square,
+        // so the floor is exact and exclusive of the next bucket).
+        i if i % 2 == 1 => isqrt(1u128 << (i + 2)),
+        // Even index ⇔ bucket [√2·2^l, 2^(l+1)) with l = i/2.
+        i => (1u64 << (i / 2 + 1)) - 1,
+    }
+}
+
+/// ⌊√n⌋ by bit-descending binary search (cold path: boundary tables and
+/// tests only).
+fn isqrt(n: u128) -> u64 {
+    let mut r: u128 = 0;
+    let mut bit = 1u128 << 63;
+    while bit > 0 {
+        let cand = r | bit;
+        if cand * cand <= n {
+            r = cand;
+        }
+        bit >>= 1;
+    }
+    r as u64
+}
+
+/// Lock-free latency histogram. All mutation is relaxed atomics; see the
+/// module docs for the consistency contract.
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+}
+
+impl Hist {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self { buckets: [ZERO; BUCKETS], sum_ns: AtomicU64::new(0) }
+    }
+
+    /// Record one observation. Two relaxed `fetch_add`s (bucket + sum);
+    /// the bucket index is a precomputed pure function of the value.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Point-in-time copy. Each bucket is read individually (relaxed), so
+    /// a snapshot taken concurrently with recording is a *valid* histogram
+    /// (every count it contains was really recorded, cumulative counts are
+    /// monotone by construction) whose per-bucket counts are each
+    /// somewhere between "when the scrape started" and "when it ended";
+    /// successive snapshots are monotone non-decreasing per bucket.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            s.counts[i] = b.load(Ordering::Relaxed);
+        }
+        s.sum_ns = self.sum_ns.load(Ordering::Relaxed);
+        s
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-value histogram state: what a scrape sees, what workers merge,
+/// and what `bench.rs` builds from a sample series to extract quantiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub sum_ns: u64,
+}
+
+impl HistSnapshot {
+    pub fn new() -> Self {
+        Self { counts: [0; BUCKETS], sum_ns: 0 }
+    }
+
+    /// Non-atomic single-owner recording (offline/bench use).
+    pub fn observe_ns(&mut self, ns: u64) {
+        self.counts[bucket_index(ns)] += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+    }
+
+    pub fn observe(&mut self, d: Duration) {
+        self.observe_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn from_durations(samples: &[Duration]) -> Self {
+        let mut s = Self::new();
+        for d in samples {
+            s.observe(*d);
+        }
+        s
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Element-wise merge: associative and commutative (saturating adds),
+    /// so fold order across workers never changes the result — the same
+    /// contract `SketchState::merge` keeps for sketch buffers.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a = a.saturating_add(*b);
+        }
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+    }
+
+    /// Approximate quantile (`q` in [0, 1]) in nanoseconds: nearest-rank
+    /// bucket walk, linearly interpolated inside the landing bucket.
+    /// Returns 0 on an empty histogram; the overflow bucket reports the
+    /// last finite boundary (an honest saturation, not an extrapolation).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                if i >= FINITE {
+                    return bucket_upper_ns(FINITE - 1) as f64;
+                }
+                let lower = if i == 0 { 0.0 } else { bucket_upper_ns(i - 1) as f64 };
+                let upper = bucket_upper_ns(i) as f64;
+                let frac = (rank - cum) as f64 / c as f64;
+                return lower + frac * (upper - lower);
+            }
+            cum += c;
+        }
+        bucket_upper_ns(FINITE - 1) as f64
+    }
+
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile_ns(q) / 1e6
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / n as f64
+        }
+    }
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundaries_strictly_increase() {
+        for i in 1..FINITE {
+            assert!(
+                bucket_upper_ns(i) > bucket_upper_ns(i - 1),
+                "bucket {i}: {} !> {}",
+                bucket_upper_ns(i),
+                bucket_upper_ns(i - 1)
+            );
+        }
+        assert_eq!(bucket_upper_ns(FINITE), u64::MAX);
+    }
+
+    #[test]
+    fn index_respects_boundaries() {
+        // Every finite boundary is the largest value in its own bucket and
+        // boundary+1 spills into the next — the exact pin the exposition
+        // format depends on.
+        for i in 0..FINITE {
+            let u = bucket_upper_ns(i);
+            assert_eq!(bucket_index(u), i, "upper {u} of bucket {i}");
+            let next = bucket_index(u + 1);
+            assert_eq!(next, i + 1, "boundary {u}+1 must enter bucket {}", i + 1);
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn ratio_between_boundaries_is_about_sqrt2() {
+        for i in 4..FINITE {
+            let r = bucket_upper_ns(i) as f64 / bucket_upper_ns(i - 1) as f64;
+            assert!(r > 1.25 && r < 1.60, "bucket {i}: ratio {r}");
+        }
+    }
+
+    #[test]
+    fn quantiles_land_within_a_bucket_of_truth() {
+        let mut s = HistSnapshot::new();
+        for _ in 0..1000 {
+            s.observe_ns(1_000_000); // 1 ms
+        }
+        let p50 = s.quantile_ns(0.5);
+        assert!(
+            p50 >= 1_000_000.0 / 1.5 && p50 <= 1_000_000.0 * 1.5,
+            "p50 {p50}"
+        );
+        assert_eq!(s.count(), 1000);
+        assert_eq!(s.sum_ns, 1_000_000_000);
+    }
+
+    #[test]
+    fn quantile_monotone_in_q() {
+        let mut s = HistSnapshot::new();
+        for ns in [10u64, 100, 1_000, 10_000, 100_000, 1_000_000] {
+            for _ in 0..10 {
+                s.observe_ns(ns);
+            }
+        }
+        let mut prev = 0.0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let v = s.quantile_ns(q);
+            assert!(v >= prev, "q={q}: {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn atomic_and_value_paths_agree() {
+        let h = Hist::new();
+        let mut v = HistSnapshot::new();
+        for ns in [0u64, 1, 2, 3, 999, 123_456, 7_000_000_000, u64::MAX] {
+            h.record_ns(ns);
+            v.observe_ns(ns);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.counts, v.counts);
+        // The atomic sum wraps on overflow while the value path saturates;
+        // below-saturation inputs must agree exactly. u64::MAX forces the
+        // wrap, so compare only the bucket placement above and the sum on
+        // a tamer series here.
+        let h2 = Hist::new();
+        let mut v2 = HistSnapshot::new();
+        for ns in [5u64, 50, 500] {
+            h2.record_ns(ns);
+            v2.observe_ns(ns);
+        }
+        assert_eq!(h2.snapshot().sum_ns, v2.sum_ns);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mk = |vals: &[u64]| {
+            let mut s = HistSnapshot::new();
+            for &v in vals {
+                s.observe_ns(v);
+            }
+            s
+        };
+        let a = mk(&[1, 10, 100]);
+        let b = mk(&[5, 5, 5, 1_000_000]);
+        let c = mk(&[u64::MAX, 0, 42]);
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+        let mut ab = a.clone();
+        ab.merge(&b);
+        ab.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab, a_bc);
+        // a ⊕ b == b ⊕ a
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab2 = a.clone();
+        ab2.merge(&b);
+        assert_eq!(ab2, ba);
+    }
+}

@@ -1,0 +1,226 @@
+//! Leveled, rate-limited stderr logging: `SMPPCA_LOG=error|warn|info|debug`.
+//!
+//! Replaces the ad-hoc `eprintln!`s in the serve supervision paths. Cost
+//! contract (same shape as `runtime/fault.rs` and `obs::trace`): a
+//! disabled log site is **one relaxed atomic load** — the level check in
+//! [`enabled`] — with the format machinery never touched. The first call
+//! in the process pays the one-time `SMPPCA_LOG` parse.
+//!
+//! Every emit site carries a static [`Callsite`] (declared by the
+//! `log_*!` macros) with a per-callsite rate limiter: at most one line
+//! per [`MIN_INTERVAL_NS`] per site, with the number of suppressed lines
+//! reported on the next emit. A recovery storm therefore costs a handful
+//! of lines, not a line per retry.
+//!
+//! Default level is `warn`, matching the messages the serve supervisor
+//! printed unconditionally before this layer existed.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+use super::trace::now_ns;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// 0 = not yet initialized from the environment.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+pub const DEFAULT_LEVEL: Level = Level::Warn;
+
+/// Minimum spacing between emitted lines from one callsite (250 ms).
+pub const MIN_INTERVAL_NS: u64 = 250_000_000;
+
+#[cold]
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("SMPPCA_LOG")
+        .ok()
+        .and_then(|v| Level::parse(&v))
+        .unwrap_or(DEFAULT_LEVEL) as u8;
+    // Racing initializers compute the same value; last store wins and all
+    // agree unless a test swapped the level in between (which set it
+    // non-zero, so this path never runs again).
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Would a message at `l` be emitted? One relaxed load after first use.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    let mut cur = LEVEL.load(Ordering::Relaxed);
+    if cur == 0 {
+        cur = init_from_env();
+    }
+    cur >= l as u8
+}
+
+/// Force the level (CLI/test override; trumps `SMPPCA_LOG`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Per-callsite rate-limit state. The `log_*!` macros declare one static
+/// per invocation site.
+pub struct Callsite {
+    /// ns timestamp of the last emitted line; `u64::MAX` = never emitted.
+    last_ns: AtomicU64,
+    suppressed: AtomicU64,
+}
+
+impl Callsite {
+    pub const fn new() -> Self {
+        Self {
+            last_ns: AtomicU64::new(u64::MAX),
+            suppressed: AtomicU64::new(0),
+        }
+    }
+
+    /// Try to claim an emit slot at time `now_ns`. Returns the number of
+    /// lines suppressed since the last emit (0 usually) when this call
+    /// wins the slot, `None` when the site is inside its quiet interval
+    /// (the message is counted, not printed).
+    pub fn acquire(&self, now_ns: u64, min_interval_ns: u64) -> Option<u64> {
+        let last = self.last_ns.load(Ordering::Relaxed);
+        if last != u64::MAX && now_ns.saturating_sub(last) < min_interval_ns {
+            self.suppressed.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        // CAS so concurrent racers within one interval print once.
+        match self.last_ns.compare_exchange(
+            last,
+            now_ns,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => Some(self.suppressed.swap(0, Ordering::Relaxed)),
+            Err(_) => {
+                self.suppressed.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+}
+
+impl Default for Callsite {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Emit one line to stderr (already level-checked by the macro).
+pub fn emit(level: Level, cs: &Callsite, target: &str, args: fmt::Arguments<'_>) {
+    if let Some(suppressed) = cs.acquire(now_ns(), MIN_INTERVAL_NS) {
+        if suppressed > 0 {
+            eprintln!(
+                "[smppca {} {target}] {args} ({suppressed} similar suppressed)",
+                level.as_str()
+            );
+        } else {
+            eprintln!("[smppca {} {target}] {args}", level.as_str());
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! smppca_log {
+    ($lvl:expr, $($arg:tt)*) => {{
+        if $crate::runtime::obs::log::enabled($lvl) {
+            static __SMPPCA_CALLSITE: $crate::runtime::obs::log::Callsite =
+                $crate::runtime::obs::log::Callsite::new();
+            $crate::runtime::obs::log::emit(
+                $lvl,
+                &__SMPPCA_CALLSITE,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    }};
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::smppca_log!($crate::runtime::obs::log::Level::Error, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::smppca_log!($crate::runtime::obs::log::Level::Warn, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::smppca_log!($crate::runtime::obs::log::Level::Info, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::smppca_log!($crate::runtime::obs::log::Level::Debug, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse("Debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn callsite_rate_limits_and_accounts() {
+        let cs = Callsite::new();
+        // First emit always wins, even at t=0 (fresh process).
+        assert_eq!(cs.acquire(0, 1_000), Some(0));
+        // Inside the interval: suppressed and counted.
+        assert_eq!(cs.acquire(500, 1_000), None);
+        assert_eq!(cs.acquire(999, 1_000), None);
+        // Past the interval: wins and reports the two suppressed lines.
+        assert_eq!(cs.acquire(1_500, 1_000), Some(2));
+        // Counter drained.
+        assert_eq!(cs.acquire(3_000, 1_000), Some(0));
+    }
+
+    #[test]
+    fn set_level_gates_enabled() {
+        // Serialized against nothing: LEVEL is process-global, so this
+        // test pins relative behavior around an explicit set, then
+        // restores the default for neighbors.
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(DEFAULT_LEVEL);
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability subsystem: the serving stack's instrument panel.
+//!
+//! Four cooperating layers, all built on the rule that instrumentation
+//! the operator did not ask for costs at most one relaxed atomic load
+//! (the same discipline `runtime/fault.rs` established for fault
+//! points), and none of it may perturb numerics — the bitwise
+//! thread-matrix / fault-matrix guarantees hold with everything enabled:
+//!
+//! * [`registry`] — process-global interned handles to lock-free
+//!   counters, gauges, and histograms; scraped as human text or
+//!   Prometheus exposition (`metrics` / `metrics prom`).
+//! * [`hist`] — log-bucketed latency histograms (~2 buckets per octave,
+//!   ns → minutes), mergeable with the same associativity discipline as
+//!   `SketchState::merge`; powers the `stats` p50/p95/p99 fields and
+//!   `bench.rs`'s `p50_ms`.
+//! * [`trace`] — scoped `span!(stage::…)` guards into per-thread
+//!   drop-oldest ring buffers, drained to Chrome/Perfetto
+//!   `trace_event` JSON (`--trace-out FILE` / `SMPPCA_TRACE=FILE`;
+//!   the CLI flag wins when both are set).
+//! * [`log`] — `SMPPCA_LOG=error|warn|info|debug` leveled stderr
+//!   logging with per-callsite rate limiting (`log_warn!` and friends).
+//!
+//! The offline pipeline's `coordinator::metrics::Metrics` BTreeMap
+//! remains the report view; serving sessions feed it from registry
+//! snapshots instead of taking a lock per hot-path event.
+
+pub mod hist;
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{Hist, HistSnapshot};
+pub use log::Level;
+pub use registry::{Counter, Gauge, Registry};
+pub use trace::{span, SpanGuard};

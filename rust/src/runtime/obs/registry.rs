@@ -1,0 +1,439 @@
+//! Process-global metric registry: interned handles to lock-free
+//! counters, gauges, and latency histograms, scraped as either a human
+//! report or Prometheus text exposition.
+//!
+//! Interning is the whole point: `registry::counter("serve/net/lines")`
+//! takes a registry lock *once* (at startup / session open) and hands
+//! back a `&'static Counter`; every hot-path increment after that is a
+//! single relaxed `fetch_add` with no string lookup and no lock.
+//! Re-registering the same (name, label) returns the same handle, so a
+//! stream that is closed and reopened keeps accumulating into one
+//! series instead of leaking a new one.
+//!
+//! [`Registry::global()`] is the process-wide instance every subsystem
+//! records into; `Registry::new()` builds a private one (golden tests
+//! use this so the exposition text is exact and unpolluted by whatever
+//! else the test binary touched).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::hist::{bucket_upper_ns, Hist, HistSnapshot, FINITE};
+
+/// Monotone counter. One relaxed `fetch_add` per event.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, delta: u64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (e.g. open streams). Set/add with relaxed stores.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+enum Slot {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Hist(&'static Hist),
+}
+
+impl Slot {
+    fn kind(&self) -> &'static str {
+        match self {
+            Slot::Counter(_) => "counter",
+            Slot::Gauge(_) => "gauge",
+            Slot::Hist(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    label: Option<(String, String)>,
+    slot: Slot,
+}
+
+/// A scraped value, decoupled from the live atomics so callers (the
+/// `metrics` protocol command, `Metrics`-view feeding) can format or
+/// merge without holding the registry lock.
+pub enum SampledValue {
+    Counter(u64),
+    Gauge(i64),
+    Hist(HistSnapshot),
+}
+
+pub struct Sample {
+    pub name: String,
+    pub label: Option<(String, String)>,
+    pub value: SampledValue,
+}
+
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self { entries: Mutex::new(Vec::new()) }
+    }
+
+    /// The process-wide registry all production code records into.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        self.intern(name, None, |s| matches!(s, Slot::Counter(_)), || {
+            Slot::Counter(Box::leak(Box::new(Counter::new())))
+        })
+        .map(|s| match s {
+            Slot::Counter(c) => c,
+            _ => unreachable!(),
+        })
+    }
+
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        self.intern(name, None, |s| matches!(s, Slot::Gauge(_)), || {
+            Slot::Gauge(Box::leak(Box::new(Gauge::new())))
+        })
+        .map(|s| match s {
+            Slot::Gauge(g) => g,
+            _ => unreachable!(),
+        })
+    }
+
+    pub fn hist(&self, name: &str) -> &'static Hist {
+        self.hist_inner(name, None)
+    }
+
+    /// Histogram with one label pair (e.g. `stream="orders"`), so
+    /// per-stream latency series share a family in the exposition.
+    pub fn hist_labeled(&self, name: &str, key: &str, value: &str) -> &'static Hist {
+        self.hist_inner(name, Some((key.to_string(), value.to_string())))
+    }
+
+    fn hist_inner(&self, name: &str, label: Option<(String, String)>) -> &'static Hist {
+        self.intern(name, label, |s| matches!(s, Slot::Hist(_)), || {
+            Slot::Hist(Box::leak(Box::new(Hist::new())))
+        })
+        .map(|s| match s {
+            Slot::Hist(h) => h,
+            _ => unreachable!(),
+        })
+    }
+
+    /// Find-or-create under the lock. The leaked allocation is bounded by
+    /// the number of *distinct* (name, label) series ever registered —
+    /// re-registration returns the existing handle.
+    fn intern(
+        &self,
+        name: &str,
+        label: Option<(String, String)>,
+        matches_kind: impl Fn(&Slot) -> bool,
+        make: impl FnOnce() -> Slot,
+    ) -> Interned {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries
+            .iter()
+            .find(|e| e.name == name && e.label == label)
+        {
+            assert!(
+                matches_kind(&e.slot),
+                "metric {name:?} already registered as a {}",
+                e.slot.kind()
+            );
+            return Interned(copy_slot(&e.slot));
+        }
+        let slot = make();
+        let out = copy_slot(&slot);
+        entries.push(Entry { name: name.to_string(), label, slot });
+        Interned(out)
+    }
+
+    /// Scrape every registered series. Each atomic is read individually
+    /// (relaxed); histogram snapshots are valid-by-construction (see
+    /// `hist::Hist::snapshot`).
+    pub fn sample(&self) -> Vec<Sample> {
+        let entries = self.entries.lock().unwrap();
+        let mut out: Vec<Sample> = entries
+            .iter()
+            .map(|e| Sample {
+                name: e.name.clone(),
+                label: e.label.clone(),
+                value: match &e.slot {
+                    Slot::Counter(c) => SampledValue::Counter(c.get()),
+                    Slot::Gauge(g) => SampledValue::Gauge(g.get()),
+                    Slot::Hist(h) => SampledValue::Hist(h.snapshot()),
+                },
+            })
+            .collect();
+        drop(entries);
+        out.sort_by(|a, b| (&a.name, &a.label).cmp(&(&b.name, &b.label)));
+        out
+    }
+
+    /// Human scrape: one aligned line per series, histograms summarized
+    /// as count/mean/p50/p95/p99. This is what the bare `metrics`
+    /// protocol command returns.
+    pub fn human_text(&self) -> String {
+        let mut s = String::new();
+        for sm in self.sample() {
+            let label = sm
+                .label
+                .as_ref()
+                .map(|(k, v)| format!("{{{k}=\"{v}\"}}"))
+                .unwrap_or_default();
+            let series = format!("{}{label}", sm.name);
+            match sm.value {
+                SampledValue::Counter(v) => {
+                    s.push_str(&format!("  {series:<40} {v:>12}\n"));
+                }
+                SampledValue::Gauge(v) => {
+                    s.push_str(&format!("  {series:<40} {v:>12}\n"));
+                }
+                SampledValue::Hist(h) => {
+                    s.push_str(&format!(
+                        "  {series:<40} count={} mean_ms={:.3} p50_ms={:.3} p95_ms={:.3} p99_ms={:.3}\n",
+                        h.count(),
+                        h.mean_ns() / 1e6,
+                        h.quantile_ms(0.50),
+                        h.quantile_ms(0.95),
+                        h.quantile_ms(0.99),
+                    ));
+                }
+            }
+        }
+        s
+    }
+
+    /// Prometheus text exposition (format version 0.0.4): `# TYPE` per
+    /// family, histograms as cumulative `_bucket{le=...}` plus `_sum`
+    /// (seconds) and `_count`. `_count` is derived from the scraped
+    /// bucket array, so it always equals the `+Inf` bucket — a scrape is
+    /// never internally torn even while recorders run.
+    pub fn prom_text(&self) -> String {
+        let samples = self.sample();
+        let mut s = String::new();
+        let mut last_family = String::new();
+        for sm in &samples {
+            let fam = prom_name(&sm.name);
+            let label = sm
+                .label
+                .as_ref()
+                .map(|(k, v)| format!("{{{}=\"{}\"}}", prom_label_key(k), prom_escape(v)))
+                .unwrap_or_default();
+            let type_line = |s: &mut String, kind: &str| {
+                s.push_str(&format!("# TYPE {fam} {kind}\n"));
+            };
+            match &sm.value {
+                SampledValue::Counter(v) => {
+                    if fam != last_family {
+                        type_line(&mut s, "counter");
+                    }
+                    s.push_str(&format!("{fam}{label} {v}\n"));
+                }
+                SampledValue::Gauge(v) => {
+                    if fam != last_family {
+                        type_line(&mut s, "gauge");
+                    }
+                    s.push_str(&format!("{fam}{label} {v}\n"));
+                }
+                SampledValue::Hist(h) => {
+                    if fam != last_family {
+                        type_line(&mut s, "histogram");
+                    }
+                    let mut cum = 0u64;
+                    for i in 0..FINITE {
+                        cum += h.counts[i];
+                        // Only emit boundaries that carry information: the
+                        // first empty prefix and the long empty tail would
+                        // be ~74 lines per series, so elide zero-count
+                        // buckets whose cumulative value equals the
+                        // previous emitted line. The +Inf line is always
+                        // present and carries the total.
+                        if h.counts[i] == 0 {
+                            continue;
+                        }
+                        let le = bucket_upper_ns(i) as f64 / 1e9;
+                        s.push_str(&format!(
+                            "{fam}_bucket{} {cum}\n",
+                            with_le(&sm.label, &format!("{le:e}"))
+                        ));
+                    }
+                    let total = cum + h.counts[FINITE];
+                    s.push_str(&format!(
+                        "{fam}_bucket{} {total}\n",
+                        with_le(&sm.label, "+Inf")
+                    ));
+                    s.push_str(&format!("{fam}_sum{label} {:e}\n", h.sum_ns as f64 / 1e9));
+                    s.push_str(&format!("{fam}_count{label} {total}\n"));
+                }
+            }
+            last_family = fam;
+        }
+        s
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Interned slot copy (the lifetime-carrying references are Copy).
+struct Interned(Slot);
+
+impl Interned {
+    fn map<T>(self, f: impl FnOnce(Slot) -> T) -> T {
+        f(self.0)
+    }
+}
+
+fn copy_slot(s: &Slot) -> Slot {
+    match s {
+        Slot::Counter(c) => Slot::Counter(c),
+        Slot::Gauge(g) => Slot::Gauge(g),
+        Slot::Hist(h) => Slot::Hist(h),
+    }
+}
+
+/// `serve/net/lines` → `smppca_serve_net_lines`: prefixed, and every
+/// char outside `[a-zA-Z0-9_:]` mapped to `_` per the exposition grammar.
+pub fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 7);
+    out.push_str("smppca_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn prom_label_key(k: &str) -> String {
+    k.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect()
+}
+
+fn prom_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn with_le(label: &Option<(String, String)>, le: &str) -> String {
+    match label {
+        Some((k, v)) => format!(
+            "{{{}=\"{}\",le=\"{le}\"}}",
+            prom_label_key(k),
+            prom_escape(v)
+        ),
+        None => format!("{{le=\"{le}\"}}"),
+    }
+}
+
+/// Process-global convenience constructors.
+pub fn counter(name: &str) -> &'static Counter {
+    Registry::global().counter(name)
+}
+
+pub fn gauge(name: &str) -> &'static Gauge {
+    Registry::global().gauge(name)
+}
+
+pub fn hist(name: &str) -> &'static Hist {
+    Registry::global().hist(name)
+}
+
+pub fn hist_labeled(name: &str, key: &str, value: &str) -> &'static Hist {
+    Registry::global().hist_labeled(name, key, value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_returns_the_same_handle() {
+        let r = Registry::new();
+        let a = r.counter("x/hits");
+        let b = r.counter("x/hits");
+        a.add(3);
+        b.add(4);
+        assert_eq!(a.get(), 7);
+        assert!(std::ptr::eq(a, b));
+        let h1 = r.hist_labeled("x/lat", "stream", "s1");
+        let h2 = r.hist_labeled("x/lat", "stream", "s1");
+        let h3 = r.hist_labeled("x/lat", "stream", "s2");
+        assert!(std::ptr::eq(h1, h2));
+        assert!(!std::ptr::eq(h1, h3));
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("dual");
+        r.gauge("dual");
+    }
+
+    #[test]
+    fn prom_names_are_sanitized() {
+        assert_eq!(prom_name("serve/net/lines"), "smppca_serve_net_lines");
+        assert_eq!(prom_name("a-b.c"), "smppca_a_b_c");
+    }
+
+    #[test]
+    fn human_text_lists_everything() {
+        let r = Registry::new();
+        r.counter("z/count").add(5);
+        r.gauge("a/level").set(-2);
+        r.hist("m/lat").record_ns(1_000_000);
+        let t = r.human_text();
+        assert!(t.contains("a/level"), "{t}");
+        assert!(t.contains("z/count"), "{t}");
+        assert!(t.contains("p95_ms"), "{t}");
+        // Sorted output: gauge name precedes counter name.
+        assert!(t.find("a/level").unwrap() < t.find("z/count").unwrap());
+    }
+}

@@ -1,0 +1,314 @@
+//! Structured span tracing: scoped guards record (name, thread, start,
+//! duration) into per-thread ring buffers, drained on demand into
+//! Chrome/Perfetto `trace_event` JSON.
+//!
+//! Cost contract (mirrors `runtime/fault.rs`): when tracing is disabled
+//! — the default — [`span`] is **one relaxed atomic load** and returns an
+//! inert guard whose `Drop` does nothing. Only when `SMPPCA_TRACE` /
+//! `--trace-out` enabled the layer does a span touch its thread's ring
+//! buffer (an uncontended per-thread mutex, locked by the owner except
+//! during a drain). Rings are fixed-capacity and drop-oldest; every
+//! dropped event bumps the `obs/trace/dropped` registry counter so a
+//! truncated trace is visible in the scrape, not silent.
+//!
+//! Nothing here touches numerics: spans observe wall-clock only, so the
+//! bitwise thread-matrix / fault-matrix guarantees hold with tracing on.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::registry;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+/// Capacity for rings created after the store; existing rings keep the
+/// capacity they were born with. Settable (tests, env) before workers
+/// first emit a span.
+static RING_CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAPACITY);
+
+/// Default per-thread event capacity: 4096 events ≈ 128 KiB per thread.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Is tracing armed? One relaxed load — this is the entire cost of an
+/// instrumentation point when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    // Arm the clock before the first span so timestamps are relative to
+    // enablement order, not first-use races.
+    let _ = epoch();
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAPACITY.store(cap.max(1), Ordering::Relaxed);
+}
+
+/// Process time origin for trace timestamps.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the trace epoch (shared with the leveled logger's
+/// rate limiter).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos().min(u64::MAX as u128) as u64
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub name: &'static str,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Drop-oldest ring of span events.
+struct Ring {
+    buf: Vec<Event>,
+    cap: usize,
+    head: usize, // index of the oldest event when full
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap.min(1024)), cap, head: 0 }
+    }
+
+    fn push(&mut self, ev: Event) -> bool {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+            false
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            true // dropped the oldest
+        }
+    }
+
+    fn drain_ordered(&mut self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+        out
+    }
+}
+
+struct ThreadBuf {
+    tid: u32,
+    thread_name: String,
+    ring: Mutex<Ring>,
+}
+
+fn threads() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    static THREADS: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+    THREADS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn dropped_counter() -> &'static registry::Counter {
+    static C: OnceLock<&'static registry::Counter> = OnceLock::new();
+    C.get_or_init(|| registry::counter("obs/trace/dropped"))
+}
+
+thread_local! {
+    static LOCAL: std::cell::OnceCell<Arc<ThreadBuf>> = const { std::cell::OnceCell::new() };
+}
+
+fn record(ev: Event) {
+    LOCAL.with(|cell| {
+        let buf = cell.get_or_init(|| {
+            let tb = Arc::new(ThreadBuf {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                thread_name: std::thread::current()
+                    .name()
+                    .unwrap_or("unnamed")
+                    .to_string(),
+                ring: Mutex::new(Ring::new(RING_CAPACITY.load(Ordering::Relaxed))),
+            });
+            threads().lock().unwrap().push(Arc::clone(&tb));
+            tb
+        });
+        if buf.ring.lock().unwrap().push(ev) {
+            dropped_counter().inc();
+        }
+    });
+}
+
+/// Scoped span guard: measures from construction to drop. Inert (and
+/// free beyond the one atomic load in [`span`]) when tracing is off.
+pub struct SpanGuard {
+    live: Option<(&'static str, u64, Instant)>,
+}
+
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { live: None };
+    }
+    SpanGuard { live: Some((name, now_ns(), Instant::now())) }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((name, ts_ns, start)) = self.live.take() {
+            let dur_ns = start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            record(Event { name, ts_ns, dur_ns });
+        }
+    }
+}
+
+/// `span!(stage::SERVE_REFRESH)` — sugar over [`span`], kept as a macro
+/// so call sites read like the stage table.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::runtime::obs::trace::span($name)
+    };
+}
+
+/// One drained event with its thread identity attached.
+pub struct TraceRow {
+    pub tid: u32,
+    pub thread_name: String,
+    pub event: Event,
+}
+
+/// Drain every thread's ring (rings empty afterwards; registrations and
+/// the drop counter persist). Rows come back sorted by start timestamp,
+/// which is what the Chrome JSON writer and the CI monotonicity check
+/// both rely on.
+pub fn drain() -> Vec<TraceRow> {
+    let bufs: Vec<Arc<ThreadBuf>> = threads().lock().unwrap().clone();
+    let mut rows = Vec::new();
+    for tb in bufs {
+        for event in tb.ring.lock().unwrap().drain_ordered() {
+            rows.push(TraceRow {
+                tid: tb.tid,
+                thread_name: tb.thread_name.clone(),
+                event,
+            });
+        }
+    }
+    rows.sort_by_key(|r| (r.event.ts_ns, r.tid));
+    rows
+}
+
+pub fn dropped_total() -> u64 {
+    dropped_counter().get()
+}
+
+/// Serialize drained rows as Chrome/Perfetto `trace_event` JSON
+/// (complete events, microsecond units). Metadata rows name the process
+/// and each thread so Perfetto's track labels match `smppca-*` thread
+/// names.
+pub fn chrome_json(rows: &[TraceRow]) -> String {
+    let mut s = String::new();
+    s.push_str("{\"traceEvents\":[\n");
+    s.push_str(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"smppca\"}}",
+    );
+    let mut seen_tids: Vec<u32> = Vec::new();
+    for r in rows {
+        if !seen_tids.contains(&r.tid) {
+            seen_tids.push(r.tid);
+            s.push_str(&format!(
+                ",\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                r.tid,
+                json_escape(&r.thread_name)
+            ));
+        }
+    }
+    for r in rows {
+        s.push_str(&format!(
+            ",\n{{\"name\":\"{}\",\"cat\":\"stage\",\"ph\":\"X\",\"pid\":1,\
+             \"tid\":{},\"ts\":{:.3},\"dur\":{:.3}}}",
+            json_escape(r.event.name),
+            r.tid,
+            r.event.ts_ns as f64 / 1e3,
+            r.event.dur_ns as f64 / 1e3,
+        ));
+    }
+    s.push_str("\n]}\n");
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Drain everything recorded so far and write it as a Chrome trace file.
+pub fn write_chrome_trace(path: &std::path::Path) -> std::io::Result<usize> {
+    let rows = drain();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(chrome_json(&rows).as_bytes())?;
+    Ok(rows.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest_and_stays_ordered() {
+        let mut r = Ring::new(3);
+        let mut dropped = 0;
+        for i in 0..5u64 {
+            if r.push(Event { name: "e", ts_ns: i, dur_ns: 1 }) {
+                dropped += 1;
+            }
+        }
+        assert_eq!(dropped, 2);
+        let out = r.drain_ordered();
+        assert_eq!(out.iter().map(|e| e.ts_ns).collect::<Vec<_>>(), vec![2, 3, 4]);
+        // Drained ring is reusable.
+        assert!(!r.push(Event { name: "e", ts_ns: 9, dur_ns: 1 }));
+        assert_eq!(r.drain_ordered().len(), 1);
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        // Tracing defaults off; guard drop must be inert.
+        assert!(!enabled());
+        let g = span("test/never");
+        drop(g);
+        // No registration happened for this thread via the disabled path.
+        let rows = drain();
+        assert!(
+            rows.iter().all(|r| r.event.name != "test/never"),
+            "disabled span leaked an event"
+        );
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let rows = vec![
+            TraceRow {
+                tid: 7,
+                thread_name: "smppca-worker-0".into(),
+                event: Event { name: "serve/route", ts_ns: 1500, dur_ns: 2500 },
+            },
+            TraceRow {
+                tid: 7,
+                thread_name: "smppca-worker-0".into(),
+                event: Event { name: "serve/\"q\"", ts_ns: 5000, dur_ns: 100 },
+            },
+        ];
+        let j = chrome_json(&rows);
+        assert!(j.contains("\"traceEvents\""), "{j}");
+        assert!(j.contains("\"ph\":\"M\""), "{j}");
+        assert!(j.contains("\"name\":\"smppca-worker-0\""), "{j}");
+        assert!(j.contains("\"ts\":1.500"), "{j}");
+        assert!(j.contains("\"dur\":2.500"), "{j}");
+        assert!(j.contains("serve/\\\"q\\\""), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+    }
+}

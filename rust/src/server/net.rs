@@ -31,18 +31,23 @@
 //!   ([`NetServer::shutdown`]), which stops accepting, drains queued
 //!   connections, and joins every thread before the service's streams are
 //!   closed.
-//! * **`metrics` scrape** — a net-layer one-shot command (not part of the
-//!   stream protocol) answering with the listener's counters plus the head
-//!   `stats` line of every open stream, for scraping.
+//! * **`metrics` scrape** — bare `metrics` is a net-layer one-shot
+//!   command (not part of the stream protocol) answering with the
+//!   listener's counters plus the head `stats` line of every open stream.
+//!   The counters are interned [`registry`] handles — one relaxed
+//!   `fetch_add` per event on the wire path, no metrics mutex —
+//!   and `metrics prom` falls through to the protocol's Prometheus
+//!   exposition scrape of the same registry.
 
 use super::protocol::ServeProtocol;
 use crate::coordinator::metrics::{stage, Metrics, StageTimer};
+use crate::runtime::obs::{hist::Hist, registry, trace};
 use crate::runtime::pool;
 use crate::stream::channel;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -85,6 +90,58 @@ impl Default for NetConfig {
     }
 }
 
+/// Interned handles to the listener's registry series. Every field is a
+/// `&'static` into the process-global [`registry`], so cloning is a
+/// pointer copy and the accept/handler hot paths bump counters with one
+/// relaxed `fetch_add` each — no metrics mutex on the wire path. The
+/// values are process-global (they accumulate across listeners in one
+/// process); [`NetServer::metrics`] reports them as such.
+#[derive(Clone, Copy)]
+struct NetObs {
+    connections: &'static registry::Counter,
+    shed_connections: &'static registry::Counter,
+    shed_commands: &'static registry::Counter,
+    lines: &'static registry::Counter,
+    oversized: &'static registry::Counter,
+    burst: &'static Hist,
+}
+
+impl NetObs {
+    fn new() -> Self {
+        Self {
+            connections: registry::counter(stage::NET_CONNECTIONS),
+            shed_connections: registry::counter(stage::NET_SHED_CONNECTIONS),
+            shed_commands: registry::counter(stage::NET_SHED_COMMANDS),
+            lines: registry::counter(stage::NET_LINES),
+            oversized: registry::counter(stage::NET_OVERSIZED_LINES),
+            burst: registry::hist(stage::SERVE_NET_BURST),
+        }
+    }
+
+    /// Materialize the handles as the legacy [`Metrics`] report view
+    /// (zero-valued counters elided, burst time from the histogram sum).
+    fn as_metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for (name, c) in [
+            (stage::NET_CONNECTIONS, self.connections),
+            (stage::NET_SHED_CONNECTIONS, self.shed_connections),
+            (stage::NET_SHED_COMMANDS, self.shed_commands),
+            (stage::NET_LINES, self.lines),
+            (stage::NET_OVERSIZED_LINES, self.oversized),
+        ] {
+            let v = c.get();
+            if v > 0 {
+                m.add(name, v);
+            }
+        }
+        let burst = self.burst.snapshot();
+        if burst.count() > 0 {
+            m.record_stage(stage::SERVE_NET_BURST, Duration::from_nanos(burst.sum_ns));
+        }
+        m
+    }
+}
+
 /// A running TCP serve front-end. Dropping it (or calling
 /// [`NetServer::shutdown`]) stops the acceptor, drains queued connections,
 /// and joins all threads.
@@ -92,7 +149,7 @@ pub struct NetServer {
     local_addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
-    metrics: Arc<Mutex<Metrics>>,
+    obs: NetObs,
 }
 
 impl NetServer {
@@ -109,21 +166,19 @@ impl NetServer {
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let obs = NetObs::new();
         let (tx, rx) = channel::bounded::<TcpStream>(cfg.backlog);
 
         let mut threads = Vec::with_capacity(cfg.workers + 1);
         {
             let shutdown = shutdown.clone();
-            let metrics = metrics.clone();
             threads.push(pool::spawn_thread("net-accept", move || {
-                accept_loop(&listener, &tx, &shutdown, &metrics);
+                accept_loop(&listener, &tx, &shutdown, obs);
             }));
         }
         for i in 0..cfg.workers {
             let rx = rx.clone();
             let proto = proto.clone();
-            let metrics = metrics.clone();
             let cfg = cfg.clone();
             let shutdown = shutdown.clone();
             threads.push(pool::spawn_thread(&format!("net-conn-{i}"), move || {
@@ -131,11 +186,11 @@ impl NetServer {
                 // channel disconnects and handlers finish the queued
                 // backlog, then return — that's the drain.
                 while let Ok(stream) = rx.recv() {
-                    handle_connection(stream, &proto, &metrics, &cfg, &shutdown);
+                    handle_connection(stream, &proto, obs, &cfg, &shutdown);
                 }
             }));
         }
-        Ok(Self { local_addr, shutdown, threads, metrics })
+        Ok(Self { local_addr, shutdown, threads, obs })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -143,9 +198,12 @@ impl NetServer {
     }
 
     /// A snapshot of the listener-side counters (the same numbers the
-    /// net-layer `metrics` command scrapes).
+    /// net-layer `metrics` command scrapes), materialized as the legacy
+    /// [`Metrics`] report view from the registry handles. Counter values
+    /// are process-global: a second listener in the same process reads
+    /// the same accumulating series.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        self.obs.as_metrics()
     }
 
     /// Graceful stop: no new connections, queued connections are served to
@@ -172,19 +230,20 @@ fn accept_loop(
     listener: &TcpListener,
     tx: &channel::Sender<TcpStream>,
     shutdown: &AtomicBool,
-    metrics: &Mutex<Metrics>,
+    obs: NetObs,
 ) {
     while !shutdown.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _peer)) => {
-                metrics.lock().unwrap().add(stage::NET_CONNECTIONS, 1);
+                obs.connections.inc();
                 // try_send consumes the stream, so keep a dup of the fd to
                 // deliver the shed response if the queue is full.
                 let dup = stream.try_clone().ok();
                 match tx.try_send(stream) {
                     Ok(true) => {}
                     Ok(false) => {
-                        metrics.lock().unwrap().add(stage::NET_SHED_CONNECTIONS, 1);
+                        obs.shed_connections.inc();
+                        crate::log_warn!("shedding connection: accept queue full");
                         if let Some(mut s) = dup {
                             let _ = s.write_all(b"err shed accept queue full\n");
                         }
@@ -253,7 +312,7 @@ impl LineFramer {
 fn handle_connection(
     mut stream: TcpStream,
     proto: &ServeProtocol,
-    metrics: &Mutex<Metrics>,
+    obs: NetObs,
     cfg: &NetConfig,
     shutdown: &AtomicBool,
 ) {
@@ -299,7 +358,7 @@ fn handle_connection(
             Err(_) => return,
         }
         let lines = framer.take_lines();
-        if !process_burst(&lines, &mut stream, proto, metrics, cfg) || eof {
+        if !process_burst(&lines, &mut stream, proto, obs, cfg) || eof {
             return;
         }
     }
@@ -311,12 +370,13 @@ fn process_burst(
     lines: &[Option<String>],
     stream: &mut TcpStream,
     proto: &ServeProtocol,
-    metrics: &Mutex<Metrics>,
+    obs: NetObs,
     cfg: &NetConfig,
 ) -> bool {
     if lines.is_empty() {
         return true;
     }
+    let _span = trace::span(stage::SERVE_NET_BURST);
     let t = StageTimer::start();
     let mut responses: Vec<String> = Vec::new();
     let mut batch: Vec<&str> = Vec::new();
@@ -330,7 +390,7 @@ fn process_burst(
     }
     for line in lines {
         let Some(line) = line else {
-            metrics.lock().unwrap().add(stage::NET_OVERSIZED_LINES, 1);
+            obs.oversized.inc();
             flush(proto, &mut batch, &mut responses);
             responses.push(format!("err line exceeds {} bytes (dropped)", cfg.max_line));
             continue;
@@ -339,7 +399,7 @@ fn process_burst(
         if trimmed.is_empty() || trimmed.starts_with('#') {
             continue; // same as the stdin loop: no response
         }
-        metrics.lock().unwrap().add(stage::NET_LINES, 1);
+        obs.lines.inc();
         if ServeProtocol::is_quit(trimmed) {
             // Per-connection semantics: close this connection only; any
             // lines pipelined after the quit are discarded, like a script
@@ -347,15 +407,20 @@ fn process_burst(
             keep_open = false;
             break;
         }
+        // Bare `metrics` stays a net-layer one-shot (listener counters +
+        // stream heads, response keyword `metrics`); `metrics prom` and
+        // other argument forms fall through to the protocol dispatch,
+        // which answers with the registry scrape (Prometheus exposition
+        // has its own framing — no keyword prefix).
         if trimmed == "metrics" {
             flush(proto, &mut batch, &mut responses);
-            responses.push(scrape(metrics, proto));
+            responses.push(scrape(obs, proto));
             continue;
         }
         used_lines += 1;
         used_bytes += trimmed.len();
         if used_lines > cfg.queue_budget || used_bytes > cfg.mem_budget {
-            metrics.lock().unwrap().add(stage::NET_SHED_COMMANDS, 1);
+            obs.shed_commands.inc();
             flush(proto, &mut batch, &mut responses);
             responses.push(format!(
                 "err shed burst over budget (queue={} mem={})",
@@ -372,14 +437,14 @@ fn process_burst(
         out.push('\n');
     }
     let wrote = stream.write_all(out.as_bytes()).is_ok() && stream.flush().is_ok();
-    metrics.lock().unwrap().record_stage(stage::SERVE_NET_BURST, t.stop());
+    obs.burst.record(t.stop());
     keep_open && wrote
 }
 
 /// The net-layer `metrics` command: listener counters plus the head
 /// `stats` line of every open stream, as one multi-line response.
-fn scrape(metrics: &Mutex<Metrics>, proto: &ServeProtocol) -> String {
-    let m = metrics.lock().unwrap().clone();
+fn scrape(obs: NetObs, proto: &ServeProtocol) -> String {
+    let m = obs.as_metrics();
     let mut s = String::from("metrics");
     for line in m.report().lines() {
         s.push('\n');

@@ -12,6 +12,8 @@ use super::service::SketchService;
 use super::session::StreamSpec;
 use super::snapshot::Snapshot;
 use crate::algo::SmpPcaConfig;
+use crate::coordinator::metrics::StageTimer;
+use crate::runtime::obs::registry::Registry;
 use crate::sketch::SketchKind;
 use crate::stream::{Entry, EntrySource, FileSource, MatrixId, StreamMeta};
 use std::time::Duration;
@@ -32,7 +34,12 @@ serve protocol — one command per line:
   estimate NAME I J               served (A^T B)[I, J] at the current epoch
   block NAME I0 I1 J0 J1          served half-open block of A^T B
   top NAME [R]                    leading component scales at the epoch
-  stats NAME                      counters + stage metrics
+  stats NAME                      counters + stage metrics; the head line
+                                  carries query/route latency percentiles
+                                  (query_p50_ms ... route_p99_ms)
+  metrics [prom]                  scrape the process metric registry —
+                                  human text, or Prometheus exposition
+                                  with `prom` (histogram _bucket/_sum/_count)
   save NAME PATH                  persist the current epoch snapshot
   load NAME PATH                  install a persisted snapshot (recovery)
   checkpoint NAME DIR             persist per-worker shard states
@@ -125,6 +132,7 @@ impl ServeProtocol {
     /// Answer a coalesced run of point queries on one stream (all from
     /// one snapshot fetch; see [`ServeProtocol::handle_batch`]).
     fn estimate_run(&self, name: &str, queries: &[(usize, usize)]) -> Vec<String> {
+        let t = StageTimer::start();
         let snap = match self.snapshot_of(name) {
             // The per-line path fails each query with the same message.
             Err(e) => {
@@ -159,7 +167,7 @@ impl ServeProtocol {
         if let Ok(session) = self.service.get(name) {
             session.note_coalesced_queries(queries.len() as u64, block.is_some());
         }
-        queries
+        let out: Vec<String> = queries
             .iter()
             .map(|&(i, j)| {
                 let v = match &block {
@@ -176,7 +184,13 @@ impl ServeProtocol {
                     Err(e) => format!("err {e}"),
                 }
             })
-            .collect()
+            .collect();
+        // One observation for the whole run: every query in it was
+        // answered at the end of the run, so the run wall time *is* the
+        // latency each client saw (recording it N times would just
+        // over-weight coalesced bursts in the percentiles).
+        self.observe_query(name, t);
+        out
     }
 
     fn dispatch(&self, line: &str) -> anyhow::Result<String> {
@@ -195,6 +209,7 @@ impl ServeProtocol {
             "block" => self.cmd_block(rest),
             "top" => self.cmd_top(rest),
             "stats" => self.cmd_stats(rest),
+            "metrics" => self.cmd_metrics(rest),
             "save" => self.cmd_save(rest),
             "load" => self.cmd_load(rest),
             "checkpoint" => self.cmd_checkpoint(rest),
@@ -347,11 +362,22 @@ impl ServeProtocol {
         })
     }
 
+    /// Record how long a query command took on the stream's latency
+    /// histogram (one relaxed fetch-add; a no-op for unknown streams so
+    /// error responses stay cheap).
+    fn observe_query(&self, name: &str, t: StageTimer) {
+        if let Ok(session) = self.service.get(name) {
+            session.observe_query_latency(t.stop());
+        }
+    }
+
     fn cmd_estimate(&self, rest: &[&str]) -> anyhow::Result<String> {
         let [name, i, j] = three(rest, "estimate NAME I J")?;
         let (i, j): (usize, usize) = (pv("i", i)?, pv("j", j)?);
+        let t = StageTimer::start();
         let snap = self.snapshot_of(name)?;
         let v = snap.estimate_entry(i, j)?;
+        self.observe_query(name, t);
         Ok(format!("estimate {name} epoch={} i={i} j={j} value={v:.17e}", snap.epoch))
     }
 
@@ -364,8 +390,10 @@ impl ServeProtocol {
             pv("j0", rest[3])?,
             pv("j1", rest[4])?,
         );
+        let t = StageTimer::start();
         let snap = self.snapshot_of(name)?;
         let m = snap.estimate_block(i0, i1, j0, j1)?;
+        self.observe_query(name, t);
         let mut out = format!(
             "block {name} epoch={} i={i0}..{i1} j={j0}..{j1} rows={}",
             snap.epoch,
@@ -381,6 +409,7 @@ impl ServeProtocol {
 
     fn cmd_top(&self, rest: &[&str]) -> anyhow::Result<String> {
         let name = *rest.first().ok_or_else(|| anyhow::anyhow!("top needs a stream name"))?;
+        let t = StageTimer::start();
         let snap = self.snapshot_of(name)?;
         let r = match rest.get(1) {
             Some(v) => pv("r", v)?,
@@ -388,6 +417,7 @@ impl ServeProtocol {
         };
         let scales: Vec<String> =
             snap.top_components(r).iter().map(|v| format!("{v:.17e}")).collect();
+        self.observe_query(name, t);
         Ok(format!(
             "top {name} epoch={} r={} scales={}",
             snap.epoch,
@@ -403,7 +433,8 @@ impl ServeProtocol {
         let mut out = format!(
             "stats {name} epoch={} entries={} batches={} queries={} workers={} d={} n1={} n2={} \
              k={} rank={} auto_refresh={} recoveries={} replayed={} faults_injected={} \
-             degraded={}",
+             degraded={} query_p50_ms={:.3} query_p95_ms={:.3} query_p99_ms={:.3} \
+             route_p50_ms={:.3} route_p95_ms={:.3} route_p99_ms={:.3}",
             st.published_epoch,
             st.entries_routed,
             st.batches_routed,
@@ -418,7 +449,13 @@ impl ServeProtocol {
             st.recoveries,
             st.replayed_batches,
             st.fault_injected,
-            st.degraded
+            st.degraded,
+            st.query_p50_ms,
+            st.query_p95_ms,
+            st.query_p99_ms,
+            st.route_p50_ms,
+            st.route_p95_ms,
+            st.route_p99_ms,
         );
         let report = session.metrics_report();
         if !report.is_empty() {
@@ -426,6 +463,22 @@ impl ServeProtocol {
             out.push_str(report.trim_end());
         }
         Ok(out)
+    }
+
+    /// `metrics` / `metrics prom`: scrape the process-global registry.
+    /// The bare form keeps the response-keyword convention (`metrics`
+    /// head line, then the human report); `prom` answers with raw
+    /// Prometheus text exposition — no keyword prefix, because the body
+    /// must start with its own `# TYPE` framing to be scrapeable.
+    fn cmd_metrics(&self, rest: &[&str]) -> anyhow::Result<String> {
+        match rest {
+            [] => {
+                let body = Registry::global().human_text();
+                Ok(format!("metrics\n{}", body.trim_end()))
+            }
+            ["prom"] => Ok(Registry::global().prom_text().trim_end().to_string()),
+            _ => anyhow::bail!("usage: metrics [prom]"),
+        }
     }
 
     fn cmd_save(&self, rest: &[&str]) -> anyhow::Result<String> {
@@ -568,9 +621,24 @@ mod tests {
             assert!(resp.starts_with("err "), "line '{line}' → '{resp}'");
         }
         assert!(p.handle("help").contains("serve protocol"));
+        assert!(p.handle("help").contains("metrics [prom]"));
         assert_eq!(p.handle("streams"), "streams: (none)");
         assert!(ServeProtocol::is_quit(" quit "));
         assert!(!ServeProtocol::is_quit("quits"));
+    }
+
+    #[test]
+    fn metrics_scrape_commands() {
+        let p = ServeProtocol::new();
+        let r = p.handle("metrics");
+        assert!(r.starts_with("metrics"), "{r}");
+        // The global registry's contents depend on what else the test
+        // binary has touched; the prom scrape must simply never error
+        // (its framing is pinned exactly in tests/obs_props.rs against a
+        // private registry).
+        let r = p.handle("metrics prom");
+        assert!(!r.starts_with("err"), "{r}");
+        assert!(p.handle("metrics bogus").starts_with("err "));
     }
 
     #[test]
@@ -643,6 +711,11 @@ mod tests {
         assert_eq!(r.lines().count(), 3, "header + 2 rows: {r}");
         let r = p.handle("stats s");
         assert!(r.starts_with("stats s epoch=1 "), "{r}");
+        // The queries above (estimate/top/block) must have fed the
+        // latency histogram: percentile fields present and positive.
+        let head = r.lines().next().unwrap();
+        assert!(head.contains(" query_p50_ms="), "{head}");
+        assert!(head.contains(" route_p99_ms="), "{head}");
         assert_eq!(p.handle("streams"), "streams: s");
         assert_eq!(p.handle("close s"), "ok close s");
         assert_eq!(p.handle("streams"), "streams: (none)");

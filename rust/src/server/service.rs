@@ -6,17 +6,24 @@
 //! for map operations, never during ingest or refresh compute.
 
 use super::session::{StreamSession, StreamSpec};
+use crate::runtime::obs::registry::{self, Gauge};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 pub struct SketchService {
     streams: Mutex<BTreeMap<String, Arc<StreamSession>>>,
+    /// `serve/streams` gauge: currently-open streams across this service
+    /// (process-global series — concurrent services add into one gauge).
+    open_streams: &'static Gauge,
 }
 
 impl SketchService {
     pub fn new() -> Self {
-        Self { streams: Mutex::new(BTreeMap::new()) }
+        Self {
+            streams: Mutex::new(BTreeMap::new()),
+            open_streams: registry::gauge("serve/streams"),
+        }
     }
 
     fn validate_name(name: &str) -> anyhow::Result<()> {
@@ -34,6 +41,7 @@ impl SketchService {
         anyhow::ensure!(!map.contains_key(name), "stream '{name}' is already open");
         let session = StreamSession::open(name, spec)?;
         map.insert(name.to_string(), Arc::clone(&session));
+        self.open_streams.add(1);
         Ok(session)
     }
 
@@ -53,6 +61,7 @@ impl SketchService {
         anyhow::ensure!(!map.contains_key(name), "stream '{name}' is already open");
         let session = StreamSession::open_with_states(name, spec, states)?;
         map.insert(name.to_string(), Arc::clone(&session));
+        self.open_streams.add(1);
         Ok(session)
     }
 
@@ -73,6 +82,7 @@ impl SketchService {
             .unwrap()
             .remove(name)
             .ok_or_else(|| anyhow::anyhow!("unknown stream '{name}' (open it first)"))?;
+        self.open_streams.add(-1);
         session.close()
     }
 
@@ -100,6 +110,7 @@ impl SketchService {
         let drained: Vec<_> = std::mem::take(&mut *self.streams.lock().unwrap())
             .into_iter()
             .collect();
+        self.open_streams.add(-(drained.len() as i64));
         let mut failures = Vec::new();
         for (name, s) in drained {
             if let Err(e) = s.close() {

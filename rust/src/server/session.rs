@@ -53,8 +53,10 @@
 use super::snapshot::Snapshot;
 use crate::algo::{complete_stage, estimate_stage, sample_stage, SmpPcaConfig};
 use crate::coordinator::metrics::{stage, Metrics, StageTimer};
+use crate::runtime::obs::{hist::Hist, registry, trace};
 use crate::runtime::{fault, pool};
 use crate::runtime::ParNativeEngine;
+use crate::{log_error, log_warn};
 use crate::sketch::ingest::{tree_merge, worker_states, ColumnGrouper};
 use crate::sketch::SketchState;
 use crate::stream::{bounded, shard_of, Entry, MatrixId, Receiver, Sender, StreamMeta};
@@ -182,6 +184,38 @@ struct Refresher {
     handle: JoinHandle<()>,
 }
 
+/// Interned observability handles for one stream, resolved once at open
+/// (the only string lookup) so every hot-path event afterwards is a
+/// relaxed atomic op — no lock, no map, no allocation. The histograms
+/// live in the process-global registry labeled `stream="NAME"`, so a
+/// `metrics prom` scrape sees per-stream latency series; reopening the
+/// same stream name re-interns the same series.
+struct SessionObs {
+    /// Ingest-route latency (the backpressure meter, per batch).
+    route: &'static Hist,
+    /// Query latency (per protocol-level estimate/top/block command).
+    query: &'static Hist,
+    /// Recovery-episode latency (checkpoint respawn + journal replay).
+    recovery: &'static Hist,
+    /// Process-wide query-coalescing counters (aggregated across streams
+    /// for the scrape; the per-stream view synthesizes from the session
+    /// atomics below).
+    coalesced_total: &'static registry::Counter,
+    blocks_total: &'static registry::Counter,
+}
+
+impl SessionObs {
+    fn for_stream(name: &str) -> Self {
+        Self {
+            route: registry::hist_labeled("serve/route_latency", "stream", name),
+            query: registry::hist_labeled("serve/query_latency", "stream", name),
+            recovery: registry::hist_labeled("serve/recovery_latency", "stream", name),
+            coalesced_total: registry::counter(stage::SERVE_QUERY_COALESCED),
+            blocks_total: registry::counter(stage::SERVE_QUERY_BLOCKS),
+        }
+    }
+}
+
 /// Point-in-time counters of a session (the `stats` protocol answer).
 #[derive(Debug, Clone)]
 pub struct StreamStats {
@@ -205,6 +239,15 @@ pub struct StreamStats {
     /// True once an ingest shard proved irrecoverable: the session serves
     /// its last published snapshot read-only and refuses ingest/refresh.
     pub degraded: bool,
+    /// Query-latency percentiles (ms) from the per-stream obs histogram
+    /// (0.0 until the first query is answered).
+    pub query_p50_ms: f64,
+    pub query_p95_ms: f64,
+    pub query_p99_ms: f64,
+    /// Ingest-route latency percentiles (ms) — the backpressure tail.
+    pub route_p50_ms: f64,
+    pub route_p95_ms: f64,
+    pub route_p99_ms: f64,
 }
 
 /// One long-lived named stream: concurrent ingest, epoch snapshots,
@@ -226,7 +269,12 @@ pub struct StreamSession {
     entries_routed: AtomicU64,
     batches_routed: AtomicU64,
     metrics: Mutex<Metrics>,
+    obs: SessionObs,
     queries: AtomicU64,
+    /// Query-coalescing counters; lock-free mirrors of what used to live
+    /// in the `metrics` BTreeMap (the query path must not take a lock).
+    coalesced_queries: AtomicU64,
+    coalesced_blocks: AtomicU64,
     recoveries: AtomicU64,
     replayed: AtomicU64,
     degraded: AtomicBool,
@@ -324,7 +372,10 @@ impl StreamSession {
             entries_routed: AtomicU64::new(0),
             batches_routed: AtomicU64::new(0),
             metrics: Mutex::new(Metrics::new()),
+            obs: SessionObs::for_stream(name),
             queries: AtomicU64::new(0),
+            coalesced_queries: AtomicU64::new(0),
+            coalesced_blocks: AtomicU64::new(0),
             recoveries: AtomicU64::new(0),
             replayed: AtomicU64::new(0),
             degraded: AtomicBool::new(false),
@@ -360,6 +411,7 @@ impl StreamSession {
                             // the whole batch, never half of one, so replay
                             // from the last checkpoint is exact.
                             fault::point("serve/worker/batch");
+                            let _span = trace::span("serve/worker/batch");
                             grouper.for_each_group(&batch, |matrix, col, entries| match matrix {
                                 MatrixId::A => sa.update_col_entries(col, entries),
                                 MatrixId::B => sb.update_col_entries(col, entries),
@@ -424,9 +476,9 @@ impl StreamSession {
     fn recover_worker(&self, rt: &mut Router, s: usize) -> anyhow::Result<()> {
         let meta = self.spec.meta;
         let cap = self.spec.channel_capacity.max(2);
+        let _span = trace::span(stage::SERVE_RECOVERY);
         let t = StageTimer::start();
         let mut attempt = 0u32;
-        let mut respawns_here = 0u64;
         let mut replayed_here = 0u64;
         let outcome = loop {
             attempt += 1;
@@ -441,9 +493,8 @@ impl StreamSession {
                     .map(|p| pool::panic_message(p.as_ref()).to_string())
             };
             if attempt == 1 {
-                eprintln!(
-                    "[smppca] stream '{}': ingest worker {s} died ({}); restarting from its \
-                     checkpoint",
+                log_warn!(
+                    "stream '{}': ingest worker {s} died ({}); restarting from its checkpoint",
                     self.name,
                     dead_msg.as_deref().unwrap_or("hung up without a panic")
                 );
@@ -481,7 +532,6 @@ impl StreamSession {
             rt.slots[s].sender = tx;
             self.handles.lock().unwrap()[s] = Some(handle);
             self.recoveries.fetch_add(1, Ordering::Relaxed);
-            respawns_here += 1;
             // Replay everything routed past the checkpoint, in order. A
             // death mid-replay (the fault that killed the worker may still
             // be armed) just loops into the next bounded attempt.
@@ -499,11 +549,10 @@ impl StreamSession {
             }
         };
         self.replayed.fetch_add(replayed_here, Ordering::Relaxed);
-        let mut m = self.metrics.lock().unwrap();
-        m.record_stage(stage::SERVE_RECOVERY, t.stop());
-        m.add("serve/recoveries", respawns_here);
-        m.add("serve/replayed_batches", replayed_here);
-        drop(m);
+        // Lock-free episode accounting: this runs under the router lock on
+        // the ingest path, so it must not contend on the metrics mutex —
+        // the report view synthesizes these from the histogram + atomics.
+        self.obs.recovery.record(t.stop());
         outcome
     }
 
@@ -514,8 +563,8 @@ impl StreamSession {
         self.degraded.store(true, Ordering::SeqCst);
         **guard = None;
         self.metrics.lock().unwrap().add("serve/degraded", 1);
-        eprintln!(
-            "[smppca] stream '{}' degraded to read-only serving of its last published snapshot",
+        log_error!(
+            "stream '{}' degraded to read-only serving of its last published snapshot",
             self.name
         );
     }
@@ -553,6 +602,7 @@ impl StreamSession {
         for &e in entries {
             shards[shard_of(e.matrix, e.col, w)].push(e);
         }
+        let _span = trace::span(stage::SERVE_ROUTE);
         let t = StageTimer::start();
         {
             let mut guard = self.router.lock().unwrap();
@@ -584,10 +634,12 @@ impl StreamSession {
             self.entries_routed.fetch_add(entries.len() as u64, Ordering::Relaxed);
             self.batches_routed.fetch_add(1, Ordering::Relaxed);
         }
-        let mut m = self.metrics.lock().unwrap();
-        m.record_stage(stage::SERVE_ROUTE, t.stop());
-        m.add("serve/entries", entries.len() as u64);
-        m.add("serve/batches", 1);
+        // Lock-free hot-path accounting: route latency goes to the interned
+        // per-stream histogram (one fetch-add on a precomputed bucket);
+        // entry/batch totals already live in the session atomics. The
+        // `serve/route` / `serve/entries` / `serve/batches` rows in
+        // `metrics_report` are synthesized from these at scrape time.
+        self.obs.route.record(t.stop());
         Ok(entries.len() as u64)
     }
 
@@ -602,6 +654,7 @@ impl StreamSession {
         &self,
         publishable: bool,
     ) -> anyhow::Result<(u64, u64, Vec<(SketchState, SketchState)>)> {
+        let _span = trace::span(stage::SERVE_FREEZE);
         let t = StageTimer::start();
         fault::point("serve/freeze");
         // Assigned once and pinned across retries (a retry is the same
@@ -697,6 +750,7 @@ impl StreamSession {
     /// this prefix), and publish. Returns the snapshot — which is also the
     /// published one unless a newer epoch won the race.
     pub fn refresh(&self) -> anyhow::Result<Arc<Snapshot>> {
+        let _span = trace::span(stage::SERVE_REFRESH);
         let t0 = Instant::now();
         fault::point_io("serve/refresh")?;
         let (epoch, entries_at, states) = self.freeze(true)?;
@@ -709,14 +763,23 @@ impl StreamSession {
         );
         let algo = &self.spec.algo;
         let t = StageTimer::start();
-        let omega = sample_stage(&sa, &sb, algo)?;
+        let omega = {
+            let _s = trace::span(stage::LEADER_SAMPLE);
+            sample_stage(&sa, &sb, algo)?
+        };
         self.record(stage::LEADER_SAMPLE, t.stop());
         let engine = ParNativeEngine { threads: algo.threads };
         let t = StageTimer::start();
-        let values = estimate_stage(&sa, &sb, algo, &engine, &omega);
+        let values = {
+            let _s = trace::span(stage::LEADER_ESTIMATE);
+            estimate_stage(&sa, &sb, algo, &engine, &omega)
+        };
         self.record(stage::LEADER_ESTIMATE, t.stop());
         let t = StageTimer::start();
-        let out = complete_stage(&sa, &sb, algo, &omega, &values)?;
+        let out = {
+            let _s = trace::span(stage::LEADER_COMPLETE);
+            complete_stage(&sa, &sb, algo, &omega, &values)?
+        };
         self.record(stage::LEADER_COMPLETE, t.stop());
         let snap = Arc::new(Snapshot::from_parts(
             epoch,
@@ -778,11 +841,23 @@ impl StreamSession {
     /// been answered by a single `estimate_block` GEMM.
     pub fn note_coalesced_queries(&self, queries: u64, via_block: bool) {
         self.queries.fetch_add(queries.saturating_sub(1), Ordering::Relaxed);
-        let mut m = self.metrics.lock().unwrap();
-        m.add(stage::SERVE_QUERY_COALESCED, queries);
+        // Relaxed atomics only — this sits on the coalesced query path,
+        // which must never contend on the metrics mutex. The session
+        // atomics feed `stats`/`metrics_report`; the interned counters
+        // feed the process-wide `metrics prom` scrape.
+        self.coalesced_queries.fetch_add(queries, Ordering::Relaxed);
+        self.obs.coalesced_total.add(queries);
         if via_block {
-            m.add(stage::SERVE_QUERY_BLOCKS, 1);
+            self.coalesced_blocks.fetch_add(1, Ordering::Relaxed);
+            self.obs.blocks_total.inc();
         }
+    }
+
+    /// Record one answered query's latency into the per-stream histogram
+    /// (called by the protocol front-end around estimate/top/block
+    /// handling). Lock-free: one fetch-add on a precomputed bucket.
+    pub fn observe_query_latency(&self, elapsed: Duration) {
+        self.obs.query.record(elapsed);
     }
 
     /// Persist the frozen per-worker states (`shardN.a` / `shardN.b`, v3
@@ -898,8 +973,8 @@ impl StreamSession {
                     Err(e) => {
                         streak += 1;
                         if streak == 1 {
-                            eprintln!(
-                                "[smppca] auto-refresh on '{}' failing: {e} (backing off \
+                            log_warn!(
+                                "auto-refresh on '{}' failing: {e} (backing off \
                                  exponentially until a refresh succeeds)",
                                 me.name
                             );
@@ -935,6 +1010,8 @@ impl StreamSession {
         let batches_routed = self.batches_routed.load(Ordering::Relaxed);
         let published_epoch =
             self.published.read().unwrap().as_ref().map_or(0, |s| s.epoch);
+        let query = self.obs.query.snapshot();
+        let route = self.obs.route.snapshot();
         StreamStats {
             name: self.name.clone(),
             meta: self.spec.meta,
@@ -950,12 +1027,52 @@ impl StreamSession {
             replayed_batches: self.replayed.load(Ordering::Relaxed),
             fault_injected: fault::injected_count(),
             degraded: self.is_degraded(),
+            query_p50_ms: query.quantile_ms(0.50),
+            query_p95_ms: query.quantile_ms(0.95),
+            query_p99_ms: query.quantile_ms(0.99),
+            route_p50_ms: route.quantile_ms(0.50),
+            route_p95_ms: route.quantile_ms(0.95),
+            route_p99_ms: route.quantile_ms(0.99),
         }
     }
 
-    /// Formatted stage/counter report (the pipeline metrics panel).
+    /// Formatted stage/counter report (the pipeline metrics panel). The
+    /// `Metrics` BTreeMap holds only the cold-path stages (freeze,
+    /// refresh, leader/*); everything the hot paths record lock-free —
+    /// route latency, entry/batch totals, query coalescing, recovery
+    /// episodes — is folded in here from the registry histograms and
+    /// session atomics, so the report reads exactly as it did when every
+    /// path went through the mutex.
     pub fn metrics_report(&self) -> String {
-        self.metrics.lock().unwrap().report()
+        let mut m = self.metrics.lock().unwrap().clone();
+        let route = self.obs.route.snapshot();
+        if route.count() > 0 {
+            m.record_stage(stage::SERVE_ROUTE, Duration::from_nanos(route.sum_ns));
+        }
+        let recovery = self.obs.recovery.snapshot();
+        if recovery.count() > 0 {
+            m.record_stage(stage::SERVE_RECOVERY, Duration::from_nanos(recovery.sum_ns));
+        }
+        let fold = |m: &mut Metrics, k: &str, v: u64| {
+            if v > 0 {
+                m.add(k, v);
+            }
+        };
+        fold(&mut m, "serve/entries", self.entries_routed.load(Ordering::Relaxed));
+        fold(&mut m, "serve/batches", self.batches_routed.load(Ordering::Relaxed));
+        fold(
+            &mut m,
+            stage::SERVE_QUERY_COALESCED,
+            self.coalesced_queries.load(Ordering::Relaxed),
+        );
+        fold(
+            &mut m,
+            stage::SERVE_QUERY_BLOCKS,
+            self.coalesced_blocks.load(Ordering::Relaxed),
+        );
+        fold(&mut m, "serve/recoveries", self.recoveries.load(Ordering::Relaxed));
+        fold(&mut m, "serve/replayed_batches", self.replayed.load(Ordering::Relaxed));
+        m.report()
     }
 
     fn record(&self, name: &str, elapsed: Duration) {

@@ -120,6 +120,7 @@ pub fn worker_states(
 /// Column sharding makes this bitwise order- and arity-invariant — see the
 /// module docs.
 pub fn tree_merge(mut states: Vec<(SketchState, SketchState)>) -> (SketchState, SketchState) {
+    let _s = crate::runtime::obs::trace::span("merge");
     assert!(!states.is_empty());
     while states.len() > 1 {
         let mut next = Vec::with_capacity(states.len().div_ceil(2));
@@ -170,6 +171,7 @@ where
                     // kill here must fail the whole pass cleanly (the
                     // dead-channel wind-down that join_workers reports).
                     crate::runtime::fault::point("ingest/worker/batch");
+                    let _s = crate::runtime::obs::trace::span("ingest/worker/batch");
                     fold(&mut sa, &mut sb, msg);
                 }
             }

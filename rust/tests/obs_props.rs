@@ -1,0 +1,272 @@
+//! Observability-layer properties: registry scrape consistency under
+//! concurrent recording, histogram merge algebra, bucket-boundary pins,
+//! trace ring overflow accounting, and the golden Prometheus exposition.
+//!
+//! Tests that flip the process-global trace switch serialize on
+//! [`trace_lock`] so they never observe each other's spans.
+
+use smppca::runtime::obs::hist::{bucket_index, bucket_upper_ns, HistSnapshot, FINITE};
+use smppca::runtime::obs::registry::{prom_name, Registry};
+use smppca::runtime::obs::trace;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+fn trace_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // A panicking holder must not wedge the other trace tests.
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+/// Scraping while recorders run must never produce a torn histogram:
+/// every snapshot is internally consistent (derived count == +Inf
+/// cumulative count by construction) and per-bucket counts are monotone
+/// non-decreasing across successive snapshots. After the writers join,
+/// the final snapshot is exact.
+#[test]
+fn concurrent_record_while_scrape_is_consistent() {
+    let r = Registry::new();
+    let h = r.hist("obs_test/lat");
+    const WRITERS: usize = 4;
+    const PER_WRITER: u64 = 20_000;
+
+    let mut handles = Vec::new();
+    for w in 0..WRITERS {
+        handles.push(std::thread::spawn(move || {
+            // Deterministic per-writer value sweep across many buckets.
+            let mut v: u64 = 1 + w as u64;
+            for _ in 0..PER_WRITER {
+                h.record_ns(v);
+                v = v.wrapping_mul(2862933555777941757).wrapping_add(3037000493) % 50_000_000;
+            }
+        }));
+    }
+
+    let mut prev = HistSnapshot::new();
+    let mut scrapes = 0u32;
+    loop {
+        let snap = h.snapshot();
+        for (i, (&now, &before)) in snap.counts.iter().zip(prev.counts.iter()).enumerate() {
+            assert!(now >= before, "bucket {i} went backwards: {now} < {before}");
+        }
+        prev = snap;
+        scrapes += 1;
+        if handles.iter().all(|h| h.is_finished()) {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(scrapes >= 1);
+    let fin = h.snapshot();
+    assert_eq!(fin.count(), (WRITERS as u64) * PER_WRITER, "no observation lost");
+}
+
+#[test]
+fn snapshot_merge_is_associative_and_commutative() {
+    let mk = |vals: &[u64]| {
+        let mut s = HistSnapshot::new();
+        for &v in vals {
+            s.observe_ns(v);
+        }
+        s
+    };
+    let a = mk(&[3, 14, 159, 2_653]);
+    let b = mk(&[58, 979, 323_846, 0]);
+    let c = mk(&[2_718_281_828, 1, 1, 1]);
+    let mut ab_c = a.clone();
+    ab_c.merge(&b);
+    ab_c.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut a_bc = a.clone();
+    a_bc.merge(&bc);
+    assert_eq!(ab_c, a_bc, "merge must be associative");
+    let mut ba = b.clone();
+    ba.merge(&a);
+    let mut ab = a.clone();
+    ab.merge(&b);
+    assert_eq!(ab, ba, "merge must be commutative");
+    assert_eq!(ab_c.count(), 12);
+}
+
+/// The boundary pins the exposition format depends on: each finite upper
+/// bound is the largest value in its own bucket, one more spills over,
+/// and the ~√2 geometric spacing holds.
+#[test]
+fn bucket_boundaries_pin() {
+    // Spot-pin the head of the table (1, 2, 3, 5, 7, 11, 15, 22, 31, ...).
+    for (i, expect) in [1u64, 2, 3, 5, 7, 11, 15, 22, 31, 45, 63].iter().enumerate() {
+        assert_eq!(bucket_upper_ns(i), *expect, "bucket {i}");
+    }
+    for i in 0..FINITE {
+        let u = bucket_upper_ns(i);
+        assert_eq!(bucket_index(u), i);
+        assert_eq!(bucket_index(u + 1), i + 1);
+    }
+    // The table reaches past two minutes before the overflow bucket.
+    assert!(bucket_upper_ns(FINITE - 1) > 120_000_000_000);
+    assert_eq!(bucket_index(u64::MAX), FINITE);
+}
+
+/// Golden Prometheus exposition on a private registry: exact framing for
+/// a counter, a gauge, and a histogram with known bucket contents.
+#[test]
+fn prom_exposition_golden() {
+    let r = Registry::new();
+    r.counter("g/hits").add(7);
+    r.gauge("g/level").set(-3);
+    let h = r.hist("g/lat");
+    h.record_ns(1); // bucket 0, le 1e-9
+    h.record_ns(3); // bucket 2, le 3e-9
+    h.record_ns(3);
+    h.record_ns(u64::MAX); // overflow, only visible in +Inf
+    let got = r.prom_text();
+    let want = "\
+# TYPE smppca_g_hits counter
+smppca_g_hits 7
+# TYPE smppca_g_lat histogram
+smppca_g_lat_bucket{le=\"1e-9\"} 1
+smppca_g_lat_bucket{le=\"3e-9\"} 3
+smppca_g_lat_bucket{le=\"+Inf\"} 4
+smppca_g_lat_sum 18446744073.709551615
+smppca_g_lat_count 4
+# TYPE smppca_g_level gauge
+smppca_g_level -3
+";
+    // The _sum line depends on float formatting of a huge value; compare
+    // the stable lines exactly and the sum line structurally.
+    let got_lines: Vec<&str> = got.lines().collect();
+    let want_lines: Vec<&str> = want.lines().collect();
+    assert_eq!(got_lines.len(), want_lines.len(), "{got}");
+    for (g, w) in got_lines.iter().zip(want_lines.iter()) {
+        if w.starts_with("smppca_g_lat_sum") {
+            assert!(g.starts_with("smppca_g_lat_sum "), "{g}");
+        } else {
+            assert_eq!(g, w, "\nfull exposition:\n{got}");
+        }
+    }
+    // Exposition lint invariants, same as the CI regex: every non-comment
+    // line is `name{labels}? value`.
+    for line in got.lines() {
+        if line.starts_with('#') {
+            assert!(line.starts_with("# TYPE smppca_"), "{line}");
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').expect(line);
+        assert!(series.starts_with("smppca_"), "{line}");
+        assert!(
+            value.parse::<f64>().is_ok() || value == "+Inf",
+            "unparseable value in '{line}'"
+        );
+    }
+    assert_eq!(prom_name("g/lat"), "smppca_g_lat");
+}
+
+/// Labeled histograms keep one family: `# TYPE` emitted once, both
+/// streams' series under it, and `le` composed after the stream label.
+#[test]
+fn prom_labeled_series_share_a_family() {
+    let r = Registry::new();
+    r.hist_labeled("q/lat", "stream", "a").record_ns(2);
+    r.hist_labeled("q/lat", "stream", "b").record_ns(2);
+    let got = r.prom_text();
+    assert_eq!(got.matches("# TYPE smppca_q_lat histogram").count(), 1, "{got}");
+    assert!(got.contains("smppca_q_lat_bucket{stream=\"a\",le=\"2e-9\"} 1"), "{got}");
+    assert!(got.contains("smppca_q_lat_bucket{stream=\"b\",le=\"+Inf\"} 1"), "{got}");
+    assert!(got.contains("smppca_q_lat_count{stream=\"a\"} 1"), "{got}");
+}
+
+// ------------------------------------------------------------------ trace
+
+/// Ring overflow: with a tiny capacity, flooding one thread's ring keeps
+/// the newest events, and every drop is accounted in the dropped counter.
+#[test]
+fn trace_ring_overflow_is_accounted() {
+    let _g = trace_lock();
+    trace::set_ring_capacity(8);
+    trace::set_enabled(true);
+    let before = trace::dropped_total();
+    const SPANS: u64 = 100;
+    // A fresh thread gets a fresh ring with the tiny capacity.
+    std::thread::Builder::new()
+        .name("obs-flood".into())
+        .spawn(|| {
+            for _ in 0..SPANS {
+                let _s = trace::span("obs_test/flood");
+            }
+        })
+        .unwrap()
+        .join()
+        .unwrap();
+    trace::set_enabled(false);
+    trace::set_ring_capacity(trace::DEFAULT_RING_CAPACITY);
+    let rows = trace::drain();
+    let flood: Vec<_> =
+        rows.iter().filter(|r| r.event.name == "obs_test/flood").collect();
+    assert_eq!(flood.len(), 8, "ring must retain exactly its capacity");
+    assert!(
+        flood.iter().all(|r| r.thread_name == "obs-flood"),
+        "spans must land on the recording thread's ring"
+    );
+    let dropped = trace::dropped_total() - before;
+    assert_eq!(dropped, SPANS - 8, "every displaced event must be counted");
+    // Drained rings are empty.
+    assert!(trace::drain().iter().all(|r| r.event.name != "obs_test/flood"));
+}
+
+/// Spans recorded while enabled serialize to valid Chrome trace JSON with
+/// monotone timestamps (the same properties scripts/check_trace.py
+/// asserts on the serve-produced file in CI).
+#[test]
+fn trace_spans_export_monotone_chrome_json() {
+    let _g = trace_lock();
+    trace::set_enabled(true);
+    {
+        let _outer = trace::span("obs_test/outer");
+        std::thread::sleep(Duration::from_millis(2));
+        let _inner = trace::span("obs_test/inner");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    trace::set_enabled(false);
+    let rows = trace::drain();
+    let mine: Vec<_> =
+        rows.iter().filter(|r| r.event.name.starts_with("obs_test/")).collect();
+    assert_eq!(mine.len(), 2, "both spans recorded");
+    // drain() sorts by start timestamp; the outer span started first and
+    // lasted longer.
+    assert_eq!(mine[0].event.name, "obs_test/outer");
+    assert!(mine[0].event.ts_ns <= mine[1].event.ts_ns);
+    assert!(mine[0].event.dur_ns > mine[1].event.dur_ns);
+    let json = trace::chrome_json(&rows);
+    assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+    assert!(json.contains("\"ph\":\"M\""), "{json}");
+    assert!(json.contains("\"name\":\"obs_test/outer\""), "{json}");
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+}
+
+/// The disabled path stays inert even after a full enable/disable cycle
+/// (the overhead bench's premise: one relaxed load, nothing recorded).
+#[test]
+fn disabled_spans_after_cycle_record_nothing() {
+    let _g = trace_lock();
+    trace::set_enabled(true);
+    {
+        let _s = trace::span("obs_test/warm");
+    }
+    trace::set_enabled(false);
+    let _ = trace::drain();
+    for _ in 0..1000 {
+        let _s = trace::span("obs_test/cold");
+    }
+    assert!(
+        trace::drain().iter().all(|r| r.event.name != "obs_test/cold"),
+        "disabled span must not record"
+    );
+}

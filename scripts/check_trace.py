@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Validate a Chrome/Perfetto trace_event JSON file produced by
+`--trace-out` / `SMPPCA_TRACE` (the CI obs-validation gate).
+
+Checks, stdlib only (the CI runner and the authoring containers both lack
+third-party Python packages):
+
+  1. the file parses as JSON and has a `traceEvents` list;
+  2. every event carries the trace_event schema the writer promises:
+     metadata rows (`ph == "M"`) name the process/thread via `args.name`,
+     complete events (`ph == "X"`) carry name/pid/tid plus numeric
+     `ts`/`dur` with `dur >= 0`;
+  3. complete-event timestamps are monotone non-decreasing in file order
+     (the writer sorts by start time — a violation means the drain-order
+     contract broke);
+  4. at least `--min-events` complete events are present (default 1), so
+     an armed-but-empty trace fails loudly instead of passing vacuously.
+
+Exit code 0 on success; 1 with a diagnostic on the first violation.
+
+Usage:
+    python3 scripts/check_trace.py TRACE.json [--min-events N]
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    sys.exit(f"check_trace: FAIL: {msg}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace JSON written by --trace-out / SMPPCA_TRACE")
+    ap.add_argument(
+        "--min-events",
+        type=int,
+        default=1,
+        help="minimum number of complete (ph=X) events required (default 1)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{args.trace}: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("missing 'traceEvents' list")
+
+    n_complete = 0
+    n_meta = 0
+    last_ts = None
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"event {i}: not an object: {ev!r}")
+        ph = ev.get("ph")
+        if ph == "M":
+            n_meta += 1
+            if ev.get("name") not in ("process_name", "thread_name"):
+                fail(f"event {i}: metadata with unexpected name {ev.get('name')!r}")
+            if not isinstance(ev.get("args", {}).get("name"), str):
+                fail(f"event {i}: metadata without args.name")
+        elif ph == "X":
+            n_complete += 1
+            for key in ("name", "pid", "tid", "ts", "dur"):
+                if key not in ev:
+                    fail(f"event {i}: complete event missing '{key}': {ev!r}")
+            if not isinstance(ev["name"], str) or not ev["name"]:
+                fail(f"event {i}: empty event name")
+            ts, dur = ev["ts"], ev["dur"]
+            if not isinstance(ts, (int, float)) or not isinstance(dur, (int, float)):
+                fail(f"event {i}: non-numeric ts/dur: {ev!r}")
+            if dur < 0:
+                fail(f"event {i}: negative duration {dur}")
+            if last_ts is not None and ts < last_ts:
+                fail(
+                    f"event {i} ('{ev['name']}'): ts {ts} < previous {last_ts} "
+                    "— complete events must be sorted by start time"
+                )
+            last_ts = ts
+        else:
+            fail(f"event {i}: unexpected phase {ph!r} (writer emits only M and X)")
+
+    if n_meta < 1:
+        fail("no metadata (ph=M) rows — process/thread names missing")
+    if n_complete < args.min_events:
+        fail(
+            f"only {n_complete} complete events, need >= {args.min_events} "
+            "— tracing was armed but nothing was recorded"
+        )
+
+    print(
+        f"check_trace: OK: {n_complete} complete events across "
+        f"{n_meta} metadata rows, timestamps monotone"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,7 @@ import sys
 NUMERIC_FIELDS = (
     "mean_ms",
     "median_ms",
+    "p50_ms",
     "p95_ms",
     "p99_ms",
     "items_per_iter",
@@ -86,8 +87,8 @@ def fmt(v, unit=""):
 
 def to_markdown(doc):
     lines = [
-        "| bench | mean ms | p95 ms | p99 ms | items/iter | items/s |",
-        "|---|---:|---:|---:|---:|---:|",
+        "| bench | mean ms | p50 ms | p95 ms | p99 ms | items/iter | items/s |",
+        "|---|---:|---:|---:|---:|---:|---:|",
     ]
     for r in doc["results"]:
         cells = [r["name"]] + [fmt(r.get(f)) for f in NUMERIC_FIELDS if f != "median_ms"]
