@@ -100,7 +100,10 @@ COMMANDS:
   help       show this message
 
 RUN OPTIONS:
-  --input PATH       CSV triplet file (header d,n1,n2; lines M,row,col,value)
+  --input PATHS      input file, or a comma-separated list of column-disjoint
+                     shard files fed concurrently under --readers. Formats
+                     auto-detected per file: CSV triplets (header d,n1,n2;
+                     lines M,row,col,value) or SMPB binary
   --dataset NAME     synthetic dataset instead of --input:
                      gd|cone|sift|bow|url (default gd)
   --d N --n1 N --n2 N   synthetic shape (defaults 512,256,256)
@@ -131,6 +134,19 @@ RUN OPTIONS:
   without AVX2+FMA, and any other value is an error naming the accepted
   ones. Every kernel is deterministic run-to-run and thread-count-
   invariant. See EXPERIMENTS.md §Perf.
+  IO backend precedence (resolved once per command in stream::prefetch):
+  --mmap wins, then --io MODE, then the SMPPCA_IO env var; unset means
+  buffered and garbage fails fast. Backends never change results — the
+  stream_invariance suite pins every mode bitwise against the synchronous
+  single-reader pass.
+  --io MODE          SMPB byte-source backend: buffered (synchronous reads),
+                     prefetch (read-ahead reader thread over a bounded chunk
+                     ring), mmap (memory-mapped; needs the `mmap` build
+                     feature, else falls back to prefetch with a warning)
+  --mmap             shorthand for --io mmap
+  --readers N        reader threads draining --input shard files
+                     concurrently (default 1); bitwise identical to one
+                     reader when shards are column-disjoint
   --sketch KIND      gaussian|srht|countsketch (default gaussian)
   --engine E         native|native-tiled|xla (default native; native-tiled
                      batches gram tiles through the GEMM worker pool; xla
@@ -157,6 +173,14 @@ SERVE OPTIONS:
                      answered `err shed ...` (default 256)
   --net-mem-budget N per-burst command budget in bytes (default 1048576)
   --net-max-line N   longest accepted protocol line in bytes (default 65536)
+  --readers N        default reader-thread count for `ingest-file` with
+                     several shard files (default 1; per-command `readers=N`
+                     overrides)
+  --io MODE          default `ingest-file` byte-source backend: buffered|
+                     prefetch|mmap (same precedence as run: --mmap wins,
+                     then --io, then SMPPCA_IO; per-command `io=MODE`
+                     overrides)
+  --mmap             shorthand for --io mmap
   --trace-out PATH   record pipeline/serve span traces and write them to
                      PATH on exit as Chrome/Perfetto trace_event JSON
                      (open in chrome://tracing or ui.perfetto.dev). Also
@@ -307,6 +331,28 @@ mod tests {
         assert_eq!(a.get("trace-out"), Some("/tmp/trace.json"));
         let b = parse("run --trace-out=t.json");
         assert_eq!(b.get("trace-out"), Some("t.json"));
+    }
+
+    #[test]
+    fn io_backend_options_documented_and_parse() {
+        // The ingest io vertical: backend precedence (--mmap > --io >
+        // SMPPCA_IO), the reader-count knob, and the per-command serve
+        // overrides must all be in HELP.
+        assert!(HELP.contains("--io MODE"), "HELP must document the io backend option");
+        assert!(HELP.contains("--mmap"), "HELP must document the mmap shorthand");
+        assert!(HELP.contains("--readers"), "HELP must document the reader-count knob");
+        assert!(HELP.contains("SMPPCA_IO"), "HELP must name the io env var");
+        assert!(
+            HELP.contains("buffered") && HELP.contains("prefetch"),
+            "HELP must spell out the accepted io modes"
+        );
+        let a = parse("run --input a.bin,b.bin --readers 2 --io prefetch");
+        assert_eq!(a.get("input"), Some("a.bin,b.bin"));
+        assert_eq!(a.get_parse("readers", 1usize).unwrap(), 2);
+        assert_eq!(a.get("io"), Some("prefetch"));
+        let b = parse("serve --readers 4 --mmap");
+        assert_eq!(b.get_parse("readers", 1usize).unwrap(), 4);
+        assert!(b.flag("mmap"));
     }
 
     #[test]

@@ -62,6 +62,26 @@ impl Pipeline {
     pub fn run(&self, source: Box<dyn EntrySource>) -> anyhow::Result<PipelineOutput> {
         let mut metrics = Metrics::new();
         let (sa, sb) = self.sketch_pass(source, &mut metrics)?;
+        self.finish(sa, sb, metrics)
+    }
+
+    /// Run the pipeline with several sources feeding the sketch pass
+    /// concurrently (one reader thread each). Bitwise identical to [`run`]
+    /// over the concatenated stream when the sources are column-disjoint —
+    /// see [`ingest::ingest_shards_multi`] for the argument.
+    pub fn run_multi(&self, sources: Vec<Box<dyn EntrySource>>) -> anyhow::Result<PipelineOutput> {
+        let mut metrics = Metrics::new();
+        let (sa, sb) = self.sketch_pass_multi(sources, &mut metrics)?;
+        self.finish(sa, sb, metrics)
+    }
+
+    /// The leader finish shared by [`run`] and [`run_multi`].
+    fn finish(
+        &self,
+        sa: Summary,
+        sb: Summary,
+        mut metrics: Metrics,
+    ) -> anyhow::Result<PipelineOutput> {
         let _finish_span = trace::span(stage::LEADER_FINISH);
         let t_total = StageTimer::start();
         let t = StageTimer::start();
@@ -106,6 +126,34 @@ impl Pipeline {
         };
         let run = ingest::ingest_entries(
             source,
+            self.cfg.algo.sketch,
+            self.cfg.algo.seed,
+            self.cfg.algo.sketch_size,
+            &icfg,
+        )?;
+        metrics.add("entries_routed", run.stats.entries_routed);
+        metrics.add("worker/entries", run.stats.entries_sketched);
+        metrics.record_stage("worker/sketch", run.stats.worker_busy);
+        metrics.record_stage(stage::PASS_TOTAL, run.stats.pass_time);
+        metrics.record_stage("merge", run.stats.merge_time);
+        Ok((run.a, run.b))
+    }
+
+    /// Multi-reader variant of [`sketch_pass`]: every source drains on its
+    /// own routing thread into one shared worker pool.
+    pub fn sketch_pass_multi(
+        &self,
+        sources: Vec<Box<dyn EntrySource>>,
+        metrics: &mut Metrics,
+    ) -> anyhow::Result<(Summary, Summary)> {
+        let _span = trace::span(stage::PASS_TOTAL);
+        let icfg = IngestConfig {
+            workers: self.cfg.workers,
+            channel_capacity: self.cfg.channel_capacity,
+            ..Default::default()
+        };
+        let run = ingest::ingest_entries_multi(
+            sources,
             self.cfg.algo.sketch,
             self.cfg.algo.seed,
             self.cfg.algo.sketch_size,

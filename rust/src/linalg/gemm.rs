@@ -154,8 +154,16 @@ fn gemm_st(
                 for jp in 0..npanels {
                     let bp = &bpack[jp * kb * nr..(jp + 1) * kb * nr];
                     let n_act = nr.min(nb - jp * nr);
+                    // Hint the head of the next B panel while this one streams
+                    // through the microkernel; pure prefetch, no value change.
+                    if jp + 1 < npanels {
+                        kernels::prefetch_panel(&bpack[(jp + 1) * kb * nr..]);
+                    }
                     for ip in 0..mpanels {
                         let ap = &apack[ip * kb * mr..(ip + 1) * kb * mr];
+                        if ip + 1 < mpanels {
+                            kernels::prefetch_panel(&apack[(ip + 1) * kb * mr..]);
+                        }
                         let m_act = mr.min(mb - ip * mr);
                         let c_off = (i0 + ip * mr) * c_stride + j0 + jp * nr;
                         (kern.gemm_microkernel)(ap, bp, kb, &mut c[c_off..], c_stride, m_act, n_act);

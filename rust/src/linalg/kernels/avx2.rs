@@ -73,7 +73,16 @@ unsafe fn gemm_microkernel_inner(
     // where the tile sits, which is what keeps row-sharded GEMM bitwise
     // thread-count-invariant.
     let mut acc = [_mm256_setzero_pd(); MR];
+    // Software prefetch distance, in k-steps: 8 steps ahead is one 64-double
+    // A stride (8·MR) and a quarter B stride — far enough to cover an L2 hit,
+    // close enough to stay inside the packed panel. Prefetch is a pure hint:
+    // the FMA chain (and hence every C value) is untouched.
+    const PF_DIST: usize = 8;
     for kk in 0..kb {
+        if kk + PF_DIST < kb {
+            _mm_prefetch::<_MM_HINT_T0>(a.add((kk + PF_DIST) * MR) as *const i8);
+            _mm_prefetch::<_MM_HINT_T0>(b.add((kk + PF_DIST) * NR) as *const i8);
+        }
         let bv = _mm256_load_pd(b.add(kk * NR));
         let ak = a.add(kk * MR);
         for (r, accr) in acc.iter_mut().enumerate() {

@@ -163,6 +163,32 @@ pub fn active() -> &'static Kernels {
     ACTIVE.get_or_init(|| from_env().unwrap_or_else(|e| panic!("{e}")))
 }
 
+/// Hint the hardware prefetcher at the head of the next packed panel (the
+/// first 4 cache lines — 32 doubles — which covers the microkernel's first
+/// few k-steps; the streaming access pattern takes over from there). Pure
+/// hint: prefetch instructions never change architectural state, so results
+/// stay bitwise identical with or without it (the SIMD-vs-scalar pins in
+/// `tests/kernel_props.rs` would catch any drift). A no-op off x86_64 and
+/// for panels shorter than a cache line.
+#[inline(always)]
+pub fn prefetch_panel(p: &[f64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        const LINE_DOUBLES: usize = 8; // 64-byte cache line
+        let lines = (p.len() / LINE_DOUBLES).min(4);
+        for l in 0..lines {
+            // SAFETY: the offset stays within the slice; prefetch has no
+            // side effects and tolerates any mapped address.
+            unsafe { _mm_prefetch::<_MM_HINT_T0>(p.as_ptr().add(l * LINE_DOUBLES) as *const i8) };
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = p;
+    }
+}
+
 /// Heap buffer of `f64` aligned to 64 bytes, for the GEMM packing panels:
 /// with the panel geometry used by `gemm` (A panels start at multiples of
 /// `kb·mr` doubles, B panels at multiples of `kb·nr`), a 64-byte base makes

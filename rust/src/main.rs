@@ -9,7 +9,7 @@ use smppca::linalg::Mat;
 use smppca::rng::Pcg64;
 use smppca::runtime::{artifact_dir, artifacts_available, native_engine, TileEngine, XlaEngine};
 use smppca::sketch::SketchKind;
-use smppca::stream::{EntrySource, FileSource, ShuffledMatrixSource};
+use smppca::stream::{ConcatSource, EntrySource, FileSource, ReadMode, ShuffledMatrixSource};
 
 fn main() {
     let code = match real_main() {
@@ -75,6 +75,38 @@ fn write_trace(path: &str) {
         Ok(n) => eprintln!("[smppca] wrote trace ({n} events) to {path}"),
         Err(e) => eprintln!("[smppca] failed to write trace to {path}: {e}"),
     }
+}
+
+/// Resolve the ingest byte-source backend: `--mmap` wins, then `--io MODE`,
+/// then the `SMPPCA_IO` env var; all three fail fast on garbage.
+fn resolve_read_mode(args: &Args) -> anyhow::Result<ReadMode> {
+    if args.flag("mmap") {
+        return Ok(ReadMode::Mmap);
+    }
+    match args.get("io") {
+        Some(m) => ReadMode::parse(m),
+        None => ReadMode::from_env(),
+    }
+}
+
+/// Group input sources round-robin onto `readers` reader slots; a slot with
+/// several files drains them back to back through a [`ConcatSource`].
+fn group_sources(
+    sources: Vec<Box<dyn EntrySource>>,
+    readers: usize,
+) -> Vec<Box<dyn EntrySource>> {
+    let readers = readers.max(1).min(sources.len());
+    if readers == sources.len() {
+        return sources;
+    }
+    let mut groups: Vec<Vec<Box<dyn EntrySource>>> = (0..readers).map(|_| Vec::new()).collect();
+    for (i, s) in sources.into_iter().enumerate() {
+        groups[i % readers].push(s);
+    }
+    groups
+        .into_iter()
+        .map(|g| Box::new(ConcatSource::new(g)) as Box<dyn EntrySource>)
+        .collect()
 }
 
 fn load_dataset(args: &Args) -> anyhow::Result<(Mat, Mat)> {
@@ -153,25 +185,62 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     };
     let engine_name = engine.name();
 
-    // Build source (+ keep dense copies when synthetic, for error reporting)
-    let (source, dense): (Box<dyn EntrySource>, Option<(Mat, Mat)>) = match args.get("input") {
-        Some(path) => (Box::new(FileSource::open(path)?), None),
+    // Build sources (+ keep dense copies when synthetic, for error
+    // reporting). `--input` accepts a comma-separated list of column-
+    // disjoint shard files (CSV or SMPB, auto-detected) which `--readers N`
+    // drains concurrently — bitwise equal to a single-reader pass.
+    let io_mode = resolve_read_mode(args)?;
+    let readers = args.get_parse("readers", 1usize)?;
+    anyhow::ensure!(readers >= 1, "--readers must be >= 1");
+    let (sources, dense): (Vec<Box<dyn EntrySource>>, Option<(Mat, Mat)>) = match args
+        .get("input")
+    {
+        Some(paths) => {
+            let mut v: Vec<Box<dyn EntrySource>> = Vec::new();
+            for p in paths.split(',').filter(|p| !p.is_empty()) {
+                v.push(smppca::stream::open_auto(p, io_mode)?);
+            }
+            anyhow::ensure!(!v.is_empty(), "--input needs at least one path");
+            let meta = v[0].meta();
+            for (i, s) in v.iter().enumerate() {
+                anyhow::ensure!(
+                    s.meta() == meta,
+                    "input shard {i} shape {:?} disagrees with shard 0 shape {meta:?}",
+                    s.meta(),
+                );
+            }
+            (v, None)
+        }
         None => {
             let (a, b) = load_dataset(args)?;
             (
-                Box::new(ShuffledMatrixSource { a: a.clone(), b: b.clone(), seed: seed ^ 0x517 }),
+                vec![Box::new(ShuffledMatrixSource {
+                    a: a.clone(),
+                    b: b.clone(),
+                    seed: seed ^ 0x517,
+                }) as Box<dyn EntrySource>],
                 Some((a, b)),
             )
         }
     };
-    let meta = source.meta();
+    let meta = sources[0].meta();
     println!(
-        "running SMP-PCA: d={} n1={} n2={} r={rank} k={k} ingest-threads={workers} engine={engine_name}",
-        meta.d, meta.n1, meta.n2
+        "running SMP-PCA: d={} n1={} n2={} r={rank} k={k} ingest-threads={workers} \
+         readers={} io={} engine={engine_name}",
+        meta.d,
+        meta.n1,
+        meta.n2,
+        readers.min(sources.len()),
+        io_mode.name(),
     );
     let pipe = Pipeline::with_engine(cfg, engine);
     let t0 = std::time::Instant::now();
-    let out = pipe.run(source)?;
+    let mut grouped = group_sources(sources, readers);
+    let out = if grouped.len() == 1 {
+        pipe.run(grouped.pop().unwrap())?
+    } else {
+        pipe.run_multi(grouped)?
+    };
     println!(
         "done in {:.1} ms; |Ω| = {}",
         t0.elapsed().as_secs_f64() * 1e3,
@@ -210,7 +279,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         smppca::runtime::fault::install(plan)?;
         eprintln!("[smppca] fault plan armed: {plan}");
     }
-    let proto = std::sync::Arc::new(smppca::server::ServeProtocol::new());
+    // `ingest-file` io defaults: `--readers` / `--io` / `--mmap` (or
+    // `SMPPCA_IO`), overridable per command with `readers=` / `io=`.
+    let io_mode = resolve_read_mode(args)?;
+    let io_readers = args.get_parse("readers", 1usize)?;
+    anyhow::ensure!(io_readers >= 1, "--readers must be >= 1");
+    let proto =
+        std::sync::Arc::new(smppca::server::ServeProtocol::with_io(io_readers, io_mode));
     // `--listen ADDR` puts the TCP front-end up alongside the stdin loop;
     // stdin `quit`/EOF then shuts the whole server down gracefully
     // (stop accepting, drain queued connections, close streams).

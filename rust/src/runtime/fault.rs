@@ -13,7 +13,8 @@
 //! ```
 //!
 //! * `point` — the fault-point name, matched exactly
-//!   (`ingest/worker/batch`, `checkpoint/write`, `serve/refresh`, ...).
+//!   (`ingest/worker/batch`, `checkpoint/write`, `serve/refresh`,
+//!   `stream/read/chunk` — a dying read-ahead/mmap reader, ...).
 //! * `action` — `panic` | `ioerr` | `delay=MILLIS`.
 //! * `trigger` — `every=N` (hits N, 2N, 3N, ...), `nth=N` (hit N only),
 //!   `once` (alias for `nth=1`), or `prob=P[,seed=S]` (seeded Bernoulli —

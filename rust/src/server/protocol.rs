@@ -15,7 +15,7 @@ use crate::algo::SmpPcaConfig;
 use crate::coordinator::metrics::StageTimer;
 use crate::runtime::obs::registry::Registry;
 use crate::sketch::SketchKind;
-use crate::stream::{Entry, EntrySource, FileSource, MatrixId, StreamMeta};
+use crate::stream::{open_auto, Entry, EntrySource, MatrixId, ReadMode, StreamMeta};
 use std::time::Duration;
 
 /// The `help` response (also embedded in the CLI help).
@@ -27,7 +27,11 @@ serve protocol — one command per line:
                                   states from a `checkpoint` directory)
   ingest NAME M:row:col:val ...   fold records (M is A or B); the batch is
                                   validated and rejected atomically
-  ingest-file NAME PATH           stream a CSV triplet file (`gen` format)
+  ingest-file NAME PATH... [readers=N] [io=buffered|prefetch|mmap] [mmap]
+                                  stream files (CSV triplet or SMPB binary,
+                                  auto-detected); several column-disjoint
+                                  shard files may feed N reader threads
+                                  concurrently — bitwise equal to one reader
   refresh NAME                    freeze the prefix, publish a new epoch
   auto-refresh NAME MILLIS        background refresher every MILLIS ms
   stop-refresh NAME               stop the background refresher
@@ -58,11 +62,28 @@ pub const COALESCE_MAX_BLOWUP: usize = 4;
 /// Stateful protocol handler: a [`SketchService`] plus the line dispatch.
 pub struct ServeProtocol {
     service: SketchService,
+    /// Default reader-thread count for `ingest-file` (per-command
+    /// `readers=N` overrides).
+    io_readers: usize,
+    /// Default byte-source backend for `ingest-file` on SMPB files
+    /// (per-command `io=MODE` / `mmap` overrides).
+    io_mode: ReadMode,
 }
 
 impl ServeProtocol {
     pub fn new() -> Self {
-        Self { service: SketchService::new() }
+        // `SMPPCA_IO` garbage falls back to buffered here — the CLI entry
+        // point (`cmd_serve`) resolves the env itself and fails fast before
+        // constructing the protocol; this lenient path only serves direct
+        // embedders and tests.
+        let io_mode = ReadMode::from_env().unwrap_or(ReadMode::Buffered);
+        Self::with_io(1, io_mode)
+    }
+
+    /// Construct with explicit ingest io defaults (the `serve --readers /
+    /// --io / --mmap` plumbing).
+    pub fn with_io(io_readers: usize, io_mode: ReadMode) -> Self {
+        Self { service: SketchService::new(), io_readers: io_readers.max(1), io_mode }
     }
 
     pub fn service(&self) -> &SketchService {
@@ -293,42 +314,49 @@ impl ServeProtocol {
     }
 
     fn cmd_ingest_file(&self, rest: &[&str]) -> anyhow::Result<String> {
-        let [name, path] = two(rest, "ingest-file NAME PATH")?;
-        let session = self.service.get(name)?;
-        let source = FileSource::open(path)?;
-        let file_meta = source.meta();
-        anyhow::ensure!(
-            file_meta == session.spec().meta,
-            "file shape {file_meta:?} does not match stream shape {:?}",
-            session.spec().meta
-        );
-        // Stream in 4096-entry batches — O(batch) memory, not O(file).
-        // An ingest error breaks the replay at the failed batch: the rest
-        // of the file is never read and the error surfaces immediately.
-        let mut buf: Vec<Entry> = Vec::with_capacity(4096);
-        let mut total = 0u64;
-        let mut failed: Option<anyhow::Error> = None;
-        let _ = Box::new(source).for_each(&mut |e| {
-            buf.push(e);
-            if buf.len() == 4096 {
-                match session.ingest(&buf) {
-                    Ok(n) => total += n,
-                    Err(err) => {
-                        failed = Some(err);
-                        return std::ops::ControlFlow::Break(());
-                    }
-                }
-                buf.clear();
+        let name = *rest.first().ok_or_else(|| {
+            anyhow::anyhow!("ingest-file NAME PATH... [readers=N] [io=buffered|prefetch|mmap]")
+        })?;
+        let mut paths: Vec<&str> = Vec::new();
+        let mut readers = self.io_readers;
+        let mut mode = self.io_mode;
+        for tok in &rest[1..] {
+            if let Some(v) = tok.strip_prefix("readers=") {
+                readers = pv("readers", v)?;
+                anyhow::ensure!(readers >= 1, "readers must be >= 1");
+            } else if let Some(v) = tok.strip_prefix("io=") {
+                mode = ReadMode::parse(v)?;
+            } else if *tok == "mmap" {
+                mode = ReadMode::Mmap;
+            } else {
+                paths.push(tok);
             }
-            std::ops::ControlFlow::Continue(())
-        });
-        if let Some(err) = failed {
-            return Err(err);
         }
-        if !buf.is_empty() {
-            total += session.ingest(&buf)?;
+        anyhow::ensure!(!paths.is_empty(), "ingest-file needs at least one PATH");
+        let session = self.service.get(name)?;
+        let want = session.spec().meta;
+        // Format is auto-detected per file (SMPB magic vs CSV triplets);
+        // every file must declare the session's shape — shard files are
+        // slices of one logical stream, not different streams.
+        let mut sources: Vec<Box<dyn EntrySource>> = Vec::with_capacity(paths.len());
+        for path in &paths {
+            let src = open_auto(path, mode)?;
+            let got = src.meta();
+            anyhow::ensure!(
+                got == want,
+                "file '{path}' shape {got:?} does not match stream shape {want:?}"
+            );
+            sources.push(src);
         }
-        Ok(format!("ok ingest-file {name} entries={total}"))
+        // Streams in 4096-entry batches per reader — O(readers × batch)
+        // memory, not O(file). Readers run on spawned threads, so a source
+        // panic (corrupt/truncated file, injected read fault) comes back as
+        // an `err ...` response instead of killing the serve loop, and an
+        // ingest error breaks each reader's replay at the failed batch.
+        let nfiles = sources.len();
+        let r = readers.min(nfiles);
+        let total = session.ingest_sources(sources, readers, 4096)?;
+        Ok(format!("ok ingest-file {name} entries={total} files={nfiles} readers={r}"))
     }
 
     fn cmd_refresh(&self, rest: &[&str]) -> anyhow::Result<String> {

@@ -59,8 +59,9 @@ use crate::runtime::ParNativeEngine;
 use crate::{log_error, log_warn};
 use crate::sketch::ingest::{tree_merge, worker_states, ColumnGrouper};
 use crate::sketch::SketchState;
-use crate::stream::{bounded, shard_of, Entry, MatrixId, Receiver, Sender, StreamMeta};
+use crate::stream::{bounded, shard_of, Entry, EntrySource, MatrixId, Receiver, Sender, StreamMeta};
 use std::collections::VecDeque;
+use std::ops::ControlFlow;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -641,6 +642,128 @@ impl StreamSession {
         // `metrics_report` are synthesized from these at scrape time.
         self.obs.route.record(t.stop());
         Ok(entries.len() as u64)
+    }
+
+    /// Drain one entry source into the session in `batch`-sized [`ingest`]
+    /// calls. The source's shape must match the session spec. An ingest
+    /// failure (closed/degraded session) Breaks the replay immediately —
+    /// the remaining stream is not read.
+    pub fn ingest_stream(
+        &self,
+        source: Box<dyn EntrySource>,
+        batch: usize,
+    ) -> anyhow::Result<u64> {
+        let meta = source.meta();
+        anyhow::ensure!(
+            meta == self.spec.meta,
+            "stream shape {meta:?} does not match session shape {:?}",
+            self.spec.meta,
+        );
+        let batch = batch.max(1);
+        let mut buf: Vec<Entry> = Vec::with_capacity(batch);
+        let mut total = 0u64;
+        let mut failed: Option<anyhow::Error> = None;
+        let _ = source.for_each(&mut |e| {
+            buf.push(e);
+            if buf.len() < batch {
+                return ControlFlow::Continue(());
+            }
+            match self.ingest(&buf) {
+                Ok(n) => {
+                    total += n;
+                    buf.clear();
+                    ControlFlow::Continue(())
+                }
+                Err(err) => {
+                    failed = Some(err);
+                    ControlFlow::Break(())
+                }
+            }
+        });
+        if let Some(err) = failed {
+            return Err(err);
+        }
+        if !buf.is_empty() {
+            total += self.ingest(&buf)?;
+        }
+        Ok(total)
+    }
+
+    /// Drain several sources concurrently: round-robin the sources over
+    /// `readers` dedicated reader threads, each running [`ingest_stream`]
+    /// on its group. The published snapshot is bitwise identical to a
+    /// single-reader drain when the sources are column-disjoint (each
+    /// `(matrix, column)` wholly inside one source): a column's entries
+    /// then flow through one reader in file order, [`ingest`] preserves
+    /// per-column send order under the router lock, and cross-column
+    /// interleaving commutes in the sketch fold.
+    ///
+    /// Always runs the readers on dedicated threads — even with one reader —
+    /// so a source panic (io error mid-stream, injected `stream/read/chunk`
+    /// fault) is caught at join and returned as an error instead of
+    /// unwinding the caller (the serve loop answers `err ...` and lives on).
+    /// Scoped threads rather than `pool::spawn_thread` because the readers
+    /// borrow `self` for the call's duration; the naming and fault-domain
+    /// inheritance contract of `spawn_thread` is reproduced by hand.
+    pub fn ingest_sources(
+        &self,
+        sources: Vec<Box<dyn EntrySource>>,
+        readers: usize,
+        batch: usize,
+    ) -> anyhow::Result<u64> {
+        anyhow::ensure!(!sources.is_empty(), "ingest needs at least one source");
+        let readers = readers.max(1).min(sources.len());
+        let mut groups: Vec<Vec<Box<dyn EntrySource>>> =
+            (0..readers).map(|_| Vec::new()).collect();
+        for (i, s) in sources.into_iter().enumerate() {
+            groups[i % readers].push(s);
+        }
+        let gauge = registry::gauge("serve/ingest_readers");
+        gauge.set(readers as i64);
+        let domain = crate::runtime::fault::current_domain();
+        let mut total = 0u64;
+        let mut failure: Option<anyhow::Error> = None;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = groups
+                .into_iter()
+                .map(|group| {
+                    std::thread::Builder::new()
+                        .name("smppca-serve-ingest-reader".into())
+                        .spawn_scoped(scope, move || -> anyhow::Result<u64> {
+                            crate::runtime::fault::set_domain(domain);
+                            let mut total = 0u64;
+                            for src in group {
+                                total += self.ingest_stream(src, batch)?;
+                            }
+                            Ok(total)
+                        })
+                        .expect("failed to spawn ingest reader")
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(n)) => total += n,
+                    Ok(Err(e)) => {
+                        if failure.is_none() {
+                            failure = Some(e);
+                        }
+                    }
+                    Err(payload) => {
+                        if failure.is_none() {
+                            failure = Some(anyhow::anyhow!(
+                                "ingest reader panicked: {}",
+                                pool::panic_message(payload.as_ref())
+                            ));
+                        }
+                    }
+                }
+            }
+        });
+        gauge.set(0);
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(total),
+        }
     }
 
     /// Enqueue a freeze marker on every worker (under the router lock, so

@@ -232,15 +232,7 @@ pub fn ingest_shards(
     let w = states.len();
     anyhow::ensure!(w > 0, "ingest needs at least one worker state");
     let meta = source.meta();
-    for (sa, sb) in &states {
-        anyhow::ensure!(
-            sa.d() == meta.d && sb.d() == meta.d && sa.n() == meta.n1 && sb.n() == meta.n2,
-            "worker state shape does not match the stream: state ({}, {}/{}) vs meta {meta:?}",
-            sa.d(),
-            sa.n(),
-            sb.n(),
-        );
-    }
+    validate_states(&states, meta)?;
     let batch = cfg.batch.max(1);
     let cap_msgs = cfg.channel_capacity.div_ceil(batch).max(2);
     let mut stats = IngestStats { workers: w, ..Default::default() };
@@ -269,6 +261,109 @@ pub fn ingest_shards(
     Ok((out, stats))
 }
 
+/// Shape check shared by the single- and multi-source entry passes.
+fn validate_states(
+    states: &[(SketchState, SketchState)],
+    meta: StreamMeta,
+) -> anyhow::Result<()> {
+    for (sa, sb) in states {
+        anyhow::ensure!(
+            sa.d() == meta.d && sb.d() == meta.d && sa.n() == meta.n1 && sb.n() == meta.n2,
+            "worker state shape does not match the stream: state ({}, {}/{}) vs meta {meta:?}",
+            sa.d(),
+            sa.n(),
+            sb.n(),
+        );
+    }
+    Ok(())
+}
+
+/// Multi-reader entry pass: each source gets its own routing thread and all
+/// of them feed the same worker pool concurrently.
+///
+/// Determinism contract: the result is bitwise identical to draining the
+/// same sources sequentially through [`ingest_shards`] **when the sources
+/// are column-disjoint** — every `(matrix, column)` lives wholly in one
+/// source (e.g. files partitioned by `shard_of(matrix, col, nfiles)`).
+/// Then each column's entries stay in one reader's FIFO send order, the
+/// per-worker channels are FIFO, and the sketch accumulator's per-column
+/// slots are disjoint across columns for every sketch kind — so cross-reader
+/// interleaving commutes and only the (preserved) per-column order matters.
+/// Sources that split a column across readers still produce a *valid*
+/// sketch, just not a bit-reproducible one.
+///
+/// Failure: a panicking reader (io error, injected `stream/read/chunk`
+/// fault) drops its channel clones; the other readers and the workers wind
+/// down normally, then the reader's panic is reported as the pass error —
+/// never a hang. Reader failures win over secondary worker failures.
+pub fn ingest_shards_multi(
+    sources: Vec<Box<dyn EntrySource>>,
+    states: Vec<(SketchState, SketchState)>,
+    cfg: &IngestConfig,
+) -> anyhow::Result<(Vec<(SketchState, SketchState)>, IngestStats)> {
+    let w = states.len();
+    anyhow::ensure!(w > 0, "ingest needs at least one worker state");
+    anyhow::ensure!(!sources.is_empty(), "ingest needs at least one source");
+    let meta = sources[0].meta();
+    for (i, s) in sources.iter().enumerate() {
+        anyhow::ensure!(
+            s.meta() == meta,
+            "source {i} disagrees on stream shape: {:?} vs {meta:?}",
+            s.meta(),
+        );
+    }
+    validate_states(&states, meta)?;
+    let batch = cfg.batch.max(1);
+    let cap_msgs = cfg.channel_capacity.div_ceil(batch).max(2);
+    let mut stats = IngestStats { workers: w, ..Default::default() };
+    let prior_seen: u64 =
+        states.iter().map(|(sa, sb)| sa.entries_seen() + sb.entries_seen()).sum();
+    let t_pass = Instant::now();
+
+    let (senders, handles) = spawn_workers(states, cap_msgs, |sa, sb| {
+        let mut grouper = ColumnGrouper::new(sa.n(), sb.n());
+        move |sa: &mut SketchState, sb: &mut SketchState, b: Vec<Entry>| {
+            grouper.for_each_group(&b, |matrix, col, entries| match matrix {
+                MatrixId::A => sa.update_col_entries(col, entries),
+                MatrixId::B => sb.update_col_entries(col, entries),
+            });
+        }
+    });
+
+    let readers: Vec<_> = sources
+        .into_iter()
+        .map(|src| {
+            let senders = senders.clone();
+            pool::spawn_thread("stream-route", move || route_entries(src, &senders, batch))
+        })
+        .collect();
+    drop(senders); // workers finish once every reader's clones are gone
+
+    let mut reader_failure: Option<anyhow::Error> = None;
+    for h in readers {
+        match h.join() {
+            Ok(n) => stats.entries_routed += n,
+            Err(payload) => {
+                if reader_failure.is_none() {
+                    reader_failure = Some(anyhow::anyhow!(
+                        "stream reader panicked: {}",
+                        pool::panic_message(payload.as_ref())
+                    ));
+                }
+            }
+        }
+    }
+
+    let joined = join_workers(handles, &mut stats);
+    if let Some(e) = reader_failure {
+        return Err(e);
+    }
+    let out = joined?;
+    stats.entries_sketched -= prior_seen;
+    stats.pass_time = t_pass.elapsed();
+    Ok((out, stats))
+}
+
 /// One full entry-sharded pass: fresh states, shard, tree-merge, finalize.
 pub fn ingest_entries(
     source: Box<dyn EntrySource>,
@@ -281,6 +376,27 @@ pub fn ingest_entries(
     let w = cfg.resolve_workers();
     let states = worker_states(kind, seed, k, meta, w);
     let (states, mut stats) = ingest_shards(source, states, cfg)?;
+    let t = Instant::now();
+    let (sa, sb) = tree_merge(states);
+    stats.merge_time = t.elapsed();
+    Ok(IngestRun { a: sa.finalize(), b: sb.finalize(), stats })
+}
+
+/// One full multi-reader pass over column-disjoint sources (see
+/// [`ingest_shards_multi`] for the determinism contract). With a single
+/// source this is exactly [`ingest_entries`] plus one thread hop.
+pub fn ingest_entries_multi(
+    sources: Vec<Box<dyn EntrySource>>,
+    kind: SketchKind,
+    seed: u64,
+    k: usize,
+    cfg: &IngestConfig,
+) -> anyhow::Result<IngestRun> {
+    anyhow::ensure!(!sources.is_empty(), "ingest needs at least one source");
+    let meta = sources[0].meta();
+    let w = cfg.resolve_workers();
+    let states = worker_states(kind, seed, k, meta, w);
+    let (states, mut stats) = ingest_shards_multi(sources, states, cfg)?;
     let t = Instant::now();
     let (sa, sb) = tree_merge(states);
     stats.merge_time = t.elapsed();

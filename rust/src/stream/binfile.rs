@@ -12,16 +12,20 @@
 
 use super::{Entry, EntrySource, MatrixId, StreamMeta};
 use crate::linalg::Mat;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::ops::ControlFlow;
 use std::path::Path;
 
-const MAGIC: &[u8; 4] = b"SMPB";
+pub(crate) const MAGIC: &[u8; 4] = b"SMPB";
 const VERSION: u32 = 1;
+/// Record width: tag u8 + row u32 + col u32 + value f64.
+pub(crate) const REC: usize = 17;
+/// Header width: magic + version + d/n1/n2.
+pub(crate) const HEADER_LEN: u64 = 32;
 
 pub struct BinFileSource {
-    path: std::path::PathBuf,
-    meta: StreamMeta,
+    pub(crate) path: std::path::PathBuf,
+    pub(crate) meta: StreamMeta,
 }
 
 impl BinFileSource {
@@ -120,6 +124,88 @@ fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
+/// Incremental SMPB record decoder shared by every byte-granular backend
+/// (buffered reads here, the read-ahead ring in `prefetch`, mmap slabs).
+///
+/// Chunks may split records at any byte: up to `REC - 1` tail bytes carry
+/// over between `feed` calls. The parser tracks the absolute file offset
+/// (checkpoint's `Tracked`-reader discipline) so corruption and truncation
+/// errors name the exact byte, not just "somewhere in the stream".
+pub(crate) struct RecordParser {
+    carry: [u8; REC],
+    carry_len: usize,
+    /// Absolute offset of the next unparsed byte (starts past the header).
+    pos: u64,
+}
+
+impl RecordParser {
+    pub(crate) fn new() -> Self {
+        Self { carry: [0u8; REC], carry_len: 0, pos: HEADER_LEN }
+    }
+
+    fn decode(rec: &[u8], at: u64) -> Entry {
+        let matrix = match rec[0] {
+            b'A' => MatrixId::A,
+            b'B' => MatrixId::B,
+            other => panic!("corrupt record tag {other} at byte offset {at}"),
+        };
+        let row = u32::from_le_bytes(rec[1..5].try_into().unwrap());
+        let col = u32::from_le_bytes(rec[5..9].try_into().unwrap());
+        let value = f64::from_le_bytes(rec[9..17].try_into().unwrap());
+        Entry { matrix, row, col, value }
+    }
+
+    /// Parse every whole record in `chunk` (joined with carried tail bytes).
+    /// A `Break` from the visitor abandons the stream mid-parse by design;
+    /// the truncation check only applies to streams drained to EOF.
+    pub(crate) fn feed(
+        &mut self,
+        chunk: &[u8],
+        f: &mut dyn FnMut(Entry) -> ControlFlow<()>,
+    ) -> ControlFlow<()> {
+        let mut chunk = chunk;
+        if self.carry_len > 0 {
+            let need = REC - self.carry_len;
+            let take = need.min(chunk.len());
+            self.carry[self.carry_len..self.carry_len + take].copy_from_slice(&chunk[..take]);
+            self.carry_len += take;
+            chunk = &chunk[take..];
+            if self.carry_len < REC {
+                return ControlFlow::Continue(());
+            }
+            let rec: [u8; REC] = self.carry;
+            self.carry_len = 0;
+            f(Self::decode(&rec, self.pos))?;
+            self.pos += REC as u64;
+        }
+        let whole = chunk.len() - chunk.len() % REC;
+        for rec in chunk[..whole].chunks_exact(REC) {
+            f(Self::decode(rec, self.pos))?;
+            self.pos += REC as u64;
+        }
+        let tail = &chunk[whole..];
+        self.carry[..tail.len()].copy_from_slice(tail);
+        self.carry_len = tail.len();
+        ControlFlow::Continue(())
+    }
+
+    /// Call at EOF: a partial record left in the carry means the file was
+    /// truncated mid-record.
+    pub(crate) fn finish(&self) -> Result<(), String> {
+        if self.carry_len == 0 {
+            Ok(())
+        } else {
+            Err(format!(
+                "truncated SMPB record: wanted {} more byte(s) at byte offset {}, \
+                 got {} (file cut mid-record?)",
+                REC - self.carry_len,
+                self.pos,
+                self.carry_len,
+            ))
+        }
+    }
+}
+
 impl EntrySource for BinFileSource {
     fn meta(&self) -> StreamMeta {
         self.meta
@@ -129,42 +215,24 @@ impl EntrySource for BinFileSource {
         // Records are parsed from a large reusable buffer in ~68 KiB blocks
         // rather than one 17-byte read per record: the per-record read_exact
         // call (bounds checks + BufReader state) was measurable against the
-        // batched sketch ingest this source feeds.
-        const REC: usize = 17;
+        // batched sketch ingest this source feeds. The header was validated
+        // at `open` time — here we just seek past it.
         let mut file = std::fs::File::open(&self.path).expect("source file vanished");
-        {
-            // skip header: 4 + 4 + 24
-            let mut header = [0u8; 32];
-            file.read_exact(&mut header).expect("header vanished");
-        }
+        file.seek(SeekFrom::Start(HEADER_LEN)).expect("header vanished");
+        let mut parser = RecordParser::new();
         let mut buf = vec![0u8; REC * 4096];
-        let mut filled = 0usize;
         loop {
-            let n = match file.read(&mut buf[filled..]) {
+            let n = match file.read(&mut buf) {
                 Ok(0) => break,
                 Ok(n) => n,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(e) => panic!("io error mid-stream: {e}"),
             };
-            filled += n;
-            let whole = filled - filled % REC;
-            for rec in buf[..whole].chunks_exact(REC) {
-                let matrix = match rec[0] {
-                    b'A' => MatrixId::A,
-                    b'B' => MatrixId::B,
-                    other => panic!("corrupt record tag {other}"),
-                };
-                let row = u32::from_le_bytes(rec[1..5].try_into().unwrap());
-                let col = u32::from_le_bytes(rec[5..9].try_into().unwrap());
-                let value = f64::from_le_bytes(rec[9..17].try_into().unwrap());
-                // A Break here abandons the file mid-read by design: the
-                // trailing-truncation check only applies to full reads.
-                f(Entry { matrix, row, col, value })?;
-            }
-            buf.copy_within(whole..filled, 0);
-            filled %= REC;
+            parser.feed(&buf[..n], f)?;
         }
-        assert!(filled == 0, "truncated trailing record ({filled} bytes)");
+        if let Err(msg) = parser.finish() {
+            panic!("{msg}");
+        }
         ControlFlow::Continue(())
     }
 }
@@ -256,7 +324,47 @@ mod tests {
             let _ = src.for_each(&mut |_| ControlFlow::Continue(()));
         }));
         std::fs::remove_file(&path).ok();
-        assert!(result.is_err(), "truncated record must not be silently dropped");
+        let payload = result.expect_err("truncated record must not be silently dropped");
+        let msg = crate::runtime::pool::panic_message(&*payload);
+        assert!(
+            msg.contains("byte offset"),
+            "truncation error should name an offset: {msg}"
+        );
+    }
+
+    #[test]
+    fn record_parser_handles_any_chunking() {
+        // Serialize three records, then feed the byte stream one byte at a
+        // time — the worst split pattern a read-ahead ring can produce.
+        let entries = vec![Entry::a(1, 2, 3.5), Entry::b(4, 5, -6.25), Entry::a(7, 8, 9.0)];
+        let mut bytes = Vec::new();
+        for e in &entries {
+            let tag = match e.matrix {
+                MatrixId::A => b'A',
+                MatrixId::B => b'B',
+            };
+            write_record(&mut bytes, tag, e.row, e.col, e.value).unwrap();
+        }
+        let mut parser = RecordParser::new();
+        let mut got = Vec::new();
+        for b in &bytes {
+            let _ = parser.feed(std::slice::from_ref(b), &mut |e| {
+                got.push(e);
+                ControlFlow::Continue(())
+            });
+        }
+        parser.finish().unwrap();
+        assert_eq!(got, entries);
+
+        // A dangling partial record reports its absolute offset.
+        let mut parser = RecordParser::new();
+        let _ = parser.feed(&bytes[..REC + 4], &mut |_| ControlFlow::Continue(()));
+        let err = parser.finish().unwrap_err();
+        let want_at = HEADER_LEN + REC as u64;
+        assert!(
+            err.contains(&format!("byte offset {want_at}")),
+            "error should name offset {want_at}: {err}"
+        );
     }
 
     #[test]

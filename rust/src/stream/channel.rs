@@ -63,6 +63,16 @@ impl<T> Sender<T> {
         }
     }
 
+    /// Items currently queued. A snapshot — stale the moment the lock drops,
+    /// so only useful for coarse signals (ring-occupancy gauges, tests).
+    pub fn len(&self) -> usize {
+        self.shared.queue.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     /// Non-blocking send: `Ok(true)` if enqueued, `Ok(false)` if the buffer
     /// is full (item returned to the caller implicitly — it is simply not
     /// sent), `Err` if all receivers dropped. Used where losing the message
@@ -101,6 +111,15 @@ impl<T> Drop for Sender<T> {
 }
 
 impl<T> Receiver<T> {
+    /// Items currently queued (snapshot; see `Sender::len`).
+    pub fn len(&self) -> usize {
+        self.shared.queue.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     /// Blocking receive; returns Err(Disconnected) after all senders drop
     /// and the buffer drains.
     pub fn recv(&self) -> Result<T, Disconnected> {
@@ -292,6 +311,18 @@ mod tests {
         let (tx2, rx2) = bounded::<u32>(1);
         drop(rx2);
         assert_eq!(tx2.try_send(9), Err(Disconnected));
+    }
+
+    #[test]
+    fn len_tracks_occupancy() {
+        let (tx, rx) = bounded::<u32>(4);
+        assert!(tx.is_empty() && rx.is_empty());
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(tx.len(), 2);
+        assert_eq!(rx.len(), 2);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.len(), 1);
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! Memory-mapped SMPB source (`--features mmap`, unix only).
+//!
+//! For multi-GB binfiles the buffered reader copies every byte twice: page
+//! cache → read buffer → parser. Mapping the file lets the parser walk the
+//! page cache directly; the kernel's readahead does the prefetching, and
+//! eviction pressure stays proportional to the touched window rather than
+//! the allocated ring.
+//!
+//! No external crates (the image bakes no `memmap2`): the binding is the
+//! two raw libc calls this needs, wrapped in an RAII guard. The whole file
+//! is mapped read-only/private and parsed in record-aligned ~1 MiB slabs so
+//! the `stream/read` span + byte counter instrumentation matches the
+//! buffered and prefetch backends chunk for chunk.
+//!
+//! Determinism: the parse walks the body in byte order — identical entry
+//! order to `BinFileSource`, which the `stream_invariance` suite pins.
+//! Record-alignment of the file is validated at `open` time (there is no
+//! EOF short-read moment here), so truncation errors name their byte
+//! offset before any entry is routed.
+
+use super::binfile::{BinFileSource, RecordParser, HEADER_LEN, REC};
+use super::{Entry, EntrySource, StreamMeta};
+use crate::runtime::obs::{registry, trace};
+use crate::runtime::fault;
+use std::ops::ControlFlow;
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+const PROT_READ: c_int = 1;
+const MAP_PRIVATE: c_int = 2;
+
+extern "C" {
+    fn mmap(
+        addr: *mut c_void,
+        len: usize,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: i64,
+    ) -> *mut c_void;
+    fn munmap(addr: *mut c_void, len: usize) -> c_int;
+}
+
+/// RAII mapping: unmapped on drop.
+struct Map {
+    ptr: *mut c_void,
+    len: usize,
+}
+
+impl Map {
+    fn new(file: &std::fs::File, len: usize) -> std::io::Result<Self> {
+        assert!(len > 0, "mmap of empty range");
+        // SAFETY: fd is valid for the borrow of `file`; MAP_PRIVATE +
+        // PROT_READ never writes back; failure is checked below.
+        let ptr = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if ptr as isize == -1 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Self { ptr, len })
+    }
+
+    fn bytes(&self) -> &[u8] {
+        // SAFETY: the mapping stays valid until drop; PROT_READ makes the
+        // range readable for its full length.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl Drop for Map {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len came from a successful mmap and are unmapped once.
+        unsafe {
+            munmap(self.ptr, self.len);
+        }
+    }
+}
+
+// SAFETY: the mapping is read-only and owned; moving it across threads
+// (reader threads in multi-source ingest) is fine.
+unsafe impl Send for Map {}
+
+/// Parse slab: whole multiple of `REC` near 1 MiB so no record straddles a
+/// slab boundary and per-slab instrumentation stays comparable across
+/// backends.
+const SLAB: usize = REC * 61_680; // 1_048_560 bytes
+
+pub struct MmapBinSource {
+    path: std::path::PathBuf,
+    meta: StreamMeta,
+    body_len: usize,
+}
+
+impl MmapBinSource {
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        // Header authority is BinFileSource::open; on top of that, a mapped
+        // body has no incremental EOF, so record alignment is an open-time
+        // contract here.
+        let inner = BinFileSource::open(&path)?;
+        let len = std::fs::metadata(&inner.path)?.len();
+        anyhow::ensure!(
+            len >= HEADER_LEN,
+            "truncated SMPB header: file is {len} byte(s), want {HEADER_LEN}"
+        );
+        let body_len = (len - HEADER_LEN) as usize;
+        let stray = body_len % REC;
+        anyhow::ensure!(
+            stray == 0,
+            "truncated SMPB record: wanted {} more byte(s) at byte offset {}, \
+             got {stray} (file cut mid-record?)",
+            REC - stray,
+            len - stray as u64,
+        );
+        Ok(Self { path: inner.path, meta: inner.meta, body_len })
+    }
+}
+
+impl EntrySource for MmapBinSource {
+    fn meta(&self) -> StreamMeta {
+        self.meta
+    }
+
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry) -> ControlFlow<()>) -> ControlFlow<()> {
+        if self.body_len == 0 {
+            return ControlFlow::Continue(());
+        }
+        let file = std::fs::File::open(&self.path).expect("source file vanished");
+        let map = Map::new(&file, HEADER_LEN as usize + self.body_len)
+            .unwrap_or_else(|e| panic!("mmap {}: {e}", self.path.display()));
+        let body = &map.bytes()[HEADER_LEN as usize..];
+        let bytes_ctr = registry::counter("stream/read/bytes");
+        let mut parser = RecordParser::new();
+        for slab in body.chunks(SLAB) {
+            let _span = trace::span("stream/read");
+            if let Err(e) = fault::point_io("stream/read/chunk") {
+                panic!("io error mid-stream: read {}: {e}", self.path.display());
+            }
+            bytes_ctr.add(slab.len() as u64);
+            parser.feed(slab, f)?;
+        }
+        debug_assert!(parser.finish().is_ok(), "alignment was checked at open");
+        ControlFlow::Continue(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("smppca_mm_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn mmap_matches_buffered_oracle() {
+        let mut rng = Pcg64::new(21);
+        let a = Mat::gaussian(11, 6, &mut rng);
+        let b = Mat::gaussian(11, 5, &mut rng);
+        let path = tmp("oracle");
+        BinFileSource::write(&path, &a, &b).unwrap();
+        let collect = |src: Box<dyn EntrySource>| {
+            let mut out = Vec::new();
+            let _ = src.for_each(&mut |e| {
+                out.push(e);
+                ControlFlow::Continue(())
+            });
+            out
+        };
+        let want = collect(Box::new(BinFileSource::open(&path).unwrap()));
+        let got = collect(Box::new(MmapBinSource::open(&path).unwrap()));
+        std::fs::remove_file(&path).ok();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn truncation_rejected_at_open_with_offset() {
+        let mut rng = Pcg64::new(22);
+        let a = Mat::gaussian(5, 3, &mut rng);
+        let b = Mat::gaussian(5, 2, &mut rng);
+        let path = tmp("trunc");
+        BinFileSource::write(&path, &a, &b).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = MmapBinSource::open(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("byte offset"), "error should name an offset: {err}");
+    }
+
+    #[test]
+    fn break_mid_map_stops() {
+        let mut rng = Pcg64::new(23);
+        let a = Mat::gaussian(8, 4, &mut rng);
+        let b = Mat::gaussian(8, 4, &mut rng);
+        let path = tmp("brk");
+        BinFileSource::write(&path, &a, &b).unwrap();
+        let src = Box::new(MmapBinSource::open(&path).unwrap());
+        let mut seen = 0;
+        let flow = src.for_each(&mut |_| {
+            seen += 1;
+            if seen == 2 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+        });
+        std::fs::remove_file(&path).ok();
+        assert!(flow.is_break());
+        assert_eq!(seen, 2);
+    }
+}

@@ -4,14 +4,20 @@
 
 pub mod binfile;
 pub mod channel;
+#[cfg(all(feature = "mmap", unix))]
+pub mod mmap;
+pub mod prefetch;
 pub mod router;
 pub mod source;
 
 pub use binfile::{BinFileSource, BinFileWriter};
 pub use channel::{bounded, Receiver, Sender};
+#[cfg(all(feature = "mmap", unix))]
+pub use mmap::MmapBinSource;
+pub use prefetch::{open_auto, open_bin_source, PrefetchBinSource, ReadAheadConfig, ReadMode};
 pub use router::{route_columns, route_entries, shard_of};
 pub use source::{
-    ColumnSource, DenseColumnSource, EntrySource, FileSource, InterleavedSource,
+    ColumnSource, ConcatSource, DenseColumnSource, EntrySource, FileSource, InterleavedSource,
     ShuffledMatrixSource, VecSource,
 };
 

@@ -1,0 +1,400 @@
+//! Read-ahead ingest: a dedicated reader thread per source fills fixed-size
+//! chunk buffers ahead of the parse/route stage over a bounded ring.
+//!
+//! The synchronous `BinFileSource` interleaves disk reads with record
+//! parsing and channel sends on one thread, so every page-cache miss stalls
+//! the whole sketch pool. Here the disk side runs on its own
+//! `pool::spawn_thread` and the two stages overlap:
+//!
+//! ```text
+//!   disk ──read──▶ [reader thread] ──ring (Vec<u8> chunks)──▶ [parse/route]
+//!                    fault: stream/read/chunk                  RecordParser
+//!                    span:  stream/read                        ──▶ shard_of
+//!                    ctr:   stream/read/bytes                      workers
+//!                    gauge: stream/read/ring
+//! ```
+//!
+//! Determinism: chunk boundaries never land between the bytes of a record
+//! as far as the consumer is concerned — `RecordParser` carries split tails
+//! — and the ring is FIFO, so the entry order seen downstream is byte order,
+//! identical to the synchronous reader. The ring only changes *when* bytes
+//! arrive, never *what* or *in which order*.
+//!
+//! Failure: the reader converts io errors (and `stream/read/chunk` fault
+//! injections) into an in-band `Err` message; the consuming `for_each`
+//! panics with the established "io error mid-stream" idiom, which the
+//! ingest drivers catch at thread join and surface as an error through the
+//! existing `ControlFlow` abort path — a dying reader is an error, not a
+//! hang. A `Break` from the visitor drops the ring receiver; the reader
+//! notices `Disconnected` on its next send and exits within one chunk.
+
+use super::binfile::{BinFileSource, RecordParser, HEADER_LEN, MAGIC, REC};
+use super::{bounded, Entry, EntrySource, StreamMeta};
+use crate::runtime::obs::{registry, trace};
+use crate::runtime::{fault, pool};
+use std::io::{Read, Seek, SeekFrom};
+use std::ops::ControlFlow;
+use std::path::Path;
+
+/// Which byte-source backend feeds the record parser.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadMode {
+    /// Synchronous buffered reads on the consuming thread (the oracle).
+    Buffered,
+    /// Read-ahead reader thread over a bounded chunk ring.
+    Prefetch,
+    /// Memory-mapped file (requires the `mmap` cargo feature; falls back
+    /// to `Prefetch` with a warning when not compiled in).
+    Mmap,
+}
+
+impl ReadMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "buffered" | "sync" => Ok(Self::Buffered),
+            "prefetch" => Ok(Self::Prefetch),
+            "mmap" => Ok(Self::Mmap),
+            other => anyhow::bail!(
+                "unknown io mode {other:?} (expected buffered|prefetch|mmap)"
+            ),
+        }
+    }
+
+    /// Resolve from `SMPPCA_IO`; unset means `Buffered`, garbage fails fast
+    /// (the `SMPPCA_KERNEL` discipline: a typo must not silently change the
+    /// backend under test).
+    pub fn from_env() -> anyhow::Result<Self> {
+        match std::env::var("SMPPCA_IO") {
+            Ok(v) if !v.is_empty() => Self::parse(&v),
+            _ => Ok(Self::Buffered),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Buffered => "buffered",
+            Self::Prefetch => "prefetch",
+            Self::Mmap => "mmap",
+        }
+    }
+}
+
+/// Ring geometry for the read-ahead stage.
+#[derive(Debug, Clone, Copy)]
+pub struct ReadAheadConfig {
+    /// Bytes per chunk handed over the ring. Record-size alignment is NOT
+    /// required — the parser carries split tails — but big chunks amortize
+    /// the per-send lock. Default 16 Ki records (~272 KiB): several sketch
+    /// batches per chunk, small enough that four in flight stay L2-resident.
+    pub chunk_bytes: usize,
+    /// Chunks buffered in the ring. 4 ≈ double buffering with slack on both
+    /// sides: one being filled, one being parsed, two absorbing jitter.
+    pub ring_chunks: usize,
+}
+
+impl Default for ReadAheadConfig {
+    fn default() -> Self {
+        Self { chunk_bytes: REC * 16 * 1024, ring_chunks: 4 }
+    }
+}
+
+/// Open an SMPB file with the requested backend. `Buffered` returns the
+/// plain synchronous source; `Mmap` falls back to `Prefetch` (with a
+/// warning) when the `mmap` feature is not compiled in.
+pub fn open_bin_source(
+    path: impl AsRef<Path>,
+    mode: ReadMode,
+) -> anyhow::Result<Box<dyn EntrySource>> {
+    let path = path.as_ref();
+    match mode {
+        ReadMode::Buffered => Ok(Box::new(BinFileSource::open(path)?)),
+        ReadMode::Prefetch => {
+            Ok(Box::new(PrefetchBinSource::open(path, ReadAheadConfig::default())?))
+        }
+        ReadMode::Mmap => {
+            #[cfg(all(feature = "mmap", unix))]
+            {
+                Ok(Box::new(super::mmap::MmapBinSource::open(path)?))
+            }
+            #[cfg(not(all(feature = "mmap", unix)))]
+            {
+                crate::log_warn!(
+                    "mmap io requested but the `mmap` feature is not compiled in; \
+                     falling back to prefetch"
+                );
+                Ok(Box::new(PrefetchBinSource::open(path, ReadAheadConfig::default())?))
+            }
+        }
+    }
+}
+
+/// Sniff the 4-byte magic and open `path` as SMPB (honoring `mode`) or as
+/// the CSV triplet format (`gen` output) otherwise. CSV has no byte-stream
+/// backend variants — its line parse dominates io, so `mode` is ignored.
+pub fn open_auto(
+    path: impl AsRef<Path>,
+    mode: ReadMode,
+) -> anyhow::Result<Box<dyn EntrySource>> {
+    let path = path.as_ref();
+    let mut head = [0u8; 4];
+    let n = std::fs::File::open(path)?.read(&mut head)?;
+    if n == 4 && &head == MAGIC {
+        open_bin_source(path, mode)
+    } else {
+        Ok(Box::new(super::source::FileSource::open(path)?))
+    }
+}
+
+/// SMPB source whose disk reads run on a dedicated read-ahead thread.
+pub struct PrefetchBinSource {
+    path: std::path::PathBuf,
+    meta: StreamMeta,
+    cfg: ReadAheadConfig,
+}
+
+impl PrefetchBinSource {
+    pub fn open(path: impl AsRef<Path>, cfg: ReadAheadConfig) -> anyhow::Result<Self> {
+        assert!(cfg.chunk_bytes > 0 && cfg.ring_chunks > 0);
+        // Header validation happens once here (BinFileSource::open is the
+        // authority); the reader thread just seeks past it.
+        let inner = BinFileSource::open(path)?;
+        Ok(Self { path: inner.path, meta: inner.meta, cfg })
+    }
+}
+
+/// Ring message: `Ok(bytes)` is a data chunk, `Ok(empty)` is the clean-EOF
+/// sentinel, `Err(msg)` is a reader-side io failure.
+type Chunk = Result<Vec<u8>, String>;
+
+impl EntrySource for PrefetchBinSource {
+    fn meta(&self) -> StreamMeta {
+        self.meta
+    }
+
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry) -> ControlFlow<()>) -> ControlFlow<()> {
+        let (tx, rx) = bounded::<Chunk>(self.cfg.ring_chunks);
+        let path = self.path.clone();
+        let chunk_bytes = self.cfg.chunk_bytes;
+        let ring_gauge = registry::gauge("stream/read/ring");
+        let bytes_ctr = registry::counter("stream/read/bytes");
+        let reader = pool::spawn_thread("stream-read", move || {
+            let mut file = match std::fs::File::open(&path)
+                .and_then(|mut f| f.seek(SeekFrom::Start(HEADER_LEN)).map(|_| f))
+            {
+                Ok(f) => f,
+                Err(e) => {
+                    let _ = tx.send(Err(format!("open {}: {e}", path.display())));
+                    return;
+                }
+            };
+            loop {
+                let _span = trace::span("stream/read");
+                if let Err(e) = fault::point_io("stream/read/chunk") {
+                    let _ = tx.send(Err(format!("read {}: {e}", path.display())));
+                    return;
+                }
+                let mut buf = vec![0u8; chunk_bytes];
+                let mut filled = 0usize;
+                // Fill the whole chunk (short reads are common near the
+                // page-cache edge); a partial final chunk is fine.
+                while filled < buf.len() {
+                    match file.read(&mut buf[filled..]) {
+                        Ok(0) => break,
+                        Ok(n) => filled += n,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(e) => {
+                            let _ = tx.send(Err(format!("read {}: {e}", path.display())));
+                            return;
+                        }
+                    }
+                }
+                buf.truncate(filled);
+                bytes_ctr.add(filled as u64);
+                let eof = filled == 0;
+                // A send error means the consumer Broke and dropped the
+                // ring — stop reading immediately (ControlFlow contract).
+                if tx.send(Ok(buf)).is_err() {
+                    return;
+                }
+                ring_gauge.set(tx.len() as i64);
+                if eof {
+                    return;
+                }
+            }
+        });
+        let mut parser = RecordParser::new();
+        let flow = loop {
+            match rx.recv() {
+                Ok(Ok(chunk)) if chunk.is_empty() => {
+                    // Clean EOF.
+                    if let Err(msg) = parser.finish() {
+                        drop(rx);
+                        let _ = reader.join();
+                        panic!("{msg}");
+                    }
+                    break ControlFlow::Continue(());
+                }
+                Ok(Ok(chunk)) => {
+                    if parser.feed(&chunk, f).is_break() {
+                        break ControlFlow::Break(());
+                    }
+                }
+                Ok(Err(msg)) => {
+                    drop(rx);
+                    let _ = reader.join();
+                    panic!("io error mid-stream: {msg}");
+                }
+                Err(_) => {
+                    // Reader gone without an EOF sentinel or an error
+                    // message: it panicked. Re-panic with its payload.
+                    match reader.join() {
+                        Err(payload) => {
+                            panic!("stream reader died: {}", pool::panic_message(&*payload))
+                        }
+                        Ok(()) => panic!("stream reader exited without EOF sentinel"),
+                    }
+                }
+            }
+        };
+        if flow.is_break() {
+            // Unblock a reader stuck on a full ring, then reap it.
+            drop(rx);
+        }
+        let _ = reader.join();
+        flow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+    use crate::runtime::fault::test_support::with_plan;
+    use crate::stream::MatrixId;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("smppca_pf_{}_{}", std::process::id(), name))
+    }
+
+    fn write_dataset(path: &std::path::Path, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let a = Mat::gaussian(13, 9, &mut rng);
+        let b = Mat::gaussian(13, 7, &mut rng);
+        BinFileSource::write(path, &a, &b).unwrap();
+        (a, b)
+    }
+
+    fn drain(src: Box<dyn EntrySource>) -> Vec<Entry> {
+        let mut out = Vec::new();
+        let _ = src.for_each(&mut |e| {
+            out.push(e);
+            ControlFlow::Continue(())
+        });
+        out
+    }
+
+    #[test]
+    fn prefetch_matches_buffered_oracle() {
+        let path = tmp("oracle");
+        write_dataset(&path, 11);
+        let want = drain(Box::new(BinFileSource::open(&path).unwrap()));
+        // Tiny, record-misaligned chunks force tail carries across every
+        // ring hop — the worst case for the split-record path.
+        for chunk_bytes in [96usize, 1024, REC * 16 * 1024] {
+            let cfg = ReadAheadConfig { chunk_bytes, ring_chunks: 2 };
+            let got = drain(Box::new(PrefetchBinSource::open(&path, cfg).unwrap()));
+            assert_eq!(got, want, "chunk_bytes={chunk_bytes}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn break_stops_reader_promptly() {
+        let path = tmp("brk");
+        write_dataset(&path, 12);
+        let cfg = ReadAheadConfig { chunk_bytes: 64, ring_chunks: 2 };
+        let src = Box::new(PrefetchBinSource::open(&path, cfg).unwrap());
+        let mut seen = 0;
+        let flow = src.for_each(&mut |_| {
+            seen += 1;
+            if seen == 3 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+        });
+        // for_each joins the reader before returning, so reaching here at
+        // all proves the reader exited rather than blocking on a full ring.
+        assert!(flow.is_break());
+        assert_eq!(seen, 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn injected_read_fault_panics_instead_of_hanging() {
+        let path = tmp("fault");
+        write_dataset(&path, 13);
+        let _guard = with_plan("stream/read/chunk:ioerr@nth=1");
+        let cfg = ReadAheadConfig { chunk_bytes: 64, ring_chunks: 2 };
+        let src = Box::new(PrefetchBinSource::open(&path, cfg).unwrap());
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = src.for_each(&mut |_| ControlFlow::Continue(()));
+        }));
+        std::fs::remove_file(&path).ok();
+        let payload = result.expect_err("reader fault must surface as a panic");
+        let msg = pool::panic_message(&*payload);
+        assert!(msg.contains("io error mid-stream"), "unexpected message: {msg}");
+    }
+
+    #[test]
+    fn truncated_file_names_offset() {
+        let path = tmp("trunc");
+        write_dataset(&path, 14);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 6]).unwrap();
+        let cfg = ReadAheadConfig { chunk_bytes: 128, ring_chunks: 2 };
+        let src = Box::new(PrefetchBinSource::open(&path, cfg).unwrap());
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = src.for_each(&mut |_| ControlFlow::Continue(()));
+        }));
+        std::fs::remove_file(&path).ok();
+        let payload = result.expect_err("truncation must not pass silently");
+        let msg = pool::panic_message(&*payload);
+        assert!(msg.contains("byte offset"), "unexpected message: {msg}");
+    }
+
+    #[test]
+    fn open_auto_sniffs_formats() {
+        let bin = tmp("auto_bin");
+        let (a, b) = write_dataset(&bin, 15);
+        let src = open_auto(&bin, ReadMode::Prefetch).unwrap();
+        assert_eq!(src.meta(), StreamMeta { d: 13, n1: 9, n2: 7 });
+        let mut ra = Mat::zeros(13, 9);
+        let mut rb = Mat::zeros(13, 7);
+        let _ = src.for_each(&mut |e| {
+            match e.matrix {
+                MatrixId::A => ra[(e.row as usize, e.col as usize)] = e.value,
+                MatrixId::B => rb[(e.row as usize, e.col as usize)] = e.value,
+            }
+            ControlFlow::Continue(())
+        });
+        std::fs::remove_file(&bin).ok();
+        assert_eq!(ra.data(), a.data());
+        assert_eq!(rb.data(), b.data());
+
+        // CSV path: header line then triplets.
+        let csv = tmp("auto_csv");
+        std::fs::write(&csv, "2,1,1\nA,0,0,1.5\nB,1,0,-2.0\n").unwrap();
+        let src = open_auto(&csv, ReadMode::Prefetch).unwrap();
+        assert_eq!(src.meta(), StreamMeta { d: 2, n1: 1, n2: 1 });
+        let entries = drain(src);
+        std::fs::remove_file(&csv).ok();
+        assert_eq!(entries.len(), 2);
+    }
+
+    #[test]
+    fn read_mode_parse_and_env_contract() {
+        assert_eq!(ReadMode::parse("buffered").unwrap(), ReadMode::Buffered);
+        assert_eq!(ReadMode::parse("sync").unwrap(), ReadMode::Buffered);
+        assert_eq!(ReadMode::parse("prefetch").unwrap(), ReadMode::Prefetch);
+        assert_eq!(ReadMode::parse("mmap").unwrap(), ReadMode::Mmap);
+        assert!(ReadMode::parse("mapped").is_err());
+    }
+}

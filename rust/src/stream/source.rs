@@ -158,6 +158,41 @@ impl EntrySource for InterleavedSource {
     }
 }
 
+/// Replay several same-shaped sources back to back as one stream — how a
+/// reader thread drains its assigned group of shard files when `--readers`
+/// is smaller than the file count. A `Break` from the visitor abandons the
+/// remaining sources too (the downstream it fed is already dead).
+pub struct ConcatSource {
+    meta: StreamMeta,
+    sources: Vec<Box<dyn EntrySource>>,
+}
+
+impl ConcatSource {
+    /// All sources must declare the same shape (they are shards of one
+    /// logical stream, not different streams).
+    pub fn new(sources: Vec<Box<dyn EntrySource>>) -> Self {
+        assert!(!sources.is_empty(), "ConcatSource needs at least one source");
+        let meta = sources[0].meta();
+        for (i, s) in sources.iter().enumerate() {
+            assert_eq!(s.meta(), meta, "shard {i} disagrees on stream shape");
+        }
+        Self { meta, sources }
+    }
+}
+
+impl EntrySource for ConcatSource {
+    fn meta(&self) -> StreamMeta {
+        self.meta
+    }
+
+    fn for_each(self: Box<Self>, f: &mut dyn FnMut(Entry) -> ControlFlow<()>) -> ControlFlow<()> {
+        for s in self.sources {
+            s.for_each(f)?;
+        }
+        ControlFlow::Continue(())
+    }
+}
+
 fn collect_nonzeros(m: &Mat, id: MatrixId, out: &mut Vec<Entry>) {
     for i in 0..m.rows() {
         for j in 0..m.cols() {
@@ -397,6 +432,40 @@ mod tests {
         std::fs::remove_file(&path).ok();
         crate::testing::assert_close(seen_a.data(), a.data(), 1e-12);
         crate::testing::assert_close(seen_b.data(), b.data(), 1e-12);
+    }
+
+    #[test]
+    fn concat_source_replays_shards_in_order_and_breaks_early() {
+        let meta = StreamMeta { d: 4, n1: 3, n2: 2 };
+        let shard = |entries: Vec<Entry>| {
+            Box::new(VecSource { meta, entries }) as Box<dyn EntrySource>
+        };
+        let src = Box::new(ConcatSource::new(vec![
+            shard(vec![Entry::a(0, 0, 1.0), Entry::a(1, 0, 2.0)]),
+            shard(vec![Entry::b(0, 1, 3.0)]),
+            shard(vec![Entry::a(2, 2, 4.0)]),
+        ]));
+        assert_eq!(src.meta(), meta);
+        let mut got = Vec::new();
+        let flow = src.for_each(&mut |e| {
+            got.push(e.value);
+            ControlFlow::Continue(())
+        });
+        assert_eq!(flow, ControlFlow::Continue(()));
+        assert_eq!(got, vec![1.0, 2.0, 3.0, 4.0]);
+
+        // Break in shard 1 must leave shard 2 unread.
+        let src = Box::new(ConcatSource::new(vec![
+            shard(vec![Entry::a(0, 0, 1.0)]),
+            shard(vec![Entry::b(0, 1, 3.0)]),
+        ]));
+        let mut count = 0;
+        let flow = src.for_each(&mut |_| {
+            count += 1;
+            ControlFlow::Break(())
+        });
+        assert_eq!(flow, ControlFlow::Break(()));
+        assert_eq!(count, 1);
     }
 
     #[test]
